@@ -1,0 +1,143 @@
+"""AOT lowering: decoder variants -> artifacts/*.hlo.txt + manifest.json.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` — this is the ONLY Python step; the Rust
+binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import Variant, make_decoder
+from .trellis import CCSDS_K7, Code
+
+# The default artifact set. Small-batch variants exist for fast tests;
+# b64 variants feed the benches (Table I / Fig 13 / ablations).
+DEFAULT_VARIANTS: List[Variant] = [
+    # test/correctness artifacts (small, fast to execute)
+    Variant("radix4", "jnp", "single", "single", batch=8, n_steps=32),
+    Variant("radix4", "pallas", "single", "single", batch=8, n_steps=32),
+    # Table I / Fig 13: the four precision combos (paper §IX-B/C)
+    Variant("radix4", "jnp", "single", "single", batch=64, n_steps=48),
+    Variant("radix4", "jnp", "single", "half", batch=64, n_steps=48),
+    Variant("radix4", "jnp", "half", "single", batch=64, n_steps=48),
+    Variant("radix4", "jnp", "half", "half", batch=64, n_steps=48),
+    # ablation E4: radix-2 (Q=2) and radix-4 without the DG permutation
+    Variant("radix2", "jnp", "single", "single", batch=64, n_steps=96),
+    Variant("radix4_noperm", "jnp", "single", "single", batch=64, n_steps=48),
+    # perf: larger batch amortizes XLA-CPU per-op dispatch (§Perf L2/L3)
+    Variant("radix4", "jnp", "single", "single", batch=256, n_steps=48),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `print_large_constants=True` is ESSENTIAL: the default elides big
+    constant payloads as ``constant({...})``, which xla_extension 0.5.1's
+    text parser silently accepts as garbage — the packing-spec tables
+    (Theta matrices, gather maps) would arrive as zeros/NaN in Rust.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def lower_variant(code: Code, v: Variant) -> str:
+    decode, pk = make_decoder(code, v)
+    llr_spec = jax.ShapeDtypeStruct((v.batch, v.n_steps, pk.width), jnp.float32)
+    lam_spec = jax.ShapeDtypeStruct((v.batch, code.n_states), jnp.float32)
+    lowered = jax.jit(decode).lower(llr_spec, lam_spec)
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(code: Code, v: Variant, path: str, hlo_text: str) -> dict:
+    from .packing import build_packing
+    pk = build_packing(code, v.scheme)
+    return {
+        "name": v.name(),
+        "path": path,
+        "scheme": v.scheme,
+        "impl": v.impl,
+        "acc": v.acc,
+        "chan": v.chan,
+        "batch": v.batch,
+        "n_steps": v.n_steps,
+        "rho": pk.rho,
+        "gamma": pk.gamma,
+        "width": pk.width,
+        "n_ops": pk.n_ops,
+        "ops_per_stage": pk.ops_per_stage(),
+        "renorm_every": v.renorm_every,
+        "k": code.k,
+        "polys_octal": [oct(p)[2:] for p in code.polys],
+        "n_states": code.n_states,
+        "stages_per_frame": v.n_steps * pk.rho,
+        "sha256": hashlib.sha256(hlo_text.encode()).hexdigest()[:16],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant-name substrings to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    code = CCSDS_K7
+    entries = []
+    for v in DEFAULT_VARIANTS:
+        if args.only and not any(s in v.name() for s in args.only.split(",")):
+            continue
+        fname = v.name() + ".hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        print(f"lowering {v.name()} ...", flush=True)
+        text = lower_variant(code, v)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(manifest_entry(code, v, fname, text))
+        print(f"  wrote {len(text)} chars -> {path}", flush=True)
+
+    manifest = {
+        "code": {"k": code.k, "polys_octal": [oct(p)[2:] for p in code.polys],
+                 "beta": code.beta, "n_states": code.n_states},
+        "io": {
+            "inputs": ["llr f32[batch, n_steps, width]", "lam0 f32[batch, n_states]"],
+            "outputs": [
+                "phi i32[n_steps * batch * n_states] flat, index (t*B+b)*S+s",
+                "lam f32[batch * n_states] flat",
+            ],
+            "note": ("outputs are wrapped in a tuple (return_tuple=True); "
+                     "flattened 1-D so the XLA output layout is unambiguous"),
+        },
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""L1 — the tensor-formulated ACS step and its Pallas kernel.
+
+The paper's §V/§VIII mapping: one decoder step (rho trellis stages) is
+``n_ops`` dense 16x16 multiply-accumulates ``D = A@B + C`` (tensor-core /
+MXU primitive) followed by a max/argmax epilogue (Eq 22) and a fixed
+permutation/gather that re-arranges the 2^{k-1} path metrics for the next
+step. Batched frames extend the matmul column dimension: on the MXU the
+effective shape is ``[16,16] @ [16, 16*F]``, so the systolic array fills
+with the frame batch.
+
+Two implementations share `make_step_fn`:
+
+* `pallas_acs_call` — a Pallas kernel with a sequential stage grid and the
+  path metrics carried in VMEM scratch (the paper keeps Lambda in
+  registers/smem across iterations). `interpret=True` on CPU.
+* the `jnp` variant in `model.py` — identical math under `lax.scan`, used
+  for the CPU-throughput artifacts.
+
+Precision (paper §IX-B): A and B are always "half" (bf16 here — tensor
+cores only offer fp16 A/B); the accumulator C/D and the stored path
+metrics follow `acc_dtype`; the LLR array follows `chan_dtype` before it
+is loaded into B.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch shapes work under interpret mode on CPU too
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from ..packing import Packing
+
+NEG = -1.0e9
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConsts:
+    """Packing spec tensors baked as jnp constants (static per code).
+
+    The data-independent gathers of the step (lambda gather by CG, the
+    state permutation by SRC) are ALSO provided as one-hot matrices:
+    XLA-CPU executes a small dense matmul an order of magnitude faster
+    than the equivalent gather, and `x @ onehot` is numerically exact
+    (each output is a single product 1.0 * x). See §Perf in DESIGN.md.
+    """
+
+    A: jnp.ndarray          # [O,16,16] bf16 (+-1/0)
+    E: jnp.ndarray          # [O,16,16,W] bf16 (0/1)
+    CG: jnp.ndarray         # [O,16,16] i32 (clipped), -1 flagged via CGM
+    CGM: jnp.ndarray        # [O,16,16] bool (True = valid lambda slot)
+    CG_OH: jnp.ndarray      # [S, O*256] f32 one-hot: lam -> C layout
+    CG_NEG: jnp.ndarray     # [O,16,16] f32: NEG where no lambda source
+    SRC_FLAT: jnp.ndarray   # [S] i32 flat (o*G+g)*16+c index per state
+    SRC_OH: jnp.ndarray     # [O*G*16, S] f32 one-hot: val -> state order
+    PINV_S: jnp.ndarray     # [S, gamma] i32 argmax -> left local state
+    gamma: int
+    n_ops: int
+    width: int
+    n_states: int
+
+    @staticmethod
+    def from_packing(pk: Packing, n_states: int) -> "StepConsts":
+        O, G, C = pk.OS.shape
+        src_flat = (pk.SRC[:, 0] * G + pk.SRC[:, 1]) * 16 + pk.SRC[:, 2]
+        pinv_s = pk.PINV[pk.SRC[:, 0], pk.SRC[:, 2], :]
+        cg_flat = pk.CG.reshape(-1)
+        cg_oh = np.zeros((n_states, cg_flat.size), dtype=np.float32)
+        for i, s in enumerate(cg_flat):
+            if s >= 0:
+                cg_oh[s, i] = 1.0
+        src_oh = np.zeros((O * G * 16, n_states), dtype=np.float32)
+        for s, k in enumerate(src_flat):
+            src_oh[k, s] = 1.0
+        return StepConsts(
+            A=jnp.asarray(pk.A, dtype=jnp.bfloat16),
+            E=jnp.asarray(pk.E, dtype=jnp.bfloat16),
+            CG=jnp.asarray(np.maximum(pk.CG, 0), dtype=jnp.int32),
+            CGM=jnp.asarray(pk.CG >= 0),
+            CG_OH=jnp.asarray(cg_oh),
+            CG_NEG=jnp.asarray(np.where(pk.CG < 0, NEG, 0.0).astype(np.float32)),
+            SRC_FLAT=jnp.asarray(src_flat.astype(np.int32)),
+            SRC_OH=jnp.asarray(src_oh),
+            PINV_S=jnp.asarray(pinv_s.astype(np.int32)),
+            gamma=pk.gamma,
+            n_ops=O,
+            width=pk.width,
+            n_states=n_states,
+        )
+
+
+#: the spec arrays a step consumes, in the order they are passed to the
+#: Pallas kernel as inputs (Pallas forbids captured array constants).
+CONST_FIELDS = ("A", "E", "CG_OH", "CG_NEG", "SRC_OH", "PINV_S")
+
+
+def const_arrays(c: StepConsts) -> Tuple[jnp.ndarray, ...]:
+    return tuple(getattr(c, f) for f in CONST_FIELDS)
+
+
+def make_step_fn(c: StepConsts, acc_dtype):
+    """Returns step(consts, lam [F,S] acc, llr [F,W]) -> (lam' [F,S] acc,
+    phi [F,S] i32) where consts = const_arrays(c) (possibly read from
+    kernel refs). All paper equations referenced inline."""
+
+    O, W, S, gamma = c.n_ops, c.width, c.n_states, c.gamma
+    G = 16 // gamma
+
+    def step(consts, lam: jnp.ndarray, llr: jnp.ndarray):
+        A, E, CG_OH, CG_NEG, SRC_OH, PINV_S = consts
+        F = lam.shape[0]
+        llr_h = llr.astype(jnp.bfloat16)            # B is always half
+        # B[f,o,r,col] = sum_e E[o,r,col,e] * llr[f,e]      (Eq 19 layout)
+        B = jnp.einsum("orce,fe->forc", E, llr_h)
+        # C[f,o,r,col] = lambda of the gathered left state   (Eq 21/37).
+        # Expressed as a one-hot matmul (exact: one product per output) —
+        # far faster than a gather on XLA-CPU, free on the MXU.
+        lam_g = (jnp.dot(lam.astype(jnp.float32), CG_OH)
+                 .reshape(F, O, 16, 16) + CG_NEG[None])
+        # D = A @ B + C  — the tensor-core / MXU op          (Eq 20)
+        # fold the frame batch into matmul columns: [O, r, F*16] with the
+        # frame index major in the column dimension
+        Bm = jnp.transpose(B, (1, 2, 0, 3)).reshape(O, 16, F * 16)
+        prod = jax.lax.dot_general(
+            A, Bm, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                                     # [O,16,F*16]
+        prod = jnp.swapaxes(prod.reshape(O, 16, F, 16), 1, 2)  # [O,F,16,16]
+        D = (jnp.swapaxes(prod, 0, 1) + lam_g).astype(acc_dtype)
+        # epilogue: max/argmax within each gamma-row group    (Eq 22)
+        Dg = D.reshape(F, O, G, gamma, 16)
+        val = Dg.max(axis=3)                                  # [F,O,G,16]
+        sel = Dg.argmax(axis=3).astype(jnp.int32)
+        # fixed permutation back to global-state order (Thm 4), again as
+        # exact one-hot matmuls (sel values 0..3 are exact in f32)
+        lam_new = jnp.dot(val.reshape(F, O * G * 16), SRC_OH)
+        sel_s = jnp.dot(sel.reshape(F, O * G * 16).astype(jnp.float32), SRC_OH)
+        sel_s = sel_s.astype(jnp.int32)
+        # undo the dragonfly-group permutation                (§VIII-D)
+        phi = jnp.take_along_axis(
+            jnp.broadcast_to(PINV_S[None], (F, S, gamma)), sel_s[..., None], axis=2
+        )[..., 0]
+        return lam_new.astype(acc_dtype), phi
+
+    return step
+
+
+def renorm(lam: jnp.ndarray) -> jnp.ndarray:
+    """Subtract the per-frame max so path metrics stay bounded (required
+    for half-precision accumulate; free-ish on the VPU)."""
+    return lam - lam.max(axis=1, keepdims=True)
+
+
+def pallas_acs_call(c: StepConsts, acc_dtype, n_steps: int, batch: int,
+                    renorm_every: int = 16, interpret: bool = True):
+    """Build the Pallas forward kernel: grid over decoder steps (sequential
+    'arbitrary' dimension), path metrics in VMEM scratch.
+
+    Returns fn(llr [B, n_steps, W] f32/bf16, lam0 [B, S] f32)
+            -> (phi [n_steps, B, S] i32, lam_final [B, S] f32).
+    """
+    S, W = c.n_states, c.width
+    step = make_step_fn(c, acc_dtype)
+    consts = const_arrays(c)
+
+    def kernel(*refs):
+        const_refs = refs[:len(consts)]
+        llr_ref, lam0_ref, phi_ref, lamout_ref, lam_scr = refs[len(consts):]
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _init():
+            lam_scr[...] = lam0_ref[...].astype(acc_dtype)
+
+        lam = lam_scr[...]
+        if renorm_every:
+            lam = jnp.where((t % renorm_every) == 0, renorm(lam), lam)
+        llr_t = llr_ref[...].reshape(batch, W)
+        cvals = tuple(r[...] for r in const_refs)
+        lam_new, phi = step(cvals, lam, llr_t)
+        phi_ref[...] = phi.reshape(1, batch, S)
+        lam_scr[...] = lam_new
+
+        @pl.when(t == n_steps - 1)
+        def _fini():
+            lamout_ref[...] = lam_new.astype(jnp.float32)
+
+    scratch = [pltpu.VMEM((batch, S), acc_dtype)] if pltpu is not None else []
+
+    def full_block(a):
+        nd = a.ndim
+        return pl.BlockSpec(a.shape, lambda t, _nd=nd: (0,) * _nd)
+
+    inner = pl.pallas_call(
+        kernel,
+        grid=(n_steps,),
+        in_specs=[full_block(a) for a in consts] + [
+            pl.BlockSpec((batch, 1, W), lambda t: (0, t, 0)),
+            pl.BlockSpec((batch, S), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, batch, S), lambda t: (t, 0, 0)),
+            pl.BlockSpec((batch, S), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_steps, batch, S), jnp.int32),
+            jax.ShapeDtypeStruct((batch, S), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+
+    def call(llr, lam0):
+        return inner(*consts, llr, lam0)
+
+    return call

@@ -1,0 +1,118 @@
+"""Pure-numpy correctness oracle for the Viterbi decoder (Alg 1 + Alg 2).
+
+This is the straight transcription of the paper's Algorithms 1 and 2 with
+no tensor reformulation. Every tensor-formulated path (jnp scan, Pallas
+kernel, AOT artifact, and the Rust radix-2/radix-4 mirrors) is validated
+against it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..trellis import Code
+
+NEG = -1.0e9  # "minus infinity" that stays finite in bf16
+
+
+def forward(code: Code, llr: np.ndarray, lam0: Optional[np.ndarray] = None
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Alg 1: forward ACS over n stages.
+
+    llr: [n, beta] float; positive = bit 0 likely.
+    lam0: [S] initial path metrics (None = all-zero, unknown start).
+    Returns (phi [n, S] predecessor *global state*, lam [n+1, S] metrics).
+    """
+    n = llr.shape[0]
+    S = code.n_states
+    assert llr.shape[1] == code.beta
+    lam = np.zeros((n + 1, S), dtype=np.float64)
+    lam[0] = lam0 if lam0 is not None else 0.0
+    phi = np.zeros((n, S), dtype=np.int64)
+    # branch metric table: delta[i, u] for stage t = sum_b (-1)^out_b * llr_b
+    sign = np.zeros((S, 2, code.beta), dtype=np.float64)
+    for i in range(S):
+        for u in range(2):
+            a = code.branch_output(i, u)
+            for b in range(code.beta):
+                sign[i, u, b] = 1.0 - 2.0 * ((a >> b) & 1)
+    for t in range(n):
+        delta = sign @ llr[t]            # [S, 2]
+        for j in range(S):
+            i0, i1 = code.prev_states(j)
+            u = code.branch_input(j)
+            l0 = lam[t, i0] + delta[i0, u]
+            l1 = lam[t, i1] + delta[i1, u]
+            if l0 >= l1:                 # ties -> lower-index predecessor
+                lam[t + 1, j] = l0
+                phi[t, j] = i0
+            else:
+                lam[t + 1, j] = l1
+                phi[t, j] = i1
+    return phi, lam
+
+
+def traceback(code: Code, phi: np.ndarray, lam_final: np.ndarray,
+              end_state: Optional[int] = None) -> np.ndarray:
+    """Alg 2: trace the winning survivor path back, emitting input bits."""
+    n = phi.shape[0]
+    j = int(np.argmax(lam_final)) if end_state is None else end_state
+    out = np.zeros(n, dtype=np.int64)
+    for t in range(n - 1, -1, -1):
+        out[t] = code.branch_input(j)    # alpha_in of the branch into j
+        j = int(phi[t, j])
+    return out
+
+
+def decode(code: Code, llr: np.ndarray, lam0: Optional[np.ndarray] = None,
+           end_state: Optional[int] = None) -> np.ndarray:
+    """Full reference decode (forward + traceback)."""
+    phi, lam = forward(code, llr, lam0)
+    return traceback(code, phi, lam[-1], end_state)
+
+
+# --- radix-form outputs ------------------------------------------------
+
+def phi_to_radix(code: Code, phi: np.ndarray, rho: int) -> np.ndarray:
+    """Convert Alg-1 predecessor states to the radix-2^rho selection form
+    the tensor kernels emit: phi_r[tau, s] = left *local* state of the
+    winning super-branch into global state s over stages
+    [tau*rho, (tau+1)*rho).
+
+    Requires n divisible by rho.
+    """
+    n, S = phi.shape
+    assert n % rho == 0
+    ndf = code.n_dragonflies(rho)
+    out = np.zeros((n // rho, S), dtype=np.int64)
+    for tau in range(n // rho):
+        for s in range(S):
+            j = s
+            for x in range(rho):         # walk back rho single stages
+                j = int(phi[tau * rho + rho - 1 - x, j])
+            f = s % ndf
+            out[tau, s] = j - (f << rho)  # left local = global - 4f (Thm 4 x=0)
+            assert 0 <= out[tau, s] < (1 << rho)
+    return out
+
+
+def traceback_radix(code: Code, rho: int, phi_r: np.ndarray,
+                    lam_final: np.ndarray, end_state: Optional[int] = None
+                    ) -> np.ndarray:
+    """Traceback from radix-form selections (mirror of the Rust hot-path
+    traceback). Emits rho bits per step: input bit consumed at local step
+    x is bit x of the right local state (Thm 4 / superbranch_inputs)."""
+    n_steps, S = phi_r.shape
+    ndf = code.n_dragonflies(rho)
+    j = int(np.argmax(lam_final)) if end_state is None else end_state
+    out = np.zeros(n_steps * rho, dtype=np.int64)
+    for tau in range(n_steps - 1, -1, -1):
+        f = j % ndf
+        jloc = j // ndf
+        for x in range(rho):
+            out[tau * rho + x] = (jloc >> x) & 1
+        iloc = int(phi_r[tau, j])
+        j = (f << rho) + iloc            # Thm 4, x = 0
+    return out

@@ -1,0 +1,111 @@
+"""L2 — the framed Viterbi decoder forward pass (build-time JAX).
+
+A decoder *variant* fixes: packing scheme (radix2 / radix4 / radix4_noperm),
+implementation (jnp scan vs Pallas kernel), accumulator dtype, channel
+dtype, batch size and steps per frame. `make_decoder` returns the jittable
+function; `aot.py` lowers each variant to HLO text for the Rust runtime.
+
+Artifact I/O contract (mirrored by `rust/src/runtime/`):
+
+  inputs : llr  f32[B, n_steps, W]  (W = rho*beta, stage-major chunks)
+           lam0 f32[B, S]
+  outputs: phi  i32[n_steps * B * S] (flat, step-major: index
+           (t*B + b)*S + s; winning left-local state, 0..2^rho-1)
+           lam  f32[B * S]           (flat final path metrics)
+
+Outputs are FLATTENED to 1-D on purpose: XLA is free to pick a
+non-row-major layout for a multi-dim output (it did: s32[B,T,S]{2,0,1}),
+which the Rust side cannot discover through the `xla` crate's Literal
+API. A 1-D array has exactly one layout. The flatten is free because it
+matches the scan buffer's native [T, B, S] order.
+
+Traceback (Alg 2) is sequential and data-dependent — it stays in Rust on
+the hot path, as in the paper it stays on scalar CUDA cores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .packing import Packing, build_packing
+from .trellis import Code
+from .kernels import acs
+from .kernels.acs import StepConsts, make_step_fn, pallas_acs_call
+
+DTYPES = {"single": jnp.float32, "half": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compilable decoder configuration."""
+
+    scheme: str = "radix4"      # radix2 | radix4 | radix4_noperm
+    impl: str = "jnp"           # jnp | pallas
+    acc: str = "single"         # C/D + stored path metrics
+    chan: str = "single"        # LLR storage dtype at the input boundary
+    batch: int = 8              # frames per execution
+    n_steps: int = 32           # decoder steps per frame (rho stages each)
+    renorm_every: int = 16      # path-metric renormalization period (0=off)
+
+    def name(self) -> str:
+        return (f"{self.scheme}_{self.impl}_acc-{self.acc}_ch-{self.chan}"
+                f"_b{self.batch}_s{self.n_steps}")
+
+
+def make_decoder(code: Code, v: Variant) -> Tuple[Callable, Packing]:
+    """Build the jittable decode(llr, lam0) -> (phi, lam) for a variant."""
+    pk = build_packing(code, v.scheme)
+    consts = StepConsts.from_packing(pk, code.n_states)
+    acc_dtype = DTYPES[v.acc]
+    chan_dtype = DTYPES[v.chan]
+    W, S = pk.width, code.n_states
+
+    if v.impl == "pallas":
+        inner = pallas_acs_call(consts, acc_dtype, v.n_steps, v.batch,
+                                renorm_every=v.renorm_every, interpret=True)
+
+        def decode(llr: jnp.ndarray, lam0: jnp.ndarray):
+            # channel precision applies at the input boundary (paper: the
+            # received array may be stored half; B is half regardless).
+            llr_c = llr.astype(chan_dtype)
+            phi, lam = inner(llr_c.astype(jnp.float32), lam0)
+            return phi.reshape(-1), lam.reshape(-1)
+
+        return decode, pk
+
+    step = make_step_fn(consts, acc_dtype)
+    cvals = acs.const_arrays(consts)
+
+    def decode(llr: jnp.ndarray, lam0: jnp.ndarray):
+        llr_c = llr.astype(chan_dtype)
+        lam_init = lam0.astype(acc_dtype)
+
+        def body(carry, inp):
+            lam, t = carry
+            if v.renorm_every:
+                lam = jnp.where((t % v.renorm_every) == 0, acs.renorm(lam), lam)
+            lam_new, phi = step(cvals, lam, inp)
+            return (lam_new, t + 1), phi
+
+        (lam_fin, _), phis = jax.lax.scan(
+            body, (lam_init, jnp.int32(0)), jnp.swapaxes(llr_c, 0, 1))
+        # phis is [T, B, S] (scan-native): flatten without transposing
+        return phis.reshape(-1), lam_fin.astype(jnp.float32).reshape(-1)
+
+    return decode, pk
+
+
+def initial_metrics(S: int, batch: int, known_state: int | None = 0) -> np.ndarray:
+    """lam0 for a frame: known encoder start state (stream head / flushed)
+    or all-zero (mid-stream tile, no history)."""
+    lam0 = np.zeros((batch, S), dtype=np.float32)
+    if known_state is not None:
+        lam0[:] = acs.NEG
+        lam0[:, known_state] = 0.0
+    return lam0

@@ -1,0 +1,241 @@
+"""Tensor-core packing specs (paper §V-B, §VIII-C/D; Figs 5, 14, 15).
+
+A packing spec turns one trellis step of rho stages into ``n_ops`` dense
+16x16 multiply-accumulates ``D_o = A_o @ B_o + C_o`` plus a max/argmax
+epilogue, exactly the tensor-core (-> MXU) primitive the paper uses.
+
+Everything here is *static* per code: the spec tensors are baked into the
+AOT HLO as constants. Batching over frames extends the column dimension
+(B, C, D become 16 x 16F), which is what fills the MXU on real hardware.
+
+Spec tensors (O = n_ops, W = rho*beta LLR entries per step, G = 16/gamma
+reduce groups per column, gamma = 2^rho predecessor candidates):
+
+* ``A    [O,16,16]`` +-1/0 Theta entries (Eq 17 / Eq 36 layout).
+* ``E    [O,16,16,W]`` B-builder: ``B[o,r,c] = sum_e E[o,r,c,e]*llr[e]``.
+* ``CG   [O,16,16]`` lambda gather index (global state) or -1 (unused).
+* ``OS   [O,G,16]`` global right state written by (group, col) or -1.
+* ``PINV [O,16,gamma]`` argmax -> true left-local-state map (undoes the
+  dragonfly-group permutation of §VIII-D; identity when unused).
+* ``SRC  [S,3]`` for each global state s: (op, group, col) producing it.
+
+Schemes:
+* ``radix2``        — Fig 5: 4 distinct 4x2 Theta blocks on the diagonal,
+                      4 butterflies (columns) per block; Q = 2 ops/stage
+                      for k=7.
+* ``radix4_noperm`` — Fig 14: 4 dragonflies per op, each with its own
+                      16x4 Theta-hat; Q = 2 ops/stage (but 2 stages/step).
+* ``radix4``        — Fig 15: dragonfly-group permutation packs the whole
+                      64-state trellis into ONE op per 2 stages (Q = 0.5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .trellis import Code, dragonfly_groups
+
+
+@dataclasses.dataclass
+class Packing:
+    """Static tensor packing of one decoder step (rho trellis stages)."""
+
+    scheme: str
+    rho: int                 # stages per step
+    gamma: int               # predecessor candidates per state (2^rho)
+    n_ops: int
+    A: np.ndarray            # [O,16,16] f32
+    E: np.ndarray            # [O,16,16,W] f32
+    CG: np.ndarray           # [O,16,16] i32, -1 unused
+    OS: np.ndarray           # [O,G,16] i32, -1 unused
+    PINV: np.ndarray         # [O,16,gamma] i32
+    SRC: np.ndarray          # [S,3] i32 (op, group, col) per state
+
+    @property
+    def width(self) -> int:  # LLR entries consumed per step
+        return self.E.shape[-1]
+
+    @property
+    def groups_per_col(self) -> int:
+        return self.OS.shape[1]
+
+    def ops_per_stage(self) -> float:
+        """The paper's Q metric: tensor ops per trellis stage."""
+        return self.n_ops / self.rho
+
+    def validate(self, code: Code) -> None:
+        """Structural invariants: every state produced exactly once, all
+        gathers in range, SRC consistent with OS."""
+        S = code.n_states
+        seen = np.zeros(S, dtype=bool)
+        O, G, C = self.OS.shape
+        for o in range(O):
+            for g in range(G):
+                for c in range(C):
+                    s = int(self.OS[o, g, c])
+                    if s < 0:
+                        continue
+                    if seen[s]:
+                        raise ValueError(f"state {s} produced twice")
+                    seen[s] = True
+        if not seen.all():
+            raise ValueError(f"states never produced: {np.flatnonzero(~seen)}")
+        if self.CG.max() >= S:
+            raise ValueError("CG gather out of range")
+        for s in range(S):
+            o, g, c = (int(v) for v in self.SRC[s])
+            if int(self.OS[o, g, c]) != s:
+                raise ValueError(f"SRC[{s}] inconsistent")
+
+
+def _theta_butterfly(code: Code, f: int) -> np.ndarray:
+    """Theta_f of a butterfly (Eq 17): [4, beta] of +-1, row order
+    (i0,j0),(i1,j0),(i0,j1),(i1,j1)."""
+    rows = []
+    for j in range(2):
+        for i in range(2):
+            a = code.superbranch_output(1, f, i, j)
+            rows.append([1 - 2 * ((a >> b) & 1) for b in range(code.beta)])
+    return np.asarray(rows, dtype=np.int8)
+
+
+def build_radix2(code: Code) -> Packing:
+    """Fig 5: diagonal 4x4 blocks; butterflies sharing a Theta matrix share
+    a block, one butterfly per column within the block's column group."""
+    beta, S = code.beta, code.n_states
+    if beta > 4:
+        raise ValueError(f"radix2 packing supports beta <= 4, got {beta}")
+    nf = code.n_dragonflies(1)           # butterflies per stage
+    W = beta
+    # bucket butterflies by identical Theta (Cor 2.1: 2^beta distinct).
+    buckets: Dict[Tuple[int, ...], List[int]] = {}
+    for f in range(nf):
+        buckets.setdefault(code.theta_signature(1, f), []).append(f)
+    # (theta, chunk-of-<=4-butterflies) units, 4 units (diag blocks) per op
+    units: List[Tuple[Tuple[int, ...], List[int]]] = []
+    for sig, fs in sorted(buckets.items()):
+        for i in range(0, len(fs), 4):
+            units.append((sig, fs[i:i + 4]))
+    n_ops = (len(units) + 3) // 4
+
+    A = np.zeros((n_ops, 16, 16), dtype=np.float32)
+    E = np.zeros((n_ops, 16, 16, W), dtype=np.float32)
+    CG = np.full((n_ops, 16, 16), -1, dtype=np.int32)
+    OS = np.full((n_ops, 8, 16), -1, dtype=np.int32)
+    PINV = np.tile(np.arange(2, dtype=np.int32), (n_ops, 16, 1))
+    SRC = np.zeros((S, 3), dtype=np.int32)
+
+    for u, (sig, fs) in enumerate(units):
+        o, p = divmod(u, 4)              # op, diagonal block slot
+        theta = _theta_butterfly(code, fs[0])
+        A[o, 4 * p:4 * p + 4, 4 * p:4 * p + beta] = theta
+        for cc, f in enumerate(fs):
+            c = 4 * p + cc
+            for e in range(beta):
+                E[o, 4 * p + e, c, e] = 1.0
+            i0, i1 = 2 * f, 2 * f + 1
+            CG[o, 4 * p:4 * p + 4, c] = [i0, i1, i0, i1]
+            j0 = code.dragonfly_state(1, f, 1, 0)
+            j1 = code.dragonfly_state(1, f, 1, 1)
+            OS[o, 2 * p, c] = j0
+            OS[o, 2 * p + 1, c] = j1
+            SRC[j0] = (o, 2 * p, c)
+            SRC[j1] = (o, 2 * p + 1, c)
+
+    pk = Packing("radix2", 1, 2, n_ops, A, E, CG, OS, PINV, SRC)
+    pk.validate(code)
+    return pk
+
+
+def _build_radix4(code: Code, use_perm: bool) -> Packing:
+    """Fig 14 (use_perm=False) / Fig 15 (use_perm=True)."""
+    beta, S = code.beta, code.n_states
+    rho, gamma = 2, 4
+    W = rho * beta
+    nf = code.n_dragonflies(rho)
+    if use_perm:
+        dg = dragonfly_groups(code, rho)
+        rep_of = [dg.reps[g] for g in dg.group_of]
+        perm_of = dg.perm
+        group_of = dg.group_of
+        n_groups = dg.n_groups
+    else:
+        # every dragonfly is its own group with identity permutation
+        rep_of = list(range(nf))
+        perm_of = [tuple(range(gamma))] * nf
+        group_of = list(range(nf))
+        n_groups = nf
+
+    # Assign dragonflies to (op, col): each op holds <= 16//W Theta slots
+    # (A columns W*slot .. W*slot+W) and <= 16 columns.
+    slots_per_op = 16 // W
+    assert slots_per_op >= 1, f"super-branch width {W} exceeds the 16x16 op"
+    by_group: Dict[int, List[int]] = {}
+    for f in range(nf):
+        by_group.setdefault(group_of[f], []).append(f)
+    ops: List[List[Tuple[int, int]]] = []   # per op: list of (slot, dragonfly)
+    op_groups: List[List[int]] = []          # per op: group id per slot
+    cur: List[Tuple[int, int]] = []
+    cur_groups: List[int] = []
+    for g in sorted(by_group):
+        for f in by_group[g]:
+            if g not in cur_groups:
+                if len(cur_groups) == slots_per_op or len(cur) == 16:
+                    ops.append(cur); op_groups.append(cur_groups)
+                    cur, cur_groups = [], []
+                cur_groups.append(g)
+            if len(cur) == 16:
+                ops.append(cur); op_groups.append(cur_groups)
+                cur, cur_groups = [], [g]
+            cur.append((cur_groups.index(g), f))
+    if cur:
+        ops.append(cur); op_groups.append(cur_groups)
+    n_ops = len(ops)
+
+    A = np.zeros((n_ops, 16, 16), dtype=np.float32)
+    E = np.zeros((n_ops, 16, 16, W), dtype=np.float32)
+    CG = np.full((n_ops, 16, 16), -1, dtype=np.int32)
+    OS = np.full((n_ops, 4, 16), -1, dtype=np.int32)
+    PINV = np.zeros((n_ops, 16, gamma), dtype=np.int32)
+    PINV[:] = np.arange(gamma, dtype=np.int32)
+    SRC = np.zeros((S, 3), dtype=np.int32)
+
+    for o, (cols, groups) in enumerate(zip(ops, op_groups)):
+        for slot, g in enumerate(groups):
+            rep = by_group[g][0] if not use_perm else rep_of[by_group[g][0]]
+            A[o, :, W * slot:W * slot + W] = code.theta_rows(rho, rep)[:, :W]
+        for c, (slot, f) in enumerate(cols):
+            pi = perm_of[f]
+            pinv = [0] * gamma
+            for i in range(gamma):
+                pinv[pi[i]] = i
+            for e in range(W):
+                E[o, W * slot + e, c, e] = 1.0
+            for j in range(4):
+                for i in range(4):
+                    # row 4j+i holds rep's branch pi^{-1}(i) -> j, whose
+                    # lambda is dragonfly f's left state pinv[i]
+                    CG[o, 4 * j + i, c] = code.dragonfly_state(rho, f, 0, pinv[i])
+                s = code.dragonfly_state(rho, f, rho, j)
+                OS[o, j, c] = s
+                SRC[s] = (o, j, c)
+            PINV[o, c, :] = pinv
+
+    pk = Packing("radix4" if use_perm else "radix4_noperm",
+                 rho, gamma, n_ops, A, E, CG, OS, PINV, SRC)
+    pk.validate(code)
+    return pk
+
+
+def build_packing(code: Code, scheme: str) -> Packing:
+    """Build the packing spec for one of the paper's three layouts."""
+    if scheme == "radix2":
+        return build_radix2(code)
+    if scheme == "radix4":
+        return _build_radix4(code, use_perm=True)
+    if scheme == "radix4_noperm":
+        return _build_radix4(code, use_perm=False)
+    raise ValueError(f"unknown packing scheme {scheme!r}")

@@ -1,0 +1,246 @@
+"""Convolutional-code trellis math (build-time).
+
+Implements the encoder FSM (paper §II-A), the butterfly structure (§IV,
+Thm 1-2), the radix-2^rho dragonfly generalization (§VI, Thm 3-5) and the
+radix-4 super-branch structure (§VII, Thm 6-7) for an arbitrary (beta,1,k)
+convolutional code.
+
+Conventions (matching `rust/src/coding/trellis.rs` bit-for-bit):
+
+* state ``i`` is the k-1 previous input bits, newest bit at the MSB:
+  ``i = (in_{t-1} << (k-2)) | ... | in_{t-k+1}``.
+* on input bit ``u`` the next state is ``(u << (k-2)) | (i >> 1)``.
+* generator polynomial ``g`` is a k-bit integer whose MSB multiplies the
+  *current* input bit (Eq 1); the wire register is ``(u << (k-1)) | i``.
+* branch output bit b is ``parity(g[b] & register)``.
+* LLR convention: positive LLR means "bit 0 more likely"; BPSK maps
+  bit 0 -> +1.0, so the branch metric Eq 2 uses ``(-1)^alpha * llr``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def parity(x: int) -> int:
+    """Parity (xor-reduction) of the bits of a nonnegative int."""
+    return bin(x).count("1") & 1
+
+
+def bits_field(x: int, hi: int, lo: int) -> int:
+    """The paper's ``x_{hi:lo}`` operator (Eq 23): bits [lo, hi) of x.
+
+    Example from the paper: x = 39 = 0b100111, x_{4:1} = 0b011 = 3,
+    x_{4:0} = 0b0111 = 7.
+    """
+    if hi <= lo:
+        return 0
+    return (x >> lo) & ((1 << (hi - lo)) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Code:
+    """A rate-1/beta convolutional code (beta, 1, k)."""
+
+    k: int                      # constraint length
+    polys: Tuple[int, ...]      # beta generator polynomials, k-bit ints
+
+    def __post_init__(self):
+        if self.k < 3:
+            raise ValueError(f"constraint length k={self.k} must be >= 3")
+        if len(self.polys) < 2:
+            raise ValueError("need beta >= 2 generator polynomials")
+        for g in self.polys:
+            if not (0 < g < (1 << self.k)):
+                raise ValueError(f"polynomial {g:o} (octal) out of range for k={self.k}")
+
+    @property
+    def beta(self) -> int:
+        return len(self.polys)
+
+    @property
+    def n_states(self) -> int:
+        return 1 << (self.k - 1)
+
+    @staticmethod
+    def from_octal(k: int, octal_polys: Sequence[str]) -> "Code":
+        return Code(k=k, polys=tuple(int(p, 8) for p in octal_polys))
+
+    # --- encoder FSM -----------------------------------------------------
+
+    def next_state(self, state: int, u: int) -> int:
+        return (u << (self.k - 2)) | (state >> 1)
+
+    def branch_output(self, state: int, u: int) -> int:
+        """beta-bit branch output alpha_out for (state, input u); bit b of
+        the result corresponds to polynomial b."""
+        reg = (u << (self.k - 1)) | state
+        out = 0
+        for b, g in enumerate(self.polys):
+            out |= parity(g & reg) << b
+        return out
+
+    def prev_states(self, j: int) -> Tuple[int, int]:
+        """The two predecessor states of j (paper: prv(j))."""
+        base = (j << 1) & (self.n_states - 1)
+        return (base, base | 1)
+
+    def branch_input(self, j: int) -> int:
+        """alpha_in of any branch into state j: the MSB of j."""
+        return j >> (self.k - 2)
+
+    def encode(self, bits: Sequence[int], state: int = 0) -> Tuple[List[int], int]:
+        """Encode a bit sequence; returns (flat coded bits, final state).
+
+        Coded bits are emitted LSB-polynomial-first: beta bits per input.
+        """
+        out: List[int] = []
+        for u in bits:
+            o = self.branch_output(state, u)
+            out.extend((o >> b) & 1 for b in range(self.beta))
+            state = self.next_state(state, u)
+        return out, state
+
+    # --- butterflies (Thm 1) and dragonflies (Thm 4) ---------------------
+
+    def dragonfly_state(self, rho: int, f: int, x: int, y: int) -> int:
+        """Thm 4: global state index for dragonfly f, local stage x in
+        [0, rho], local state y in [0, 2^rho).
+
+        ``s = (y_{rho:rho-x} << (k-x-1)) + (f << (rho-x)) + y_{rho-x-1:0}``
+        (pre-bubble + bubble + post-bubble).
+        """
+        k = self.k
+        if not (0 <= x <= rho):
+            raise ValueError(f"local stage x={x} out of [0,{rho}]")
+        if not (0 <= y < (1 << rho)):
+            raise ValueError(f"local state y={y} out of range")
+        if not (0 <= f < (1 << (k - 1 - rho))):
+            raise ValueError(f"dragonfly index f={f} out of range")
+        pre = bits_field(y, rho, rho - x) << (k - x - 1)
+        bub = f << (rho - x)
+        post = bits_field(y, rho - x, 0)
+        return pre + bub + post
+
+    def n_dragonflies(self, rho: int) -> int:
+        return 1 << (self.k - 1 - rho)
+
+    def superbranch_path(self, rho: int, f: int, y_left: int, y_right: int
+                         ) -> List[Tuple[int, int, int]]:
+        """The unique path (Thm 6) from left local state y_left to right
+        local state y_right of dragonfly f, as a list of rho
+        (global_state, input_bit, branch_output) tuples.
+
+        The input bit consumed at local step x is bit x of y_right
+        (newest input ends at the local-state MSB after rho shifts).
+        """
+        steps = []
+        y = y_left
+        for x in range(rho):
+            u = (y_right >> x) & 1
+            s = self.dragonfly_state(rho, f, x, y)
+            steps.append((s, u, self.branch_output(s, u)))
+            y = (u << (rho - 1)) | (y >> 1)
+        assert y == y_right, "local FSM did not land on y_right"
+        return steps
+
+    def superbranch_output(self, rho: int, f: int, y_left: int, y_right: int) -> int:
+        """rho*beta-bit super-branch output; bits of step x occupy
+        positions [x*beta, (x+1)*beta) (stage-major, matching the L vector
+        layout of Eq 33)."""
+        out = 0
+        for x, (_, _, o) in enumerate(self.superbranch_path(rho, f, y_left, y_right)):
+            out |= o << (x * self.beta)
+        return out
+
+    def superbranch_inputs(self, rho: int, y_right: int) -> List[int]:
+        """The rho input bits along any super-branch ending at local state
+        y_right; bit consumed at step x is bit x of y_right."""
+        return [(y_right >> x) & 1 for x in range(rho)]
+
+    # --- Theta matrices (Eq 17 / Eq 36) ----------------------------------
+
+    def theta_rows(self, rho: int, f: int) -> np.ndarray:
+        """Theta-hat_f (Eq 36): shape [2^rho * 2^rho, rho*beta] of +-1.
+
+        Row (y_right * 2^rho + y_left) holds (-1)^alpha-hat for the
+        super-branch y_left -> y_right (P_j block layout: rows grouped by
+        right state j, row within group = left state i).
+        """
+        n = 1 << rho
+        w = rho * self.beta
+        m = np.zeros((n * n, w), dtype=np.int8)
+        for j in range(n):
+            for i in range(n):
+                a = self.superbranch_output(rho, f, i, j)
+                for b in range(w):
+                    m[j * n + i, b] = 1 - 2 * ((a >> b) & 1)
+        return m
+
+    def theta_signature(self, rho: int, f: int) -> Tuple[int, ...]:
+        """Per-(i,j) super-branch outputs of dragonfly f, flattened in
+        P_j-block order. Two dragonflies with equal signatures have equal
+        Theta-hat matrices."""
+        n = 1 << rho
+        return tuple(self.superbranch_output(rho, f, i, j)
+                     for j in range(n) for i in range(n))
+
+
+def find_left_permutation(code: Code, rho: int, f: int, r: int):
+    """Search the permutation pi of left local states such that
+    alpha-hat_f^{i,j} == alpha-hat_r^{pi(i),j} for all i,j (the paper's
+    §VIII-D dragonfly-group property: the same left-state permutation for
+    every right-rooted tree P_j). Returns pi as a tuple or None."""
+    n = 1 << rho
+    sig_f = [[code.superbranch_output(rho, f, i, j) for i in range(n)] for j in range(n)]
+    sig_r = [[code.superbranch_output(rho, r, i, j) for i in range(n)] for j in range(n)]
+    for pi in itertools.permutations(range(n)):
+        if all(sig_f[j][i] == sig_r[j][pi[i]] for j in range(n) for i in range(n)):
+            return pi
+    return None
+
+
+@dataclasses.dataclass
+class DragonflyGroups:
+    """Partition of dragonflies into groups whose Theta-hat matrices are
+    left-state permutations of each other (paper Fig 10/11, Eq 39-42)."""
+
+    rho: int
+    reps: List[int]                 # group representative dragonfly index
+    group_of: List[int]             # dragonfly -> group id
+    perm: List[Tuple[int, ...]]     # dragonfly -> pi  (theta_f[i] == theta_rep[pi(i)])
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.reps)
+
+
+def dragonfly_groups(code: Code, rho: int) -> DragonflyGroups:
+    """Group dragonflies by left-permutation equivalence of Theta-hat."""
+    nf = code.n_dragonflies(rho)
+    reps: List[int] = []
+    group_of = [-1] * nf
+    perm: List[Tuple[int, ...]] = [None] * nf  # type: ignore
+    for f in range(nf):
+        for gid, r in enumerate(reps):
+            pi = find_left_permutation(code, rho, f, r)
+            if pi is not None:
+                group_of[f] = gid
+                perm[f] = pi
+                break
+        else:
+            group_of[f] = len(reps)
+            perm[f] = tuple(range(1 << rho))
+            reps.append(f)
+    return DragonflyGroups(rho=rho, reps=reps, group_of=group_of, perm=perm)
+
+
+# Standard codes (paper §IX uses CCSDS_K7; registry mirrored in rust).
+CCSDS_K7 = Code.from_octal(7, ("171", "133"))    # (2,1,7) — DVB-T/S, WiFi, CCSDS
+GSM_K5 = Code.from_octal(5, ("23", "33"))        # GSM TCH full-rate
+LTE_K7_R13 = Code.from_octal(7, ("133", "171", "165"))  # rate-1/3 (LTE/CDMA family)
+WLAN_K7 = CCSDS_K7                                # 802.11 uses the same polys

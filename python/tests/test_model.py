@@ -1,0 +1,74 @@
+"""L2 model + AOT export: shapes, dtypes, variant naming, HLO emission."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_variant, manifest_entry, to_hlo_text
+from compile.model import DTYPES, Variant, initial_metrics, make_decoder
+from compile.trellis import CCSDS_K7
+
+
+class TestVariant:
+    def test_name_is_stable(self):
+        v = Variant("radix4", "jnp", "single", "half", batch=8, n_steps=32)
+        assert v.name() == "radix4_jnp_acc-single_ch-half_b8_s32"
+
+    def test_dtype_table(self):
+        assert DTYPES["single"] == jnp.float32
+        assert DTYPES["half"] == jnp.bfloat16
+
+
+class TestDecoderContract:
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_output_shapes_and_dtypes(self, impl):
+        v = Variant("radix4", impl, batch=2, n_steps=8)
+        dec, pk = make_decoder(CCSDS_K7, v)
+        llr = jnp.zeros((2, 8, pk.width), jnp.float32)
+        lam0 = jnp.zeros((2, 64), jnp.float32)
+        phi, lam = jax.jit(dec)(llr, lam0)
+        assert phi.shape == (8 * 2 * 64,) and phi.dtype == jnp.int32
+        assert lam.shape == (2 * 64,) and lam.dtype == jnp.float32
+
+    def test_phi_values_in_range(self):
+        v = Variant("radix4", "jnp", batch=2, n_steps=8)
+        dec, pk = make_decoder(CCSDS_K7, v)
+        llr = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 8, 4)),
+                          jnp.float32)
+        lam0 = jnp.zeros((2, 64), jnp.float32)
+        phi, _ = jax.jit(dec)(llr, lam0)
+        assert int(phi.min()) >= 0 and int(phi.max()) < pk.gamma
+
+    def test_initial_metrics(self):
+        m = initial_metrics(64, 3, known_state=5)
+        assert m.shape == (3, 64)
+        assert (m[:, 5] == 0).all() and (m[:, 0] < -1e8).all()
+        m2 = initial_metrics(64, 2, known_state=None)
+        assert (m2 == 0).all()
+
+
+class TestAotExport:
+    def test_hlo_text_has_full_constants(self):
+        v = Variant("radix4", "jnp", batch=2, n_steps=4)
+        text = lower_variant(CCSDS_K7, v)
+        assert "HloModule" in text
+        assert "{...}" not in text, "constants must not be elided"
+        # entry signature matches the contract
+        assert "f32[2,4,4]" in text and "f32[2,64]" in text
+        assert "s32[512]" in text  # 4*2*64 flat phi
+
+    def test_manifest_entry_fields(self):
+        v = Variant("radix4", "jnp", batch=2, n_steps=4)
+        text = lower_variant(CCSDS_K7, v)
+        e = manifest_entry(CCSDS_K7, v, "x.hlo.txt", text)
+        assert e["rho"] == 2 and e["gamma"] == 4 and e["width"] == 4
+        assert e["ops_per_stage"] == 0.5
+        assert e["stages_per_frame"] == 8
+        assert e["polys_octal"] == ["171", "133"]
+        assert len(e["sha256"]) == 16
+
+    def test_pallas_variant_lowers(self):
+        v = Variant("radix4", "pallas", batch=2, n_steps=4)
+        text = lower_variant(CCSDS_K7, v)
+        assert "HloModule" in text and "{...}" not in text

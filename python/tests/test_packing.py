@@ -1,0 +1,85 @@
+"""Packing specs (Figs 5/14/15): structure, Q metric, generality."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.packing import build_packing, build_radix2
+from compile.trellis import CCSDS_K7, GSM_K5, LTE_K7_R13, Code
+
+from .test_trellis import random_code
+
+
+class TestPaperQMetric:
+    def test_radix2_q2(self):
+        pk = build_packing(CCSDS_K7, "radix2")
+        assert pk.n_ops == 2 and pk.ops_per_stage() == 2.0  # §V-B: Q = 2^{k-6}
+
+    def test_radix4_noperm_q2(self):
+        pk = build_packing(CCSDS_K7, "radix4_noperm")
+        assert pk.n_ops == 4 and pk.ops_per_stage() == 2.0  # Fig 14
+
+    def test_radix4_perm_q_half(self):
+        pk = build_packing(CCSDS_K7, "radix4")
+        assert pk.n_ops == 1 and pk.ops_per_stage() == 0.5  # Fig 15
+
+    def test_unknown_scheme(self):
+        with pytest.raises(ValueError):
+            build_packing(CCSDS_K7, "radix8")
+
+
+class TestStructure:
+    @pytest.mark.parametrize("scheme", ["radix2", "radix4", "radix4_noperm"])
+    @pytest.mark.parametrize("code", [CCSDS_K7, GSM_K5, LTE_K7_R13],
+                             ids=["ccsds", "gsm", "lte13"])
+    def test_validates(self, scheme, code):
+        build_packing(code, scheme).validate(code)
+
+    @pytest.mark.parametrize("scheme", ["radix2", "radix4", "radix4_noperm"])
+    def test_a_entries_are_signs(self, scheme):
+        pk = build_packing(CCSDS_K7, scheme)
+        assert set(np.unique(pk.A)).issubset({-1.0, 0.0, 1.0})
+
+    def test_radix2_diagonal_blocks(self):
+        pk = build_radix2(CCSDS_K7)
+        # A must be zero outside the 4x4 diagonal blocks (Fig 5)
+        for o in range(pk.n_ops):
+            for r in range(16):
+                for c in range(16):
+                    if r // 4 != c // 4:
+                        assert pk.A[o, r, c] == 0.0
+
+    def test_cg_rows_reference_left_states(self):
+        code = CCSDS_K7
+        pk = build_packing(code, "radix4")
+        # every valid CG entry must be a left state of the dragonfly the
+        # column's OS states belong to
+        for o in range(pk.n_ops):
+            for c in range(16):
+                states = [pk.OS[o, g, c] for g in range(4) if pk.OS[o, g, c] >= 0]
+                if not states:
+                    continue
+                f = states[0] % 16
+                left = {code.dragonfly_state(2, f, 0, y) for y in range(4)}
+                for r in range(16):
+                    v = pk.CG[o, r, c]
+                    if v >= 0:
+                        assert v in left
+
+    @given(st.integers(4, 9), st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_random_codes_pack(self, k, seed):
+        code = random_code(k, 2, seed)
+        for scheme in ["radix2", "radix4", "radix4_noperm"]:
+            build_packing(code, scheme).validate(code)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_rate_third_codes_pack(self, seed):
+        code = random_code(7, 3, seed)
+        for scheme in ["radix2", "radix4", "radix4_noperm"]:
+            build_packing(code, scheme).validate(code)
+
+    def test_widths(self):
+        assert build_packing(LTE_K7_R13, "radix2").width == 3
+        assert build_packing(LTE_K7_R13, "radix4").width == 6

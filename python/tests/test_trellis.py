@@ -1,0 +1,170 @@
+"""Trellis math: encoder FSM, Theorems 1-7, dragonfly groups."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.trellis import (
+    CCSDS_K7, GSM_K5, LTE_K7_R13, Code, bits_field, dragonfly_groups,
+    find_left_permutation, parity,
+)
+
+
+def random_code(k: int, beta: int, seed: int) -> Code:
+    """A code with MSB=LSB=1 polynomials (the Cor-2.1 family)."""
+    rng = np.random.default_rng(seed)
+    msb = 1 << (k - 1)
+    polys = tuple(int(rng.integers(0, msb)) | msb | 1 for _ in range(beta))
+    return Code(k=k, polys=polys)
+
+
+class TestBitOps:
+    def test_parity(self):
+        assert parity(0) == 0
+        assert parity(0b1011) == 1
+        assert parity(0b1111) == 0
+
+    def test_bits_field_paper_example(self):
+        # Eq 23 example: x=39=0b100111, x_{4:1}=3, x_{4:0}=7
+        assert bits_field(39, 4, 1) == 3
+        assert bits_field(39, 4, 0) == 7
+        assert bits_field(39, 0, 0) == 0
+
+
+class TestEncoderFsm:
+    def test_fig1_code(self):
+        c = CCSDS_K7
+        assert c.k == 7 and c.beta == 2 and c.n_states == 64
+        assert c.polys == (0o171, 0o133)
+
+    def test_prev_inverts_next(self):
+        for c in [CCSDS_K7, GSM_K5, LTE_K7_R13]:
+            for i in range(c.n_states):
+                for u in range(2):
+                    j = c.next_state(i, u)
+                    assert i in c.prev_states(j)
+                    assert c.branch_input(j) == u
+
+    @given(st.integers(0, 63), st.integers(0, 1))
+    def test_branch_output_matches_eq1(self, state, u):
+        c = CCSDS_K7
+        reg = (u << 6) | state
+        expect = 0
+        for b, g in enumerate(c.polys):
+            expect |= parity(g & reg) << b
+        assert c.branch_output(state, u) == expect
+
+    @given(st.lists(st.integers(0, 1), min_size=1, max_size=200))
+    @settings(max_examples=50)
+    def test_encode_length_and_determinism(self, bits):
+        c = CCSDS_K7
+        out1, s1 = c.encode(bits)
+        out2, s2 = c.encode(bits)
+        assert out1 == out2 and s1 == s2
+        assert len(out1) == c.beta * len(bits)
+
+    def test_rejects_bad_codes(self):
+        with pytest.raises(ValueError):
+            Code(k=2, polys=(1, 2))
+        with pytest.raises(ValueError):
+            Code(k=7, polys=(0o171,))
+        with pytest.raises(ValueError):
+            Code(k=7, polys=(0, 0o133))
+
+
+class TestDragonflies:
+    def test_thm1_butterfly_indices(self):
+        c = CCSDS_K7
+        for f in range(32):
+            assert c.dragonfly_state(1, f, 0, 0) == 2 * f
+            assert c.dragonfly_state(1, f, 0, 1) == 2 * f + 1
+            assert c.dragonfly_state(1, f, 1, 0) == f
+            assert c.dragonfly_state(1, f, 1, 1) == f + 32
+
+    def test_eq28_radix4_indices(self):
+        c = CCSDS_K7
+        for f in range(16):
+            for y in range(4):
+                assert c.dragonfly_state(2, f, 0, y) == 4 * f + y
+                assert c.dragonfly_state(2, f, 2, y) == f + y * 16
+            assert c.dragonfly_state(2, f, 1, 2) == 2 * f + 32
+
+    @given(st.integers(1, 3), st.integers(0, 10**9), st.integers(0, 10**9))
+    @settings(max_examples=100)
+    def test_thm3_isolation(self, rho, fr, yr):
+        """Branches from dragonfly-f states land inside dragonfly f."""
+        c = CCSDS_K7
+        f = fr % c.n_dragonflies(rho) if hasattr(c, "n_dragonflies") else 0
+        f = fr % (1 << (c.k - 1 - rho))
+        y = yr % (1 << rho)
+        for x in range(rho):
+            s = c.dragonfly_state(rho, f, x, y)
+            for u in range(2):
+                nxt = c.next_state(s, u)
+                members = {c.dragonfly_state(rho, f, x + 1, y2) for y2 in range(1 << rho)}
+                assert nxt in members
+
+    def test_thm6_superbranch_paths_consistent(self):
+        c = CCSDS_K7
+        for f in range(16):
+            for i in range(4):
+                for j in range(4):
+                    path = c.superbranch_path(2, f, i, j)
+                    assert len(path) == 2
+                    s0, u0, _ = path[0]
+                    assert c.next_state(s0, u0) == path[1][0]
+
+    def test_cor21_butterfly_output_symmetry(self):
+        c = CCSDS_K7  # MSB=LSB=1 polys
+        for f in range(32):
+            o00 = c.superbranch_output(1, f, 0, 0)
+            o11 = c.superbranch_output(1, f, 1, 1)
+            o01 = c.superbranch_output(1, f, 0, 1)
+            o10 = c.superbranch_output(1, f, 1, 0)
+            assert o00 == o11 and o01 == o10 and o00 ^ 0b11 == o01
+
+    @given(st.integers(4, 9), st.integers(0, 2**32 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_cor21_for_random_codes(self, k, seed):
+        c = random_code(k, 2, seed)
+        for f in range(min(8, c.n_states // 2)):
+            assert c.superbranch_output(1, f, 0, 0) == c.superbranch_output(1, f, 1, 1)
+
+
+class TestDragonflyGroups:
+    def test_fig10_paper_groups(self):
+        g = dragonfly_groups(CCSDS_K7, 2)
+        assert g.n_groups == 4
+        assert g.reps == [0, 1, 4, 5]
+        # Eq 39-42
+        assert g.group_of == [0, 1, 0, 1, 2, 3, 2, 3, 0, 1, 0, 1, 2, 3, 2, 3]
+
+    def test_permutation_property(self):
+        c = CCSDS_K7
+        g = dragonfly_groups(c, 2)
+        for f in range(16):
+            r = g.reps[g.group_of[f]]
+            pi = g.perm[f]
+            for j in range(4):
+                for i in range(4):
+                    assert (c.superbranch_output(2, f, i, j)
+                            == c.superbranch_output(2, r, pi[i], j))
+
+    def test_rep_has_identity_perm(self):
+        g = dragonfly_groups(CCSDS_K7, 2)
+        for r in g.reps:
+            assert g.perm[r] == (0, 1, 2, 3)
+
+    @given(st.integers(5, 8), st.integers(0, 2**32 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_groups_partition_random_codes(self, k, seed):
+        c = random_code(k, 2, seed)
+        g = dragonfly_groups(c, 2)
+        assert len(g.group_of) == c.n_dragonflies(2)
+        assert max(g.group_of) + 1 == g.n_groups
+
+    def test_no_cross_group_permutation(self):
+        c = CCSDS_K7
+        g = dragonfly_groups(c, 2)
+        # dragonflies in different groups must have NO left permutation
+        assert find_left_permutation(c, 2, 0, 1) is None

@@ -1,0 +1,67 @@
+//! E3 — tiling-overlap ablation (paper §III, refs [4-7]): BER
+//! degradation vs frame overlap length v, plus the Eq-5 memory overhead
+//! factor (1 + v/f). Expected shape: sharp degradation below v ~ 4-5
+//! constraint lengths, plateau at the unframed BER by v ~ 6k.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use tcvd::ber::{measure_ber, BerSetup};
+use tcvd::coding::{registry, trellis::Trellis};
+use tcvd::util::json::{self, Json};
+use tcvd::viterbi::packed::presets;
+use tcvd::viterbi::tiled::TileConfig;
+
+fn main() -> anyhow::Result<()> {
+    let trellis = Arc::new(Trellis::new(registry::paper_code()));
+    let ebn0 = 3.0; // mid-waterfall: truncation errors clearly visible
+    let (max_bits, errors) = if common::full_rigor() {
+        (2_000_000, 300)
+    } else {
+        (300_000, 150)
+    };
+
+    println!("E3 — BER vs overlap v at {ebn0} dB (payload f=64, k=7)\n");
+    println!("{:>6} | {:>12} | {:>14} | {:>10}", "v", "BER", "vs v=96 ref", "Eq5 ovh");
+
+    // v split evenly between head (metric warm-up) and tail (traceback)
+    let vs = [0usize, 8, 16, 24, 32, 48, 64, 96];
+    let mut rows = Vec::new();
+    let mut reference = None;
+    // compute reference (largest v) first
+    let mut points = Vec::new();
+    for &v in vs.iter().rev() {
+        let tile = TileConfig { payload: 64, head: v / 2, tail: v - v / 2 };
+        let mut dec = presets::radix4(trellis.clone(), tile.frame_stages());
+        let setup = BerSetup { tile, target_errors: errors, max_bits, ..Default::default() };
+        let p = measure_ber(&mut dec, &trellis, ebn0, &setup)?;
+        if reference.is_none() {
+            reference = Some(p.ber().max(1e-12));
+        }
+        points.push((v, tile, p));
+    }
+    points.reverse();
+    for (v, tile, p) in points {
+        let ratio = p.ber() / reference.unwrap();
+        println!("{v:6} | {:12.3e} | {ratio:14.2}x | {:10.3}", p.ber(), tile.overhead());
+        rows.push(json::obj(vec![
+            ("v", json::num(v as f64)),
+            ("ber", json::num(p.ber())),
+            ("ratio_vs_ref", json::num(ratio)),
+            ("eq5_overhead", json::num(tile.overhead())),
+            ("bits", json::num(p.bits as f64)),
+            ("errors", json::num(p.errors as f64)),
+        ]));
+    }
+    println!("\n(v is split head/tail; Eq 5 overhead = 1 + v/f is the survivor-");
+    println!(" path memory factor the paper trades against parallelism)");
+
+    common::write_json("ablation_overlap", &json::obj(vec![
+        ("experiment", json::s("E3/overlap")),
+        ("ebn0_db", json::num(ebn0)),
+        ("rows", Json::Arr(rows)),
+    ]));
+    Ok(())
+}

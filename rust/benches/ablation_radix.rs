@@ -1,0 +1,109 @@
+//! E4 — radix/packing ablation: scalar baseline vs radix-2 (Fig 5,
+//! Q=2 ops/stage) vs radix-4 without permutation (Fig 14, Q=2) vs
+//! radix-4 + dragonfly-group permutation (Fig 15, Q=0.5).
+//!
+//! Reports the paper's Q metric (tensor ops per stage — the hardware-
+//! independent claim), CPU wall time per decoded bit for the emulation
+//! backends, and PJRT throughput for the AOT variants where present.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tcvd::coding::packing::build_packing;
+use tcvd::coding::{registry, trellis::Trellis};
+use tcvd::coordinator::server::CoordinatorConfig;
+use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::util::json::{self, Json};
+use tcvd::viterbi::packed::presets;
+use tcvd::viterbi::scalar::ScalarDecoder;
+use tcvd::viterbi::tiled::{decode_stream, TileConfig};
+use tcvd::viterbi::types::FrameDecoder;
+
+fn main() -> anyhow::Result<()> {
+    let trellis = Arc::new(Trellis::new(registry::paper_code()));
+    let info_bits = if common::full_rigor() { 262_144 } else { 65_536 };
+    let (_, llr) = common::workload(99, info_bits, 5.0);
+    let tile = TileConfig { payload: 64, head: 32, tail: 32 };
+    let stages = tile.frame_stages();
+
+    println!("E4 — packing ablation on (2,1,7) 171/133\n");
+    println!("{:>16} | {:>12} | {:>12} | {:>14}", "decoder", "Q ops/stage", "matmul ops", "cpu Mb/s");
+
+    let mut rows = Vec::new();
+    let mut bench_cpu = |name: &str, dec: &mut dyn FrameDecoder, q: f64| {
+        let d = common::time_median(3, || {
+            decode_stream(dec, &llr, 2, &tile, true).unwrap();
+        });
+        let mbps = common::mbps(info_bits, d);
+        let total_ops = q * (info_bits as f64);
+        println!("{name:>16} | {q:12.2} | {total_ops:12.0} | {mbps:14.3}");
+        rows.push(json::obj(vec![
+            ("decoder", json::s(name)),
+            ("q_ops_per_stage", json::num(q)),
+            ("cpu_mbps", json::num(mbps)),
+        ]));
+    };
+
+    bench_cpu("scalar", &mut ScalarDecoder::new(trellis.clone(), stages), f64::NAN);
+    for scheme in ["radix2", "radix4_noperm", "radix4"] {
+        let pk = build_packing(&trellis, scheme)?;
+        let q = pk.ops_per_stage();
+        let mut dec = match scheme {
+            "radix2" => presets::radix2(trellis.clone(), stages),
+            "radix4_noperm" => presets::radix4_noperm(trellis.clone(), stages),
+            _ => presets::radix4(trellis.clone(), stages),
+        };
+        bench_cpu(scheme, &mut dec, q);
+    }
+
+    // PJRT artifacts: radix2 (b64_s96) vs radix4+perm (b64_s48)
+    println!("\nPJRT artifacts (XLA-CPU; compare ratio radix4/radix2):");
+    let mut pjrt_rows = Vec::new();
+    for (name, variant, tile) in [
+        ("radix2", "radix2_jnp_acc-single_ch-single_b64_s96",
+         TileConfig { payload: 64, head: 16, tail: 16 }),
+        ("radix4_noperm", "radix4_noperm_jnp_acc-single_ch-single_b64_s48",
+         TileConfig { payload: 64, head: 16, tail: 16 }),
+        ("radix4+perm", "radix4_jnp_acc-single_ch-single_b64_s48",
+         TileConfig { payload: 64, head: 16, tail: 16 }),
+    ] {
+        let coord = match Coordinator::start(CoordinatorConfig {
+            backend: BackendSpec::artifact("artifacts", variant),
+            tile,
+            max_batch: 64,
+            batch_deadline: Duration::from_micros(2000),
+            workers: 3,
+            queue_depth: 2048,
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("{name:>16} | SKIP ({e})");
+                continue;
+            }
+        };
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for q in llr.chunks(llr.len() / 4) {
+                let coord = &coord;
+                s.spawn(move || coord.decode_stream_blocking(q, false).unwrap());
+            }
+        });
+        let mbps = common::mbps(info_bits, t0.elapsed());
+        println!("{name:>16} | {mbps:14.3} Mb/s");
+        pjrt_rows.push(json::obj(vec![
+            ("decoder", json::s(name)),
+            ("pjrt_mbps", json::num(mbps)),
+        ]));
+        coord.shutdown()?;
+    }
+
+    common::write_json("ablation_radix", &json::obj(vec![
+        ("experiment", json::s("E4/radix-ablation")),
+        ("cpu", Json::Arr(rows)),
+        ("pjrt", Json::Arr(pjrt_rows)),
+    ]));
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! E5 — coordinator serving ablation: dynamic-batch size / deadline /
+//! session-count sweep over the PJRT artifact backend. The paper's
+//! throughput rests on frame-parallel launches; this shows how batch
+//! occupancy drives throughput and what it costs in latency.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tcvd::coordinator::server::CoordinatorConfig;
+use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::util::json::{self, Json};
+use tcvd::viterbi::tiled::TileConfig;
+
+fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
+       -> anyhow::Result<(f64, f64, f64, f64)> {
+    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        backend: BackendSpec::artifact("artifacts", "radix4_jnp_acc-single_ch-single_b64_s48"),
+        tile,
+        max_batch,
+        batch_deadline: Duration::from_micros(deadline_us),
+        workers: 3,
+        queue_depth: 2048,
+    })?);
+    let per_session = info_bits / sessions;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for i in 0..sessions {
+            let coord = coord.clone();
+            s.spawn(move || {
+                let (_, llr) = common::workload(7000 + i as u64, per_session, 5.0);
+                coord.decode_stream_blocking(&llr, true).unwrap();
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    let coord = Arc::try_unwrap(coord).ok().expect("done");
+    coord.shutdown()?;
+    Ok((
+        common::mbps(info_bits, wall),
+        snap.mean_batch,
+        snap.latency_p50_us,
+        snap.latency_p99_us,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let info_bits = if common::full_rigor() { 2_097_152 } else { 524_288 };
+    println!("E5 — dynamic batching sweep (radix-4 artifact, batch capacity 64)\n");
+    println!(
+        "{:>9} {:>10} {:>12} | {:>10} {:>11} {:>10} {:>10}",
+        "sessions", "max_batch", "deadline_us", "Mb/s", "mean_batch", "p50 us", "p99 us"
+    );
+    let mut rows = Vec::new();
+    let sweeps: Vec<(usize, usize, u64)> = vec![
+        // batch-size sweep at 8 sessions
+        (8, 1, 2000),
+        (8, 4, 2000),
+        (8, 16, 2000),
+        (8, 64, 2000),
+        // deadline sweep at full batch
+        (8, 64, 100),
+        (8, 64, 500),
+        (8, 64, 8000),
+        // session scaling at full batch
+        (1, 64, 2000),
+        (2, 64, 2000),
+        (4, 64, 2000),
+        (16, 64, 2000),
+        (32, 64, 2000),
+    ];
+    for (sessions, max_batch, deadline) in sweeps {
+        match run(sessions, max_batch, deadline, info_bits) {
+            Ok((mbps, mean_batch, p50, p99)) => {
+                println!(
+                    "{sessions:>9} {max_batch:>10} {deadline:>12} | {mbps:>10.2} \
+                     {mean_batch:>11.1} {p50:>10.0} {p99:>10.0}"
+                );
+                rows.push(json::obj(vec![
+                    ("sessions", json::num(sessions as f64)),
+                    ("max_batch", json::num(max_batch as f64)),
+                    ("deadline_us", json::num(deadline as f64)),
+                    ("mbps", json::num(mbps)),
+                    ("mean_batch", json::num(mean_batch)),
+                    ("p50_us", json::num(p50)),
+                    ("p99_us", json::num(p99)),
+                ]));
+            }
+            Err(e) => {
+                println!("{sessions:>9} {max_batch:>10} {deadline:>12} | SKIP ({e})");
+                break;
+            }
+        }
+    }
+    common::write_json("batching", &json::obj(vec![
+        ("experiment", json::s("E5/batching")),
+        ("info_bits", json::num(info_bits as f64)),
+        ("rows", Json::Arr(rows)),
+    ]));
+    Ok(())
+}

@@ -1,0 +1,61 @@
+#![allow(dead_code)]
+//! Shared bench harness utilities (hand-rolled; criterion is unavailable
+//! offline). Each bench prints the paper-style table and writes JSON to
+//! `bench_results/`.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{registry, Encoder};
+use tcvd::util::json::Json;
+use tcvd::util::rng::Rng;
+
+/// Full-rigor mode (longer runs): set TCVD_BENCH_FULL=1.
+pub fn full_rigor() -> bool {
+    std::env::var("TCVD_BENCH_FULL").map_or(false, |v| v == "1")
+}
+
+/// Generate (payload, llr-stream) for the paper's code at an Eb/N0.
+pub fn workload(seed: u64, info_bits: usize, ebn0_db: f64) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut payload = Rng::new(seed).bits(info_bits - 6);
+    payload.extend_from_slice(&[0; 6]);
+    let mut enc = Encoder::new(code.clone());
+    let coded = enc.encode(&payload);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0_db, code.rate(), seed ^ 0xBEEF);
+    let rx = ch.transmit(&tx);
+    (payload, rx.iter().map(|&x| x as f32).collect())
+}
+
+/// Median wall time of `iters` runs of `f` (after one warmup).
+pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> Duration {
+    f(); // warmup
+    let mut times: Vec<Duration> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    times[times.len() / 2]
+}
+
+/// Write a JSON result document under bench_results/.
+pub fn write_json(name: &str, j: &Json) {
+    let dir = Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, j.to_string_pretty()) {
+        eprintln!("(could not write {}: {e})", path.display());
+    } else {
+        println!("\nwrote {}", path.display());
+    }
+}
+
+/// Mb/s from bits and a duration.
+pub fn mbps(bits: usize, d: Duration) -> f64 {
+    bits as f64 / d.as_secs_f64() / 1e6
+}

@@ -1,0 +1,93 @@
+//! E2 — paper Table I: decoder throughput for the four C/channel
+//! precision combinations.
+//!
+//! The paper measured Gb/s on a V100; this testbed executes the same
+//! tensor formulation on the XLA-CPU PJRT client, so absolute numbers
+//! differ by construction. The claim under test is the *shape*: C
+//! precision does not change throughput much, channel=half is faster
+//! (smaller input transfers), and the combination single-C/half-channel
+//! is the best valid configuration (paper: 21.4 vs 19.5 Gb/s).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Duration;
+
+use tcvd::coordinator::server::CoordinatorConfig;
+use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::util::json::{self, Json};
+use tcvd::viterbi::tiled::TileConfig;
+
+fn run_combo(variant: &str, llr: &[f32]) -> anyhow::Result<(f64, f64)> {
+    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend: BackendSpec::artifact("artifacts", variant),
+        tile,
+        max_batch: 64,
+        batch_deadline: Duration::from_micros(2000),
+        workers: 3,
+        queue_depth: 2048,
+    })?;
+    // split across 4 concurrent sessions to keep batches full
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let quarters: Vec<&[f32]> = llr.chunks(llr.len() / 4).collect();
+        let mut joins = Vec::new();
+        for q in quarters {
+            let coord = &coord;
+            joins.push(s.spawn(move || coord.decode_stream_blocking(q, false).unwrap()));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    let info_bits = llr.len() / 2;
+    coord.shutdown()?;
+    Ok((common::mbps(info_bits, wall), snap.mean_batch))
+}
+
+fn main() -> anyhow::Result<()> {
+    let info_bits = if common::full_rigor() { 4_194_304 } else { 1_048_576 };
+    let (_, llr) = common::workload(2024, info_bits, 5.0);
+
+    // (paper row, artifact variant)
+    let combos = [
+        ("single/single", "radix4_jnp_acc-single_ch-single_b64_s48", 19.5),
+        ("single/half", "radix4_jnp_acc-single_ch-half_b64_s48", 21.4),
+        ("half/single", "radix4_jnp_acc-half_ch-single_b64_s48", 20.1),
+        ("half/half", "radix4_jnp_acc-half_ch-half_b64_s48", 22.2),
+    ];
+    println!("Table I — decoder throughput by C/channel precision");
+    println!("(paper: V100 tensor cores in Gb/s; here: XLA-CPU PJRT in Mb/s —");
+    println!(" compare RATIOS, not absolutes; BER validity is Fig 13's axis)\n");
+    println!("{:>15} | {:>12} | {:>10} | {:>12}", "C/channel", "paper Gb/s", "this Mb/s", "mean batch");
+    let mut rows = Vec::new();
+    let mut base = None;
+    for (name, variant, paper) in combos {
+        match run_combo(variant, &llr) {
+            Ok((mbps, mean_batch)) => {
+                base.get_or_insert(mbps);
+                println!("{name:>15} | {paper:12.1} | {mbps:10.2} | {mean_batch:12.1}");
+                rows.push(json::obj(vec![
+                    ("combo", json::s(name)),
+                    ("paper_gbps", json::num(paper)),
+                    ("measured_mbps", json::num(mbps)),
+                    ("ratio_vs_single_single", json::num(mbps / base.unwrap())),
+                    ("mean_batch", json::num(mean_batch)),
+                ]));
+            }
+            Err(e) => println!("{name:>15} | {paper:12.1} | SKIP ({e})"),
+        }
+    }
+    common::write_json(
+        "table1_throughput",
+        &json::obj(vec![
+            ("experiment", json::s("E2/TableI")),
+            ("info_bits", json::num(info_bits as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! BER measurement (paper Fig 12 / §IX-B): end-to-end tx -> AWGN ->
+//! decode -> count, plus the closed-form theoretical references that
+//! replace MATLAB's `bertool`.
+
+pub mod theory;
+pub mod harness;
+pub mod sweep;
+
+pub use harness::{measure_ber, BerPoint, BerSetup};

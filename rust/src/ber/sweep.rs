@@ -1,0 +1,102 @@
+//! Eb/N0 sweeps producing Fig-13-style curves, with JSON emission for the
+//! bench harness.
+
+use anyhow::Result;
+
+use crate::coding::trellis::Trellis;
+use crate::util::json::{self, Json};
+use crate::viterbi::types::FrameDecoder;
+
+use super::harness::{measure_ber, BerPoint, BerSetup};
+use super::theory;
+
+/// Parse a sweep spec "start:stop:step" in dB.
+pub fn parse_range(spec: &str) -> Result<Vec<f64>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    anyhow::ensure!(parts.len() == 3, "range must be start:stop:step, got {spec:?}");
+    let (a, b, s) = (
+        parts[0].parse::<f64>()?,
+        parts[1].parse::<f64>()?,
+        parts[2].parse::<f64>()?,
+    );
+    anyhow::ensure!(s > 0.0 && b >= a, "bad range {spec:?}");
+    let mut v = Vec::new();
+    let mut x = a;
+    while x <= b + 1e-9 {
+        v.push((x * 1e6).round() / 1e6);
+        x += s;
+    }
+    Ok(v)
+}
+
+/// Run a BER sweep over the given Eb/N0 points.
+pub fn sweep(dec: &mut dyn FrameDecoder, trellis: &Trellis, ebn0_dbs: &[f64],
+             setup: &BerSetup) -> Result<Vec<BerPoint>> {
+    ebn0_dbs.iter().map(|&db| measure_ber(dec, trellis, db, setup)).collect()
+}
+
+/// Serialize a labelled family of curves + theory references as JSON
+/// (consumed by `EXPERIMENTS.md` tables and external plotting).
+pub fn curves_json(curves: &[(String, Vec<BerPoint>)]) -> Json {
+    let mut items = Vec::new();
+    for (label, points) in curves {
+        let pts: Vec<Json> = points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("ebn0_db", json::num(p.ebn0_db)),
+                    ("ber", json::num(p.ber())),
+                    ("bits", json::num(p.bits as f64)),
+                    ("errors", json::num(p.errors as f64)),
+                    ("reliable", Json::Bool(p.reliable())),
+                ])
+            })
+            .collect();
+        items.push(json::obj(vec![
+            ("label", json::s(label)),
+            ("points", Json::Arr(pts)),
+        ]));
+    }
+    // theory references over the union of measured x-values
+    let mut xs: Vec<f64> = curves.iter().flat_map(|(_, ps)| ps.iter().map(|p| p.ebn0_db)).collect();
+    xs.sort_by(f64::total_cmp);
+    xs.dedup();
+    let theory_pts: Vec<Json> = xs
+        .iter()
+        .map(|&db| {
+            json::obj(vec![
+                ("ebn0_db", json::num(db)),
+                ("uncoded_bpsk", json::num(theory::uncoded_bpsk(db))),
+                ("coded_union_bound", json::num(theory::coded_union_bound(db))),
+                ("coded_hard_bound", json::num(theory::coded_union_bound_hard(db))),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("curves", Json::Arr(items)),
+        ("theory", Json::Arr(theory_pts)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_range_works() {
+        assert_eq!(parse_range("0:2:0.5").unwrap(), vec![0.0, 0.5, 1.0, 1.5, 2.0]);
+        assert_eq!(parse_range("3:3:1").unwrap(), vec![3.0]);
+        assert!(parse_range("5:1:1").is_err());
+        assert!(parse_range("1:2").is_err());
+    }
+
+    #[test]
+    fn curves_json_shape() {
+        let pts = vec![BerPoint { ebn0_db: 1.0, bits: 1000, errors: 10 }];
+        let j = curves_json(&[("test".to_string(), pts)]);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get("curves").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(back.get("theory").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,89 @@
+//! AWGN channel at a given Eb/N0 (paper Fig 12 step 3).
+//!
+//! For BPSK with unit symbol energy and code rate R, the noise standard
+//! deviation is `sigma = sqrt(1 / (2 * R * 10^(EbN0_dB/10)))`.
+//!
+//! NOTE: the paper's §IX-B text gives `sigma = 2^{-(Eb/N0)/20}`, which is
+//! dimensionally a typo (base-2 instead of base-10 and missing the rate
+//! term); we implement the standard formula and record the substitution
+//! in EXPERIMENTS.md. The *shape* of every BER comparison is unaffected
+//! because all decoders see the same channel.
+
+use crate::util::rng::Rng;
+
+/// Seedable AWGN channel for a fixed Eb/N0 and code rate.
+#[derive(Clone, Debug)]
+pub struct AwgnChannel {
+    sigma: f64,
+    rng: Rng,
+}
+
+impl AwgnChannel {
+    /// Construct from Eb/N0 in dB and code rate R (= 1/beta).
+    pub fn new(ebn0_db: f64, rate: f64, seed: u64) -> Self {
+        AwgnChannel { sigma: sigma_for(ebn0_db, rate), rng: Rng::new(seed) }
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Add white Gaussian noise to BPSK symbols.
+    pub fn transmit(&mut self, symbols: &[f64]) -> Vec<f64> {
+        symbols.iter().map(|&s| s + self.sigma * self.rng.next_gaussian()).collect()
+    }
+
+    /// In-place variant for the streaming path (no allocation).
+    pub fn transmit_into(&mut self, symbols: &[f64], out: &mut [f64]) {
+        for (o, &s) in out.iter_mut().zip(symbols) {
+            *o = s + self.sigma * self.rng.next_gaussian();
+        }
+    }
+}
+
+/// Noise sigma for BPSK at Eb/N0 (dB) and code rate R.
+pub fn sigma_for(ebn0_db: f64, rate: f64) -> f64 {
+    let ebn0 = 10f64.powf(ebn0_db / 10.0);
+    (1.0 / (2.0 * rate * ebn0)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_reference_values() {
+        // rate 1/2, 0 dB: sigma = 1.0; 10 dB: sigma = sqrt(1/10)
+        assert!((sigma_for(0.0, 0.5) - 1.0).abs() < 1e-12);
+        assert!((sigma_for(10.0, 0.5) - (0.1f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_statistics() {
+        let mut ch = AwgnChannel::new(0.0, 0.5, 7);
+        let tx = vec![1.0; 100_000];
+        let rx = ch.transmit(&tx);
+        let mean = rx.iter().sum::<f64>() / rx.len() as f64;
+        let var = rx.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / rx.len() as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let mut a = AwgnChannel::new(3.0, 0.5, 1);
+        let mut b = AwgnChannel::new(3.0, 0.5, 1);
+        assert_eq!(a.transmit(&[1.0, -1.0]), b.transmit(&[1.0, -1.0]));
+    }
+
+    #[test]
+    fn transmit_into_matches() {
+        let mut a = AwgnChannel::new(3.0, 0.5, 9);
+        let mut b = AwgnChannel::new(3.0, 0.5, 9);
+        let tx = [1.0, -1.0, 1.0];
+        let v = a.transmit(&tx);
+        let mut buf = [0.0; 3];
+        b.transmit_into(&tx, &mut buf);
+        assert_eq!(v.as_slice(), buf.as_slice());
+    }
+}

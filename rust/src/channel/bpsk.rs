@@ -1,0 +1,39 @@
+//! BPSK mapping: bit 0 -> +1.0, bit 1 -> -1.0 (so a positive received
+//! value / LLR indicates "bit 0 more likely", matching the branch-metric
+//! sign convention in Eq 2).
+
+/// Modulate coded bits onto BPSK symbols.
+pub fn modulate(bits: &[u8]) -> Vec<f64> {
+    bits.iter().map(|&b| 1.0 - 2.0 * b as f64).collect()
+}
+
+/// Hard-decision demodulation: sign slicer back to bits.
+pub fn demod_hard(symbols: &[f64]) -> Vec<u8> {
+    symbols.iter().map(|&y| u8::from(y < 0.0)).collect()
+}
+
+/// Hard-decision "LLRs": ±1 per bit, for the soft-vs-hard study (§II-C).
+pub fn hard_llrs(symbols: &[f64]) -> Vec<f64> {
+    symbols.iter().map(|&y| if y < 0.0 { -1.0 } else { 1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_convention() {
+        assert_eq!(modulate(&[0, 1, 0]), vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn demod_inverts_clean_mod() {
+        let bits = [0u8, 1, 1, 0, 1];
+        assert_eq!(demod_hard(&modulate(&bits)), bits);
+    }
+
+    #[test]
+    fn hard_llr_saturates() {
+        assert_eq!(hard_llrs(&[0.3, -2.7, 0.0]), vec![1.0, -1.0, 1.0]);
+    }
+}

@@ -1,0 +1,47 @@
+//! LLR formation (paper §II-C): for BPSK over AWGN the exact LLR is
+//! `2*y/sigma^2`. The Viterbi max-metric is invariant under positive
+//! scaling, so the decoder may consume raw `y`; the scale only matters
+//! once values are quantized to half precision (saturation / resolution),
+//! which is exactly the §IX-B study.
+
+/// Exact LLR scale factor for AWGN: 2 / sigma^2.
+pub fn llr_scale(sigma: f64) -> f64 {
+    2.0 / (sigma * sigma)
+}
+
+/// Form LLRs from received symbols (scale = llr_scale(sigma) for exact
+/// LLRs, or 1.0 to feed raw symbols as the paper does).
+pub fn form_llrs(received: &[f64], scale: f64) -> Vec<f32> {
+    received.iter().map(|&y| (y * scale) as f32).collect()
+}
+
+/// Saturating fixed-range clamp sometimes used before half conversion.
+pub fn clamp_llrs(llrs: &mut [f32], limit: f32) {
+    for v in llrs.iter_mut() {
+        *v = v.clamp(-limit, limit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_formula() {
+        assert!((llr_scale(1.0) - 2.0).abs() < 1e-12);
+        assert!((llr_scale(0.5) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn form_scales() {
+        let l = form_llrs(&[0.5, -1.0], 2.0);
+        assert_eq!(l, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn clamp_saturates_symmetrically() {
+        let mut l = vec![10.0, -10.0, 0.5];
+        clamp_llrs(&mut l, 4.0);
+        assert_eq!(l, vec![4.0, -4.0, 0.5]);
+    }
+}

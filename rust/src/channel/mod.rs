@@ -1,0 +1,13 @@
+//! Channel simulation substrate (paper Fig 12, steps 3-4): BPSK
+//! modulation, AWGN, LLR formation and precision quantization. Replaces
+//! the authors' MATLAB-side channel with a deterministic, seedable Rust
+//! implementation.
+
+pub mod bpsk;
+pub mod awgn;
+pub mod llr;
+pub mod quantize;
+
+pub use awgn::AwgnChannel;
+pub use bpsk::{demod_hard, modulate};
+pub use llr::llr_scale;

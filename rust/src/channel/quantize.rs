@@ -1,0 +1,64 @@
+//! Channel-array precision quantization (paper §IX-B: "the data received
+//! from channel can be half-precision"). Emulates storing the LLR array
+//! in a 16-bit float format before it enters the B matrix.
+
+use crate::util::half::HalfKind;
+
+/// Channel storage precision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelPrecision {
+    /// f32 storage ("single" in Table I).
+    Single,
+    /// 16-bit storage ("half"); the format depends on the platform
+    /// mapping — f16 on V100, bf16 on TPU.
+    Half(HalfKind),
+}
+
+impl ChannelPrecision {
+    /// Quantize an LLR buffer through the channel storage format.
+    pub fn quantize(self, llrs: &mut [f32]) {
+        if let ChannelPrecision::Half(kind) = self {
+            for v in llrs.iter_mut() {
+                *v = kind.round(*v);
+            }
+        }
+    }
+
+    /// Bytes per stored LLR (drives the throughput difference the paper
+    /// attributes to channel=half: smaller transfers).
+    pub fn bytes_per_llr(self) -> usize {
+        match self {
+            ChannelPrecision::Single => 4,
+            ChannelPrecision::Half(_) => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_identity() {
+        let mut v = vec![1.2345678f32, -0.000123];
+        let orig = v.clone();
+        ChannelPrecision::Single.quantize(&mut v);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn half_rounds() {
+        let mut v = vec![1.0 + 1.0 / 4096.0];
+        ChannelPrecision::Half(HalfKind::Bf16).quantize(&mut v);
+        assert_eq!(v[0], 1.0); // bf16 drops the tiny fraction
+        let mut w = vec![1.0 + 1.0 / 4096.0];
+        ChannelPrecision::Half(HalfKind::F16).quantize(&mut w);
+        assert_eq!(w[0], 1.0); // f16 (11-bit significand) drops 2^-12 too
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(ChannelPrecision::Single.bytes_per_llr(), 4);
+        assert_eq!(ChannelPrecision::Half(HalfKind::F16).bytes_per_llr(), 2);
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal CLI argument parsing (offline image: no clap). Flags are
+//! `--key value` pairs plus positional words; subcommands dispatch in
+//! `main.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand, positionals and `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(), // boolean flag
+                };
+                a.flags.insert(key.to_string(), value);
+            } else if a.command.is_empty() {
+                a.command = arg.clone();
+            } else {
+                a.positional.push(arg.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on unknown flags (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known flags: {}",
+                      known.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(" "));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a `BackendSpec` from the common `--backend/--artifacts/--variant`
+/// flag triple used by several subcommands.
+pub fn backend_from_flags(backend: &str, artifacts: &str, variant: &str,
+                          stages: usize) -> Result<crate::coordinator::BackendSpec> {
+    use crate::channel::quantize::ChannelPrecision;
+    use crate::coordinator::BackendSpec;
+    use crate::util::half::HalfKind;
+    use crate::viterbi::AccPrecision;
+    let cpu = |scheme: &str, acc: AccPrecision, chan: ChannelPrecision| BackendSpec::CpuPacked {
+        code: "ccsds".into(),
+        scheme: scheme.into(),
+        stages,
+        acc,
+        chan,
+        renorm_every: 16,
+    };
+    Ok(match backend {
+        "artifact" | "pjrt" => BackendSpec::artifact(artifacts, variant),
+        "scalar" => crate::coordinator::BackendSpec::Scalar { code: "ccsds".into(), stages },
+        "cpu-radix2" => cpu("radix2", AccPrecision::Single, ChannelPrecision::Single),
+        "cpu-radix4" => cpu("radix4", AccPrecision::Single, ChannelPrecision::Single),
+        "cpu-radix4-noperm" => cpu("radix4_noperm", AccPrecision::Single, ChannelPrecision::Single),
+        "cpu-radix4-half" => cpu("radix4", AccPrecision::Half(HalfKind::Bf16),
+                                  ChannelPrecision::Single),
+        "cpu-radix4-half-f16" => cpu("radix4", AccPrecision::Half(HalfKind::F16),
+                                      ChannelPrecision::Single),
+        other => bail!(
+            "unknown backend {other:?}; known: artifact scalar cpu-radix2 cpu-radix4 \
+             cpu-radix4-noperm cpu-radix4-half cpu-radix4-half-f16"
+        ),
+    })
+}
+
+/// Print top-level usage.
+pub fn print_usage() {
+    println!(
+        "tcvd — tensor-formulated parallel Viterbi decoder
+
+USAGE: tcvd <command> [--flag value ...]
+
+COMMANDS
+  info       platform, artifact manifest, registered codes
+  selftest   encode/corrupt/decode round trip on every backend
+  encode     --code ccsds --bits N [--in file] [--out file]
+  decode     --in llr.f32le [--backend artifact|cpu-radix4|scalar] [--out bits]
+  ber        --snr 0:6:1 [--errors 100] [--max-bits N] [--backend ...] [--hard]
+  serve      --sessions 8 --bits 65536 --snr 5 [--backend ...] [--json]
+
+Run `make artifacts` first to build the AOT decoder artifacts."
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("ber --snr 0:8:0.5 --bits 100000 --hard");
+        assert_eq!(a.command, "ber");
+        assert_eq!(a.get("snr"), Some("0:8:0.5"));
+        assert_eq!(a.get_usize("bits", 0).unwrap(), 100_000);
+        assert!(a.get_bool("hard"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn check_known_catches_typos() {
+        let a = parse("serve --sesions 4");
+        assert!(a.check_known(&["sessions"]).is_err());
+        let b = parse("serve --sessions 4");
+        assert!(b.check_known(&["sessions"]).is_ok());
+    }
+}

@@ -1,0 +1,15 @@
+//! Convolutional coding substrate: generator polynomials, the encoder
+//! FSM, trellis/butterfly/dragonfly index math (paper §II, §IV, §VI-VII)
+//! and the tensor packing specs (§V, §VIII). Bit-for-bit mirror of
+//! `python/compile/trellis.py` + `packing.py`.
+
+pub mod poly;
+pub mod encoder;
+pub mod trellis;
+pub mod packing;
+pub mod puncture;
+pub mod registry;
+
+pub use encoder::Encoder;
+pub use poly::Code;
+pub use trellis::Trellis;

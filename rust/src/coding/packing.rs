@@ -1,0 +1,372 @@
+//! Tensor packing specs — Rust mirror of `python/compile/packing.py`
+//! (paper Figs 5, 14, 15). The CPU emulation decoders
+//! (`viterbi/radix2.rs`, `viterbi/radix4.rs`) execute exactly these
+//! specs, so their arithmetic is the same as the AOT artifact's.
+
+use anyhow::{bail, Result};
+
+use super::trellis::Trellis;
+
+/// Static tensor packing of one decoder step (rho trellis stages).
+///
+/// Field layouts match the python mirror:
+/// * `a[o][r][c]` — ±1/0 Theta entries (16x16 per op).
+/// * `e[o][r][c]` — which LLR entry feeds B\[r,c\] (or -1).
+/// * `cg[o][r][c]` — lambda gather state index (or -1).
+/// * `os[o][g][c]` — global right state written by (group, col) (or -1).
+/// * `pinv[o][c][sel]` — argmax -> true left-local state.
+/// * `src[s]` — (op, group, col) producing state s.
+#[derive(Clone, Debug)]
+pub struct Packing {
+    pub scheme: &'static str,
+    pub rho: u32,
+    pub gamma: usize,
+    pub n_ops: usize,
+    pub width: usize,
+    pub a: Vec<Vec<Vec<f32>>>,
+    pub e: Vec<Vec<Vec<i32>>>,
+    pub cg: Vec<Vec<Vec<i32>>>,
+    pub os: Vec<Vec<Vec<i32>>>,
+    pub pinv: Vec<Vec<Vec<u32>>>,
+    pub src: Vec<(usize, usize, usize)>,
+}
+
+impl Packing {
+    /// The paper's Q metric: tensor ops per trellis stage.
+    pub fn ops_per_stage(&self) -> f64 {
+        self.n_ops as f64 / self.rho as f64
+    }
+
+    pub fn groups_per_col(&self) -> usize {
+        16 / self.gamma
+    }
+
+    /// Structural invariants (same checks as python `Packing.validate`).
+    pub fn validate(&self, n_states: usize) -> Result<()> {
+        let mut seen = vec![false; n_states];
+        for (o, op) in self.os.iter().enumerate() {
+            for (g, row) in op.iter().enumerate() {
+                for (c, &s) in row.iter().enumerate() {
+                    if s < 0 {
+                        continue;
+                    }
+                    let s = s as usize;
+                    if s >= n_states {
+                        bail!("OS out of range: {s}");
+                    }
+                    if seen[s] {
+                        bail!("state {s} produced twice");
+                    }
+                    seen[s] = true;
+                    if self.src[s] != (o, g, c) {
+                        bail!("src[{s}] inconsistent");
+                    }
+                }
+            }
+        }
+        if let Some(miss) = seen.iter().position(|&x| !x) {
+            bail!("state {miss} never produced");
+        }
+        for op in &self.cg {
+            for row in op {
+                for &v in row {
+                    if v >= n_states as i32 {
+                        bail!("CG out of range: {v}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn zeros3_f(o: usize) -> Vec<Vec<Vec<f32>>> {
+    vec![vec![vec![0.0; 16]; 16]; o]
+}
+
+fn fill3_i(o: usize, a: usize, b: usize, v: i32) -> Vec<Vec<Vec<i32>>> {
+    vec![vec![vec![v; b]; a]; o]
+}
+
+/// Theta_f of a butterfly (Eq 17): [4][beta] of ±1, row order
+/// (i0,j0),(i1,j0),(i0,j1),(i1,j1).
+fn theta_butterfly(t: &Trellis, f: u32) -> Vec<Vec<f32>> {
+    let beta = t.code().beta();
+    let mut rows = Vec::with_capacity(4);
+    for j in 0..2u32 {
+        for i in 0..2u32 {
+            let a = t.superbranch_output(1, f, i, j);
+            rows.push((0..beta).map(|b| 1.0 - 2.0 * ((a >> b) & 1) as f32).collect());
+        }
+    }
+    rows
+}
+
+/// Fig 5: diagonal 4x4 blocks, butterflies sharing a Theta share a block.
+pub fn build_radix2(t: &Trellis) -> Packing {
+    let code = t.code();
+    let beta = code.beta();
+    assert!(beta <= 4, "radix2 packing supports beta <= 4, got {beta}");
+    let s_count = code.n_states();
+    let nf = t.n_dragonflies(1);
+
+    // bucket butterflies by identical Theta signature, sorted for
+    // determinism (mirror of python's sorted(buckets.items()))
+    let mut buckets: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+    for f in 0..nf as u32 {
+        let sig = t.theta_signature(1, f);
+        match buckets.iter_mut().find(|(s, _)| *s == sig) {
+            Some((_, fs)) => fs.push(f),
+            None => buckets.push((sig, vec![f])),
+        }
+    }
+    buckets.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let mut units: Vec<(usize, Vec<u32>)> = Vec::new(); // (bucket idx, <=4 butterflies)
+    for (bi, (_, fs)) in buckets.iter().enumerate() {
+        for chunk in fs.chunks(4) {
+            units.push((bi, chunk.to_vec()));
+        }
+    }
+    let n_ops = units.len().div_ceil(4);
+
+    let mut a = zeros3_f(n_ops);
+    let mut e = fill3_i(n_ops, 16, 16, -1);
+    let mut cg = fill3_i(n_ops, 16, 16, -1);
+    let mut os = fill3_i(n_ops, 8, 16, -1);
+    let pinv = vec![vec![vec![0u32, 1]; 16]; n_ops];
+    let mut src = vec![(0usize, 0usize, 0usize); s_count];
+
+    for (u, (bi, fs)) in units.iter().enumerate() {
+        let (o, p) = (u / 4, u % 4);
+        let theta = theta_butterfly(t, buckets[*bi].1[0]);
+        for (r, row) in theta.iter().enumerate() {
+            for (cidx, &v) in row.iter().enumerate() {
+                a[o][4 * p + r][4 * p + cidx] = v;
+            }
+        }
+        for (cc, &f) in fs.iter().enumerate() {
+            let c = 4 * p + cc;
+            for ei in 0..beta {
+                e[o][4 * p + ei][c] = ei as i32;
+            }
+            let (i0, i1) = (2 * f as i32, 2 * f as i32 + 1);
+            cg[o][4 * p][c] = i0;
+            cg[o][4 * p + 1][c] = i1;
+            cg[o][4 * p + 2][c] = i0;
+            cg[o][4 * p + 3][c] = i1;
+            let j0 = t.dragonfly_state(1, f, 1, 0) as usize;
+            let j1 = t.dragonfly_state(1, f, 1, 1) as usize;
+            os[o][2 * p][c] = j0 as i32;
+            os[o][2 * p + 1][c] = j1 as i32;
+            src[j0] = (o, 2 * p, c);
+            src[j1] = (o, 2 * p + 1, c);
+        }
+    }
+
+    let pk = Packing {
+        scheme: "radix2",
+        rho: 1,
+        gamma: 2,
+        n_ops,
+        width: beta,
+        a,
+        e,
+        cg,
+        os,
+        pinv,
+        src,
+    };
+    pk.validate(s_count).expect("radix2 packing invalid");
+    pk
+}
+
+/// Fig 14 (use_perm=false) / Fig 15 (use_perm=true).
+pub fn build_radix4(t: &Trellis, use_perm: bool) -> Packing {
+    let code = t.code();
+    let beta = code.beta();
+    let s_count = code.n_states();
+    let rho = 2u32;
+    let gamma = 4usize;
+    let w = (rho as usize) * beta;
+    let nf = t.n_dragonflies(rho);
+
+    let (rep_of, perm_of, group_of): (Vec<u32>, Vec<Vec<u32>>, Vec<u32>) = if use_perm {
+        let (reps, group_of, perm) = t.dragonfly_groups(rho);
+        let rep_of = group_of.iter().map(|&g| reps[g as usize]).collect();
+        (rep_of, perm, group_of)
+    } else {
+        (
+            (0..nf as u32).collect(),
+            vec![(0..gamma as u32).collect(); nf],
+            (0..nf as u32).collect(),
+        )
+    };
+
+    // bucket dragonflies by group
+    let n_groups = *group_of.iter().max().unwrap() as usize + 1;
+    let mut by_group: Vec<Vec<u32>> = vec![Vec::new(); n_groups];
+    for f in 0..nf as u32 {
+        by_group[group_of[f as usize] as usize].push(f);
+    }
+
+    // assign to (op, col): <=16/W Theta slots and <=16 cols per op
+    // (mirror of the python greedy)
+    let slots_per_op = 16 / w;
+    assert!(slots_per_op >= 1, "super-branch width {w} exceeds the 16x16 op");
+    let mut ops: Vec<Vec<(usize, u32)>> = Vec::new();
+    let mut op_groups: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<(usize, u32)> = Vec::new();
+    let mut cur_groups: Vec<usize> = Vec::new();
+    for g in 0..n_groups {
+        for &f in &by_group[g] {
+            if !cur_groups.contains(&g) {
+                if cur_groups.len() == slots_per_op || cur.len() == 16 {
+                    ops.push(std::mem::take(&mut cur));
+                    op_groups.push(std::mem::take(&mut cur_groups));
+                }
+                cur_groups.push(g);
+            }
+            if cur.len() == 16 {
+                ops.push(std::mem::take(&mut cur));
+                op_groups.push(std::mem::take(&mut cur_groups));
+                cur_groups.push(g);
+            }
+            let slot = cur_groups.iter().position(|&x| x == g).unwrap();
+            cur.push((slot, f));
+        }
+    }
+    if !cur.is_empty() {
+        ops.push(cur);
+        op_groups.push(cur_groups);
+    }
+    let n_ops = ops.len();
+
+    let mut a = zeros3_f(n_ops);
+    let mut e = fill3_i(n_ops, 16, 16, -1);
+    let mut cg = fill3_i(n_ops, 16, 16, -1);
+    let mut os = fill3_i(n_ops, 4, 16, -1);
+    let mut pinv = vec![vec![(0..gamma as u32).collect::<Vec<u32>>(); 16]; n_ops];
+    let mut src = vec![(0usize, 0usize, 0usize); s_count];
+
+    for (o, (cols, groups)) in ops.iter().zip(&op_groups).enumerate() {
+        for (slot, &g) in groups.iter().enumerate() {
+            let rep = if use_perm { rep_of[by_group[g][0] as usize] } else { by_group[g][0] };
+            // Theta-hat rows (Eq 36): row 4j+i = +-1 bits of superbranch i->j
+            for j in 0..4u32 {
+                for i in 0..4u32 {
+                    let alpha = t.superbranch_output(rho, rep, i, j);
+                    for b in 0..w {
+                        a[o][(4 * j + i) as usize][w * slot + b] =
+                            1.0 - 2.0 * ((alpha >> b) & 1) as f32;
+                    }
+                }
+            }
+        }
+        for (c, &(slot, f)) in cols.iter().enumerate() {
+            let pi = &perm_of[f as usize];
+            let mut pv = vec![0u32; gamma];
+            for i in 0..gamma {
+                pv[pi[i] as usize] = i as u32;
+            }
+            for ei in 0..w {
+                e[o][w * slot + ei][c] = ei as i32;
+            }
+            for j in 0..4u32 {
+                for i in 0..gamma {
+                    // row 4j+i holds rep's branch pinv(i) -> j, whose
+                    // lambda is dragonfly f's left state pinv[i]
+                    cg[o][(4 * j) as usize + i][c] =
+                        t.dragonfly_state(rho, f, 0, pv[i]) as i32;
+                }
+                let s = t.dragonfly_state(rho, f, rho, j) as usize;
+                os[o][j as usize][c] = s as i32;
+                src[s] = (o, j as usize, c);
+            }
+            pinv[o][c] = pv;
+        }
+    }
+
+    let pk = Packing {
+        scheme: if use_perm { "radix4" } else { "radix4_noperm" },
+        rho,
+        gamma,
+        n_ops,
+        width: w,
+        a,
+        e,
+        cg,
+        os,
+        pinv,
+        src,
+    };
+    pk.validate(s_count).expect("radix4 packing invalid");
+    pk
+}
+
+/// Build by scheme name (matching the python/packing.py entry point).
+pub fn build_packing(t: &Trellis, scheme: &str) -> Result<Packing> {
+    match scheme {
+        "radix2" => Ok(build_radix2(t)),
+        "radix4" => Ok(build_radix4(t, true)),
+        "radix4_noperm" => Ok(build_radix4(t, false)),
+        _ => bail!("unknown packing scheme {scheme:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::poly::Code;
+
+    fn trellis() -> Trellis {
+        Trellis::new(Code::from_octal(7, &["171", "133"]).unwrap())
+    }
+
+    #[test]
+    fn radix2_q_is_2() {
+        let pk = build_radix2(&trellis());
+        assert_eq!(pk.n_ops, 2);
+        assert_eq!(pk.ops_per_stage(), 2.0);
+        assert_eq!(pk.width, 2);
+    }
+
+    #[test]
+    fn radix4_perm_q_is_half() {
+        let pk = build_radix4(&trellis(), true);
+        assert_eq!(pk.n_ops, 1); // Fig 15: whole trellis in one op
+        assert_eq!(pk.ops_per_stage(), 0.5);
+        assert_eq!(pk.width, 4);
+    }
+
+    #[test]
+    fn radix4_noperm_q_is_2() {
+        let pk = build_radix4(&trellis(), false);
+        assert_eq!(pk.n_ops, 4); // Fig 14
+        assert_eq!(pk.ops_per_stage(), 2.0);
+    }
+
+    #[test]
+    fn a_entries_are_sign_values() {
+        for scheme in ["radix2", "radix4", "radix4_noperm"] {
+            let pk = build_packing(&trellis(), scheme).unwrap();
+            for op in &pk.a {
+                for row in op {
+                    for &v in row {
+                        assert!(v == 0.0 || v == 1.0 || v == -1.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gsm_k5_packs_too() {
+        // generality: a different code must still produce a valid packing
+        let t = Trellis::new(Code::from_octal(5, &["23", "33"]).unwrap());
+        for scheme in ["radix2", "radix4", "radix4_noperm"] {
+            let pk = build_packing(&t, scheme).unwrap();
+            pk.validate(16).unwrap();
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Code definition: constraint length k and generator polynomials.
+//!
+//! Conventions (identical to `python/compile/trellis.py`):
+//! * state = previous k-1 input bits, newest at MSB;
+//! * next state on input u: `(u << (k-2)) | (state >> 1)`;
+//! * polynomial MSB multiplies the current input bit (paper Eq 1);
+//! * branch output bit b = parity(poly[b] & ((u << (k-1)) | state)).
+
+use anyhow::{bail, Result};
+
+/// A rate-1/beta convolutional code (beta, 1, k).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Code {
+    k: u32,
+    polys: Vec<u32>,
+}
+
+impl Code {
+    pub fn new(k: u32, polys: Vec<u32>) -> Result<Code> {
+        if k < 3 || k > 16 {
+            bail!("constraint length k={k} out of supported range [3,16]");
+        }
+        if polys.len() < 2 {
+            bail!("need beta >= 2 generator polynomials, got {}", polys.len());
+        }
+        for &g in &polys {
+            if g == 0 || g >= (1 << k) {
+                bail!("polynomial {g:o} (octal) out of range for k={k}");
+            }
+        }
+        Ok(Code { k, polys })
+    }
+
+    /// Parse octal polynomial strings, e.g. `Code::from_octal(7, &["171","133"])`.
+    pub fn from_octal(k: u32, octal: &[&str]) -> Result<Code> {
+        let polys = octal
+            .iter()
+            .map(|s| u32::from_str_radix(s, 8).map_err(Into::into))
+            .collect::<Result<Vec<_>>>()?;
+        Code::new(k, polys)
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn beta(&self) -> usize {
+        self.polys.len()
+    }
+
+    pub fn polys(&self) -> &[u32] {
+        &self.polys
+    }
+
+    pub fn n_states(&self) -> usize {
+        1 << (self.k - 1)
+    }
+
+    /// Code rate 1/beta.
+    pub fn rate(&self) -> f64 {
+        1.0 / self.beta() as f64
+    }
+
+    // --- FSM -----------------------------------------------------------
+
+    #[inline]
+    pub fn next_state(&self, state: u32, u: u32) -> u32 {
+        (u << (self.k - 2)) | (state >> 1)
+    }
+
+    /// beta-bit branch output; bit b corresponds to polynomial b.
+    #[inline]
+    pub fn branch_output(&self, state: u32, u: u32) -> u32 {
+        let reg = (u << (self.k - 1)) | state;
+        let mut out = 0u32;
+        for (b, &g) in self.polys.iter().enumerate() {
+            out |= (((g & reg).count_ones() & 1) as u32) << b;
+        }
+        out
+    }
+
+    /// The two predecessor states of j (paper prv(j)), low index first.
+    #[inline]
+    pub fn prev_states(&self, j: u32) -> (u32, u32) {
+        let base = (j << 1) & (self.n_states() as u32 - 1);
+        (base, base | 1)
+    }
+
+    /// alpha_in of any branch into j (the MSB of j).
+    #[inline]
+    pub fn branch_input(&self, j: u32) -> u32 {
+        j >> (self.k - 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ccsds() -> Code {
+        Code::from_octal(7, &["171", "133"]).unwrap()
+    }
+
+    #[test]
+    fn octal_parsing() {
+        let c = ccsds();
+        assert_eq!(c.polys(), &[0o171, 0o133]);
+        assert_eq!(c.k(), 7);
+        assert_eq!(c.beta(), 2);
+        assert_eq!(c.n_states(), 64);
+        assert_eq!(c.rate(), 0.5);
+    }
+
+    #[test]
+    fn rejects_bad_codes() {
+        assert!(Code::new(2, vec![1, 2]).is_err());
+        assert!(Code::new(7, vec![0o171]).is_err());
+        assert!(Code::new(7, vec![0, 0o133]).is_err());
+        assert!(Code::new(7, vec![1 << 7, 0o133]).is_err());
+    }
+
+    #[test]
+    fn fsm_transitions() {
+        let c = ccsds();
+        // from state 0, input 1 -> state 2^(k-2) = 32
+        assert_eq!(c.next_state(0, 1), 32);
+        assert_eq!(c.next_state(0, 0), 0);
+        // shifting: state 0b100000, input 0 -> 0b010000
+        assert_eq!(c.next_state(32, 0), 16);
+    }
+
+    #[test]
+    fn prev_states_invert_next() {
+        let c = ccsds();
+        for i in 0..c.n_states() as u32 {
+            for u in 0..2 {
+                let j = c.next_state(i, u);
+                let (p0, p1) = c.prev_states(j);
+                assert!(i == p0 || i == p1, "state {i} not a predecessor of {j}");
+                assert_eq!(c.branch_input(j), u);
+            }
+        }
+    }
+
+    #[test]
+    fn branch_output_known_value() {
+        let c = ccsds();
+        // all-zero register -> all-zero output; all-ones -> parity of polys
+        assert_eq!(c.branch_output(0, 0), 0);
+        let all = c.branch_output((1 << 6) - 1, 1);
+        let expect = ((0o171u32.count_ones() & 1) | ((0o133u32.count_ones() & 1) << 1)) as u32;
+        assert_eq!(all, expect);
+    }
+}

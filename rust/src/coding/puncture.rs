@@ -1,0 +1,183 @@
+//! Puncturing: rate adaptation for the industrial protocols the paper's
+//! introduction motivates (DVB-T/S, WiFi, WiMAX all derive rates 2/3,
+//! 3/4, 5/6, 7/8 from the same (2,1,7) 171/133 mother code by deleting
+//! coded bits on a periodic pattern).
+//!
+//! The decoder side *depunctures* by re-inserting zero LLRs (= erasures:
+//! no information, Eq 2 contributes 0 to every branch metric), so the
+//! same Viterbi machinery decodes every derived rate.
+
+use anyhow::{bail, Result};
+
+/// A puncturing pattern over the mother-code output stream.
+///
+/// `keep[i]` says whether coded bit `i mod keep.len()` is transmitted.
+/// Patterns are beta-aligned: `keep.len()` must be a multiple of beta.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Puncturer {
+    keep: Vec<bool>,
+    beta: usize,
+}
+
+impl Puncturer {
+    pub fn new(keep: Vec<bool>, beta: usize) -> Result<Puncturer> {
+        if keep.is_empty() || keep.len() % beta != 0 {
+            bail!("pattern length {} must be a positive multiple of beta {beta}", keep.len());
+        }
+        if !keep.iter().any(|&k| k) {
+            bail!("pattern deletes every bit");
+        }
+        // every information stage must keep at least one coded bit overall
+        // (otherwise the trellis has unconstrained stages at high rates) —
+        // we only *warn*-by-construction: standard patterns all satisfy it.
+        Ok(Puncturer { keep, beta })
+    }
+
+    /// Standard DVB-T / IEEE 802.11 patterns for the (2,1,7) mother code.
+    /// `name` is "1/2", "2/3", "3/4", "5/6" or "7/8".
+    pub fn standard(name: &str) -> Result<Puncturer> {
+        // patterns in (X1 Y1 X2 Y2 ...) order, X = poly 171, Y = poly 133
+        let keep: Vec<bool> = match name {
+            "1/2" => vec![true, true],
+            "2/3" => vec![true, true, false, true],
+            "3/4" => vec![true, true, false, true, true, false],
+            "5/6" => vec![true, true, false, true, true, false, false, true, true, false],
+            "7/8" => vec![
+                true, true, false, true, false, true, false, true, true, false,
+                false, true, true, false,
+            ],
+            _ => bail!("unknown standard rate {name:?} (know 1/2, 2/3, 3/4, 5/6, 7/8)"),
+        };
+        Puncturer::new(keep, 2)
+    }
+
+    pub fn pattern_len(&self) -> usize {
+        self.keep.len()
+    }
+
+    /// Effective code rate: info bits per transmitted bit.
+    pub fn rate(&self) -> f64 {
+        let kept = self.keep.iter().filter(|&&k| k).count();
+        (self.keep.len() / self.beta) as f64 / kept as f64
+    }
+
+    /// Drop punctured positions from a coded bit stream.
+    pub fn puncture(&self, coded: &[u8]) -> Vec<u8> {
+        coded
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.keep[i % self.keep.len()])
+            .map(|(_, &b)| b)
+            .collect()
+    }
+
+    /// Number of transmitted bits for `n` mother-coded bits.
+    pub fn punctured_len(&self, n: usize) -> usize {
+        let full = n / self.keep.len();
+        let kept_per = self.keep.iter().filter(|&&k| k).count();
+        let mut len = full * kept_per;
+        for i in 0..(n % self.keep.len()) {
+            len += usize::from(self.keep[i]);
+        }
+        len
+    }
+
+    /// Re-insert erasures (0.0 LLR) at punctured positions, restoring the
+    /// mother-code stream the decoder expects. `n_coded` is the mother
+    /// stream length (stages * beta).
+    pub fn depuncture(&self, llr: &[f32], n_coded: usize) -> Result<Vec<f32>> {
+        if llr.len() != self.punctured_len(n_coded) {
+            bail!("llr length {} does not match punctured length {} for {n_coded} coded bits",
+                  llr.len(), self.punctured_len(n_coded));
+        }
+        let mut out = vec![0f32; n_coded];
+        let mut src = 0usize;
+        for (i, slot) in out.iter_mut().enumerate() {
+            if self.keep[i % self.keep.len()] {
+                *slot = llr[src];
+                src += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{awgn::AwgnChannel, bpsk};
+    use crate::coding::{registry, trellis::Trellis, Encoder};
+    use crate::viterbi::scalar;
+
+    #[test]
+    fn standard_rates() {
+        for (name, rate) in [("1/2", 0.5), ("2/3", 2.0 / 3.0), ("3/4", 0.75),
+                             ("5/6", 5.0 / 6.0), ("7/8", 7.0 / 8.0)] {
+            let p = Puncturer::standard(name).unwrap();
+            assert!((p.rate() - rate).abs() < 1e-12, "{name}");
+        }
+        assert!(Puncturer::standard("9/10").is_err());
+    }
+
+    #[test]
+    fn puncture_depuncture_roundtrip_positions() {
+        let p = Puncturer::standard("3/4").unwrap();
+        let coded: Vec<u8> = (0..24).map(|i| (i % 2) as u8).collect();
+        let tx = p.puncture(&coded);
+        assert_eq!(tx.len(), p.punctured_len(24));
+        let llr: Vec<f32> = tx.iter().map(|&b| 1.0 - 2.0 * b as f32).collect();
+        let dep = p.depuncture(&llr, 24).unwrap();
+        // kept positions carry the symbol, punctured are 0 (erasure)
+        let mut kept = 0;
+        for (i, &v) in dep.iter().enumerate() {
+            if p.keep[i % p.pattern_len()] {
+                assert_eq!(v, 1.0 - 2.0 * coded[i] as f32);
+                kept += 1;
+            } else {
+                assert_eq!(v, 0.0);
+            }
+        }
+        assert_eq!(kept, tx.len());
+    }
+
+    #[test]
+    fn rejects_bad_patterns() {
+        assert!(Puncturer::new(vec![], 2).is_err());
+        assert!(Puncturer::new(vec![true], 2).is_err());
+        assert!(Puncturer::new(vec![false, false], 2).is_err());
+    }
+
+    #[test]
+    fn rate_three_quarters_decodes_clean_at_high_snr() {
+        let code = registry::paper_code();
+        let t = Trellis::new(code.clone());
+        let p = Puncturer::standard("3/4").unwrap();
+        let mut enc = Encoder::new(code.clone());
+        let mut bits = crate::util::rng::Rng::new(3).bits(300);
+        bits.extend_from_slice(&[0; 6]);
+        let coded = enc.encode(&bits);
+        let tx_bits = p.puncture(&coded);
+        let tx = bpsk::modulate(&tx_bits);
+        let mut ch = AwgnChannel::new(7.0, p.rate(), 5);
+        let rx = ch.transmit(&tx);
+        let llr_p: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+        let llr = p.depuncture(&llr_p, coded.len()).unwrap();
+        let lam0 = scalar::initial_metrics(64, Some(0));
+        let out = scalar::decode(&t, &llr, &lam0, Some(0));
+        assert_eq!(out, bits, "rate-3/4 punctured decode at 7 dB");
+    }
+
+    #[test]
+    fn punctured_len_handles_partial_periods() {
+        let p = Puncturer::standard("2/3").unwrap(); // keep 3 of 4
+        assert_eq!(p.punctured_len(4), 3);
+        assert_eq!(p.punctured_len(6), 5); // 4 -> 3, then T,T of next period
+        assert_eq!(p.punctured_len(0), 0);
+    }
+
+    #[test]
+    fn depuncture_length_mismatch_errors() {
+        let p = Puncturer::standard("2/3").unwrap();
+        assert!(p.depuncture(&[0.0; 5], 4).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Registry of standard convolutional codes (the industrial protocols the
+//! paper's introduction motivates: DVB-T/S, GPRS, GSM, LTE, 3G/CDMA,
+//! WiFi, WiMAX).
+
+use anyhow::{bail, Result};
+
+use super::poly::Code;
+
+/// A named standard code.
+pub struct StandardCode {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub k: u32,
+    pub polys_octal: &'static [&'static str],
+}
+
+/// All registered standard codes.
+pub const STANDARD_CODES: &[StandardCode] = &[
+    StandardCode {
+        name: "ccsds",
+        description: "(2,1,7) 171/133 — CCSDS, DVB-T/S, IEEE 802.11, the paper's §IX code",
+        k: 7,
+        polys_octal: &["171", "133"],
+    },
+    StandardCode {
+        name: "gsm",
+        description: "(2,1,5) 23/33 — GSM TCH/FS",
+        k: 5,
+        polys_octal: &["23", "33"],
+    },
+    StandardCode {
+        name: "lte",
+        description: "(3,1,7) 133/171/165 — LTE / CDMA tail-biting family (rate 1/3)",
+        k: 7,
+        polys_octal: &["133", "171", "165"],
+    },
+    StandardCode {
+        name: "wimax",
+        description: "(2,1,7) 171/133 — IEEE 802.16 (same polys as CCSDS)",
+        k: 7,
+        polys_octal: &["171", "133"],
+    },
+    StandardCode {
+        name: "dab",
+        description: "(4,1,7) 133/171/145/133 — ETSI DAB rate-1/4 mother code",
+        k: 7,
+        polys_octal: &["133", "171", "145", "133"],
+    },
+];
+
+/// Look up a standard code by name (case-insensitive).
+pub fn lookup(name: &str) -> Result<Code> {
+    let lname = name.to_ascii_lowercase();
+    for sc in STANDARD_CODES {
+        if sc.name == lname {
+            return Code::from_octal(sc.k, sc.polys_octal);
+        }
+    }
+    bail!(
+        "unknown code {name:?}; known: {}",
+        STANDARD_CODES.iter().map(|c| c.name).collect::<Vec<_>>().join(", ")
+    )
+}
+
+/// The paper's evaluation code: (2,1,7), polynomials 171/133 octal.
+pub fn paper_code() -> Code {
+    Code::from_octal(7, &["171", "133"]).expect("static code is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_known_codes() {
+        for sc in STANDARD_CODES {
+            let c = lookup(sc.name).unwrap();
+            assert_eq!(c.k(), sc.k);
+            assert_eq!(c.beta(), sc.polys_octal.len());
+        }
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(lookup("CCSDS").is_ok());
+    }
+
+    #[test]
+    fn lookup_unknown_fails() {
+        assert!(lookup("nope").is_err());
+    }
+
+    #[test]
+    fn paper_code_matches_fig1() {
+        let c = paper_code();
+        assert_eq!(c.polys(), &[0o171, 0o133]);
+        assert_eq!(c.n_states(), 64);
+    }
+}

@@ -1,0 +1,321 @@
+//! Trellis structure: butterfly (§IV, Thm 1-2) and radix-2^rho dragonfly
+//! (§VI, Thm 3-5) index math, super-branches (§VII, Thm 6-7) and the
+//! precomputed tables the decoders use.
+
+use anyhow::{bail, Result};
+
+use super::poly::Code;
+
+/// All permutations of 0..n (n is at most 2^rho = 4 here).
+pub fn permutations(n: usize) -> Vec<Vec<u32>> {
+    fn build(remaining: &mut Vec<u32>, cur: &mut Vec<u32>, all: &mut Vec<Vec<u32>>) {
+        if remaining.is_empty() {
+            all.push(cur.clone());
+            return;
+        }
+        for idx in 0..remaining.len() {
+            let v = remaining.remove(idx);
+            cur.push(v);
+            build(remaining, cur, all);
+            cur.pop();
+            remaining.insert(idx, v);
+        }
+    }
+    let mut all = Vec::new();
+    build(&mut (0..n as u32).collect(), &mut Vec::new(), &mut all);
+    all
+}
+
+/// The paper's `x_{hi:lo}` bit-field operator (Eq 23): bits [lo, hi).
+#[inline]
+pub fn bits_field(x: u32, hi: u32, lo: u32) -> u32 {
+    if hi <= lo {
+        0
+    } else {
+        (x >> lo) & ((1u32 << (hi - lo)) - 1)
+    }
+}
+
+/// Precomputed trellis tables for one code.
+#[derive(Clone, Debug)]
+pub struct Trellis {
+    code: Code,
+    /// next[state][u] — successor state.
+    pub next: Vec<[u32; 2]>,
+    /// out[state][u] — beta-bit branch output.
+    pub out: Vec<[u32; 2]>,
+    /// prev[state] — the two predecessors (low index first).
+    pub prev: Vec<[u32; 2]>,
+}
+
+impl Trellis {
+    pub fn new(code: Code) -> Self {
+        let s = code.n_states();
+        let mut next = vec![[0u32; 2]; s];
+        let mut out = vec![[0u32; 2]; s];
+        let mut prev = vec![[0u32; 2]; s];
+        for i in 0..s as u32 {
+            for u in 0..2u32 {
+                next[i as usize][u as usize] = code.next_state(i, u);
+                out[i as usize][u as usize] = code.branch_output(i, u);
+            }
+        }
+        for j in 0..s as u32 {
+            let (p0, p1) = code.prev_states(j);
+            prev[j as usize] = [p0, p1];
+        }
+        Trellis { code, next, out, prev }
+    }
+
+    pub fn code(&self) -> &Code {
+        &self.code
+    }
+
+    // --- dragonfly index math (Thm 4) -----------------------------------
+
+    pub fn n_dragonflies(&self, rho: u32) -> usize {
+        1 << (self.code.k() - 1 - rho)
+    }
+
+    /// Thm 4: global state for (dragonfly f, local stage x, local state y):
+    /// pre-bubble + bubble + post-bubble.
+    pub fn dragonfly_state(&self, rho: u32, f: u32, x: u32, y: u32) -> u32 {
+        let k = self.code.k();
+        debug_assert!(x <= rho && y < (1 << rho) && (f as usize) < self.n_dragonflies(rho));
+        let pre = bits_field(y, rho, rho - x) << (k - x - 1);
+        let bub = f << (rho - x);
+        let post = bits_field(y, rho - x, 0);
+        pre + bub + post
+    }
+
+    /// Decompose a global *right* state: (dragonfly f, local right state).
+    #[inline]
+    pub fn right_local(&self, rho: u32, s: u32) -> (u32, u32) {
+        let ndf = self.n_dragonflies(rho) as u32;
+        (s % ndf, s / ndf)
+    }
+
+    /// The unique super-branch path (Thm 6) from left local y_left to
+    /// right local y_right of dragonfly f: rho (global_state, input,
+    /// branch_output) steps. Input consumed at local step x is bit x of
+    /// y_right.
+    pub fn superbranch_path(&self, rho: u32, f: u32, y_left: u32, y_right: u32)
+                            -> Vec<(u32, u32, u32)> {
+        let mut steps = Vec::with_capacity(rho as usize);
+        let mut y = y_left;
+        for x in 0..rho {
+            let u = (y_right >> x) & 1;
+            let s = self.dragonfly_state(rho, f, x, y);
+            steps.push((s, u, self.code.branch_output(s, u)));
+            y = (u << (rho - 1)) | (y >> 1);
+        }
+        debug_assert_eq!(y, y_right);
+        steps
+    }
+
+    /// rho*beta-bit super-branch output; step x occupies bits
+    /// [x*beta, (x+1)*beta) — the Eq 33 L-vector layout.
+    pub fn superbranch_output(&self, rho: u32, f: u32, y_left: u32, y_right: u32) -> u32 {
+        let beta = self.code.beta() as u32;
+        let mut out = 0u32;
+        for (x, (_, _, o)) in self.superbranch_path(rho, f, y_left, y_right).iter().enumerate() {
+            out |= o << (x as u32 * beta);
+        }
+        out
+    }
+
+    /// Per-(i,j) super-branch outputs flattened in P_j-block order —
+    /// equal signatures mean equal Theta-hat matrices.
+    pub fn theta_signature(&self, rho: u32, f: u32) -> Vec<u32> {
+        let n = 1u32 << rho;
+        let mut sig = Vec::with_capacity((n * n) as usize);
+        for j in 0..n {
+            for i in 0..n {
+                sig.push(self.superbranch_output(rho, f, i, j));
+            }
+        }
+        sig
+    }
+
+    /// Search the left-state permutation pi with
+    /// `alpha_f[i -> j] == alpha_r[pi(i) -> j]` for all i, j (§VIII-D).
+    pub fn find_left_permutation(&self, rho: u32, f: u32, r: u32) -> Option<Vec<u32>> {
+        let n = (1u32 << rho) as usize;
+        let sig_f = self.theta_signature(rho, f); // index [j*n + i]
+        let sig_r = self.theta_signature(rho, r);
+        for cand in permutations(n) {
+            let ok = (0..n).all(|j| {
+                (0..n).all(|i| sig_f[j * n + i] == sig_r[j * n + cand[i] as usize])
+            });
+            if ok {
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    /// Dragonfly groups (paper Fig 10/11): returns (reps, group_of, perm)
+    /// where `theta_f[i] == theta_rep[perm_f[i]]`.
+    pub fn dragonfly_groups(&self, rho: u32) -> (Vec<u32>, Vec<u32>, Vec<Vec<u32>>) {
+        let nf = self.n_dragonflies(rho) as u32;
+        let mut reps: Vec<u32> = Vec::new();
+        let mut group_of = vec![0u32; nf as usize];
+        let mut perm: Vec<Vec<u32>> = vec![Vec::new(); nf as usize];
+        for f in 0..nf {
+            let mut found = false;
+            for (gid, &r) in reps.iter().enumerate() {
+                if let Some(pi) = self.find_left_permutation(rho, f, r) {
+                    group_of[f as usize] = gid as u32;
+                    perm[f as usize] = pi;
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                group_of[f as usize] = reps.len() as u32;
+                perm[f as usize] = (0..(1 << rho)).collect();
+                reps.push(f);
+            }
+        }
+        (reps, group_of, perm)
+    }
+
+    /// Validate the code is usable with the radix-4 scheme (n divisible
+    /// constraints etc). Returns rho-compatible status.
+    pub fn supports_radix(&self, rho: u32) -> Result<()> {
+        if rho == 0 || rho >= self.code.k() {
+            bail!("radix-2^{rho} invalid for k={}", self.code.k());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trellis() -> Trellis {
+        Trellis::new(Code::from_octal(7, &["171", "133"]).unwrap())
+    }
+
+    #[test]
+    fn thm1_butterfly_indices() {
+        let t = trellis();
+        for f in 0..t.n_dragonflies(1) as u32 {
+            assert_eq!(t.dragonfly_state(1, f, 0, 0), 2 * f); // i0
+            assert_eq!(t.dragonfly_state(1, f, 0, 1), 2 * f + 1); // i1
+            assert_eq!(t.dragonfly_state(1, f, 1, 0), f); // j0
+            assert_eq!(t.dragonfly_state(1, f, 1, 1), f + 32); // j1
+        }
+    }
+
+    #[test]
+    fn eq28_radix4_indices() {
+        let t = trellis();
+        let f = 3;
+        // Eq 28: i_y = 4f+y; m: 2f, 2f+1, 2f+32, 2f+33; j_y = f + y*16
+        for y in 0..4 {
+            assert_eq!(t.dragonfly_state(2, f, 0, y), 4 * f + y);
+            assert_eq!(t.dragonfly_state(2, f, 2, y), f + y * 16);
+        }
+        assert_eq!(t.dragonfly_state(2, f, 1, 0), 2 * f);
+        assert_eq!(t.dragonfly_state(2, f, 1, 1), 2 * f + 1);
+        assert_eq!(t.dragonfly_state(2, f, 1, 2), 2 * f + 32);
+        assert_eq!(t.dragonfly_state(2, f, 1, 3), 2 * f + 33);
+    }
+
+    #[test]
+    fn thm3_dragonflies_are_isolated() {
+        // every branch from a left state of dragonfly f lands on a middle
+        // state of the same dragonfly, etc.
+        let t = trellis();
+        for rho in 1..=3u32 {
+            for f in 0..t.n_dragonflies(rho) as u32 {
+                for x in 0..rho {
+                    for y in 0..(1u32 << rho) {
+                        let s = t.dragonfly_state(rho, f, x, y);
+                        for u in 0..2u32 {
+                            let nxt = t.next[s as usize][u as usize];
+                            // nxt must be some local state of the same dragonfly at x+1
+                            let found = (0..(1u32 << rho))
+                                .any(|y2| t.dragonfly_state(rho, f, x + 1, y2) == nxt);
+                            assert!(found, "rho={rho} f={f} x={x} y={y} u={u}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thm6_unique_paths() {
+        let t = trellis();
+        for f in 0..16u32 {
+            for i in 0..4u32 {
+                for j in 0..4u32 {
+                    let path = t.superbranch_path(2, f, i, j);
+                    assert_eq!(path.len(), 2);
+                    // consecutive: next(state_0, u_0) == state_1
+                    let (s0, u0, _) = path[0];
+                    let (s1, _, _) = path[1];
+                    assert_eq!(t.next[s0 as usize][u0 as usize], s1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fig10_dragonfly_groups() {
+        let t = trellis();
+        let (reps, group_of, perm) = t.dragonfly_groups(2);
+        assert_eq!(reps, vec![0, 1, 4, 5]);
+        // Eq 39-42: DG0={0,2,8,10} DG1={1,3,9,11} DG2={4,6,12,14} DG3={5,7,13,15}
+        assert_eq!(
+            group_of,
+            vec![0, 1, 0, 1, 2, 3, 2, 3, 0, 1, 0, 1, 2, 3, 2, 3]
+        );
+        // permutation property holds
+        for f in 0..16u32 {
+            let r = reps[group_of[f as usize] as usize];
+            let pi = &perm[f as usize];
+            for j in 0..4 {
+                for i in 0..4usize {
+                    assert_eq!(
+                        t.superbranch_output(2, f, i as u32, j),
+                        t.superbranch_output(2, r, pi[i], j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thm2_butterfly_outputs_related() {
+        // Cor 2.1: for polys with MSB=LSB=1, outer branches share output,
+        // inner branches are the toggled version.
+        let t = trellis();
+        let beta_mask = 0b11;
+        for f in 0..32u32 {
+            let o00 = t.superbranch_output(1, f, 0, 0);
+            let o11 = t.superbranch_output(1, f, 1, 1);
+            let o01 = t.superbranch_output(1, f, 0, 1);
+            let o10 = t.superbranch_output(1, f, 1, 0);
+            assert_eq!(o00, o11);
+            assert_eq!(o01, o10);
+            assert_eq!(o00 ^ beta_mask, o01);
+        }
+    }
+
+    #[test]
+    fn superbranch_input_bits() {
+        let t = trellis();
+        // walking the path consumes bit x of y_right at step x
+        for f in 0..16u32 {
+            for j in 0..4u32 {
+                let path = t.superbranch_path(2, f, 1, j);
+                assert_eq!(path[0].1, j & 1);
+                assert_eq!(path[1].1, (j >> 1) & 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Typed configuration for the `tcvd` binary: a `tcvd.toml` file (parsed
+//! by the built-in TOML-subset parser) merged with CLI overrides.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::toml::Toml;
+use crate::viterbi::tiled::TileConfig;
+
+/// Full runtime configuration with defaults matching the paper's setup.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Standard code name (registry key).
+    pub code: String,
+    /// Tile geometry for stream decoding.
+    pub tile: TileConfig,
+    /// Artifact directory.
+    pub artifacts_dir: String,
+    /// Preferred artifact variant name substring (e.g. "radix4_jnp_acc-single_ch-single").
+    pub variant: String,
+    /// Dynamic batcher: max frames per PJRT execution (<= artifact batch).
+    pub max_batch: usize,
+    /// Dynamic batcher: flush deadline in microseconds.
+    pub batch_deadline_us: u64,
+    /// Traceback worker threads.
+    pub workers: usize,
+    /// Bounded queue depth (frames) before backpressure.
+    pub queue_depth: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            code: "ccsds".into(),
+            tile: TileConfig { payload: 64, head: 16, tail: 16 },
+            artifacts_dir: "artifacts".into(),
+            variant: "radix4_jnp_acc-single_ch-single_b64".into(),
+            max_batch: 64,
+            batch_deadline_us: 2000,
+            workers: 2,
+            queue_depth: 1024,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file, with defaults for missing keys.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let doc = Toml::parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(v) = doc.get("", "code") {
+            cfg.code = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("tile", "payload") {
+            cfg.tile.payload = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("tile", "head") {
+            cfg.tile.head = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("tile", "tail") {
+            cfg.tile.tail = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("runtime", "artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("runtime", "variant") {
+            cfg.variant = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("coordinator", "max_batch") {
+            cfg.max_batch = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("coordinator", "batch_deadline_us") {
+            cfg.batch_deadline_us = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.get("coordinator", "workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("coordinator", "queue_depth") {
+            cfg.queue_depth = v.as_usize()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.tile.payload > 0, "tile.payload must be positive");
+        anyhow::ensure!(self.max_batch > 0, "max_batch must be positive");
+        anyhow::ensure!(self.workers > 0, "workers must be positive");
+        anyhow::ensure!(self.queue_depth >= self.max_batch,
+                        "queue_depth must be >= max_batch");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::from_toml(
+            r#"
+code = "gsm"
+
+[tile]
+payload = 128
+head = 24
+tail = 24
+
+[runtime]
+variant = "radix2"
+
+[coordinator]
+max_batch = 8
+batch_deadline_us = 500
+workers = 4
+queue_depth = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.code, "gsm");
+        assert_eq!(cfg.tile.payload, 128);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.workers, 4);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(Config::from_toml("[coordinator]\nmax_batch = 0\n").is_err());
+        assert!(Config::from_toml("[coordinator]\nqueue_depth = 1\n").is_err());
+    }
+}

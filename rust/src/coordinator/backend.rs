@@ -1,0 +1,98 @@
+//! Backend construction for the engine thread. PJRT executables are not
+//! `Send`, so the spec (plain data) crosses the thread boundary and the
+//! backend is built *inside* the engine thread.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::channel::quantize::ChannelPrecision;
+use crate::coding::packing::build_packing;
+use crate::coding::registry;
+use crate::coding::trellis::Trellis;
+use crate::runtime::{client, Artifact, ArtifactDecoder, Manifest};
+use crate::util::half::HalfKind;
+use crate::viterbi::packed::PackedDecoder;
+use crate::viterbi::scalar::ScalarDecoder;
+use crate::viterbi::types::{AccPrecision, FrameDecoder};
+
+/// What decoder the engine should run.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// AOT artifact via PJRT (the production path).
+    Artifact { dir: PathBuf, variant: String },
+    /// CPU tensor-form emulation (same arithmetic, no PJRT).
+    CpuPacked {
+        code: String,
+        scheme: String,
+        stages: usize,
+        acc: AccPrecision,
+        chan: ChannelPrecision,
+        renorm_every: usize,
+    },
+    /// Scalar Alg-1/Alg-2 baseline.
+    Scalar { code: String, stages: usize },
+}
+
+impl BackendSpec {
+    /// Convenience: the default artifact backend.
+    pub fn artifact(dir: impl Into<PathBuf>, variant: impl Into<String>) -> Self {
+        BackendSpec::Artifact { dir: dir.into(), variant: variant.into() }
+    }
+
+    /// Build the decoder (call on the owning thread).
+    pub fn build(&self) -> Result<Box<dyn FrameDecoder>> {
+        match self {
+            BackendSpec::Artifact { dir, variant } => {
+                let manifest = Manifest::load(dir)?;
+                let meta = manifest.find(variant)?.clone();
+                let cl = client::cpu_client()?;
+                let artifact = Artifact::load(&cl, &manifest, &meta)
+                    .with_context(|| format!("loading artifact {}", meta.name))?;
+                let code = artifact.code()?;
+                let trellis = Arc::new(Trellis::new(code));
+                Ok(Box::new(ArtifactDecoder::new(Arc::new(artifact), trellis)))
+            }
+            BackendSpec::CpuPacked { code, scheme, stages, acc, chan, renorm_every } => {
+                let trellis = Arc::new(Trellis::new(registry::lookup(code)?));
+                let pk = build_packing(&trellis, scheme)?;
+                Ok(Box::new(PackedDecoder::new(
+                    trellis, pk, *stages, *acc, HalfKind::Bf16, *chan, *renorm_every,
+                )))
+            }
+            BackendSpec::Scalar { code, stages } => {
+                let trellis = Arc::new(Trellis::new(registry::lookup(code)?));
+                Ok(Box::new(ScalarDecoder::new(trellis, *stages)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_backends_build() {
+        let spec = BackendSpec::CpuPacked {
+            code: "ccsds".into(),
+            scheme: "radix4".into(),
+            stages: 64,
+            acc: AccPrecision::Single,
+            chan: ChannelPrecision::Single,
+            renorm_every: 16,
+        };
+        let dec = spec.build().unwrap();
+        assert_eq!(dec.frame_stages(), 64);
+
+        let dec2 = BackendSpec::Scalar { code: "ccsds".into(), stages: 32 }.build().unwrap();
+        assert_eq!(dec2.frame_stages(), 32);
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors() {
+        let spec = BackendSpec::artifact("/nonexistent-dir", "radix4");
+        assert!(spec.build().is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! The execution engine thread: dynamic batching + the tensor forward
+//! pass. One engine thread owns the (non-`Send`) PJRT executable —
+//! serializing launches exactly like a CUDA stream — and ships raw
+//! survivors to the traceback worker pool.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coding::trellis::Trellis;
+use crate::util::queue::Queue;
+use crate::viterbi::types::RawFrame;
+
+use super::backend::BackendSpec;
+use super::metrics::Metrics;
+use super::{DecodedFrame, FrameTask};
+
+/// Dynamic batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max frames per execution (clamped to the backend's max batch).
+    pub max_batch: usize,
+    /// How long to wait for more frames after the first arrives.
+    pub deadline: Duration,
+}
+
+/// A forwarded frame awaiting traceback.
+pub struct RawTask {
+    pub task: FrameTask,
+    pub raw: RawFrame,
+}
+
+/// Run the engine loop (call from a dedicated thread). Signals readiness
+/// (or a startup error) through `ready`, then batches `rx` into
+/// executions until the channel closes.
+pub fn run_engine(
+    spec: BackendSpec,
+    policy: BatchPolicy,
+    rx: Receiver<FrameTask>,
+    out: Arc<Queue<RawTask>>,
+    metrics: Arc<Metrics>,
+    ready: SyncSender<Result<(usize, Arc<Trellis>)>>, // (frame_stages, trellis)
+) {
+    let mut dec = match spec.build() {
+        Ok(d) => {
+            let _ = ready.send(Ok((d.frame_stages(), d.trellis().clone())));
+            d
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            out.close();
+            return;
+        }
+    };
+    let max_batch = policy.max_batch.min(dec.max_batch()).max(1);
+    let mut batch: Vec<FrameTask> = Vec::with_capacity(max_batch);
+
+    loop {
+        // block for the first frame of the batch
+        match rx.recv() {
+            Ok(t) => batch.push(t),
+            Err(_) => break, // input closed, all work drained
+        }
+        let t0 = Instant::now();
+        // fill until full or deadline
+        while batch.len() < max_batch {
+            let left = policy.deadline.checked_sub(t0.elapsed());
+            match left {
+                None => break,
+                Some(d) => match rx.recv_timeout(d) {
+                    Ok(t) => batch.push(t),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                },
+            }
+        }
+        // execute
+        let jobs: Vec<_> = batch.iter().map(|t| t.job.clone()).collect();
+        let fwd_start = Instant::now();
+        let raws = dec.forward_batch(&jobs);
+        metrics.record_exec(batch.len(), fwd_start.elapsed().as_nanos() as u64);
+        for (task, raw) in batch.drain(..).zip(raws) {
+            if !out.push(RawTask { task, raw }) {
+                out.close();
+                return; // downstream gone
+            }
+        }
+    }
+    out.close(); // input drained: let workers wind down
+}
+
+/// Run a traceback worker loop (call from worker threads). Pulls raw
+/// frames from the shared queue, runs Alg 2, emits decoded frames to the
+/// reassembler.
+pub fn run_traceback_worker(
+    trellis: Arc<Trellis>,
+    rx: Arc<Queue<RawTask>>,
+    out: Sender<super::reassembly::Msg>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let RawTask { task, raw } = match rx.pop() {
+            Some(x) => x,
+            None => return,
+        };
+        let t0 = Instant::now();
+        let bits = raw.traceback(&trellis, &task.job);
+        let tb_ns = t0.elapsed().as_nanos() as u64;
+        metrics.record_delivery(bits.len(), task.t_enq, tb_ns);
+        let df = DecodedFrame { session: task.session, seq: task.seq, bits, t_enq: task.t_enq };
+        if out.send(super::reassembly::Msg::Decoded(df)).is_err() {
+            return;
+        }
+    }
+}

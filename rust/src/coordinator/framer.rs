@@ -1,0 +1,196 @@
+//! Streaming framer: the incremental version of `viterbi::tiled::
+//! make_frames`, producing identical frames from chunked input (verified
+//! against it in tests).
+
+use crate::viterbi::tiled::TileConfig;
+use crate::viterbi::types::FrameJob;
+
+/// Cuts a pushed LLR stream into fixed-geometry overlapped frames.
+#[derive(Debug)]
+pub struct Framer {
+    cfg: TileConfig,
+    beta: usize,
+    /// Buffered LLRs starting at stage `buf_start`.
+    buf: Vec<f32>,
+    buf_start: usize,
+    /// Next frame index to emit.
+    next_frame: usize,
+    /// Total stages pushed so far.
+    stages_in: usize,
+    finished: bool,
+}
+
+impl Framer {
+    pub fn new(cfg: TileConfig, beta: usize) -> Self {
+        Framer {
+            cfg,
+            beta,
+            buf: Vec::new(),
+            buf_start: 0,
+            next_frame: 0,
+            stages_in: 0,
+            finished: false,
+        }
+    }
+
+    pub fn frames_emitted(&self) -> usize {
+        self.next_frame
+    }
+
+    /// Stage index where frame `fi`'s buffer begins.
+    fn frame_start(&self, fi: usize) -> usize {
+        (fi * self.cfg.payload).saturating_sub(self.cfg.head)
+    }
+
+    /// Push an LLR chunk (`len % beta == 0`); returns all frames that
+    /// became complete.
+    pub fn push(&mut self, llr: &[f32]) -> Vec<FrameJob> {
+        assert!(!self.finished, "push after finish");
+        assert_eq!(llr.len() % self.beta, 0, "chunk not stage-aligned");
+        self.buf.extend_from_slice(llr);
+        self.stages_in += llr.len() / self.beta;
+
+        let stages = self.cfg.frame_stages();
+        let mut out = Vec::new();
+        while self.frame_start(self.next_frame) + stages <= self.stages_in {
+            out.push(self.emit(self.next_frame, stages, false, false));
+        }
+        self.gc();
+        out
+    }
+
+    /// Flush: pad the stream tail with zero LLRs and emit the remaining
+    /// frames. `flushed_end` marks whether the encoder was flushed to
+    /// state 0 at the true stream end.
+    pub fn finish(&mut self, flushed_end: bool) -> Vec<FrameJob> {
+        assert!(!self.finished, "finish twice");
+        self.finished = true;
+        let stages = self.cfg.frame_stages();
+        let n_frames = self.stages_in.div_ceil(self.cfg.payload);
+        let mut out = Vec::new();
+        while self.next_frame < n_frames {
+            let is_last = self.next_frame + 1 == n_frames;
+            out.push(self.emit(self.next_frame, stages, true, is_last && flushed_end));
+        }
+        out
+    }
+
+    fn emit(&mut self, fi: usize, stages: usize, pad: bool, flushed_last: bool) -> FrameJob {
+        let pay_start = fi * self.cfg.payload;
+        let start = self.frame_start(fi);
+        let head = pay_start - start;
+        let mut frame = vec![0f32; stages * self.beta];
+        let rel = (start - self.buf_start) * self.beta;
+        let avail_stages = (self.stages_in - start).min(stages);
+        let take = avail_stages * self.beta;
+        assert!(pad || take == stages * self.beta);
+        frame[..take].copy_from_slice(&self.buf[rel..rel + take]);
+        self.next_frame = fi + 1;
+        FrameJob {
+            llr: frame,
+            start_state: if fi == 0 { Some(0) } else { None },
+            // only claim the flushed end state when the frame ends
+            // exactly at the true stream end (no padding desync)
+            end_state: if flushed_last && start + stages == self.stages_in {
+                Some(0)
+            } else {
+                None
+            },
+            emit_from: head,
+            emit_len: self.cfg.payload.min(self.stages_in - pay_start),
+        }
+    }
+
+    /// Drop buffered stages no future frame needs.
+    fn gc(&mut self) {
+        let keep_from = self.frame_start(self.next_frame);
+        if keep_from > self.buf_start {
+            self.buf.drain(..(keep_from - self.buf_start) * self.beta);
+            self.buf_start = keep_from;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::viterbi::tiled::make_frames;
+
+    fn cfg() -> TileConfig {
+        TileConfig { payload: 32, head: 8, tail: 12 }
+    }
+
+    fn random_llrs(n_stages: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n_stages * 2).map(|_| r.next_gaussian() as f32).collect()
+    }
+
+    fn assert_jobs_eq(a: &[FrameJob], b: &[FrameJob]) {
+        assert_eq!(a.len(), b.len(), "frame count");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.llr, y.llr, "frame {i} llr");
+            assert_eq!(x.start_state, y.start_state, "frame {i} start");
+            assert_eq!(x.end_state, y.end_state, "frame {i} end");
+            assert_eq!(x.emit_from, y.emit_from, "frame {i} emit_from");
+            assert_eq!(x.emit_len, y.emit_len, "frame {i} emit_len");
+        }
+    }
+
+    #[test]
+    fn matches_make_frames_whole_push() {
+        let llr = random_llrs(128, 1);
+        let want = make_frames(&llr, 2, &cfg(), true).unwrap();
+        let mut fr = Framer::new(cfg(), 2);
+        let mut got = fr.push(&llr);
+        got.extend(fr.finish(true));
+        assert_jobs_eq(&got, &want);
+    }
+
+    #[test]
+    fn matches_make_frames_chunked() {
+        let llr = random_llrs(256, 2);
+        let want = make_frames(&llr, 2, &cfg(), true).unwrap();
+        for chunk_stages in [1usize, 7, 31, 64] {
+            let mut fr = Framer::new(cfg(), 2);
+            let mut got = Vec::new();
+            for chunk in llr.chunks(chunk_stages * 2) {
+                got.extend(fr.push(chunk));
+            }
+            got.extend(fr.finish(true));
+            assert_jobs_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn partial_tail_padded() {
+        // 100 stages with payload 32 -> 4 frames, last emits 4 bits
+        let llr = random_llrs(100, 3);
+        let mut fr = Framer::new(cfg(), 2);
+        let mut jobs = fr.push(&llr);
+        jobs.extend(fr.finish(false));
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[3].emit_len, 4);
+        let total: usize = jobs.iter().map(|j| j.emit_len).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn gc_bounds_memory() {
+        let mut fr = Framer::new(cfg(), 2);
+        for i in 0..100 {
+            fr.push(&random_llrs(64, i));
+        }
+        // buffer must hold at most ~frame_stages + chunk worth of stages
+        assert!(fr.buf.len() <= (fr.cfg.frame_stages() + 64 + fr.cfg.head) * 2,
+                "buf len {}", fr.buf.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "push after finish")]
+    fn push_after_finish_panics() {
+        let mut fr = Framer::new(cfg(), 2);
+        fr.finish(false);
+        fr.push(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Pipeline metrics: throughput, latency percentiles, batch occupancy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::stats::LogHistogram;
+
+/// Shared metrics hub (updated by every pipeline stage).
+pub struct Metrics {
+    start: Instant,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub bits_out: AtomicU64,
+    pub execs: AtomicU64,
+    pub exec_frames: AtomicU64,
+    pub forward_ns: AtomicU64,
+    pub traceback_ns: AtomicU64,
+    latency: Mutex<LogHistogram>,
+    occupancy: Mutex<LogHistogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            start: Instant::now(),
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            bits_out: AtomicU64::new(0),
+            execs: AtomicU64::new(0),
+            exec_frames: AtomicU64::new(0),
+            forward_ns: AtomicU64::new(0),
+            traceback_ns: AtomicU64::new(0),
+            latency: Mutex::new(LogHistogram::new()),
+            occupancy: Mutex::new(LogHistogram::new()),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_exec(&self, frames: usize, forward_ns: u64) {
+        self.execs.fetch_add(1, Ordering::Relaxed);
+        self.exec_frames.fetch_add(frames as u64, Ordering::Relaxed);
+        self.forward_ns.fetch_add(forward_ns, Ordering::Relaxed);
+        self.occupancy.lock().unwrap().record(frames as u64);
+    }
+
+    pub fn record_delivery(&self, bits: usize, enq: Instant, traceback_ns: u64) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.bits_out.fetch_add(bits as u64, Ordering::Relaxed);
+        self.traceback_ns.fetch_add(traceback_ns, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(enq.elapsed().as_nanos() as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let bits = self.bits_out.load(Ordering::Relaxed);
+        let execs = self.execs.load(Ordering::Relaxed).max(1);
+        let lat = self.latency.lock().unwrap();
+        MetricsSnapshot {
+            elapsed_s: elapsed,
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            bits_out: bits,
+            throughput_bps: bits as f64 / elapsed.max(1e-9),
+            execs,
+            mean_batch: self.exec_frames.load(Ordering::Relaxed) as f64 / execs as f64,
+            forward_ns_total: self.forward_ns.load(Ordering::Relaxed),
+            traceback_ns_total: self.traceback_ns.load(Ordering::Relaxed),
+            latency_p50_us: lat.percentile(50.0) as f64 / 1e3,
+            latency_p99_us: lat.percentile(99.0) as f64 / 1e3,
+        }
+    }
+}
+
+/// A point-in-time view of the metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub elapsed_s: f64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub bits_out: u64,
+    pub throughput_bps: f64,
+    pub execs: u64,
+    pub mean_batch: f64,
+    pub forward_ns_total: u64,
+    pub traceback_ns_total: u64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("elapsed_s", json::num(self.elapsed_s)),
+            ("frames_in", json::num(self.frames_in as f64)),
+            ("frames_out", json::num(self.frames_out as f64)),
+            ("bits_out", json::num(self.bits_out as f64)),
+            ("throughput_bps", json::num(self.throughput_bps)),
+            ("execs", json::num(self.execs as f64)),
+            ("mean_batch", json::num(self.mean_batch)),
+            ("forward_ns_total", json::num(self.forward_ns_total as f64)),
+            ("traceback_ns_total", json::num(self.traceback_ns_total as f64)),
+            ("latency_p50_us", json::num(self.latency_p50_us)),
+            ("latency_p99_us", json::num(self.latency_p99_us)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = Metrics::new();
+        m.record_exec(8, 1000);
+        m.record_exec(4, 1000);
+        let t = Instant::now();
+        m.record_delivery(64, t, 500);
+        m.record_delivery(64, t, 500);
+        let s = m.snapshot();
+        assert_eq!(s.execs, 2);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert_eq!(s.bits_out, 128);
+        assert_eq!(s.frames_out, 2);
+        assert!(s.throughput_bps > 0.0);
+        let j = s.to_json().to_string_pretty();
+        assert!(j.contains("throughput_bps"));
+    }
+}

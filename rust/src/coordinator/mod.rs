@@ -1,0 +1,46 @@
+//! L3 — the streaming SDR coordinator (the serving layer around the
+//! tensor-formulated decoder).
+//!
+//! Shape: a vLLM-router-like pipeline specialized for convolutional
+//! decoding. Many concurrent *sessions* (radio streams) push LLR chunks;
+//! a per-session **framer** cuts them into overlapped frames (§III
+//! tiling); a **dynamic batcher** packs frames from all sessions into
+//! full artifact batches (size + deadline policy); the **engine thread**
+//! owns the PJRT executable and runs the tensor forward pass; a
+//! **traceback worker pool** runs the backward procedure (the paper's
+//! scalar-core stage); the **reassembler** restores per-session bit
+//! order and delivers in-order decoded payloads with backpressure end to
+//! end. Python is never on this path.
+
+pub mod framer;
+pub mod metrics;
+pub mod backend;
+pub mod engine;
+pub mod reassembly;
+pub mod server;
+
+use std::time::Instant;
+
+use crate::viterbi::types::FrameJob;
+
+pub use backend::BackendSpec;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, SessionHandle};
+
+/// A frame travelling through the pipeline.
+#[derive(Clone, Debug)]
+pub struct FrameTask {
+    pub session: u64,
+    pub seq: u64,
+    pub job: FrameJob,
+    pub t_enq: Instant,
+}
+
+/// A decoded frame heading back to its session.
+#[derive(Debug)]
+pub struct DecodedFrame {
+    pub session: u64,
+    pub seq: u64,
+    pub bits: Vec<u8>,
+    pub t_enq: Instant,
+}

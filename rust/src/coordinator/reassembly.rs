@@ -1,0 +1,128 @@
+//! Per-session in-order reassembly: decoded frames arrive out of order
+//! from the worker pool; each session's payload bits are delivered to its
+//! consumer strictly in sequence.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc::{Receiver, SyncSender};
+
+use super::DecodedFrame;
+
+/// Control + data messages for the reassembly thread.
+pub enum Msg {
+    Open { session: u64, out: SyncSender<Vec<u8>> },
+    /// Total frames the session will produce (sent at session finish).
+    Finish { session: u64, total_frames: u64 },
+    Decoded(DecodedFrame),
+}
+
+struct SessionState {
+    out: SyncSender<Vec<u8>>,
+    next_seq: u64,
+    pending: BTreeMap<u64, Vec<u8>>,
+    total_frames: Option<u64>,
+}
+
+impl SessionState {
+    /// Deliver any now-contiguous frames; returns true when complete.
+    fn drain(&mut self) -> bool {
+        while let Some(bits) = self.pending.remove(&self.next_seq) {
+            // a closed consumer just discards remaining output
+            let _ = self.out.send(bits);
+            self.next_seq += 1;
+        }
+        self.total_frames == Some(self.next_seq)
+    }
+}
+
+/// Run the reassembly loop (one thread). Sessions close (dropping their
+/// output sender, which ends the consumer's iterator) once all frames
+/// are delivered.
+pub fn run_reassembly(rx: Receiver<Msg>) {
+    let mut sessions: HashMap<u64, SessionState> = HashMap::new();
+    for msg in rx {
+        match msg {
+            Msg::Open { session, out } => {
+                sessions.insert(
+                    session,
+                    SessionState { out, next_seq: 0, pending: BTreeMap::new(), total_frames: None },
+                );
+            }
+            Msg::Finish { session, total_frames } => {
+                if let Some(st) = sessions.get_mut(&session) {
+                    st.total_frames = Some(total_frames);
+                    if st.drain() {
+                        sessions.remove(&session);
+                    }
+                }
+            }
+            Msg::Decoded(df) => {
+                if let Some(st) = sessions.get_mut(&df.session) {
+                    st.pending.insert(df.seq, df.bits);
+                    if st.drain() {
+                        sessions.remove(&df.session);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn decoded(session: u64, seq: u64, tag: u8) -> Msg {
+        Msg::Decoded(DecodedFrame { session, seq, bits: vec![tag], t_enq: Instant::now() })
+    }
+
+    #[test]
+    fn reorders_and_closes() {
+        let (tx, rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let h = std::thread::spawn(move || run_reassembly(rx));
+        tx.send(Msg::Open { session: 1, out: out_tx }).unwrap();
+        tx.send(decoded(1, 2, 2)).unwrap();
+        tx.send(decoded(1, 0, 0)).unwrap();
+        tx.send(decoded(1, 1, 1)).unwrap();
+        tx.send(Msg::Finish { session: 1, total_frames: 3 }).unwrap();
+        let got: Vec<Vec<u8>> = out_rx.iter().collect(); // ends when sender drops
+        assert_eq!(got, vec![vec![0], vec![1], vec![2]]);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn interleaved_sessions_stay_separate() {
+        let (tx, rx) = mpsc::channel();
+        let (o1_tx, o1_rx) = mpsc::sync_channel(16);
+        let (o2_tx, o2_rx) = mpsc::sync_channel(16);
+        let h = std::thread::spawn(move || run_reassembly(rx));
+        tx.send(Msg::Open { session: 1, out: o1_tx }).unwrap();
+        tx.send(Msg::Open { session: 2, out: o2_tx }).unwrap();
+        tx.send(decoded(2, 0, 20)).unwrap();
+        tx.send(decoded(1, 1, 11)).unwrap();
+        tx.send(decoded(1, 0, 10)).unwrap();
+        tx.send(decoded(2, 1, 21)).unwrap();
+        tx.send(Msg::Finish { session: 1, total_frames: 2 }).unwrap();
+        tx.send(Msg::Finish { session: 2, total_frames: 2 }).unwrap();
+        assert_eq!(o1_rx.iter().collect::<Vec<_>>(), vec![vec![10], vec![11]]);
+        assert_eq!(o2_rx.iter().collect::<Vec<_>>(), vec![vec![20], vec![21]]);
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_consumer_does_not_wedge() {
+        let (tx, rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(1);
+        let h = std::thread::spawn(move || run_reassembly(rx));
+        tx.send(Msg::Open { session: 1, out: out_tx }).unwrap();
+        drop(out_rx); // consumer went away
+        tx.send(decoded(1, 0, 0)).unwrap();
+        tx.send(Msg::Finish { session: 1, total_frames: 1 }).unwrap();
+        drop(tx);
+        h.join().unwrap(); // must terminate
+    }
+}

@@ -1,0 +1,338 @@
+//! The coordinator facade: wires framer -> batcher/engine -> traceback
+//! workers -> reassembly into a running pipeline and exposes the session
+//! API used by the CLI, examples and benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coding::trellis::Trellis;
+use crate::util::queue::Queue;
+use crate::viterbi::tiled::TileConfig;
+
+use super::backend::BackendSpec;
+use super::engine::{run_engine, run_traceback_worker, BatchPolicy, RawTask};
+use super::framer::Framer;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::reassembly::{run_reassembly, Msg};
+use super::FrameTask;
+
+/// Coordinator configuration (see `config::Config` for file-based setup).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub backend: BackendSpec,
+    pub tile: TileConfig,
+    pub max_batch: usize,
+    pub batch_deadline: Duration,
+    pub workers: usize,
+    pub queue_depth: usize,
+}
+
+/// A running decode pipeline.
+pub struct Coordinator {
+    input: SyncSender<FrameTask>,
+    ctrl: Sender<Msg>,
+    metrics: Arc<Metrics>,
+    tile: TileConfig,
+    beta: usize,
+    trellis: Arc<Trellis>,
+    next_session: AtomicU64,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the pipeline: spawns the engine thread (which builds the
+    /// backend and compiles the artifact), the traceback workers and the
+    /// reassembler. Blocks until the backend is ready.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::new());
+        let (input_tx, input_rx) = mpsc::sync_channel::<FrameTask>(cfg.queue_depth);
+        let raw_q: Arc<Queue<RawTask>> = Arc::new(Queue::new());
+        let (msg_tx, msg_rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel(1);
+
+        let mut threads = Vec::new();
+        let policy = BatchPolicy { max_batch: cfg.max_batch, deadline: cfg.batch_deadline };
+        let spec = cfg.backend.clone();
+        let m_engine = metrics.clone();
+        let raw_q_engine = raw_q.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("tcvd-engine".into())
+                .spawn(move || {
+                    run_engine(spec, policy, input_rx, raw_q_engine, m_engine, ready_tx)
+                })?,
+        );
+        let (frame_stages, trellis) = ready_rx
+            .recv()
+            .context("engine thread died during startup")?
+            .context("backend startup failed")?;
+        if frame_stages != cfg.tile.frame_stages() {
+            bail!(
+                "backend frame ({frame_stages} stages) does not match tile geometry \
+                 ({} = head {} + payload {} + tail {})",
+                cfg.tile.frame_stages(), cfg.tile.head, cfg.tile.payload, cfg.tile.tail
+            );
+        }
+
+        for w in 0..cfg.workers.max(1) {
+            let rx = raw_q.clone();
+            let out = msg_tx.clone();
+            let tr = trellis.clone();
+            let m = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tcvd-traceback-{w}"))
+                    .spawn(move || run_traceback_worker(tr, rx, out, m))?,
+            );
+        }
+        let ctrl = msg_tx; // remaining clone for session control
+        threads.push(
+            std::thread::Builder::new()
+                .name("tcvd-reassembly".into())
+                .spawn(move || run_reassembly(msg_rx))?,
+        );
+
+        let beta = trellis.code().beta();
+        Ok(Coordinator {
+            input: input_tx,
+            ctrl,
+            metrics,
+            tile: cfg.tile,
+            beta,
+            trellis,
+            next_session: AtomicU64::new(0),
+            threads,
+        })
+    }
+
+    pub fn trellis(&self) -> &Arc<Trellis> {
+        &self.trellis
+    }
+
+    pub fn tile(&self) -> &TileConfig {
+        &self.tile
+    }
+
+    /// Open a streaming session; returns the handle for pushing LLRs and
+    /// the receiver of in-order decoded payload chunks.
+    pub fn open_session(&self) -> Result<(SessionHandle, Receiver<Vec<u8>>)> {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let (out_tx, out_rx) = mpsc::sync_channel(1024);
+        self.ctrl
+            .send(Msg::Open { session: id, out: out_tx })
+            .map_err(|_| anyhow::anyhow!("pipeline is shut down"))?;
+        let handle = SessionHandle {
+            id,
+            framer: Framer::new(self.tile, self.beta),
+            input: Some(self.input.clone()),
+            ctrl: Some(self.ctrl.clone()),
+            metrics: self.metrics.clone(),
+        };
+        Ok((handle, out_rx))
+    }
+
+    /// Convenience: decode one whole LLR stream through the pipeline
+    /// (open session, push, finish, collect).
+    pub fn decode_stream_blocking(&self, llr: &[f32], flushed_end: bool) -> Result<Vec<u8>> {
+        let (mut h, rx) = self.open_session()?;
+        h.push(llr)?;
+        h.finish(flushed_end)?;
+        let mut out = Vec::new();
+        for chunk in rx {
+            out.extend_from_slice(&chunk);
+        }
+        Ok(out)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Shut down: all session handles must be finished/dropped first.
+    /// Joins every pipeline thread.
+    pub fn shutdown(self) -> Result<()> {
+        let Coordinator { input, ctrl, threads, .. } = self;
+        drop(input);
+        drop(ctrl);
+        for t in threads {
+            t.join().map_err(|_| anyhow::anyhow!("pipeline thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// One decoding stream. Push LLR chunks; completed frames flow through
+/// the pipeline with backpressure (push blocks when the queue is full).
+/// `finish` releases the handle's hold on the pipeline, so a finished
+/// handle never blocks `Coordinator::shutdown`.
+pub struct SessionHandle {
+    id: u64,
+    framer: Framer,
+    input: Option<SyncSender<FrameTask>>,
+    ctrl: Option<Sender<Msg>>,
+    metrics: Arc<Metrics>,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn send_jobs(&mut self, base: u64, jobs: Vec<crate::viterbi::types::FrameJob>) -> Result<()> {
+        let input = self.input.as_ref().expect("checked by callers");
+        for (i, job) in jobs.into_iter().enumerate() {
+            self.metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+            input
+                .send(FrameTask {
+                    session: self.id,
+                    seq: base + i as u64,
+                    job,
+                    t_enq: Instant::now(),
+                })
+                .map_err(|_| anyhow::anyhow!("pipeline is shut down"))?;
+        }
+        Ok(())
+    }
+
+    /// Push an LLR chunk (length must be a multiple of beta).
+    pub fn push(&mut self, llr: &[f32]) -> Result<()> {
+        anyhow::ensure!(self.input.is_some(), "session already finished");
+        let base = self.framer.frames_emitted() as u64;
+        let jobs = self.framer.push(llr);
+        self.send_jobs(base, jobs)
+    }
+
+    /// Flush the stream: emits the remaining (padded) frames, tells the
+    /// reassembler the total frame count so it can close the output, and
+    /// drops this handle's pipeline senders.
+    pub fn finish(&mut self, flushed_end: bool) -> Result<()> {
+        anyhow::ensure!(self.input.is_some(), "session already finished");
+        let base = self.framer.frames_emitted() as u64;
+        let jobs = self.framer.finish(flushed_end);
+        self.send_jobs(base, jobs)?;
+        let total = self.framer.frames_emitted() as u64;
+        let ctrl = self.ctrl.take().expect("ctrl present until finish");
+        self.input = None;
+        ctrl.send(Msg::Finish { session: self.id, total_frames: total })
+            .map_err(|_| anyhow::anyhow!("pipeline is shut down"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{awgn::AwgnChannel, bpsk};
+    use crate::coding::registry;
+    use crate::coding::Encoder;
+    use crate::util::rng::Rng;
+    use crate::viterbi::scalar;
+
+    fn cpu_config(tile: TileConfig) -> CoordinatorConfig {
+        CoordinatorConfig {
+            backend: BackendSpec::CpuPacked {
+                code: "ccsds".into(),
+                scheme: "radix4".into(),
+                stages: tile.frame_stages(),
+                acc: crate::viterbi::types::AccPrecision::Single,
+                chan: crate::channel::quantize::ChannelPrecision::Single,
+                renorm_every: 16,
+            },
+            tile,
+            max_batch: 8,
+            batch_deadline: Duration::from_micros(500),
+            workers: 2,
+            queue_depth: 64,
+        }
+    }
+
+    fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+        let code = registry::paper_code();
+        let mut enc = Encoder::new(code.clone());
+        let mut bits = Rng::new(seed).bits(payload_bits - 6);
+        bits.extend_from_slice(&[0; 6]);
+        let coded = enc.encode(&bits);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xFEED);
+        let rx = ch.transmit(&tx);
+        (bits, rx.iter().map(|&x| x as f32).collect())
+    }
+
+    #[test]
+    fn pipeline_decodes_one_stream() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let coord = Coordinator::start(cpu_config(tile)).unwrap();
+        let (bits, llr) = noisy_stream(42, 256, 5.0);
+        let out = coord.decode_stream_blocking(&llr, true).unwrap();
+        assert_eq!(out, bits);
+        let snap = coord.metrics();
+        assert_eq!(snap.frames_in, 8);
+        assert_eq!(snap.frames_out, 8);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipeline_handles_concurrent_sessions() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let coord = Arc::new(Coordinator::start(cpu_config(tile)).unwrap());
+        let mut joins = Vec::new();
+        for s in 0..4u64 {
+            let c = coord.clone();
+            joins.push(std::thread::spawn(move || {
+                let (bits, llr) = noisy_stream(100 + s, 128, 5.0);
+                let out = c.decode_stream_blocking(&llr, true).unwrap();
+                assert_eq!(out, bits, "session {s}");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let coord = Arc::try_unwrap(coord).ok().expect("all sessions done");
+        let snap = coord.metrics();
+        assert_eq!(snap.frames_out, 16);
+        assert!(snap.mean_batch >= 1.0);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn chunked_push_matches_reference() {
+        let tile = TileConfig { payload: 64, head: 24, tail: 24 };
+        let coord = Coordinator::start(cpu_config(tile)).unwrap();
+        let (bits, llr) = noisy_stream(7, 512, 5.0);
+        let (mut h, rx) = coord.open_session().unwrap();
+        for chunk in llr.chunks(46) {
+            // 23-stage odd chunks
+            h.push(chunk).unwrap();
+        }
+        h.finish(true).unwrap();
+        let mut out = Vec::new();
+        for c in rx {
+            out.extend_from_slice(&c);
+        }
+        assert_eq!(out, bits);
+        // scalar reference agrees (up to half rounding of B) at 5 dB
+        let t = coord.trellis().clone();
+        let lam0 = scalar::initial_metrics(64, Some(0));
+        let llr_h: Vec<f32> =
+            llr.iter().map(|&x| crate::util::half::HalfKind::Bf16.round(x)).collect();
+        let whole = scalar::decode(&t, &llr_h, &lam0, Some(0));
+        assert_eq!(out, whole);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn mismatched_tile_rejected() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let mut cfg = cpu_config(tile);
+        // backend frame stages disagree with tile geometry
+        if let BackendSpec::CpuPacked { ref mut stages, .. } = cfg.backend {
+            *stages = 128;
+        }
+        assert!(Coordinator::start(cfg).is_err());
+    }
+}

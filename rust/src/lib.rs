@@ -1,0 +1,25 @@
+//! tcvd — Tensor-formulated parallel Viterbi decoder.
+//!
+//! Reproduction of "High-Throughput Parallel Viterbi Decoder on GPU Tensor
+//! Cores" (Mohammadidoost & Hashemi, 2020) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) express the
+//!   paper's tensor-core ACS formulation (radix-2 butterflies, radix-4
+//!   dragonflies, dragonfly-group permutation) as MXU matmuls.
+//! * **L2** — a JAX model (`python/compile/model.py`) scans the kernel
+//!   over a frame and is AOT-lowered to HLO text (`make artifacts`).
+//! * **L3** — this crate: a streaming SDR coordinator that frames LLR
+//!   streams, batches frames across sessions, executes the AOT artifact
+//!   on a PJRT CPU client, and performs traceback + reassembly on the
+//!   hot path. Python is never on the request path.
+
+pub mod util;
+pub mod cli;
+pub mod coding;
+pub mod channel;
+pub mod viterbi;
+pub mod ber;
+pub mod config;
+pub mod runtime;
+pub mod coordinator;

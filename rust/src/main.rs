@@ -1,0 +1,352 @@
+//! `tcvd` — tensor-formulated parallel Viterbi decoder (launcher).
+//!
+//! Subcommands:
+//! * `info`      — platform, artifact manifest, registered codes
+//! * `selftest`  — encode/corrupt/decode round trip on every backend
+//! * `encode`    — encode random or file bits, write coded bits
+//! * `decode`    — decode an LLR stream (f32 little-endian file)
+//! * `ber`       — Eb/N0 sweep (Fig-13-style), JSON + table output
+//! * `serve`     — run the streaming coordinator under a synthetic
+//!                 multi-session SDR workload, report throughput/latency
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use tcvd::ber::{measure_ber, sweep, BerSetup};
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::cli::{backend_from_flags, print_usage, Args};
+use tcvd::coding::{registry, Encoder, Trellis};
+use tcvd::config::Config;
+use tcvd::coordinator::server::CoordinatorConfig;
+use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::runtime::{client, Manifest};
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::tiled::TileConfig;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "info" => cmd_info(&args),
+        "selftest" => cmd_selftest(&args),
+        "encode" => cmd_encode(&args),
+        "decode" => cmd_decode(&args),
+        "ber" => cmd_ber(&args),
+        "serve" => cmd_serve(&args),
+        "" | "help" | "--help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts"])?;
+    let c = client::cpu_client()?;
+    println!("{}", client::platform_summary(&c));
+    println!("\nregistered codes:");
+    for sc in registry::STANDARD_CODES {
+        println!("  {:8} {}", sc.name, sc.description);
+    }
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("\nartifacts in {}:", dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {:50} scheme={:14} Q={:<4} batch={:3} stages={}",
+                    a.name, a.scheme, a.ops_per_stage, a.batch, a.stages_per_frame
+                );
+            }
+        }
+        Err(e) => println!("\n(no artifacts: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "bits", "snr", "seed"])?;
+    let n_bits = args.get_usize("bits", 4096)?;
+    let snr = args.get_f64("snr", 5.0)?;
+    let seed = args.get_u64("seed", 7)?;
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut payload = Rng::new(seed).bits(n_bits - 6);
+    payload.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&payload);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(snr, code.rate(), seed ^ 0xA5A5);
+    let rx = ch.transmit(&tx);
+    let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+
+    let dir = args.get_or("artifacts", "artifacts");
+    // the b64_s48 artifact decodes 96-stage frames: 64 payload + 16/16
+    let tile_cpu = TileConfig { payload: 64, head: 32, tail: 32 };
+    let tile_pjrt = TileConfig { payload: 64, head: 16, tail: 16 };
+    let backends: Vec<(&str, TileConfig, BackendSpec)> = vec![
+        ("scalar", tile_cpu,
+         BackendSpec::Scalar { code: "ccsds".into(), stages: tile_cpu.frame_stages() }),
+        ("cpu-radix2", tile_cpu,
+         backend_from_flags("cpu-radix2", &dir, "", tile_cpu.frame_stages())?),
+        ("cpu-radix4", tile_cpu,
+         backend_from_flags("cpu-radix4", &dir, "", tile_cpu.frame_stages())?),
+        ("pjrt-artifact", tile_pjrt,
+         BackendSpec::artifact(dir.clone(), "radix4_jnp_acc-single_ch-single_b64_s48")),
+    ];
+    for (name, tile, spec) in backends {
+        let coord = match Coordinator::start(CoordinatorConfig {
+            backend: spec,
+            tile,
+            max_batch: 64,
+            batch_deadline: Duration::from_micros(200),
+            workers: 2,
+            queue_depth: 256,
+        }) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("{name:14} SKIP ({e})");
+                continue;
+            }
+        };
+        let out = coord.decode_stream_blocking(&llr, true)?;
+        let errors = out.iter().zip(&payload).filter(|(a, b)| a != b).count();
+        let snap = coord.metrics();
+        println!(
+            "{name:14} errors={errors:4}/{n_bits}  frames={} mean_batch={:.1} p99={:.0}us",
+            snap.frames_out, snap.mean_batch, snap.latency_p99_us
+        );
+        coord.shutdown()?;
+    }
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> Result<()> {
+    args.check_known(&["code", "bits", "seed", "out", "in"])?;
+    let code = registry::lookup(&args.get_or("code", "ccsds"))?;
+    let mut enc = Encoder::new(code);
+    let payload: Vec<u8> = match args.get("in") {
+        Some(path) => std::fs::read(path)
+            .with_context(|| format!("reading {path}"))?
+            .iter()
+            .flat_map(|b| (0..8).map(move |i| (b >> i) & 1))
+            .collect(),
+        None => Rng::new(args.get_u64("seed", 1)?).bits(args.get_usize("bits", 1024)?),
+    };
+    let (coded, n_in) = enc.encode_flushed(&payload);
+    match args.get("out") {
+        Some(path) => {
+            let packed = tcvd::util::bitvec::BitVec::from_bits(&coded);
+            let bytes: Vec<u8> = packed.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+            std::fs::write(path, bytes)?;
+            println!("encoded {} info bits -> {} coded bits -> {path}", n_in, coded.len());
+        }
+        None => println!(
+            "encoded {} info bits -> {} coded bits (use --out to save)",
+            n_in,
+            coded.len()
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    args.check_known(&["in", "out", "artifacts", "variant", "payload", "head", "tail",
+                       "backend", "workers", "batch-deadline-us", "config"])?;
+    let cfg = match args.get("config") {
+        Some(p) => Config::from_file(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    let path = args.get("in").context("--in <llr.f32le> is required")?;
+    let raw = std::fs::read(path)?;
+    anyhow::ensure!(raw.len() % 4 == 0, "LLR file must be f32 little-endian");
+    let llr: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+
+    let tile = TileConfig {
+        payload: args.get_usize("payload", cfg.tile.payload)?,
+        head: args.get_usize("head", cfg.tile.head)?,
+        tail: args.get_usize("tail", cfg.tile.tail)?,
+    };
+    let backend = backend_from_flags(
+        &args.get_or("backend", "artifact"),
+        &args.get_or("artifacts", &cfg.artifacts_dir),
+        &args.get_or("variant", &cfg.variant),
+        tile.frame_stages(),
+    )?;
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend,
+        tile,
+        max_batch: cfg.max_batch,
+        batch_deadline: Duration::from_micros(
+            args.get_u64("batch-deadline-us", cfg.batch_deadline_us)?,
+        ),
+        workers: args.get_usize("workers", cfg.workers)?,
+        queue_depth: cfg.queue_depth,
+    })?;
+    let bits = coord.decode_stream_blocking(&llr, false)?;
+    let snap = coord.metrics();
+    if let Some(p) = args.get("out") {
+        let packed = tcvd::util::bitvec::BitVec::from_bits(&bits);
+        let bytes: Vec<u8> = packed.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+        std::fs::write(p, bytes)?;
+    }
+    println!(
+        "decoded {} bits in {:.3}s ({:.2} Mb/s info) frames={} mean_batch={:.1}",
+        bits.len(),
+        snap.elapsed_s,
+        snap.throughput_bps / 1e6,
+        snap.frames_out,
+        snap.mean_batch
+    );
+    coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_ber(args: &Args) -> Result<()> {
+    args.check_known(&["snr", "errors", "max-bits", "backend", "artifacts", "variant",
+                       "payload", "head", "tail", "hard", "exact-llr", "out", "seed"])?;
+    let snrs = sweep::parse_range(&args.get_or("snr", "0:6:1"))?;
+    let tile = TileConfig {
+        payload: args.get_usize("payload", 64)?,
+        head: args.get_usize("head", 32)?,
+        tail: args.get_usize("tail", 32)?,
+    };
+    let setup = BerSetup {
+        tile,
+        target_errors: args.get_usize("errors", 100)?,
+        max_bits: args.get_usize("max-bits", 1_000_000)?,
+        bits_per_round: 8192,
+        hard_decision: args.get_bool("hard"),
+        exact_llr: args.get_bool("exact-llr"),
+        seed: args.get_u64("seed", 0x7C5D)?,
+    };
+    let backend = backend_from_flags(
+        &args.get_or("backend", "cpu-radix4"),
+        &args.get_or("artifacts", "artifacts"),
+        &args.get_or("variant", "radix4_jnp_acc-single_ch-single_b64_s48"),
+        tile.frame_stages(),
+    )?;
+    let mut dec = backend.build()?;
+    let trellis = Trellis::new(registry::paper_code());
+    println!("{:>8} {:>12} {:>12} {:>10}", "Eb/N0", "bits", "errors", "BER");
+    let mut points = Vec::new();
+    for &db in &snrs {
+        let p = measure_ber(dec.as_mut(), &trellis, db, &setup)?;
+        println!(
+            "{:8.2} {:12} {:12} {:10.3e}{}",
+            db,
+            p.bits,
+            p.errors,
+            p.ber(),
+            if p.reliable() { "" } else { "  (unreliable)" }
+        );
+        points.push(p);
+    }
+    if let Some(out) = args.get("out") {
+        let j = sweep::curves_json(&[(dec.label(), points)]);
+        std::fs::write(out, j.to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&["sessions", "bits", "snr", "backend", "artifacts", "variant",
+                       "payload", "head", "tail", "workers", "max-batch",
+                       "batch-deadline-us", "seed", "json"])?;
+    let sessions = args.get_usize("sessions", 8)?;
+    let bits_per_session = args.get_usize("bits", 65536)?;
+    let snr = args.get_f64("snr", 5.0)?;
+    let tile = TileConfig {
+        payload: args.get_usize("payload", 64)?,
+        head: args.get_usize("head", 16)?,
+        tail: args.get_usize("tail", 16)?,
+    };
+    let backend = backend_from_flags(
+        &args.get_or("backend", "artifact"),
+        &args.get_or("artifacts", "artifacts"),
+        &args.get_or("variant", "radix4_jnp_acc-single_ch-single_b64_s48"),
+        tile.frame_stages(),
+    )?;
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend,
+        tile,
+        max_batch: args.get_usize("max-batch", 64)?,
+        batch_deadline: Duration::from_micros(args.get_u64("batch-deadline-us", 2000)?),
+        workers: args.get_usize("workers", 2)?,
+        queue_depth: 1024,
+    })?;
+
+    let seed0 = args.get_u64("seed", 99)?;
+    let code = registry::paper_code();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for s in 0..sessions {
+            let coord = &coord;
+            let code = code.clone();
+            joins.push(scope.spawn(move || -> Result<(usize, usize)> {
+                let mut rng = Rng::new(seed0 + s as u64);
+                let mut enc = Encoder::new(code.clone());
+                let mut payload = rng.bits(bits_per_session - 6);
+                payload.extend_from_slice(&[0; 6]);
+                let coded = enc.encode(&payload);
+                let tx = bpsk::modulate(&coded);
+                let mut ch = AwgnChannel::new(snr, code.rate(), seed0 ^ ((s as u64) << 8));
+                let rx = ch.transmit(&tx);
+                let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+                let (mut h, out) = coord.open_session()?;
+                for chunk in llr.chunks(2048) {
+                    h.push(chunk)?; // SDR-sized chunks, backpressured
+                }
+                h.finish(true)?;
+                let mut decoded = Vec::new();
+                for c in out {
+                    decoded.extend_from_slice(&c);
+                }
+                let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
+                Ok((decoded.len(), errors))
+            }));
+        }
+        let mut total_bits = 0usize;
+        let mut total_errors = 0usize;
+        for j in joins {
+            let (b, e) = j.join().expect("session thread panicked")?;
+            total_bits += b;
+            total_errors += e;
+        }
+        let snap = coord.metrics();
+        println!(
+            "sessions={sessions} decoded={total_bits} bits errors={total_errors} (BER {:.2e})",
+            total_errors as f64 / total_bits.max(1) as f64
+        );
+        println!(
+            "throughput={:.3} Mb/s  execs={} mean_batch={:.1} p50={:.0}us p99={:.0}us",
+            snap.throughput_bps / 1e6,
+            snap.execs,
+            snap.mean_batch,
+            snap.latency_p50_us,
+            snap.latency_p99_us
+        );
+        if args.get_bool("json") {
+            println!("{}", snap.to_json().to_string_pretty());
+        }
+        Ok(())
+    })?;
+    coord.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! PJRT client construction. One CPU client per process; executables are
+//! compiled once and cached by the `Artifact` layer.
+
+use anyhow::{Context, Result};
+
+/// Create the PJRT CPU client (the paper's GPU context analog).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+/// Human-readable platform summary for `tcvd info`.
+pub fn platform_summary(client: &xla::PjRtClient) -> String {
+    format!(
+        "platform={} version={} devices={}",
+        client.platform_name(),
+        client.platform_version(),
+        client.device_count()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_comes_up() {
+        let c = cpu_client().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.device_count() >= 1);
+        let s = platform_summary(&c);
+        assert!(s.contains("platform=cpu"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Artifact execution: compile the HLO text once, then run batched
+//! forward passes. The forward pass (tensor-formulated ACS) runs inside
+//! XLA; traceback runs here in Rust (paper §V-A: traceback cannot be a
+//! matmul).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coding::trellis::Trellis;
+use crate::coding::Code;
+use crate::viterbi::types::{FrameDecoder, FrameJob, RawFrame, Survivors, NEG};
+
+use super::literals::{literal_f32, to_f32_vec, to_i32_vec};
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// A compiled decoder artifact. NOT `Send`: PJRT executables live on the
+/// thread that owns the client — the coordinator funnels all executions
+/// through one engine thread (which is also how the paper serializes
+/// kernel launches on a CUDA stream).
+pub struct Artifact {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Result of one batched forward pass.
+///
+/// `phi` is step-major flat — index `(t * batch + b) * n_states + s` —
+/// matching the artifact's 1-D output contract (see `aot.py`).
+#[derive(Clone, Debug)]
+pub struct ForwardOut {
+    /// Left-local selections (0..gamma), step-major flat.
+    pub phi: Vec<i32>,
+    /// Final path metrics \[b]\[state] flattened.
+    pub lam: Vec<f32>,
+}
+
+impl Artifact {
+    /// Load + compile one artifact (HLO text -> PJRT executable).
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, meta: &ArtifactMeta)
+                -> Result<Artifact> {
+        let path = manifest.hlo_path(meta);
+        let exe = compile_hlo(client, &path)?;
+        Ok(Artifact { meta: meta.clone(), exe })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Reconstruct the `Code` this artifact was compiled for.
+    pub fn code(&self) -> Result<Code> {
+        let octal: Vec<&str> = self.meta.polys_octal.iter().map(|s| s.as_str()).collect();
+        Code::from_octal(self.meta.k, &octal)
+    }
+
+    /// One batched forward pass. `llr` is `[batch, n_steps, width]` flat,
+    /// `lam0` is `[batch, n_states]` flat.
+    pub fn forward(&self, llr: &[f32], lam0: &[f32]) -> Result<ForwardOut> {
+        let m = &self.meta;
+        ensure!(llr.len() == m.llr_len(), "llr: got {}, want {}", llr.len(), m.llr_len());
+        ensure!(lam0.len() == m.lam_len(), "lam0: got {}, want {}", lam0.len(), m.lam_len());
+        let llr_lit = literal_f32(
+            llr,
+            &[m.batch as i64, m.n_steps as i64, m.width as i64],
+        )?;
+        let lam_lit = literal_f32(lam0, &[m.batch as i64, m.n_states as i64])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[llr_lit, lam_lit])
+            .context("executing artifact")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (phi, lam)
+        let (phi_lit, lam_out) = result.to_tuple2().context("unpacking output tuple")?;
+        let phi = to_i32_vec(&phi_lit)?;
+        let lam = to_f32_vec(&lam_out)?;
+        ensure!(phi.len() == m.phi_len(), "phi size {} != {}", phi.len(), m.phi_len());
+        ensure!(lam.len() == m.lam_len(), "lam size {} != {}", lam.len(), m.lam_len());
+        Ok(ForwardOut { phi, lam })
+    }
+}
+
+/// Compile an HLO text file on the given client.
+pub fn compile_hlo(client: &xla::PjRtClient, path: &Path)
+                   -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+/// `FrameDecoder` over an artifact: batches jobs into full executions
+/// (padding the tail batch) and runs traceback per frame.
+pub struct ArtifactDecoder {
+    artifact: Arc<Artifact>,
+    trellis: Arc<Trellis>,
+}
+
+impl ArtifactDecoder {
+    pub fn new(artifact: Arc<Artifact>, trellis: Arc<Trellis>) -> Self {
+        ArtifactDecoder { artifact, trellis }
+    }
+
+    /// Build the flat lam0 for a batch of jobs (NEG ramp for known-start).
+    pub fn lam0_for(jobs: &[FrameJob], batch: usize, s_count: usize) -> Vec<f32> {
+        let mut lam0 = vec![0f32; batch * s_count];
+        for (b, job) in jobs.iter().enumerate() {
+            if let Some(s) = job.start_state {
+                let row = &mut lam0[b * s_count..(b + 1) * s_count];
+                row.fill(NEG);
+                row[s as usize] = 0.0;
+            }
+        }
+        lam0
+    }
+}
+
+impl FrameDecoder for ArtifactDecoder {
+    fn frame_stages(&self) -> usize {
+        self.artifact.meta().stages_per_frame
+    }
+
+    fn max_batch(&self) -> usize {
+        self.artifact.meta().batch
+    }
+
+    fn trellis(&self) -> &Arc<Trellis> {
+        &self.trellis
+    }
+
+    fn forward_batch(&mut self, jobs: &[FrameJob]) -> Vec<RawFrame> {
+        let m = self.artifact.meta().clone();
+        assert!(jobs.len() <= m.batch, "got {} jobs, artifact batch {}", jobs.len(), m.batch);
+        let frame_llr = m.n_steps * m.width;
+        let mut llr = vec![0f32; m.llr_len()];
+        for (b, job) in jobs.iter().enumerate() {
+            assert_eq!(job.llr.len(), frame_llr, "frame llr length mismatch");
+            llr[b * frame_llr..(b + 1) * frame_llr].copy_from_slice(&job.llr);
+        }
+        let lam0 = Self::lam0_for(jobs, m.batch, m.n_states);
+        let out = self.artifact.forward(&llr, &lam0).expect("artifact forward");
+        let s_count = m.n_states;
+        jobs.iter()
+            .enumerate()
+            .map(|(b, _)| {
+                // de-interleave the step-major flat phi for this frame
+                let mut phi = Vec::with_capacity(m.n_steps * s_count);
+                for t in 0..m.n_steps {
+                    let base = (t * m.batch + b) * s_count;
+                    phi.extend(out.phi[base..base + s_count].iter().map(|&v| v as u8));
+                }
+                RawFrame {
+                    surv: Survivors::Radix { rho: m.rho, phi },
+                    lam: out.lam[b * s_count..(b + 1) * s_count].to_vec(),
+                }
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.artifact.meta().name)
+    }
+}

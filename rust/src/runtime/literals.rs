@@ -1,0 +1,41 @@
+//! Literal packing helpers: flat Rust buffers <-> shaped XLA literals.
+
+use anyhow::{ensure, Context, Result};
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    ensure!(
+        expect as usize == data.len(),
+        "literal shape {dims:?} needs {expect} elements, got {}",
+        data.len()
+    );
+    xla::Literal::vec1(data).reshape(dims).context("reshaping literal")
+}
+
+/// Extract a flat f32 vector from a literal (any shape).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("extracting f32 literal")
+}
+
+/// Extract a flat i32 vector from a literal (any shape).
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("extracting i32 literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let lit = literal_f32(&data, &[2, 3, 4]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

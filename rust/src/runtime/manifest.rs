@@ -1,0 +1,180 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (shapes, dtypes, scheme parameters per artifact).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata for one AOT-compiled decoder variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: String,
+    pub scheme: String,
+    pub impl_: String,
+    pub acc: String,
+    pub chan: String,
+    pub batch: usize,
+    pub n_steps: usize,
+    pub rho: u32,
+    pub gamma: usize,
+    pub width: usize,
+    pub n_ops: usize,
+    pub ops_per_stage: f64,
+    pub renorm_every: usize,
+    pub k: u32,
+    pub polys_octal: Vec<String>,
+    pub n_states: usize,
+    pub stages_per_frame: usize,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        Ok(ArtifactMeta {
+            name: j.get("name")?.as_str()?.to_string(),
+            path: j.get("path")?.as_str()?.to_string(),
+            scheme: j.get("scheme")?.as_str()?.to_string(),
+            impl_: j.get("impl")?.as_str()?.to_string(),
+            acc: j.get("acc")?.as_str()?.to_string(),
+            chan: j.get("chan")?.as_str()?.to_string(),
+            batch: j.get("batch")?.as_usize()?,
+            n_steps: j.get("n_steps")?.as_usize()?,
+            rho: j.get("rho")?.as_usize()? as u32,
+            gamma: j.get("gamma")?.as_usize()?,
+            width: j.get("width")?.as_usize()?,
+            n_ops: j.get("n_ops")?.as_usize()?,
+            ops_per_stage: j.get("ops_per_stage")?.as_f64()?,
+            renorm_every: j.get("renorm_every")?.as_usize()?,
+            k: j.get("k")?.as_usize()? as u32,
+            polys_octal: j
+                .get("polys_octal")?
+                .as_arr()?
+                .iter()
+                .map(|p| Ok(p.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            n_states: j.get("n_states")?.as_usize()?,
+            stages_per_frame: j.get("stages_per_frame")?.as_usize()?,
+        })
+    }
+
+    /// Expected flat input sizes.
+    pub fn llr_len(&self) -> usize {
+        self.batch * self.n_steps * self.width
+    }
+
+    pub fn lam_len(&self) -> usize {
+        self.batch * self.n_states
+    }
+
+    pub fn phi_len(&self) -> usize {
+        self.batch * self.n_steps * self.n_states
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+        let j = Json::parse(&text)?;
+        let artifacts = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if artifacts.is_empty() {
+            bail!("manifest {} lists no artifacts", mpath.display());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the unique artifact whose name contains `pattern` (exact name
+    /// match wins if several contain it).
+    pub fn find(&self, pattern: &str) -> Result<&ArtifactMeta> {
+        if let Some(m) = self.artifacts.iter().find(|a| a.name == pattern) {
+            return Ok(m);
+        }
+        let hits: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.name.contains(pattern)).collect();
+        match hits.len() {
+            0 => bail!(
+                "no artifact matches {pattern:?}; available: {}",
+                self.artifacts.iter().map(|a| a.name.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+            1 => Ok(hits[0]),
+            _ => bail!(
+                "pattern {pattern:?} is ambiguous: {}",
+                hits.iter().map(|a| a.name.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        let entry = |name: &str| ArtifactMeta {
+            name: name.to_string(),
+            path: format!("{name}.hlo.txt"),
+            scheme: "radix4".into(),
+            impl_: "jnp".into(),
+            acc: "single".into(),
+            chan: "single".into(),
+            batch: 8,
+            n_steps: 32,
+            rho: 2,
+            gamma: 4,
+            width: 4,
+            n_ops: 1,
+            ops_per_stage: 0.5,
+            renorm_every: 16,
+            k: 7,
+            polys_octal: vec!["171".into(), "133".into()],
+            n_states: 64,
+            stages_per_frame: 64,
+        };
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            artifacts: vec![entry("radix4_a"), entry("radix4_b")],
+        }
+    }
+
+    #[test]
+    fn find_exact_beats_substring() {
+        let m = fake_manifest();
+        assert_eq!(m.find("radix4_a").unwrap().name, "radix4_a");
+    }
+
+    #[test]
+    fn find_ambiguous_errors() {
+        let m = fake_manifest();
+        assert!(m.find("radix4").is_err());
+        assert!(m.find("nothing").is_err());
+    }
+
+    #[test]
+    fn sizes() {
+        let m = fake_manifest();
+        let a = &m.artifacts[0];
+        assert_eq!(a.llr_len(), 8 * 32 * 4);
+        assert_eq!(a.lam_len(), 8 * 64);
+        assert_eq!(a.phi_len(), 8 * 32 * 64);
+    }
+}

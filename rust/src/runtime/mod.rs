@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client. The
+//! only Python involvement ended at `make artifacts` — this module is the
+//! entire model-execution path of the Rust binary.
+
+pub mod client;
+pub mod manifest;
+pub mod literals;
+pub mod executor;
+
+pub use executor::{Artifact, ArtifactDecoder};
+pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,146 @@
+//! Compact bit storage + the paper's §III output compaction (32 decoded
+//! bits per 32-bit word) used on the coordinator's output path.
+
+/// A growable bit vector packed into u32 words (LSB-first within a word,
+/// matching the paper's "every 32 output decoded bits as a 32-bit value").
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u32>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitVec { words: Vec::with_capacity(bits.div_ceil(32)), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn push(&mut self, bit: u8) {
+        let (w, b) = (self.len / 32, self.len % 32);
+        if b == 0 {
+            self.words.push(0);
+        }
+        self.words[w] |= ((bit & 1) as u32) << b;
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        ((self.words[i / 32] >> (i % 32)) & 1) as u8
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, bit: u8) {
+        assert!(i < self.len);
+        let (w, b) = (i / 32, i % 32);
+        self.words[w] = (self.words[w] & !(1 << b)) | (((bit & 1) as u32) << b);
+    }
+
+    /// Raw packed words (the wire format of the coordinator output).
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    pub fn from_bits(bits: &[u8]) -> Self {
+        let mut v = BitVec::with_capacity(bits.len());
+        for &b in bits {
+            v.push(b);
+        }
+        v
+    }
+
+    pub fn to_bits(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Append another bitvec.
+    pub fn extend(&mut self, other: &BitVec) {
+        for i in 0..other.len {
+            self.push(other.get(i));
+        }
+    }
+
+    /// Count positions where two equal-length bitvecs differ (bit errors).
+    pub fn hamming(&self, other: &BitVec) -> usize {
+        assert_eq!(self.len, other.len, "length mismatch");
+        let mut d = 0usize;
+        for (i, (a, b)) in self.words.iter().zip(&other.words).enumerate() {
+            let mut x = a ^ b;
+            if (i + 1) * 32 > self.len {
+                x &= (1u32 << (self.len % 32)) - 1;
+            }
+            d += x.count_ones() as usize;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let bits: Vec<u8> = (0..100).map(|i| (i % 3 == 0) as u8).collect();
+        let v = BitVec::from_bits(&bits);
+        assert_eq!(v.len(), 100);
+        assert_eq!(v.to_bits(), bits);
+    }
+
+    #[test]
+    fn word_packing_lsb_first() {
+        let mut v = BitVec::new();
+        v.push(1);
+        v.push(0);
+        v.push(1);
+        assert_eq!(v.words()[0], 0b101);
+    }
+
+    #[test]
+    fn set_overwrites() {
+        let mut v = BitVec::from_bits(&[0, 0, 0, 0]);
+        v.set(2, 1);
+        assert_eq!(v.to_bits(), vec![0, 0, 1, 0]);
+        v.set(2, 0);
+        assert_eq!(v.to_bits(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn hamming_counts_errors() {
+        let a = BitVec::from_bits(&[1, 0, 1, 1, 0]);
+        let b = BitVec::from_bits(&[1, 1, 1, 0, 0]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+    }
+
+    #[test]
+    fn hamming_masks_tail() {
+        // differences beyond len must not count
+        let mut a = BitVec::from_bits(&[1; 33]);
+        let mut b = BitVec::from_bits(&[1; 33]);
+        a.push(1);
+        b.push(0);
+        assert_eq!(a.hamming(&b), 1);
+    }
+
+    #[test]
+    fn extend_concatenates() {
+        let mut a = BitVec::from_bits(&[1, 0]);
+        let b = BitVec::from_bits(&[1, 1, 0]);
+        a.extend(&b);
+        assert_eq!(a.to_bits(), vec![1, 0, 1, 1, 0]);
+    }
+}

@@ -1,0 +1,86 @@
+//! Seeded randomized property-test runner (offline image: no proptest).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it reports the failing case index and re-derivable
+//! seed instead of shrinking. Deterministic by construction: the same
+//! seed always replays the same cases.
+
+use super::rng::Rng;
+
+/// Run a property over generated cases; panic with a replayable seed on
+/// the first failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed:#x}):\n  \
+                 input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers used by the property tests.
+pub mod gen {
+    use super::super::rng::Rng;
+
+    /// Random bit payload of length in [lo, hi].
+    pub fn bits(rng: &mut Rng, lo: usize, hi: usize) -> Vec<u8> {
+        let n = lo + rng.next_below((hi - lo + 1) as u64) as usize;
+        rng.bits(n)
+    }
+
+    /// Generic continuous LLRs (no ties in practice): gaussian around
+    /// +-1 with the given noise sigma.
+    pub fn llrs(rng: &mut Rng, n: usize, sigma: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let s = if rng.next_bit() == 0 { 1.0 } else { -1.0 };
+                (s + sigma * rng.next_gaussian()) as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(1, 50, |r| r.next_below(100), |&x| {
+            if x < 100 { Ok(()) } else { Err(format!("{x} >= 100")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        forall(2, 50, |r| r.next_below(100), |&x| {
+            if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) }
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first = Vec::new();
+        forall(3, 10, |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall(3, 10, |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,179 @@
+//! Software half-precision floats: IEEE 754 binary16 (`f16`, the paper's
+//! "half") and bfloat16 (`bf16`, the TPU-native analog used by the MXU
+//! mapping — see DESIGN.md §Hardware-Adaptation).
+//!
+//! Only conversion + round-to-nearest-even are needed: the CPU mirrors of
+//! the tensor kernels compute in f32 and *round through* the half format
+//! after every accumulate, exactly reproducing a half-precision C/D
+//! matrix fragment (paper §IX-B).
+
+/// Round an f32 to bfloat16 precision (round-to-nearest-even) and back.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // NaN: keep quiet NaN
+    if x.is_nan() {
+        return f32::from_bits((bits | 0x0040_0000) & 0xFFFF_0000);
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x0000_7FFF + lsb) & 0xFFFF_0000;
+    let _ = round_bit;
+    f32::from_bits(rounded)
+}
+
+/// Convert f32 -> IEEE binary16 bit pattern (round-to-nearest-even,
+/// handling subnormals, overflow to infinity).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias: f32 exp-127, f16 exp-15
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal f16
+        let e = (unbiased + 15) as u32;
+        let m = mant >> 13;
+        let rem = mant & 0x1FFF;
+        let mut h = (sign as u32) | (e << 10) | m;
+        // round to nearest even
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            h += 1; // may carry into exponent — that is correct rounding
+        }
+        return h as u16;
+    }
+    if unbiased >= -25 {
+        // subnormal f16
+        let full_mant = mant | 0x0080_0000;
+        let shift = (-14 - unbiased) as u32 + 13;
+        let m = full_mant >> shift;
+        let rem = full_mant & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = (sign as u32) | m;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign // underflow to +-0
+}
+
+/// Convert IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf/nan
+    } else if exp == 0 {
+        // zero or subnormal: value = mant * 2^-24, exact in f32
+        let v = mant as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -v } else { v };
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through IEEE binary16 (the paper's half precision).
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Rounding mode used by the half-precision decode paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HalfKind {
+    /// IEEE binary16 — what V100 tensor cores use (paper-faithful).
+    F16,
+    /// bfloat16 — what the TPU MXU uses (hardware-adaptation-faithful).
+    Bf16,
+}
+
+impl HalfKind {
+    #[inline]
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            HalfKind::F16 => f16_round(x),
+            HalfKind::Bf16 => bf16_round(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exact_values() {
+        // +-1, small integers and powers of two are exact in bf16
+        for v in [0.0f32, 1.0, -1.0, 2.0, 0.5, -0.25, 128.0] {
+            assert_eq!(bf16_round(v), v);
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_mantissa() {
+        // bf16 has 8 total mantissa bits (7 stored): 1 + 2^-9 rounds to 1
+        assert_eq!(bf16_round(1.0 + 1.0 / 512.0), 1.0);
+        // 1 + 2^-7 is representable
+        let x = 1.0 + 1.0 / 128.0;
+        assert_eq!(bf16_round(x), x);
+    }
+
+    #[test]
+    fn f16_roundtrip_exact() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, -65504.0, 1.0 / 1024.0] {
+            assert_eq!(f16_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f16_round(70000.0).is_infinite());
+        assert!(f16_round(-70000.0).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 5.96e-8; // smallest positive f16 subnormal ~5.96e-8
+        let r = f16_round(tiny);
+        assert!(r > 0.0 && r < 1.2e-7, "{r}");
+        assert_eq!(f16_round(1e-9), 0.0); // underflow
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 2048 + 1 = 2049 is not representable (11-bit significand);
+        // rounds to 2048 (even). 2048+3 rounds to 2052.
+        assert_eq!(f16_round(2049.0), 2048.0);
+        assert_eq!(f16_round(2051.0), 2052.0);
+    }
+
+    #[test]
+    fn f16_sweep_roundtrip_monotone() {
+        // every f16 value round-trips bit-exactly through f32
+        for h in 0..=0xFFFFu16 {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "h={h:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert!(f16_round(f32::NAN).is_nan());
+    }
+}

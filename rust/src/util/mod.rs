@@ -1,0 +1,12 @@
+//! Self-contained substrate utilities (the image is offline; no external
+//! crates beyond `xla`/`anyhow`, so PRNG, half-float emulation, JSON,
+//! TOML-subset parsing and property-test helpers are built here).
+
+pub mod rng;
+pub mod half;
+pub mod bitvec;
+pub mod json;
+pub mod toml;
+pub mod check;
+pub mod stats;
+pub mod queue;

@@ -1,0 +1,131 @@
+//! A small blocking MPMC queue (Mutex + Condvar). std's mpsc `Receiver`
+//! is single-consumer; wrapping it in a mutex would hold the lock across
+//! a blocking `recv`, serializing the traceback worker pool. This queue
+//! releases the lock while waiting.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Blocking multi-producer multi-consumer FIFO.
+pub struct Queue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for Queue<T> {
+    fn default() -> Self {
+        Queue { inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }), cv: Condvar::new() }
+    }
+}
+
+impl<T> Queue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Push an item; returns false (dropping the item) if closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Pop, blocking until an item arrives or the queue is closed and
+    /// drained (then `None`).
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: consumers drain remaining items then see `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = Queue::new();
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Queue::new();
+        q.push(1);
+        q.close();
+        assert!(!q.push(2)); // rejected after close
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn concurrent_consumers_get_everything_once() {
+        let q = Arc::new(Queue::new());
+        let n = 10_000;
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..n {
+            q.push(i);
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_close() {
+        let q: Arc<Queue<i32>> = Arc::new(Queue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

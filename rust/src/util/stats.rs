@@ -1,0 +1,156 @@
+//! Latency/throughput statistics for the coordinator and benches:
+//! streaming mean/variance (Welford) and a fixed-bucket log-scale
+//! histogram with percentile queries.
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Log-scale histogram over (0, ~17 min] in nanoseconds: 64 buckets per
+/// power of two. Percentile error is bounded by the bucket width (<1.6%).
+#[derive(Clone)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+}
+
+const SUB: usize = 64; // sub-buckets per octave
+const OCTAVES: usize = 40; // up to 2^40 ns ≈ 18 min
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: vec![0; SUB * OCTAVES], count: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn index(v: u64) -> usize {
+        let v = v.max(1);
+        let oct = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let sub = if oct == 0 {
+            0
+        } else if oct <= 6 {
+            // small values: spread over available low bits
+            ((v - (1 << oct)) as usize) << (6 - oct)
+        } else {
+            ((v >> (oct - 6)) - 64) as usize
+        };
+        (oct.min(OCTAVES - 1)) * SUB + sub.min(SUB - 1)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate value at percentile p in [0, 100].
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let oct = i / SUB;
+                let sub = (i % SUB) as u64;
+                let base = 1u64 << oct;
+                let width = if oct <= 6 { 1u64.max(base >> 6) } else { base >> 6 };
+                return base + sub * width;
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_close() {
+        let mut h = LogHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 1000); // 1us .. 10ms
+        }
+        let p50 = h.percentile(50.0) as f64;
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.05, "p50={p50}");
+        let p99 = h.percentile(99.0) as f64;
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.05, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = LogHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(10.0) <= 2);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(100);
+        b.record(200);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,211 @@
+//! TOML-subset parser for the config system (offline image: no external
+//! TOML crate). Supports:
+//!
+//! * `[table]` and `[table.subtable]` headers
+//! * `key = value` with string / integer / float / boolean / array values
+//! * `#` comments, blank lines
+//!
+//! This covers everything `tcvd.toml` uses; unsupported syntax errors out
+//! loudly instead of mis-parsing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_i64()?;
+        usize::try_from(v).map_err(|_| anyhow!("negative integer {v}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flat document: dotted table path -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut table = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated table header", ln + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty table name", ln + 1);
+                }
+                table = name.to_string();
+                doc.tables.entry(table.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            let val = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+            doc.tables.entry(table.clone()).or_default().insert(key.to_string(), val);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `table.key`; empty table name addresses top-level keys.
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a string literal must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quote in string (escapes unsupported)");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let doc = Toml::parse(
+            r#"
+# top comment
+top = 1
+
+[frame]
+f = 64          # decoded bits per frame
+overlap = 24
+name = "radix4"
+ratio = 0.5
+flag = true
+sizes = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(doc.get("frame", "f").unwrap().as_i64().unwrap(), 64);
+        assert_eq!(doc.get("frame", "name").unwrap().as_str().unwrap(), "radix4");
+        assert_eq!(doc.get("frame", "ratio").unwrap().as_f64().unwrap(), 0.5);
+        assert!(doc.get("frame", "flag").unwrap().as_bool().unwrap());
+        assert_eq!(
+            doc.get("frame", "sizes").unwrap(),
+            &Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+    }
+
+    #[test]
+    fn dotted_tables() {
+        let doc = Toml::parse("[a.b]\nx = 2\n").unwrap();
+        assert_eq!(doc.get("a.b", "x").unwrap().as_i64().unwrap(), 2);
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = Toml::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(Toml::parse("[open\n").is_err());
+        assert!(Toml::parse("novalue\n").is_err());
+        assert!(Toml::parse("k = @bad\n").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Decoder implementations.
+//!
+//! * `scalar` — Alg 1 + Alg 2 verbatim (the CPU baseline of refs [2,3]).
+//! * `packed` — CPU execution of a tensor packing spec: the *same
+//!   arithmetic* as the AOT artifact (matmul + add, round through the
+//!   accumulator precision, max/argmax epilogue), so BER studies can run
+//!   at CPU speed while staying faithful to the tensor formulation.
+//! * `radix2` / `radix4` — named constructors over `packed`.
+//! * `traceback` — the backward procedure (shared by every path; in the
+//!   paper it runs on scalar CUDA cores because it cannot be a matmul).
+//! * `tiled` — framed/overlapped decoding of long streams (§III).
+
+pub mod types;
+pub mod scalar;
+pub mod packed;
+pub mod traceback;
+pub mod tiled;
+
+pub use packed::PackedDecoder;
+pub use scalar::ScalarDecoder;
+pub use types::{AccPrecision, FrameDecoder, FrameJob, NEG};

@@ -1,0 +1,197 @@
+//! Scalar Viterbi decoder: Algorithms 1 and 2 verbatim (the paper's §II-B
+//! description; the baseline approach of refs [2,3] when run one frame
+//! per thread). The correctness oracle for every other Rust path.
+
+use std::sync::Arc;
+
+use crate::coding::trellis::Trellis;
+
+use super::traceback::traceback_scalar;
+use super::types::{FrameDecoder, FrameJob, RawFrame, Survivors, NEG};
+
+/// Forward procedure (Alg 1) over `n` stages.
+///
+/// `llr`: flat `n * beta` soft values; `lam0`: initial path metrics.
+/// Returns (`phi` \[n\]\[S\] predecessor states, final metrics \[S\]).
+pub fn forward(t: &Trellis, llr: &[f32], lam0: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let s_count = t.code().n_states();
+    let beta = t.code().beta();
+    assert_eq!(llr.len() % beta, 0, "llr length must be a multiple of beta");
+    assert_eq!(lam0.len(), s_count);
+    let n = llr.len() / beta;
+
+    let mut lam: Vec<f64> = lam0.iter().map(|&x| x as f64).collect();
+    let mut lam_next = vec![0f64; s_count];
+    let mut phi = vec![0u32; n * s_count];
+
+    // branch metric delta[i][u] recomputed per stage (Eq 2)
+    let mut delta = vec![[0f64; 2]; s_count];
+    for t_idx in 0..n {
+        let l = &llr[t_idx * beta..(t_idx + 1) * beta];
+        for i in 0..s_count {
+            for u in 0..2usize {
+                let a = t.out[i][u];
+                let mut d = 0f64;
+                for (b, &lb) in l.iter().enumerate() {
+                    d += if (a >> b) & 1 == 0 { lb as f64 } else { -(lb as f64) };
+                }
+                delta[i][u] = d;
+            }
+        }
+        for j in 0..s_count {
+            let [i0, i1] = t.prev[j];
+            let u = t.code().branch_input(j as u32) as usize;
+            let l0 = lam[i0 as usize] + delta[i0 as usize][u];
+            let l1 = lam[i1 as usize] + delta[i1 as usize][u];
+            if l0 >= l1 {
+                lam_next[j] = l0;
+                phi[t_idx * s_count + j] = i0;
+            } else {
+                lam_next[j] = l1;
+                phi[t_idx * s_count + j] = i1;
+            }
+        }
+        std::mem::swap(&mut lam, &mut lam_next);
+    }
+    (phi, lam.iter().map(|&x| x as f32).collect())
+}
+
+/// Full decode: forward + traceback.
+pub fn decode(t: &Trellis, llr: &[f32], lam0: &[f32], end_state: Option<u32>) -> Vec<u8> {
+    let (phi, lam) = forward(t, llr, lam0);
+    traceback_scalar(t, &phi, &lam, end_state)
+}
+
+/// Initial metrics: known start state or all-equal.
+pub fn initial_metrics(s_count: usize, start_state: Option<u32>) -> Vec<f32> {
+    match start_state {
+        Some(s) => {
+            let mut l = vec![NEG; s_count];
+            l[s as usize] = 0.0;
+            l
+        }
+        None => vec![0.0; s_count],
+    }
+}
+
+/// `FrameDecoder` wrapper for the scalar path.
+pub struct ScalarDecoder {
+    trellis: Arc<Trellis>,
+    stages: usize,
+}
+
+impl ScalarDecoder {
+    pub fn new(trellis: Arc<Trellis>, stages: usize) -> Self {
+        ScalarDecoder { trellis, stages }
+    }
+}
+
+impl FrameDecoder for ScalarDecoder {
+    fn frame_stages(&self) -> usize {
+        self.stages
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn trellis(&self) -> &Arc<Trellis> {
+        &self.trellis
+    }
+
+    fn forward_batch(&mut self, jobs: &[FrameJob]) -> Vec<RawFrame> {
+        let s_count = self.trellis.code().n_states();
+        jobs.iter()
+            .map(|job| {
+                let lam0 = initial_metrics(s_count, job.start_state);
+                let (phi, lam) = forward(&self.trellis, &job.llr, &lam0);
+                RawFrame { surv: Survivors::Scalar(phi), lam }
+            })
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        "scalar".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{awgn::AwgnChannel, bpsk};
+    use crate::coding::{poly::Code, Encoder};
+
+    fn trellis() -> Trellis {
+        Trellis::new(Code::from_octal(7, &["171", "133"]).unwrap())
+    }
+
+    #[test]
+    fn decodes_noiseless() {
+        let t = trellis();
+        let mut enc = Encoder::new(t.code().clone());
+        let bits = vec![1, 0, 1, 1, 0, 1, 0, 0, 1, 1, 0, 0, 0, 0, 0, 0];
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let lam0 = initial_metrics(64, Some(0));
+        let out = decode(&t, &llr, &lam0, Some(0));
+        assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn corrects_noise() {
+        let t = trellis();
+        let mut enc = Encoder::new(t.code().clone());
+        let mut payload = crate::util::rng::Rng::new(11).bits(250);
+        payload.extend_from_slice(&[0; 6]); // flush
+        let coded = enc.encode(&payload);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(5.0, 0.5, 3);
+        let rx = ch.transmit(&tx);
+        let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+        let lam0 = initial_metrics(64, Some(0));
+        let out = decode(&t, &llr, &lam0, Some(0));
+        assert_eq!(out, payload, "5 dB should decode error-free at n=256");
+    }
+
+    #[test]
+    fn hard_decision_also_corrects_single_flip() {
+        let t = trellis();
+        let mut enc = Encoder::new(t.code().clone());
+        let bits = vec![1, 1, 0, 1, 0, 0, 0, 0, 0, 0];
+        let coded = enc.encode(&bits);
+        let mut llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        llr[4] = -llr[4]; // flip one coded bit (hard error)
+        let lam0 = initial_metrics(64, Some(0));
+        assert_eq!(decode(&t, &llr, &lam0, Some(0)), bits);
+    }
+
+    #[test]
+    fn unknown_end_state_uses_argmax() {
+        let t = trellis();
+        let mut enc = Encoder::new(t.code().clone());
+        let bits = vec![1, 0, 0, 1, 1, 0, 1, 0, 1, 0, 1, 1];
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let lam0 = initial_metrics(64, Some(0));
+        let out = decode(&t, &llr, &lam0, None);
+        assert_eq!(out, bits, "noiseless: argmax end state is the true path");
+    }
+
+    #[test]
+    fn frame_decoder_emits_requested_range() {
+        let t = Arc::new(trellis());
+        let mut enc = Encoder::new(t.code().clone());
+        let bits = crate::util::rng::Rng::new(5).bits(32);
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let mut d = ScalarDecoder::new(t, 32);
+        let out = d.decode_batch(&[FrameJob {
+            llr,
+            start_state: Some(0),
+            end_state: None,
+            emit_from: 4,
+            emit_len: 16,
+        }]);
+        assert_eq!(out[0], bits[4..20].to_vec());
+    }
+}

@@ -1,0 +1,147 @@
+//! Shared decoder types.
+
+use std::sync::Arc;
+
+use crate::coding::trellis::Trellis;
+use crate::util::half::HalfKind;
+
+/// Finite "minus infinity" for path metrics (stays representable in
+/// bf16/f16 and survives repeated additions within a frame).
+pub const NEG: f32 = -1.0e9;
+
+/// Accumulator (C/D fragment) precision — the paper's Table I axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccPrecision {
+    /// f32 path metrics ("single").
+    Single,
+    /// 16-bit path metrics ("half"); rounding applied after every
+    /// accumulate, mirroring a half C/D fragment.
+    Half(HalfKind),
+}
+
+impl AccPrecision {
+    #[inline]
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            AccPrecision::Single => x,
+            AccPrecision::Half(kind) => kind.round(x),
+        }
+    }
+}
+
+/// One frame decode request (produced by the tiler / coordinator framer).
+#[derive(Clone, Debug)]
+pub struct FrameJob {
+    /// Flat LLRs for `stages` trellis stages: `stages * beta` values.
+    pub llr: Vec<f32>,
+    /// Known encoder state at frame start (stream head / after flush),
+    /// or None for a mid-stream tile (all-equal initial metrics).
+    pub start_state: Option<u32>,
+    /// Known end state (flushed stream tail), or None (argmax pick).
+    pub end_state: Option<u32>,
+    /// Which decoded bit positions to emit (skips warm-up overlap).
+    pub emit_from: usize,
+    pub emit_len: usize,
+}
+
+/// Survivor information produced by a forward pass, in whichever form
+/// the backend emits it.
+#[derive(Clone, Debug)]
+pub enum Survivors {
+    /// Alg-1 form: predecessor *global state* per (stage, state).
+    Scalar(Vec<u32>),
+    /// Radix form: winning left *local* state (0..2^rho) per (step, state).
+    Radix { rho: u32, phi: Vec<u8> },
+}
+
+/// Raw output of a forward pass for one frame (traceback still pending).
+#[derive(Clone, Debug)]
+pub struct RawFrame {
+    pub surv: Survivors,
+    /// Final path metrics [n_states].
+    pub lam: Vec<f32>,
+}
+
+impl RawFrame {
+    /// Run the backward procedure (Alg 2) and emit the requested window.
+    pub fn traceback(&self, trellis: &Trellis, job: &FrameJob) -> Vec<u8> {
+        let bits = match &self.surv {
+            Survivors::Scalar(phi) => {
+                super::traceback::traceback_scalar(trellis, phi, &self.lam, job.end_state)
+            }
+            Survivors::Radix { rho, phi } => {
+                super::traceback::traceback_radix(trellis, *rho, phi, &self.lam, job.end_state)
+            }
+        };
+        bits[job.emit_from..job.emit_from + job.emit_len].to_vec()
+    }
+}
+
+/// A frame decoder: fixed frame geometry, batch-oriented API so tensor
+/// backends can amortize (the paper's frame-parallel launches). The
+/// forward pass and traceback are split so the coordinator can pipeline
+/// them across threads (forward on the PJRT engine thread, traceback on
+/// worker threads — the paper's tensor-core/CUDA-core split).
+pub trait FrameDecoder {
+    /// Trellis stages a frame must contain.
+    fn frame_stages(&self) -> usize;
+
+    /// Largest batch the backend can take in one call (1 for scalar).
+    fn max_batch(&self) -> usize;
+
+    /// The trellis this decoder was built over.
+    fn trellis(&self) -> &Arc<Trellis>;
+
+    /// Forward pass only: survivors + final metrics per frame.
+    fn forward_batch(&mut self, jobs: &[FrameJob]) -> Vec<RawFrame>;
+
+    /// Decode a batch of frames; returns the emitted bits per frame
+    /// (job.emit_from .. emit_from+emit_len).
+    fn decode_batch(&mut self, jobs: &[FrameJob]) -> Vec<Vec<u8>> {
+        let trellis = self.trellis().clone();
+        self.forward_batch(jobs)
+            .iter()
+            .zip(jobs)
+            .map(|(raw, job)| raw.traceback(&trellis, job))
+            .collect()
+    }
+
+    /// Short backend label for logs/benches.
+    fn label(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_round_is_identity() {
+        assert_eq!(AccPrecision::Single.round(1.234567), 1.234567);
+    }
+
+    #[test]
+    fn half_round_quantizes() {
+        let x = 1.0 + 1.0 / 4096.0;
+        assert_eq!(AccPrecision::Half(HalfKind::Bf16).round(x), 1.0);
+    }
+
+    #[test]
+    fn neg_is_half_safe() {
+        for kind in [HalfKind::Bf16, HalfKind::F16] {
+            let r = kind.round(NEG);
+            assert!(r.is_finite() || kind == HalfKind::F16, "{kind:?} {r}");
+        }
+        // f16 saturates NEG to inf — decoders clamp lam0 for f16 kinds
+        // via `neg_for`.
+        assert!(AccPrecision::Half(HalfKind::Bf16).round(NEG).is_finite());
+    }
+}
+
+/// A "minus infinity" that stays finite in the given precision (binary16
+/// overflows at 65504, so use a large-but-finite value there).
+pub fn neg_for(acc: AccPrecision) -> f32 {
+    match acc {
+        AccPrecision::Half(HalfKind::F16) => -30000.0,
+        _ => NEG,
+    }
+}

@@ -1,0 +1,153 @@
+//! End-to-end coordinator pipeline tests over the PJRT artifact backend
+//! (skip cleanly when artifacts are absent) plus stress tests on the CPU
+//! backend: many sessions, chunked pushes, backpressure.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{registry, Encoder};
+use tcvd::coordinator::server::CoordinatorConfig;
+use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::tiled::TileConfig;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: run `make artifacts`");
+        None
+    }
+}
+
+fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut bits = Rng::new(seed).bits(payload_bits - 6);
+    bits.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&bits);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xFEED);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+#[test]
+fn pjrt_pipeline_decodes_multisession_workload() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tile = TileConfig { payload: 64, head: 16, tail: 16 }; // 96 = b64_s48 frame
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendSpec::artifact(dir, "radix4_jnp_acc-single_ch-single_b64_s48"),
+            tile,
+            max_batch: 64,
+            batch_deadline: Duration::from_micros(500),
+            workers: 2,
+            queue_depth: 512,
+        })
+        .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for s in 0..6u64 {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let (bits, llr) = noisy_stream(1000 + s, 4096, 5.0);
+            let out = c.decode_stream_blocking(&llr, true).unwrap();
+            assert_eq!(out.len(), bits.len());
+            let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+            assert_eq!(errors, 0, "session {s}: {errors} errors at 5 dB");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
+    let snap = coord.metrics();
+    assert_eq!(snap.frames_in, snap.frames_out);
+    assert!(snap.mean_batch > 1.0, "batching never amortized: {}", snap.mean_batch);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn cpu_pipeline_survives_many_small_sessions() {
+    let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendSpec::CpuPacked {
+                code: "ccsds".into(),
+                scheme: "radix4".into(),
+                stages: tile.frame_stages(),
+                acc: tcvd::viterbi::AccPrecision::Single,
+                chan: tcvd::channel::quantize::ChannelPrecision::Single,
+                renorm_every: 16,
+            },
+            tile,
+            max_batch: 16,
+            batch_deadline: Duration::from_micros(200),
+            workers: 3,
+            queue_depth: 64,
+        })
+        .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for s in 0..16u64 {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let (bits, llr) = noisy_stream(2000 + s, 64 + 32 * (s as usize % 5), 6.0);
+            let out = c.decode_stream_blocking(&llr, true).unwrap();
+            assert_eq!(out, bits, "session {s}");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn backpressure_blocks_but_does_not_lose_frames() {
+    // tiny queue + slow deadline: pushes must block, never drop
+    let tile = TileConfig { payload: 32, head: 8, tail: 8 };
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend: BackendSpec::Scalar { code: "ccsds".into(), stages: tile.frame_stages() },
+        tile,
+        max_batch: 2,
+        batch_deadline: Duration::from_micros(50),
+        workers: 1,
+        queue_depth: 2,
+    })
+    .unwrap();
+    let (bits, llr) = noisy_stream(77, 2048, 6.0);
+    let out = coord.decode_stream_blocking(&llr, true).unwrap();
+    assert_eq!(out, bits);
+    let snap = coord.metrics();
+    assert_eq!(snap.frames_in, snap.frames_out);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_accumulate_sanely() {
+    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend: BackendSpec::Scalar { code: "ccsds".into(), stages: tile.frame_stages() },
+        tile,
+        max_batch: 8,
+        batch_deadline: Duration::from_micros(100),
+        workers: 2,
+        queue_depth: 64,
+    })
+    .unwrap();
+    let (_, llr) = noisy_stream(5, 1024, 5.0);
+    let _ = coord.decode_stream_blocking(&llr, true).unwrap();
+    let s = coord.metrics();
+    assert_eq!(s.frames_out, 16);
+    assert_eq!(s.bits_out, 1024);
+    assert!(s.throughput_bps > 0.0);
+    assert!(s.latency_p50_us > 0.0 && s.latency_p50_us <= s.latency_p99_us);
+    assert!(s.forward_ns_total > 0 && s.traceback_ns_total > 0);
+    coord.shutdown().unwrap();
+}

@@ -1,0 +1,162 @@
+//! Cross-layer integration: the AOT artifact executed through PJRT must
+//! produce the same decodes as the Rust CPU mirrors and the scalar
+//! oracle. Requires `make artifacts` (skips cleanly if absent).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{registry, trellis::Trellis, Encoder};
+use tcvd::runtime::{client, Artifact, ArtifactDecoder, Manifest};
+use tcvd::util::half::HalfKind;
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::packed::presets;
+use tcvd::viterbi::scalar;
+use tcvd::viterbi::types::{FrameDecoder, FrameJob};
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn noisy_frames(seed: u64, n_frames: usize, stages: usize, ebn0: f64) -> Vec<(Vec<u8>, Vec<f32>)> {
+    let code = registry::paper_code();
+    let mut out = Vec::new();
+    for f in 0..n_frames {
+        let mut enc = Encoder::new(code.clone());
+        let mut bits = Rng::new(seed + f as u64).bits(stages - 6);
+        bits.extend_from_slice(&[0; 6]);
+        let coded = enc.encode(&bits);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ (f as u64 * 7919));
+        let rx = ch.transmit(&tx);
+        out.push((bits, rx.iter().map(|&x| x as f32).collect()));
+    }
+    out
+}
+
+fn jobs_from(frames: &[(Vec<u8>, Vec<f32>)], stages: usize) -> Vec<FrameJob> {
+    frames
+        .iter()
+        .map(|(_, llr)| FrameJob {
+            llr: llr.clone(),
+            start_state: Some(0),
+            end_state: Some(0),
+            emit_from: 0,
+            emit_len: stages,
+        })
+        .collect()
+}
+
+#[test]
+fn artifact_matches_cpu_radix4_and_scalar() {
+    let Some(m) = manifest() else { return };
+    let meta = m.find("radix4_jnp_acc-single_ch-single_b8_s32").unwrap().clone();
+    let cl = client::cpu_client().unwrap();
+    let artifact = Arc::new(Artifact::load(&cl, &m, &meta).unwrap());
+    let trellis = Arc::new(Trellis::new(artifact.code().unwrap()));
+    let stages = meta.stages_per_frame;
+
+    let frames = noisy_frames(11, meta.batch, stages, 4.0);
+    let jobs = jobs_from(&frames, stages);
+
+    let mut pjrt = ArtifactDecoder::new(artifact, trellis.clone());
+    let out_pjrt = pjrt.decode_batch(&jobs);
+
+    let mut cpu = presets::radix4(trellis.clone(), stages);
+    let out_cpu = cpu.decode_batch(&jobs);
+
+    for (i, ((bits, llr), (a, b))) in frames.iter().zip(out_pjrt.iter().zip(&out_cpu)).enumerate()
+    {
+        assert_eq!(a, b, "frame {i}: artifact vs cpu-radix4 disagree");
+        assert_eq!(a, bits, "frame {i}: decode error at 4 dB");
+        // scalar oracle on bf16-rounded LLRs (B matrix is half)
+        let llr_h: Vec<f32> = llr.iter().map(|&x| HalfKind::Bf16.round(x)).collect();
+        let lam0 = scalar::initial_metrics(64, Some(0));
+        let oracle = scalar::decode(&trellis, &llr_h, &lam0, Some(0));
+        assert_eq!(a, &oracle, "frame {i}: artifact vs scalar oracle disagree");
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    let Some(m) = manifest() else { return };
+    let cl = client::cpu_client().unwrap();
+    let meta_j = m.find("radix4_jnp_acc-single_ch-single_b8_s32").unwrap().clone();
+    let meta_p = m.find("radix4_pallas_acc-single_ch-single_b8_s32").unwrap().clone();
+    let a_j = Arc::new(Artifact::load(&cl, &m, &meta_j).unwrap());
+    let a_p = Arc::new(Artifact::load(&cl, &m, &meta_p).unwrap());
+    let trellis = Arc::new(Trellis::new(a_j.code().unwrap()));
+    let stages = meta_j.stages_per_frame;
+
+    let frames = noisy_frames(23, meta_j.batch, stages, 3.0);
+    let jobs = jobs_from(&frames, stages);
+    let out_j = ArtifactDecoder::new(a_j, trellis.clone()).decode_batch(&jobs);
+    let out_p = ArtifactDecoder::new(a_p, trellis).decode_batch(&jobs);
+    assert_eq!(out_j, out_p, "pallas and jnp artifacts must decode identically");
+}
+
+#[test]
+fn half_accumulator_artifact_loads_and_decodes() {
+    let Some(m) = manifest() else { return };
+    let Ok(meta) = m.find("radix4_jnp_acc-half_ch-half_b64_s48") else {
+        eprintln!("SKIP: half artifact not built");
+        return;
+    };
+    let meta = meta.clone();
+    let cl = client::cpu_client().unwrap();
+    let artifact = Arc::new(Artifact::load(&cl, &m, &meta).unwrap());
+    let trellis = Arc::new(Trellis::new(artifact.code().unwrap()));
+    let stages = meta.stages_per_frame;
+
+    // easy SNR: half accumulate must still decode clean frames
+    let frames = noisy_frames(31, 8, stages, 7.0);
+    let mut jobs = jobs_from(&frames, stages);
+    jobs.truncate(8);
+    let mut dec = ArtifactDecoder::new(artifact, trellis);
+    let out = dec.decode_batch(&jobs);
+    for (i, ((bits, _), got)) in frames.iter().zip(&out).enumerate() {
+        assert_eq!(got, bits, "frame {i}: half-acc artifact failed at 7 dB");
+    }
+}
+
+#[test]
+fn radix2_artifact_matches_cpu_radix2() {
+    let Some(m) = manifest() else { return };
+    let meta = m.find("radix2_jnp_acc-single_ch-single_b64_s96").unwrap().clone();
+    let cl = client::cpu_client().unwrap();
+    let artifact = Arc::new(Artifact::load(&cl, &m, &meta).unwrap());
+    let trellis = Arc::new(Trellis::new(artifact.code().unwrap()));
+    let stages = meta.stages_per_frame;
+
+    let frames = noisy_frames(41, 16, stages, 4.0);
+    let jobs = jobs_from(&frames, stages);
+    let out_pjrt = ArtifactDecoder::new(artifact, trellis.clone()).decode_batch(&jobs);
+    let out_cpu = presets::radix2(trellis, stages).decode_batch(&jobs);
+    assert_eq!(out_pjrt, out_cpu);
+}
+
+#[test]
+fn batch_padding_is_harmless() {
+    // decoding 3 jobs through a batch-8 artifact must equal full batches
+    let Some(m) = manifest() else { return };
+    let meta = m.find("radix4_jnp_acc-single_ch-single_b8_s32").unwrap().clone();
+    let cl = client::cpu_client().unwrap();
+    let artifact = Arc::new(Artifact::load(&cl, &m, &meta).unwrap());
+    let trellis = Arc::new(Trellis::new(artifact.code().unwrap()));
+    let stages = meta.stages_per_frame;
+
+    let frames = noisy_frames(53, 3, stages, 4.0);
+    let jobs = jobs_from(&frames, stages);
+    let mut dec = ArtifactDecoder::new(artifact, trellis);
+    let out_small = dec.decode_batch(&jobs);
+    for (i, ((bits, _), got)) in frames.iter().zip(&out_small).enumerate() {
+        assert_eq!(got, bits, "padded-batch frame {i}");
+    }
+}

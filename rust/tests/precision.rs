@@ -1,0 +1,73 @@
+//! Precision-behaviour integration tests: the Fig-13 mechanism (half
+//! accumulator resolution loss at grown metric magnitudes) and the
+//! renormalization mitigation, asserted as invariants.
+
+use std::sync::Arc;
+
+use tcvd::ber::{measure_ber, BerSetup};
+use tcvd::channel::quantize::ChannelPrecision;
+use tcvd::coding::{packing::build_packing, registry, trellis::Trellis};
+use tcvd::util::half::HalfKind;
+use tcvd::viterbi::packed::PackedDecoder;
+use tcvd::viterbi::tiled::TileConfig;
+use tcvd::viterbi::types::AccPrecision;
+
+fn ber_at(acc: AccPrecision, renorm: usize, chan: ChannelPrecision) -> f64 {
+    let t = Arc::new(Trellis::new(registry::paper_code()));
+    let tile = TileConfig { payload: 256, head: 128, tail: 128 };
+    let setup = BerSetup {
+        tile,
+        target_errors: 100,
+        max_bits: 120_000,
+        exact_llr: true, // metric growth — the paper's operating condition
+        ..Default::default()
+    };
+    let pk = build_packing(&t, "radix4").unwrap();
+    let mut dec = PackedDecoder::new(t.clone(), pk, tile.frame_stages(), acc,
+                                     HalfKind::Bf16, chan, renorm);
+    measure_ber(&mut dec, &t, 4.0, &setup).unwrap().ber()
+}
+
+#[test]
+fn half_accumulator_degrades_without_renorm() {
+    // paper Fig 13: C must be single precision
+    let f32_ber = ber_at(AccPrecision::Single, 0, ChannelPrecision::Single);
+    let bf16_ber = ber_at(AccPrecision::Half(HalfKind::Bf16), 0, ChannelPrecision::Single);
+    assert!(
+        bf16_ber > 50.0 * (f32_ber + 1e-6),
+        "bf16 accumulator should fail hard: bf16={bf16_ber:.2e} f32={f32_ber:.2e}"
+    );
+}
+
+#[test]
+fn half_channel_costs_nothing() {
+    // paper Fig 13: the channel array can be half without BER loss
+    let single = ber_at(AccPrecision::Single, 0, ChannelPrecision::Single);
+    let half = ber_at(AccPrecision::Single, 0, ChannelPrecision::Half(HalfKind::Bf16));
+    assert!(
+        (half - single).abs() <= 2e-4,
+        "half channel should be free: half={half:.2e} single={single:.2e}"
+    );
+}
+
+#[test]
+fn renormalization_rescues_half_accumulator() {
+    // extension beyond the paper: periodic metric renormalization keeps
+    // magnitudes (and thus the half ulp) small
+    let rescued = ber_at(AccPrecision::Half(HalfKind::Bf16), 8, ChannelPrecision::Single);
+    let broken = ber_at(AccPrecision::Half(HalfKind::Bf16), 0, ChannelPrecision::Single);
+    assert!(
+        rescued < broken / 10.0,
+        "renorm should rescue bf16: renorm8={rescued:.2e} renorm0={broken:.2e}"
+    );
+}
+
+#[test]
+fn f16_beats_bf16_as_accumulator() {
+    // f16 has 11 significand bits vs bf16's 8: at equal magnitudes its
+    // ulp is 8x finer, so it degrades later (why the paper's fp16 C
+    // merely *degrades* while TPU-bf16 would fail harder)
+    let f16 = ber_at(AccPrecision::Half(HalfKind::F16), 0, ChannelPrecision::Single);
+    let bf16 = ber_at(AccPrecision::Half(HalfKind::Bf16), 0, ChannelPrecision::Single);
+    assert!(f16 < bf16, "f16={f16:.2e} should beat bf16={bf16:.2e}");
+}

@@ -1,0 +1,199 @@
+//! Randomized property tests over the coding/decoding invariants, run
+//! with the built-in `util::check` property runner (offline substitute
+//! for proptest).
+
+use std::sync::Arc;
+
+use tcvd::channel::bpsk;
+use tcvd::coding::packing::build_packing;
+use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder};
+use tcvd::util::check::{forall, gen};
+use tcvd::util::half::HalfKind;
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::packed::presets;
+use tcvd::viterbi::scalar;
+use tcvd::viterbi::tiled::{decode_stream, TileConfig};
+use tcvd::viterbi::types::{FrameDecoder, FrameJob};
+
+fn trellis() -> Arc<Trellis> {
+    Arc::new(Trellis::new(registry::paper_code()))
+}
+
+/// Noiseless encode -> decode must be the identity for any payload.
+#[test]
+fn prop_noiseless_roundtrip_identity() {
+    let t = trellis();
+    forall(
+        0xA11CE,
+        64,
+        |r| {
+            let mut bits = gen::bits(r, 10, 120);
+            bits.extend_from_slice(&[0; 6]);
+            bits
+        },
+        |bits| {
+            let mut enc = Encoder::new(t.code().clone());
+            let coded = enc.encode(bits);
+            let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+            let lam0 = scalar::initial_metrics(64, Some(0));
+            let out = scalar::decode(&t, &llr, &lam0, Some(0));
+            if out == *bits { Ok(()) } else { Err("roundtrip mismatch".into()) }
+        },
+    );
+}
+
+/// The tensor-formulated decoders agree with the scalar oracle on
+/// arbitrary (generic, continuous) LLR inputs — not just encoder outputs.
+#[test]
+fn prop_packed_matches_scalar_on_arbitrary_llrs() {
+    let t = trellis();
+    forall(
+        0xBEEF,
+        24,
+        |r| gen::llrs(r, 64 * 2, 1.5),
+        |llr| {
+            let llr_h: Vec<f32> = llr.iter().map(|&x| HalfKind::Bf16.round(x)).collect();
+            let lam0 = scalar::initial_metrics(64, None);
+            let oracle = scalar::decode(&t, &llr_h, &lam0, None);
+            for mk in [presets::radix2, presets::radix4, presets::radix4_noperm] {
+                let mut d = mk(t.clone(), 64);
+                let out = d.decode_batch(&[FrameJob {
+                    llr: llr.clone(),
+                    start_state: None,
+                    end_state: None,
+                    emit_from: 0,
+                    emit_len: 64,
+                }]);
+                if out[0] != oracle {
+                    return Err(format!("{} disagrees with oracle", d.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Path metric invariance: adding a constant to all initial metrics
+/// must not change any decode decision (max is translation-invariant).
+#[test]
+fn prop_metric_translation_invariance() {
+    let t = trellis();
+    forall(
+        0xC0DE,
+        24,
+        |r| (gen::llrs(r, 48 * 2, 1.0), r.next_f64() as f32 * 50.0 - 25.0),
+        |(llr, shift)| {
+            let lam0a = vec![0.0f32; 64];
+            let lam0b = vec![*shift; 64];
+            let (phi_a, _) = scalar::forward(&t, llr, &lam0a);
+            let (phi_b, _) = scalar::forward(&t, llr, &lam0b);
+            if phi_a == phi_b { Ok(()) } else { Err("survivors changed under shift".into()) }
+        },
+    );
+}
+
+/// Tiled decoding with maximal overlap equals unframed decoding.
+#[test]
+fn prop_tiled_with_huge_overlap_equals_whole() {
+    let t = trellis();
+    forall(
+        0xD00D,
+        12,
+        |r| {
+            let mut bits = gen::bits(r, 250, 250);
+            bits.extend_from_slice(&[0; 6]);
+            (bits, r.next_u64())
+        },
+        |(bits, seed)| {
+            let mut enc = Encoder::new(t.code().clone());
+            let coded = enc.encode(bits);
+            let tx = bpsk::modulate(&coded);
+            let mut ch = tcvd::channel::awgn::AwgnChannel::new(4.5, 0.5, *seed);
+            let llr: Vec<f32> = ch.transmit(&tx).iter().map(|&x| x as f32).collect();
+            let lam0 = scalar::initial_metrics(64, Some(0));
+            let whole = scalar::decode(&t, &llr, &lam0, Some(0));
+            let cfg = TileConfig { payload: 64, head: 64, tail: 64 };
+            let mut dec = scalar::ScalarDecoder::new(t.clone(), cfg.frame_stages());
+            let tiled = decode_stream(&mut dec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            if tiled == whole { Ok(()) } else { Err("tiled != whole".into()) }
+        },
+    );
+}
+
+/// Every packing scheme covers each state exactly once per step, for
+/// random valid codes (not just the paper's).
+#[test]
+fn prop_packings_valid_for_random_codes() {
+    forall(
+        0xFACADE,
+        20,
+        |r: &mut Rng| {
+            // random k in [4,8], beta in [2,3], random odd polynomials
+            let k = 4 + r.next_below(5) as u32;
+            let beta = 2 + r.next_below(2) as usize;
+            let polys: Vec<u32> = (0..beta)
+                .map(|_| {
+                    let msb = 1 << (k - 1);
+                    (r.next_u64() as u32 & (msb - 1)) | msb | 1 // MSB and LSB set
+                })
+                .collect();
+            (k, polys)
+        },
+        |(k, polys)| {
+            let code = Code::new(*k, polys.clone()).map_err(|e| e.to_string())?;
+            let t = Trellis::new(code);
+            for scheme in ["radix2", "radix4", "radix4_noperm"] {
+                let pk = build_packing(&t, scheme).map_err(|e| e.to_string())?;
+                pk.validate(1 << (k - 1)).map_err(|e| format!("{scheme}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Dragonfly-group permutation decodes equal no-permutation decodes for
+/// random codes where groups exist (Thm 7 exploitation is lossless).
+#[test]
+fn prop_dg_permutation_is_lossless() {
+    forall(
+        0x9E37,
+        12,
+        |r| {
+            let k = 5 + r.next_below(3) as u32; // 5..7
+            let msb = 1u32 << (k - 1);
+            let polys: Vec<u32> = (0..2)
+                .map(|_| (r.next_u64() as u32 & (msb - 1)) | msb | 1)
+                .collect();
+            let llr = gen::llrs(r, 32 * 2, 1.2);
+            (k, polys, llr)
+        },
+        |(k, polys, llr)| {
+            let code = Code::new(*k, polys.clone()).map_err(|e| e.to_string())?;
+            let t = Arc::new(Trellis::new(code));
+            let s = t.code().n_states();
+            let mk = |scheme: &str| {
+                let pk = build_packing(&t, scheme).unwrap();
+                tcvd::viterbi::PackedDecoder::new(
+                    t.clone(),
+                    pk,
+                    32,
+                    tcvd::viterbi::AccPrecision::Single,
+                    HalfKind::Bf16,
+                    tcvd::channel::quantize::ChannelPrecision::Single,
+                    16,
+                )
+            };
+            let job = FrameJob {
+                llr: llr.clone(),
+                start_state: None,
+                end_state: None,
+                emit_from: 0,
+                emit_len: 32,
+            };
+            let a = mk("radix4").decode_batch(std::slice::from_ref(&job));
+            let b = mk("radix4_noperm").decode_batch(std::slice::from_ref(&job));
+            let _ = s;
+            if a == b { Ok(()) } else { Err("perm vs noperm differ".into()) }
+        },
+    );
+}
