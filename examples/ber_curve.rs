@@ -1,43 +1,36 @@
 //! Regenerate a quick Fig-13-style BER curve: soft-decision radix-4
-//! tensor decode vs hard-decision vs theory references.
+//! tensor decode vs hard-decision vs theory references. Decoders are
+//! built through the `tcvd::api` facade.
 //!
 //! Run: `cargo run --release --example ber_curve [max_bits_per_point]`
 //! (full-rigor curves live in `cargo bench --bench fig13_ber`)
 
+use tcvd::api::DecoderBuilder;
 use tcvd::ber::{measure_ber, sweep, theory, BerSetup};
-use tcvd::coding::{registry, trellis::Trellis};
-use tcvd::coordinator::BackendSpec;
-use tcvd::viterbi::tiled::TileConfig;
+use tcvd::defaults;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let max_bits: usize = std::env::args().nth(1).map_or(200_000, |s| s.parse().unwrap());
-    let tile = TileConfig { payload: 64, head: 32, tail: 32 };
-    let trellis = Trellis::new(registry::paper_code());
+    let tile = defaults::CPU_TILE;
+    let builder = DecoderBuilder::new().backend_name("cpu-radix4")?.tile(tile);
 
-    let spec = BackendSpec::CpuPacked {
-        code: "ccsds".into(),
-        scheme: "radix4".into(),
-        stages: tile.frame_stages(),
-        acc: tcvd::viterbi::AccPrecision::Single,
-        chan: tcvd::channel::quantize::ChannelPrecision::Single,
-        renorm_every: 16,
-    };
     let snrs = sweep::parse_range("0:6:1")?;
     println!(
         "{:>6} | {:>10} {:>10} | {:>12} {:>12} {:>12}",
         "dB", "soft BER", "hard BER", "theory soft", "theory hard", "uncoded"
     );
     for &db in &snrs {
-        let mut soft_dec = spec.build()?;
+        let mut soft_dec = builder.clone().build()?;
+        let trellis = soft_dec.trellis().clone();
         let soft = measure_ber(
-            soft_dec.as_mut(),
+            soft_dec.as_frame_decoder(),
             &trellis,
             db,
             &BerSetup { tile, max_bits, target_errors: 200, ..Default::default() },
         )?;
-        let mut hard_dec = spec.build()?;
+        let mut hard_dec = builder.clone().build()?;
         let hard = measure_ber(
-            hard_dec.as_mut(),
+            hard_dec.as_frame_decoder(),
             &trellis,
             db,
             &BerSetup {

@@ -1,19 +1,17 @@
 //! Quickstart: encode a payload, push it through a noisy channel, decode
 //! it with the full three-layer stack (PJRT artifact if built, CPU
-//! tensor-emulation otherwise) and verify the round trip.
+//! tensor-emulation otherwise) and verify the round trip — everything
+//! constructed through the `tcvd::api` builder facade.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use std::time::Duration;
-
+use tcvd::api::DecoderBuilder;
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
 use tcvd::coding::{registry, Encoder};
-use tcvd::coordinator::server::CoordinatorConfig;
-use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::defaults;
 use tcvd::util::rng::Rng;
-use tcvd::viterbi::tiled::TileConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     // 1. the paper's code: (2,1,7), polynomials 171/133 octal
     let code = registry::paper_code();
     println!("code: (2,1,{}) polys octal {:o}/{:o}", code.k(), code.polys()[0], code.polys()[1]);
@@ -30,40 +28,24 @@ fn main() -> anyhow::Result<()> {
     let rx = ch.transmit(&tx);
     let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
 
-    // 4. receiver: the streaming coordinator over the best available
-    //    backend (the b64_s48 artifact decodes 96-stage frames)
-    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
-    let artifact = BackendSpec::artifact("artifacts", "radix4_jnp_acc-single_ch-single_b64_s48");
-    let coord = match Coordinator::start(CoordinatorConfig {
-        backend: artifact,
-        tile,
-        max_batch: 64,
-        batch_deadline: Duration::from_micros(500),
-        workers: 2,
-        queue_depth: 512,
-    }) {
+    // 4. receiver: the serving pipeline over the best available backend.
+    //    The default builder targets the AOT artifact (the b64_s48
+    //    variant decodes 96-stage frames); if that is not built, fall
+    //    back to the CPU tensor emulation of the same arithmetic.
+    let coord = match DecoderBuilder::new().batch_deadline_us(500).queue_depth(512).serve() {
         Ok(c) => {
             println!("backend: PJRT artifact");
             c
         }
         Err(e) => {
             println!("backend: CPU tensor emulation (artifact unavailable: {e})");
-            let tile = TileConfig { payload: 64, head: 32, tail: 32 };
-            Coordinator::start(CoordinatorConfig {
-                backend: BackendSpec::CpuPacked {
-                    code: "ccsds".into(),
-                    scheme: "radix4".into(),
-                    stages: tile.frame_stages(),
-                    acc: tcvd::viterbi::AccPrecision::Single,
-                    chan: tcvd::channel::quantize::ChannelPrecision::Single,
-                    renorm_every: 16,
-                },
-                tile,
-                max_batch: 16,
-                batch_deadline: Duration::from_micros(200),
-                workers: 2,
-                queue_depth: 256,
-            })?
+            DecoderBuilder::new()
+                .backend_name("cpu-radix4")?
+                .tile(defaults::CPU_TILE)
+                .max_batch(16)
+                .batch_deadline_us(200)
+                .queue_depth(256)
+                .serve()?
         }
     };
 

@@ -1,35 +1,29 @@
 //! End-to-end SDR serving driver (the EXPERIMENTS.md §E2E run): a fleet
 //! of concurrent radio sessions stream chunked LLRs through the
 //! coordinator backed by the AOT PJRT artifact; reports aggregate
-//! throughput, latency percentiles, batching occupancy and BER.
+//! throughput, latency percentiles, batching occupancy and BER. The
+//! pipeline comes from `tcvd::api::DecoderBuilder`; each session uses
+//! `Session::split` for its producer/consumer thread pair.
 //!
 //! Run: `cargo run --release --example sdr_stream [sessions] [bits/session] [snr_db]`
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
+use tcvd::api::DecoderBuilder;
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
 use tcvd::coding::{registry, Encoder};
-use tcvd::coordinator::server::CoordinatorConfig;
-use tcvd::coordinator::{BackendSpec, Coordinator};
 use tcvd::util::rng::Rng;
-use tcvd::viterbi::tiled::TileConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let sessions: usize = args.get(1).map_or(8, |s| s.parse().unwrap());
     let bits_per_session: usize = args.get(2).map_or(262_144, |s| s.parse().unwrap());
     let snr: f64 = args.get(3).map_or(5.0, |s| s.parse().unwrap());
 
-    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
-    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
-        backend: BackendSpec::artifact("artifacts", "radix4_jnp_acc-single_ch-single_b64_s48"),
-        tile,
-        max_batch: 64,
-        batch_deadline: Duration::from_micros(2000),
-        workers: 3,
-        queue_depth: 2048,
-    })?);
+    // default backend/tile/variant: the radix-4 + DG-permutation
+    // artifact at 64+16/16 tiling (defaults module)
+    let coord = Arc::new(DecoderBuilder::new().workers(3).queue_depth(2048).serve()?);
     println!(
         "sdr_stream: {sessions} sessions x {bits_per_session} bits at {snr} dB \
          (radix-4 + DG-permutation artifact, Q=0.5 ops/stage)"
@@ -41,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     for s in 0..sessions {
         let coord = coord.clone();
         let code = code.clone();
-        joins.push(std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
+        joins.push(std::thread::spawn(move || -> tcvd::Result<(usize, usize)> {
             let mut rng = Rng::new(1000 + s as u64);
             let mut payload = rng.bits(bits_per_session - 6);
             payload.extend_from_slice(&[0; 6]);
@@ -50,8 +44,8 @@ fn main() -> anyhow::Result<()> {
             let tx = bpsk::modulate(&coded);
             let mut ch = AwgnChannel::new(snr, code.rate(), 5000 + s as u64);
 
-            let (mut h, out) = coord.open_session()?;
-            // producer: stream SDR-sized chunks (1024 stages) as they "arrive"
+            let (mut handle, out) = coord.open_session()?.split();
+            // consumer drains in-order decoded chunks as they arrive
             let consumer = std::thread::spawn(move || {
                 let mut bits = Vec::new();
                 for c in out {
@@ -59,13 +53,14 @@ fn main() -> anyhow::Result<()> {
                 }
                 bits
             });
+            // producer: stream SDR-sized chunks (1024 stages) as they "arrive"
             let mut noisy = vec![0.0f64; 2048];
             for chunk in tx.chunks(2048) {
                 ch.transmit_into(chunk, &mut noisy[..chunk.len()]);
                 let llr: Vec<f32> = noisy[..chunk.len()].iter().map(|&x| x as f32).collect();
-                h.push(&llr)?;
+                handle.push(&llr)?;
             }
-            h.finish(true)?;
+            handle.finish(true)?;
             let decoded = consumer.join().expect("consumer panicked");
             let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
             Ok((decoded.len(), errors))

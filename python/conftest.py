@@ -1,0 +1,9 @@
+"""Pytest bootstrap: make the ``compile`` package importable when the
+suite is launched from the repo root (``python -m pytest python/tests``)."""
+
+import pathlib
+import sys
+
+_HERE = pathlib.Path(__file__).resolve().parent
+if str(_HERE) not in sys.path:
+    sys.path.insert(0, str(_HERE))

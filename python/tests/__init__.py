@@ -1,0 +1,4 @@
+"""Test package marker: lets pytest import these modules as
+``tests.*`` with ``python/`` on ``sys.path``, so both the
+``from compile...`` absolute imports and the ``from .test_trellis``
+relative import resolve."""

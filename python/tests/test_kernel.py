@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional in the offline image; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

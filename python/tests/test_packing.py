@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional in the offline image; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from compile.packing import build_packing, build_radix2

@@ -8,13 +8,13 @@ mod common;
 
 use std::sync::Arc;
 
+use tcvd::api::{BackendKind, DecoderBuilder};
 use tcvd::ber::{measure_ber, BerSetup};
 use tcvd::coding::{registry, trellis::Trellis};
 use tcvd::util::json::{self, Json};
-use tcvd::viterbi::packed::presets;
 use tcvd::viterbi::tiled::TileConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let trellis = Arc::new(Trellis::new(registry::paper_code()));
     let ebn0 = 3.0; // mid-waterfall: truncation errors clearly visible
     let (max_bits, errors) = if common::full_rigor() {
@@ -34,9 +34,12 @@ fn main() -> anyhow::Result<()> {
     let mut points = Vec::new();
     for &v in vs.iter().rev() {
         let tile = TileConfig { payload: 64, head: v / 2, tail: v - v / 2 };
-        let mut dec = presets::radix4(trellis.clone(), tile.frame_stages());
+        let mut dec = DecoderBuilder::new()
+            .backend(BackendKind::cpu("radix4"))
+            .tile(tile)
+            .build()?;
         let setup = BerSetup { tile, target_errors: errors, max_bits, ..Default::default() };
-        let p = measure_ber(&mut dec, &trellis, ebn0, &setup)?;
+        let p = measure_ber(dec.as_frame_decoder(), &trellis, ebn0, &setup)?;
         if reference.is_none() {
             reference = Some(p.ber().max(1e-12));
         }

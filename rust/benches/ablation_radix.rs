@@ -10,24 +10,19 @@
 mod common;
 
 use std::sync::Arc;
-use std::time::Duration;
 
+use tcvd::api::DecoderBuilder;
 use tcvd::coding::packing::build_packing;
 use tcvd::coding::{registry, trellis::Trellis};
-use tcvd::coordinator::server::CoordinatorConfig;
-use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::defaults;
 use tcvd::util::json::{self, Json};
-use tcvd::viterbi::packed::presets;
-use tcvd::viterbi::scalar::ScalarDecoder;
-use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 use tcvd::viterbi::types::FrameDecoder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let trellis = Arc::new(Trellis::new(registry::paper_code()));
     let info_bits = if common::full_rigor() { 262_144 } else { 65_536 };
     let (_, llr) = common::workload(99, info_bits, 5.0);
-    let tile = TileConfig { payload: 64, head: 32, tail: 32 };
-    let stages = tile.frame_stages();
+    let tile = defaults::CPU_TILE;
 
     println!("E4 — packing ablation on (2,1,7) 171/133\n");
     println!("{:>16} | {:>12} | {:>12} | {:>14}", "decoder", "Q ops/stage", "matmul ops", "cpu Mb/s");
@@ -35,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut bench_cpu = |name: &str, dec: &mut dyn FrameDecoder, q: f64| {
         let d = common::time_median(3, || {
-            decode_stream(dec, &llr, 2, &tile, true).unwrap();
+            tcvd::viterbi::tiled::decode_stream(dec, &llr, 2, &tile, true).unwrap();
         });
         let mbps = common::mbps(info_bits, d);
         let total_ops = q * (info_bits as f64);
@@ -47,37 +42,33 @@ fn main() -> anyhow::Result<()> {
         ]));
     };
 
-    bench_cpu("scalar", &mut ScalarDecoder::new(trellis.clone(), stages), f64::NAN);
-    for scheme in ["radix2", "radix4_noperm", "radix4"] {
-        let pk = build_packing(&trellis, scheme)?;
+    let mut scalar = DecoderBuilder::new().backend_name("scalar")?.tile(tile).build()?;
+    bench_cpu("scalar", scalar.as_frame_decoder(), f64::NAN);
+    for (backend, scheme) in [
+        ("cpu-radix2", "radix2"),
+        ("cpu-radix4-noperm", "radix4_noperm"),
+        ("cpu-radix4", "radix4"),
+    ] {
+        let pk = build_packing(&trellis, scheme).expect("known scheme");
         let q = pk.ops_per_stage();
-        let mut dec = match scheme {
-            "radix2" => presets::radix2(trellis.clone(), stages),
-            "radix4_noperm" => presets::radix4_noperm(trellis.clone(), stages),
-            _ => presets::radix4(trellis.clone(), stages),
-        };
-        bench_cpu(scheme, &mut dec, q);
+        let mut dec = DecoderBuilder::new().backend_name(backend)?.tile(tile).build()?;
+        bench_cpu(scheme, dec.as_frame_decoder(), q);
     }
 
     // PJRT artifacts: radix2 (b64_s96) vs radix4+perm (b64_s48)
     println!("\nPJRT artifacts (XLA-CPU; compare ratio radix4/radix2):");
     let mut pjrt_rows = Vec::new();
     for (name, variant, tile) in [
-        ("radix2", "radix2_jnp_acc-single_ch-single_b64_s96",
-         TileConfig { payload: 64, head: 16, tail: 16 }),
-        ("radix4_noperm", "radix4_noperm_jnp_acc-single_ch-single_b64_s48",
-         TileConfig { payload: 64, head: 16, tail: 16 }),
-        ("radix4+perm", "radix4_jnp_acc-single_ch-single_b64_s48",
-         TileConfig { payload: 64, head: 16, tail: 16 }),
+        ("radix2", defaults::VARIANT_RADIX2, defaults::TILE),
+        ("radix4_noperm", defaults::VARIANT_RADIX4_NOPERM, defaults::TILE),
+        ("radix4+perm", defaults::VARIANT, defaults::TILE),
     ] {
-        let coord = match Coordinator::start(CoordinatorConfig {
-            backend: BackendSpec::artifact("artifacts", variant),
-            tile,
-            max_batch: 64,
-            batch_deadline: Duration::from_micros(2000),
-            workers: 3,
-            queue_depth: 2048,
-        }) {
+        let builder = DecoderBuilder::new()
+            .variant(variant)
+            .tile(tile)
+            .workers(3)
+            .queue_depth(2048);
+        let coord = match builder.serve() {
             Ok(c) => c,
             Err(e) => {
                 println!("{name:>16} | SKIP ({e})");

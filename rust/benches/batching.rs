@@ -7,24 +7,20 @@
 mod common;
 
 use std::sync::Arc;
-use std::time::Duration;
 
-use tcvd::coordinator::server::CoordinatorConfig;
-use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::api::DecoderBuilder;
 use tcvd::util::json::{self, Json};
-use tcvd::viterbi::tiled::TileConfig;
 
 fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
-       -> anyhow::Result<(f64, f64, f64, f64)> {
-    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
-    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
-        backend: BackendSpec::artifact("artifacts", "radix4_jnp_acc-single_ch-single_b64_s48"),
-        tile,
-        max_batch,
-        batch_deadline: Duration::from_micros(deadline_us),
-        workers: 3,
-        queue_depth: 2048,
-    })?);
+       -> tcvd::Result<(f64, f64, f64, f64)> {
+    let coord = Arc::new(
+        DecoderBuilder::new()
+            .max_batch(max_batch)
+            .batch_deadline_us(deadline_us)
+            .workers(3)
+            .queue_depth(2048)
+            .serve()?,
+    );
     let per_session = info_bits / sessions;
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
@@ -48,7 +44,7 @@ fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
     ))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let info_bits = if common::full_rigor() { 2_097_152 } else { 524_288 };
     println!("E5 — dynamic batching sweep (radix-4 artifact, batch capacity 64)\n");
     println!(

@@ -12,23 +12,25 @@ mod common;
 
 use std::sync::Arc;
 
+use tcvd::api::{AccPrecision, BackendKind, ChannelPrecision, DecoderBuilder, HalfKind};
 use tcvd::ber::{measure_ber, sweep, theory, BerPoint, BerSetup};
-use tcvd::channel::quantize::ChannelPrecision;
-use tcvd::coding::packing::build_packing;
 use tcvd::coding::{registry, trellis::Trellis};
-use tcvd::util::half::HalfKind;
 use tcvd::util::json::{self, Json};
-use tcvd::viterbi::packed::PackedDecoder;
 use tcvd::viterbi::tiled::TileConfig;
-use tcvd::viterbi::types::AccPrecision;
+use tcvd::Decoder;
 
-fn decoder(trellis: &Arc<Trellis>, stages: usize, acc: AccPrecision,
-           chan: ChannelPrecision, renorm: usize) -> PackedDecoder {
-    let pk = build_packing(trellis, "radix4").unwrap();
-    PackedDecoder::new(trellis.clone(), pk, stages, acc, HalfKind::Bf16, chan, renorm)
+fn decoder(tile: TileConfig, acc: AccPrecision, chan: ChannelPrecision,
+           renorm: usize) -> tcvd::Result<Decoder> {
+    DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix4"))
+        .tile(tile)
+        .precision(acc)
+        .channel_precision(chan)
+        .renorm_every(renorm)
+        .build()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let trellis = Arc::new(Trellis::new(registry::paper_code()));
     // Paper-faithful setup: exact LLRs (2y/sigma^2) and NO metric
     // renormalization — path metrics grow along the frame, so a half C
@@ -74,14 +76,13 @@ fn main() -> anyhow::Result<()> {
     for &db in &snrs {
         print!("{db:6.1}");
         for (i, (_, acc, chan, renorm)) in combos.iter().enumerate() {
-            let mut dec = decoder(&trellis, tile.frame_stages(), *acc, *chan, *renorm);
-            let p = measure_ber(&mut dec, &trellis, db, &setup)?;
+            let mut dec = decoder(tile, *acc, *chan, *renorm)?;
+            let p = measure_ber(dec.as_frame_decoder(), &trellis, db, &setup)?;
             print!(" | {:>14.3e}{}", p.ber(), if p.reliable() { "  " } else { " *" });
             curves[i].1.push(p);
         }
-        let mut dec = decoder(&trellis, tile.frame_stages(), AccPrecision::Single,
-                              ChannelPrecision::Single, 0);
-        let hard = measure_ber(&mut dec, &trellis, db,
+        let mut dec = decoder(tile, AccPrecision::Single, ChannelPrecision::Single, 0)?;
+        let hard = measure_ber(dec.as_frame_decoder(), &trellis, db,
                                &BerSetup { hard_decision: true, ..setup.clone() })?;
         print!(" | {:>10.3e}", hard.ber());
         hard_curve.push(hard);

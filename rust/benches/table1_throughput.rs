@@ -11,23 +11,13 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use std::time::Duration;
-
-use tcvd::coordinator::server::CoordinatorConfig;
-use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::api::DecoderBuilder;
+use tcvd::defaults;
 use tcvd::util::json::{self, Json};
-use tcvd::viterbi::tiled::TileConfig;
 
-fn run_combo(variant: &str, llr: &[f32]) -> anyhow::Result<(f64, f64)> {
-    let tile = TileConfig { payload: 64, head: 16, tail: 16 };
-    let coord = Coordinator::start(CoordinatorConfig {
-        backend: BackendSpec::artifact("artifacts", variant),
-        tile,
-        max_batch: 64,
-        batch_deadline: Duration::from_micros(2000),
-        workers: 3,
-        queue_depth: 2048,
-    })?;
+fn run_combo(variant: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
+    // default tile (64+16/16) matches the b64_s48 artifact frames
+    let coord = DecoderBuilder::new().variant(variant).workers(3).queue_depth(2048).serve()?;
     // split across 4 concurrent sessions to keep batches full
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
@@ -48,16 +38,16 @@ fn run_combo(variant: &str, llr: &[f32]) -> anyhow::Result<(f64, f64)> {
     Ok((common::mbps(info_bits, wall), snap.mean_batch))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcvd::Result<()> {
     let info_bits = if common::full_rigor() { 4_194_304 } else { 1_048_576 };
     let (_, llr) = common::workload(2024, info_bits, 5.0);
 
     // (paper row, artifact variant)
     let combos = [
-        ("single/single", "radix4_jnp_acc-single_ch-single_b64_s48", 19.5),
-        ("single/half", "radix4_jnp_acc-single_ch-half_b64_s48", 21.4),
-        ("half/single", "radix4_jnp_acc-half_ch-single_b64_s48", 20.1),
-        ("half/half", "radix4_jnp_acc-half_ch-half_b64_s48", 22.2),
+        ("single/single", defaults::VARIANT, 19.5),
+        ("single/half", defaults::VARIANT_SINGLE_HALF, 21.4),
+        ("half/single", defaults::VARIANT_HALF_SINGLE, 20.1),
+        ("half/half", defaults::VARIANT_HALF_HALF, 22.2),
     ];
     println!("Table I — decoder throughput by C/channel precision");
     println!("(paper: V100 tensor cores in Gb/s; here: XLA-CPU PJRT in Mb/s —");

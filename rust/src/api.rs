@@ -1,0 +1,649 @@
+//! The unified public API of `tcvd`: one builder-first facade from
+//! configuration to the serving pipeline.
+//!
+//! Everything the CLI, the examples, the benches and downstream users
+//! construct goes through [`DecoderBuilder`]:
+//!
+//! ```no_run
+//! use tcvd::api::{BackendKind, DecoderBuilder};
+//!
+//! let llr = vec![0.0f32; 128 * 2]; // 128 trellis stages of rate-1/2 LLRs
+//!
+//! // one-shot decoding (offline / BER studies)
+//! let mut dec = DecoderBuilder::new()
+//!     .backend(BackendKind::cpu("radix4"))
+//!     .tile_dims(64, 32, 32)
+//!     .build()?;
+//! let bits = dec.decode_stream(&llr, true)?;
+//! assert_eq!(bits.len(), 128);
+//!
+//! // streaming serving pipeline (many concurrent sessions)
+//! let coord = DecoderBuilder::new()
+//!     .backend_name("artifact")?
+//!     .workers(3)
+//!     .serve()?;
+//! let mut session = coord.open_session()?;
+//! session.push(&llr)?;
+//! session.finish(true)?;
+//! for _chunk in session { /* in-order decoded payload bits */ }
+//! # Ok::<(), tcvd::Error>(())
+//! ```
+//!
+//! The builder validates at [`DecoderBuilder::build`]/
+//! [`DecoderBuilder::serve`] and reports failures as the typed
+//! [`tcvd::Error`](crate::Error); `anyhow` never crosses this boundary.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cli::{Args, FlagSpec};
+use crate::coding::registry;
+use crate::coding::trellis::Trellis;
+use crate::config::Config;
+use crate::coordinator::server::CoordinatorConfig;
+use crate::coordinator::{BackendSpec, Coordinator};
+use crate::defaults;
+use crate::runtime::Manifest;
+use crate::viterbi::tiled;
+use crate::viterbi::types::{FrameDecoder, FrameJob};
+
+pub use crate::channel::quantize::ChannelPrecision;
+pub use crate::viterbi::tiled::TileConfig;
+pub use crate::coordinator::{MetricsSnapshot, Session, SessionHandle};
+pub use crate::error::{Error, Result};
+pub use crate::util::half::HalfKind;
+pub use crate::viterbi::types::AccPrecision;
+
+/// Backend names accepted by [`DecoderBuilder::backend_name`] (the CLI
+/// `--backend` values).
+pub const BACKEND_NAMES: &[&str] = &[
+    "artifact",
+    "scalar",
+    "cpu-radix2",
+    "cpu-radix4",
+    "cpu-radix4-noperm",
+    "cpu-radix4-half",
+    "cpu-radix4-half-f16",
+];
+
+/// CPU packing schemes accepted by [`BackendKind::Cpu`].
+pub const CPU_SCHEMES: &[&str] = &["radix2", "radix4", "radix4_noperm"];
+
+/// Which decoder implementation the builder lowers to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT PJRT artifact (the production path; needs `make artifacts`).
+    Artifact,
+    /// CPU tensor-form emulation of a packing scheme (same arithmetic
+    /// as the artifact, no PJRT).
+    Cpu {
+        /// Packing scheme, one of [`CPU_SCHEMES`].
+        scheme: String,
+    },
+    /// Scalar Alg-1/Alg-2 baseline (the correctness oracle).
+    Scalar,
+}
+
+impl BackendKind {
+    /// Convenience constructor for [`BackendKind::Cpu`].
+    pub fn cpu(scheme: impl Into<String>) -> BackendKind {
+        BackendKind::Cpu { scheme: scheme.into() }
+    }
+}
+
+/// Builder for every `tcvd` decode surface: one-shot ([`Decoder`]) and
+/// serving ([`Coordinator`]).
+///
+/// Defaults come from [`crate::defaults`]; file-based setup comes from
+/// [`DecoderBuilder::from_toml`]; CLI overrides from
+/// [`DecoderBuilder::apply_flags`]. All parameters are validated at
+/// [`build`](Self::build)/[`serve`](Self::serve).
+#[derive(Clone, Debug)]
+pub struct DecoderBuilder {
+    code: String,
+    backend: BackendKind,
+    artifacts_dir: PathBuf,
+    variant: String,
+    tile: TileConfig,
+    acc: AccPrecision,
+    chan: ChannelPrecision,
+    renorm_every: usize,
+    max_batch: usize,
+    batch_deadline: Duration,
+    workers: usize,
+    queue_depth: usize,
+}
+
+impl Default for DecoderBuilder {
+    fn default() -> Self {
+        DecoderBuilder {
+            code: defaults::CODE.to_string(),
+            backend: BackendKind::Artifact,
+            artifacts_dir: PathBuf::from(defaults::ARTIFACTS_DIR),
+            variant: defaults::VARIANT.to_string(),
+            tile: defaults::TILE,
+            acc: AccPrecision::Single,
+            chan: ChannelPrecision::Single,
+            renorm_every: defaults::RENORM_EVERY,
+            max_batch: defaults::MAX_BATCH,
+            batch_deadline: Duration::from_micros(defaults::BATCH_DEADLINE_US),
+            workers: defaults::WORKERS,
+            queue_depth: defaults::QUEUE_DEPTH,
+        }
+    }
+}
+
+impl DecoderBuilder {
+    /// A builder loaded with the canonical defaults.
+    pub fn new() -> DecoderBuilder {
+        DecoderBuilder::default()
+    }
+
+    /// Standard code name (registry key, e.g. `"ccsds"`).
+    pub fn code(mut self, name: impl Into<String>) -> Self {
+        self.code = name.into();
+        self
+    }
+
+    /// Select the backend implementation.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Select the backend by CLI name (see [`BACKEND_NAMES`]). Each
+    /// name pins the accumulator precision (`-half`/`-half-f16` select
+    /// a half accumulator, every other name single precision), so call
+    /// [`precision`](Self::precision) *after* this to override.
+    pub fn backend_name(mut self, name: &str) -> Result<Self> {
+        self.acc = AccPrecision::Single;
+        match name {
+            "artifact" | "pjrt" => self.backend = BackendKind::Artifact,
+            "scalar" => self.backend = BackendKind::Scalar,
+            "cpu-radix2" => self.backend = BackendKind::cpu("radix2"),
+            "cpu-radix4" => self.backend = BackendKind::cpu("radix4"),
+            "cpu-radix4-noperm" => self.backend = BackendKind::cpu("radix4_noperm"),
+            "cpu-radix4-half" => {
+                self.backend = BackendKind::cpu("radix4");
+                self.acc = AccPrecision::Half(HalfKind::Bf16);
+            }
+            "cpu-radix4-half-f16" => {
+                self.backend = BackendKind::cpu("radix4");
+                self.acc = AccPrecision::Half(HalfKind::F16);
+            }
+            other => {
+                return Err(Error::config(format!(
+                    "unknown backend {other:?}; known: {}",
+                    BACKEND_NAMES.join(" ")
+                )))
+            }
+        }
+        Ok(self)
+    }
+
+    /// Artifact directory (artifact backend only).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Artifact variant name or unique substring (artifact backend only).
+    pub fn variant(mut self, variant: impl Into<String>) -> Self {
+        self.variant = variant.into();
+        self
+    }
+
+    /// Tile geometry for stream decoding (paper §III).
+    pub fn tile(mut self, tile: TileConfig) -> Self {
+        self.tile = tile;
+        self
+    }
+
+    /// Tile geometry as `(payload, head, tail)` stages.
+    pub fn tile_dims(self, payload: usize, head: usize, tail: usize) -> Self {
+        self.tile(TileConfig { payload, head, tail })
+    }
+
+    /// Accumulator (C/D fragment) precision for CPU backends — the
+    /// paper's Table I axis.
+    pub fn precision(mut self, acc: AccPrecision) -> Self {
+        self.acc = acc;
+        self
+    }
+
+    /// Channel-array storage precision for CPU backends.
+    pub fn channel_precision(mut self, chan: ChannelPrecision) -> Self {
+        self.chan = chan;
+        self
+    }
+
+    /// Path-metric renormalization period in stages (0 = off).
+    pub fn renorm_every(mut self, stages: usize) -> Self {
+        self.renorm_every = stages;
+        self
+    }
+
+    /// Dynamic batcher: max frames per execution.
+    pub fn max_batch(mut self, frames: usize) -> Self {
+        self.max_batch = frames;
+        self
+    }
+
+    /// Dynamic batcher: flush deadline.
+    pub fn batch_deadline(mut self, deadline: Duration) -> Self {
+        self.batch_deadline = deadline;
+        self
+    }
+
+    /// Dynamic batcher: flush deadline in microseconds.
+    pub fn batch_deadline_us(self, us: u64) -> Self {
+        self.batch_deadline(Duration::from_micros(us))
+    }
+
+    /// Traceback worker threads (serving pipeline).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Bounded input queue depth in frames (serving pipeline
+    /// backpressure).
+    pub fn queue_depth(mut self, frames: usize) -> Self {
+        self.queue_depth = frames;
+        self
+    }
+
+    /// Build a builder from a parsed [`Config`] (the TOML view).
+    pub fn from_config(cfg: &Config) -> Result<DecoderBuilder> {
+        let b = DecoderBuilder {
+            code: cfg.code.clone(),
+            artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+            variant: cfg.variant.clone(),
+            tile: cfg.tile,
+            max_batch: cfg.max_batch,
+            batch_deadline: Duration::from_micros(cfg.batch_deadline_us),
+            workers: cfg.workers,
+            queue_depth: cfg.queue_depth,
+            ..DecoderBuilder::new()
+        };
+        b.backend_name(&cfg.backend)
+    }
+
+    /// Build a builder from TOML text (`tcvd.toml` schema).
+    pub fn from_toml(text: &str) -> Result<DecoderBuilder> {
+        Self::from_config(&Config::from_toml(text)?)
+    }
+
+    /// Build a builder from a TOML file.
+    pub fn from_toml_file(path: &Path) -> Result<DecoderBuilder> {
+        Self::from_config(&Config::from_file(path)?)
+    }
+
+    /// Apply CLI `--flag` overrides (the flags listed by
+    /// [`builder_flags`]) on top of the current values.
+    pub fn apply_flags(mut self, args: &Args) -> Result<Self> {
+        if let Some(v) = args.get("code") {
+            self.code = v.to_string();
+        }
+        if let Some(v) = args.get("backend") {
+            let name = v.to_string();
+            self = self.backend_name(&name)?;
+        }
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("variant") {
+            self.variant = v.to_string();
+        }
+        self.tile.payload = args.get_usize("payload", self.tile.payload)?;
+        self.tile.head = args.get_usize("head", self.tile.head)?;
+        self.tile.tail = args.get_usize("tail", self.tile.tail)?;
+        self.workers = args.get_usize("workers", self.workers)?;
+        self.max_batch = args.get_usize("max-batch", self.max_batch)?;
+        self.batch_deadline = Duration::from_micros(
+            args.get_u64("batch-deadline-us", self.batch_deadline.as_micros() as u64)?,
+        );
+        self.queue_depth = args.get_usize("queue-depth", self.queue_depth)?;
+        self.renorm_every = args.get_usize("renorm-every", self.renorm_every)?;
+        Ok(self)
+    }
+
+    /// Trellis stages per frame under the current tile geometry.
+    pub fn frame_stages(&self) -> usize {
+        self.tile.frame_stages()
+    }
+
+    /// The tile geometry currently configured.
+    pub fn tile_config(&self) -> TileConfig {
+        self.tile
+    }
+
+    /// Validate the full parameter set (also called by
+    /// [`build`](Self::build)/[`serve`](Self::serve)).
+    pub fn validate(&self) -> Result<()> {
+        registry::lookup(&self.code).map_err(|e| Error::config(e))?;
+        if self.tile.payload == 0 {
+            return Err(Error::config("tile payload must be positive"));
+        }
+        if self.workers == 0 {
+            return Err(Error::config("workers must be positive"));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::config("max_batch must be positive"));
+        }
+        if self.queue_depth < self.max_batch {
+            return Err(Error::config(format!(
+                "queue_depth ({}) must be >= max_batch ({})",
+                self.queue_depth, self.max_batch
+            )));
+        }
+        match &self.backend {
+            BackendKind::Cpu { scheme } => {
+                if !CPU_SCHEMES.contains(&scheme.as_str()) {
+                    return Err(Error::config(format!(
+                        "unknown packing scheme {scheme:?}; known: {}",
+                        CPU_SCHEMES.join(" ")
+                    )));
+                }
+            }
+            BackendKind::Artifact => {
+                if self.variant.is_empty() {
+                    return Err(Error::config("artifact backend needs a variant name"));
+                }
+            }
+            BackendKind::Scalar => {}
+        }
+        Ok(())
+    }
+
+    /// Lower to the engine-facing backend spec. This is the only place
+    /// in the crate where user parameters become a [`BackendSpec`].
+    pub fn to_backend_spec(&self) -> BackendSpec {
+        match &self.backend {
+            BackendKind::Artifact => BackendSpec::Artifact {
+                dir: self.artifacts_dir.clone(),
+                variant: self.variant.clone(),
+            },
+            BackendKind::Scalar => BackendSpec::Scalar {
+                code: self.code.clone(),
+                stages: self.tile.frame_stages(),
+            },
+            BackendKind::Cpu { scheme } => BackendSpec::CpuPacked {
+                code: self.code.clone(),
+                scheme: scheme.clone(),
+                stages: self.tile.frame_stages(),
+                acc: self.acc,
+                chan: self.chan,
+                renorm_every: self.renorm_every,
+            },
+        }
+    }
+
+    /// Lower to the full pipeline configuration.
+    pub fn to_coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            backend: self.to_backend_spec(),
+            tile: self.tile,
+            max_batch: self.max_batch,
+            batch_deadline: self.batch_deadline,
+            workers: self.workers,
+            queue_depth: self.queue_depth,
+        }
+    }
+
+    /// For the artifact backend: if the manifest is readable and names
+    /// the variant, reject a tile geometry that does not match the
+    /// artifact's frame length *before* compiling anything. (A missing
+    /// manifest is not an error here — backend construction reports it
+    /// with full context.)
+    fn check_artifact_geometry(&self) -> Result<()> {
+        if self.backend != BackendKind::Artifact {
+            return Ok(());
+        }
+        if let Ok(m) = Manifest::load(&self.artifacts_dir) {
+            if let Ok(meta) = m.find(&self.variant) {
+                let want = self.tile.frame_stages();
+                if meta.stages_per_frame != want {
+                    return Err(Error::config(format!(
+                        "tile geometry ({want} stages = head {} + payload {} + tail {}) \
+                         does not match artifact {} ({} stages per frame)",
+                        self.tile.head,
+                        self.tile.payload,
+                        self.tile.tail,
+                        meta.name,
+                        meta.stages_per_frame
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a one-shot in-process [`Decoder`] (offline decoding, BER
+    /// studies). No threads are spawned.
+    pub fn build(self) -> Result<Decoder> {
+        self.validate()?;
+        self.check_artifact_geometry()?;
+        let tile = self.tile;
+        let inner = self.to_backend_spec().build()?;
+        if inner.frame_stages() != tile.frame_stages() {
+            return Err(Error::config(format!(
+                "backend frame ({} stages) does not match tile geometry ({} stages)",
+                inner.frame_stages(),
+                tile.frame_stages()
+            )));
+        }
+        let beta = inner.trellis().code().beta();
+        Ok(Decoder { inner, tile, beta })
+    }
+
+    /// Start the streaming serving pipeline and return the running
+    /// [`Coordinator`] (engine thread + traceback workers +
+    /// reassembler). Blocks until the backend is ready.
+    pub fn serve(self) -> Result<Coordinator> {
+        self.validate()?;
+        self.check_artifact_geometry()?;
+        Coordinator::start(self.to_coordinator_config())
+    }
+}
+
+/// Flag specs for every builder option — the shared vocabulary of the
+/// `tcvd` subcommands (single source for parsing *and* `--help`).
+pub fn builder_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::new("config", "PATH", "TOML config file (tcvd.toml schema), applied first"),
+        FlagSpec::new("code", "NAME", format!("standard code (default {:?})", defaults::CODE)),
+        FlagSpec::new(
+            "backend",
+            "NAME",
+            format!("one of: {} (default \"artifact\")", BACKEND_NAMES.join(" ")),
+        ),
+        FlagSpec::new(
+            "artifacts",
+            "DIR",
+            format!("artifact directory (default {:?})", defaults::ARTIFACTS_DIR),
+        ),
+        FlagSpec::new(
+            "variant",
+            "NAME",
+            format!("artifact variant substring (default {:?})", defaults::VARIANT),
+        ),
+        FlagSpec::new(
+            "payload",
+            "N",
+            format!("tile payload stages per frame (default {})", defaults::TILE.payload),
+        ),
+        FlagSpec::new(
+            "head",
+            "N",
+            format!("tile head overlap stages (default {})", defaults::TILE.head),
+        ),
+        FlagSpec::new(
+            "tail",
+            "N",
+            format!("tile tail overlap stages (default {})", defaults::TILE.tail),
+        ),
+        FlagSpec::new(
+            "workers",
+            "N",
+            format!("traceback worker threads (default {})", defaults::WORKERS),
+        ),
+        FlagSpec::new(
+            "max-batch",
+            "N",
+            format!("max frames per execution (default {})", defaults::MAX_BATCH),
+        ),
+        FlagSpec::new(
+            "batch-deadline-us",
+            "US",
+            format!("batch flush deadline (default {})", defaults::BATCH_DEADLINE_US),
+        ),
+        FlagSpec::new(
+            "queue-depth",
+            "N",
+            format!("input queue depth in frames (default {})", defaults::QUEUE_DEPTH),
+        ),
+        FlagSpec::new(
+            "renorm-every",
+            "N",
+            format!(
+                "metric renormalization period, CPU backends (default {})",
+                defaults::RENORM_EVERY
+            ),
+        ),
+    ]
+}
+
+/// A one-shot decoder built by [`DecoderBuilder::build`]: wraps the
+/// scalar / packed / artifact frame decoders behind one interface for
+/// offline decoding and BER measurement.
+pub struct Decoder {
+    inner: Box<dyn FrameDecoder>,
+    tile: TileConfig,
+    beta: usize,
+}
+
+impl Decoder {
+    /// Decode a single frame of exactly
+    /// [`frame_stages`](Self::frame_stages)` * beta` LLRs, emitting all
+    /// of its stages. `start_state`/`end_state` pin the trellis ends
+    /// when known (stream head / flushed tail).
+    pub fn decode_frame(
+        &mut self,
+        llr: &[f32],
+        start_state: Option<u32>,
+        end_state: Option<u32>,
+    ) -> Result<Vec<u8>> {
+        let stages = self.inner.frame_stages();
+        if llr.len() != stages * self.beta {
+            return Err(Error::pipeline(format!(
+                "frame expects {} LLRs ({} stages x beta {}), got {}",
+                stages * self.beta,
+                stages,
+                self.beta,
+                llr.len()
+            )));
+        }
+        let job = FrameJob {
+            llr: llr.to_vec(),
+            start_state,
+            end_state,
+            emit_from: 0,
+            emit_len: stages,
+        };
+        let mut out = self.inner.decode_batch(std::slice::from_ref(&job));
+        Ok(out.remove(0))
+    }
+
+    /// Decode a whole LLR stream through the reference tiler (frames
+    /// cut per the builder's tile geometry, payload bits reassembled in
+    /// order). The stream must cover a whole number of payload tiles;
+    /// `flushed_end` marks an encoder flushed to state 0.
+    pub fn decode_stream(&mut self, llr: &[f32], flushed_end: bool) -> Result<Vec<u8>> {
+        tiled::decode_stream(self.inner.as_mut(), llr, self.beta, &self.tile, flushed_end)
+    }
+
+    /// Trellis stages per frame.
+    pub fn frame_stages(&self) -> usize {
+        self.inner.frame_stages()
+    }
+
+    /// The tile geometry this decoder streams with.
+    pub fn tile(&self) -> &TileConfig {
+        &self.tile
+    }
+
+    /// The trellis the decoder was built over.
+    pub fn trellis(&self) -> &Arc<Trellis> {
+        self.inner.trellis()
+    }
+
+    /// Short backend label for logs and benches.
+    pub fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    /// Escape hatch to the frame-decoder trait object (e.g. for
+    /// [`crate::ber::measure_ber`]).
+    pub fn as_frame_decoder(&mut self) -> &mut dyn FrameDecoder {
+        self.inner.as_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        DecoderBuilder::new().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_code_rejected() {
+        let e = DecoderBuilder::new().code("nope").validate().unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let e = DecoderBuilder::new().workers(0).validate().unwrap_err();
+        assert!(e.to_string().contains("workers"), "{e}");
+    }
+
+    #[test]
+    fn backend_names_all_parse() {
+        for name in BACKEND_NAMES {
+            DecoderBuilder::new().backend_name(name).unwrap();
+        }
+        assert!(DecoderBuilder::new().backend_name("gpu-magic").is_err());
+    }
+
+    #[test]
+    fn backend_name_pins_precision() {
+        // switching away from a -half name must not keep half precision
+        let b = DecoderBuilder::new()
+            .backend_name("cpu-radix4-half")
+            .unwrap()
+            .backend_name("cpu-radix4")
+            .unwrap();
+        match b.to_backend_spec() {
+            BackendSpec::CpuPacked { acc, .. } => assert_eq!(acc, AccPrecision::Single),
+            other => panic!("expected CpuPacked, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scalar_decoder_builds_and_decodes_frames() {
+        let mut dec = DecoderBuilder::new()
+            .backend(BackendKind::Scalar)
+            .tile_dims(16, 0, 0)
+            .build()
+            .unwrap();
+        assert_eq!(dec.frame_stages(), 16);
+        // wrong-length frame is rejected with a typed error
+        let e = dec.decode_frame(&[0.0; 10], Some(0), None).unwrap_err();
+        assert!(matches!(e, Error::Pipeline(_)), "{e}");
+    }
+}

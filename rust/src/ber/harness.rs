@@ -2,12 +2,11 @@
 //! -> BPSK -> AWGN -> decode -> compare, accumulating until a target
 //! error count (the paper's "BER valid above 100/n" rule) or a bit cap.
 
-use anyhow::Result;
-
 use crate::channel::awgn::AwgnChannel;
 use crate::channel::bpsk;
 use crate::coding::trellis::Trellis;
 use crate::coding::Encoder;
+use crate::error::Result;
 use crate::util::rng::Rng;
 use crate::viterbi::tiled::{decode_stream, TileConfig};
 use crate::viterbi::types::FrameDecoder;

@@ -1,9 +1,8 @@
 //! Eb/N0 sweeps producing Fig-13-style curves, with JSON emission for the
 //! bench harness.
 
-use anyhow::Result;
-
 use crate::coding::trellis::Trellis;
+use crate::error::{Error, Result, ResultExt};
 use crate::util::json::{self, Json};
 use crate::viterbi::types::FrameDecoder;
 
@@ -13,13 +12,17 @@ use super::theory;
 /// Parse a sweep spec "start:stop:step" in dB.
 pub fn parse_range(spec: &str) -> Result<Vec<f64>> {
     let parts: Vec<&str> = spec.split(':').collect();
-    anyhow::ensure!(parts.len() == 3, "range must be start:stop:step, got {spec:?}");
+    if parts.len() != 3 {
+        return Err(Error::config(format!("range must be start:stop:step, got {spec:?}")));
+    }
     let (a, b, s) = (
-        parts[0].parse::<f64>()?,
-        parts[1].parse::<f64>()?,
-        parts[2].parse::<f64>()?,
+        parts[0].parse::<f64>().or_config(format!("bad range {spec:?}"))?,
+        parts[1].parse::<f64>().or_config(format!("bad range {spec:?}"))?,
+        parts[2].parse::<f64>().or_config(format!("bad range {spec:?}"))?,
     );
-    anyhow::ensure!(s > 0.0 && b >= a, "bad range {spec:?}");
+    if !(s > 0.0 && b >= a) {
+        return Err(Error::config(format!("bad range {spec:?}")));
+    }
     let mut v = Vec::new();
     let mut x = a;
     while x <= b + 1e-9 {

@@ -1,10 +1,15 @@
-//! Minimal CLI argument parsing (offline image: no clap). Flags are
-//! `--key value` pairs plus positional words; subcommands dispatch in
-//! `main.rs`.
+//! Minimal CLI argument parsing (offline image: no clap), plus a
+//! declarative flag-spec layer.
+//!
+//! Flags are `--key value` pairs and boolean `--switch`es. Each
+//! subcommand in `main.rs` declares a [`CommandSpec`] — largely
+//! generated from the `api::DecoderBuilder` option set — which rejects
+//! unknown flags (typos fail instead of being silently ignored) and
+//! renders the per-subcommand `--help` text.
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::{Error, Result};
 
 /// Parsed command line: subcommand, positionals and `--key value` flags.
 #[derive(Debug, Default)]
@@ -45,21 +50,27 @@ impl Args {
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key} expects an integer, got {v:?}"))),
         }
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key} expects an integer, got {v:?}"))),
         }
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key} expects a number, got {v:?}"))),
         }
     }
 
@@ -67,68 +78,92 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
-    /// Error on unknown flags (catches typos).
+    /// Error on unknown flags (catches typos). `--help` is always known.
     pub fn check_known(&self, known: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
+            if k == "help" {
+                continue;
+            }
             if !known.contains(&k.as_str()) {
-                bail!("unknown flag --{k}; known flags: {}",
-                      known.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(" "));
+                return Err(Error::config(format!(
+                    "unknown flag --{k}; known flags: {}",
+                    known.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(" ")
+                )));
             }
         }
         Ok(())
     }
 }
 
-/// Build a `BackendSpec` from the common `--backend/--artifacts/--variant`
-/// flag triple used by several subcommands.
-pub fn backend_from_flags(backend: &str, artifacts: &str, variant: &str,
-                          stages: usize) -> Result<crate::coordinator::BackendSpec> {
-    use crate::channel::quantize::ChannelPrecision;
-    use crate::coordinator::BackendSpec;
-    use crate::util::half::HalfKind;
-    use crate::viterbi::AccPrecision;
-    let cpu = |scheme: &str, acc: AccPrecision, chan: ChannelPrecision| BackendSpec::CpuPacked {
-        code: "ccsds".into(),
-        scheme: scheme.into(),
-        stages,
-        acc,
-        chan,
-        renorm_every: 16,
-    };
-    Ok(match backend {
-        "artifact" | "pjrt" => BackendSpec::artifact(artifacts, variant),
-        "scalar" => crate::coordinator::BackendSpec::Scalar { code: "ccsds".into(), stages },
-        "cpu-radix2" => cpu("radix2", AccPrecision::Single, ChannelPrecision::Single),
-        "cpu-radix4" => cpu("radix4", AccPrecision::Single, ChannelPrecision::Single),
-        "cpu-radix4-noperm" => cpu("radix4_noperm", AccPrecision::Single, ChannelPrecision::Single),
-        "cpu-radix4-half" => cpu("radix4", AccPrecision::Half(HalfKind::Bf16),
-                                  ChannelPrecision::Single),
-        "cpu-radix4-half-f16" => cpu("radix4", AccPrecision::Half(HalfKind::F16),
-                                      ChannelPrecision::Single),
-        other => bail!(
-            "unknown backend {other:?}; known: artifact scalar cpu-radix2 cpu-radix4 \
-             cpu-radix4-noperm cpu-radix4-half cpu-radix4-half-f16"
-        ),
-    })
+/// One `--flag` a subcommand accepts.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    /// Flag name without the leading `--`.
+    pub name: &'static str,
+    /// Value placeholder for help text; empty for boolean switches.
+    pub value: &'static str,
+    /// One-line description (typically embeds the default).
+    pub help: String,
 }
 
-/// Print top-level usage.
-pub fn print_usage() {
+impl FlagSpec {
+    pub fn new(name: &'static str, value: &'static str, help: impl Into<String>) -> FlagSpec {
+        FlagSpec { name, value, help: help.into() }
+    }
+}
+
+/// A subcommand's declared interface: summary + accepted flags.
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, summary: &'static str, flags: Vec<FlagSpec>) -> CommandSpec {
+        CommandSpec { name, summary, flags }
+    }
+
+    /// Reject flags this subcommand does not declare.
+    pub fn check(&self, args: &Args) -> Result<()> {
+        let known: Vec<&str> = self.flags.iter().map(|f| f.name).collect();
+        args.check_known(&known)
+            .map_err(|e| e.context(format!("tcvd {} (see `tcvd {} --help`)", self.name, self.name)))
+    }
+
+    /// Render `tcvd <cmd> --help`.
+    pub fn usage(&self) -> String {
+        let mut s = format!(
+            "tcvd {} — {}\n\nUSAGE: tcvd {} [--flag value ...]\n",
+            self.name, self.summary, self.name
+        );
+        if !self.flags.is_empty() {
+            s.push_str("\nFLAGS\n");
+            for f in &self.flags {
+                let lhs = if f.value.is_empty() {
+                    format!("--{}", f.name)
+                } else {
+                    format!("--{} <{}>", f.name, f.value)
+                };
+                s.push_str(&format!("  {lhs:<26} {}\n", f.help));
+            }
+        }
+        s
+    }
+}
+
+/// Print top-level usage from the command table.
+pub fn print_usage(specs: &[CommandSpec]) {
     println!(
-        "tcvd — tensor-formulated parallel Viterbi decoder
-
-USAGE: tcvd <command> [--flag value ...]
-
-COMMANDS
-  info       platform, artifact manifest, registered codes
-  selftest   encode/corrupt/decode round trip on every backend
-  encode     --code ccsds --bits N [--in file] [--out file]
-  decode     --in llr.f32le [--backend artifact|cpu-radix4|scalar] [--out bits]
-  ber        --snr 0:6:1 [--errors 100] [--max-bits N] [--backend ...] [--hard]
-  serve      --sessions 8 --bits 65536 --snr 5 [--backend ...] [--json]
-
-Run `make artifacts` first to build the AOT decoder artifacts."
+        "tcvd — tensor-formulated parallel Viterbi decoder\n\n\
+         USAGE: tcvd <command> [--flag value ...]\n\
+         \x20      tcvd <command> --help\n\nCOMMANDS"
     );
+    for sp in specs {
+        println!("  {:<10} {}", sp.name, sp.summary);
+    }
+    println!("\nRun `make artifacts` first to build the AOT decoder artifacts.");
 }
 
 #[cfg(test)]
@@ -152,7 +187,8 @@ mod tests {
     #[test]
     fn typed_errors() {
         let a = parse("x --n abc");
-        assert!(a.get_usize("n", 1).is_err());
+        let e = a.get_usize("n", 1).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
     }
 
     #[test]
@@ -161,5 +197,29 @@ mod tests {
         assert!(a.check_known(&["sessions"]).is_err());
         let b = parse("serve --sessions 4");
         assert!(b.check_known(&["sessions"]).is_ok());
+    }
+
+    #[test]
+    fn help_flag_is_always_known() {
+        let a = parse("serve --help");
+        assert!(a.check_known(&[]).is_ok());
+    }
+
+    #[test]
+    fn command_spec_checks_and_renders() {
+        let spec = CommandSpec::new(
+            "demo",
+            "demo command",
+            vec![
+                FlagSpec::new("bits", "N", "payload bits (default 1024)"),
+                FlagSpec::new("hard", "", "hard-decision inputs"),
+            ],
+        );
+        assert!(spec.check(&parse("demo --bits 5")).is_ok());
+        let e = spec.check(&parse("demo --bots 5")).unwrap_err();
+        assert!(e.to_string().contains("unknown flag --bots"), "{e}");
+        let u = spec.usage();
+        assert!(u.contains("--bits <N>"));
+        assert!(u.contains("--hard"));
     }
 }

@@ -1,23 +1,31 @@
-//! Typed configuration for the `tcvd` binary: a `tcvd.toml` file (parsed
-//! by the built-in TOML-subset parser) merged with CLI overrides.
+//! Typed configuration for the `tcvd` binary: a `tcvd.toml` file
+//! (parsed by the built-in TOML-subset parser).
+//!
+//! `Config` is a thin file-format view; the supported construction path
+//! is [`crate::api::DecoderBuilder::from_toml`] (+ CLI-flag overrides
+//! via [`crate::api::DecoderBuilder::apply_flags`]), which consumes
+//! this struct and owns validation. Defaults mirror
+//! [`crate::defaults`].
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
+use crate::defaults;
+use crate::error::{Error, Result, ResultExt};
 use crate::util::toml::Toml;
 use crate::viterbi::tiled::TileConfig;
 
-/// Full runtime configuration with defaults matching the paper's setup.
+/// Parsed `tcvd.toml` contents, with defaults for missing keys.
 #[derive(Clone, Debug)]
 pub struct Config {
     /// Standard code name (registry key).
     pub code: String,
+    /// Backend name (see `api::BACKEND_NAMES`).
+    pub backend: String,
     /// Tile geometry for stream decoding.
     pub tile: TileConfig,
     /// Artifact directory.
     pub artifacts_dir: String,
-    /// Preferred artifact variant name substring (e.g. "radix4_jnp_acc-single_ch-single").
+    /// Preferred artifact variant name (or unique substring).
     pub variant: String,
     /// Dynamic batcher: max frames per PJRT execution (<= artifact batch).
     pub max_batch: usize,
@@ -32,14 +40,15 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
-            code: "ccsds".into(),
-            tile: TileConfig { payload: 64, head: 16, tail: 16 },
-            artifacts_dir: "artifacts".into(),
-            variant: "radix4_jnp_acc-single_ch-single_b64".into(),
-            max_batch: 64,
-            batch_deadline_us: 2000,
-            workers: 2,
-            queue_depth: 1024,
+            code: defaults::CODE.into(),
+            backend: "artifact".into(),
+            tile: defaults::TILE,
+            artifacts_dir: defaults::ARTIFACTS_DIR.into(),
+            variant: defaults::VARIANT.into(),
+            max_batch: defaults::MAX_BATCH,
+            batch_deadline_us: defaults::BATCH_DEADLINE_US,
+            workers: defaults::WORKERS,
+            queue_depth: defaults::QUEUE_DEPTH,
         }
     }
 }
@@ -48,53 +57,73 @@ impl Config {
     /// Load from a TOML file, with defaults for missing keys.
     pub fn from_file(path: &Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading config {}", path.display()))?;
+            .or_config(format!("reading config {}", path.display()))?;
         Self::from_toml(&text)
     }
 
+    /// Parse TOML text, with defaults for missing keys.
     pub fn from_toml(text: &str) -> Result<Config> {
-        let doc = Toml::parse(text)?;
+        let doc = Toml::parse(text).or_config("parsing TOML")?;
         let mut cfg = Config::default();
         if let Some(v) = doc.get("", "code") {
-            cfg.code = v.as_str()?.to_string();
+            cfg.code = v.as_str().or_config("code")?.to_string();
+        }
+        if let Some(v) = doc.get("", "backend") {
+            cfg.backend = v.as_str().or_config("backend")?.to_string();
         }
         if let Some(v) = doc.get("tile", "payload") {
-            cfg.tile.payload = v.as_usize()?;
+            cfg.tile.payload = v.as_usize().or_config("tile.payload")?;
         }
         if let Some(v) = doc.get("tile", "head") {
-            cfg.tile.head = v.as_usize()?;
+            cfg.tile.head = v.as_usize().or_config("tile.head")?;
         }
         if let Some(v) = doc.get("tile", "tail") {
-            cfg.tile.tail = v.as_usize()?;
+            cfg.tile.tail = v.as_usize().or_config("tile.tail")?;
         }
         if let Some(v) = doc.get("runtime", "artifacts_dir") {
-            cfg.artifacts_dir = v.as_str()?.to_string();
+            cfg.artifacts_dir = v.as_str().or_config("runtime.artifacts_dir")?.to_string();
         }
         if let Some(v) = doc.get("runtime", "variant") {
-            cfg.variant = v.as_str()?.to_string();
+            cfg.variant = v.as_str().or_config("runtime.variant")?.to_string();
+        }
+        if let Some(v) = doc.get("runtime", "backend") {
+            cfg.backend = v.as_str().or_config("runtime.backend")?.to_string();
         }
         if let Some(v) = doc.get("coordinator", "max_batch") {
-            cfg.max_batch = v.as_usize()?;
+            cfg.max_batch = v.as_usize().or_config("coordinator.max_batch")?;
         }
         if let Some(v) = doc.get("coordinator", "batch_deadline_us") {
-            cfg.batch_deadline_us = v.as_usize()? as u64;
+            cfg.batch_deadline_us =
+                v.as_usize().or_config("coordinator.batch_deadline_us")? as u64;
         }
         if let Some(v) = doc.get("coordinator", "workers") {
-            cfg.workers = v.as_usize()?;
+            cfg.workers = v.as_usize().or_config("coordinator.workers")?;
         }
         if let Some(v) = doc.get("coordinator", "queue_depth") {
-            cfg.queue_depth = v.as_usize()?;
+            cfg.queue_depth = v.as_usize().or_config("coordinator.queue_depth")?;
         }
         cfg.validate()?;
         Ok(cfg)
     }
 
+    /// Structural sanity checks (full validation happens in the
+    /// builder, which also knows the backend semantics).
     pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(self.tile.payload > 0, "tile.payload must be positive");
-        anyhow::ensure!(self.max_batch > 0, "max_batch must be positive");
-        anyhow::ensure!(self.workers > 0, "workers must be positive");
-        anyhow::ensure!(self.queue_depth >= self.max_batch,
-                        "queue_depth must be >= max_batch");
+        if self.tile.payload == 0 {
+            return Err(Error::config("tile.payload must be positive"));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::config("max_batch must be positive"));
+        }
+        if self.workers == 0 {
+            return Err(Error::config("workers must be positive"));
+        }
+        if self.queue_depth < self.max_batch {
+            return Err(Error::config(format!(
+                "queue_depth ({}) must be >= max_batch ({})",
+                self.queue_depth, self.max_batch
+            )));
+        }
         Ok(())
     }
 }
@@ -109,10 +138,19 @@ mod tests {
     }
 
     #[test]
+    fn defaults_come_from_defaults_module() {
+        let cfg = Config::default();
+        assert_eq!(cfg.code, defaults::CODE);
+        assert_eq!(cfg.variant, defaults::VARIANT);
+        assert_eq!(cfg.tile.frame_stages(), defaults::TILE.frame_stages());
+    }
+
+    #[test]
     fn parses_full_config() {
         let cfg = Config::from_toml(
             r#"
 code = "gsm"
+backend = "cpu-radix4"
 
 [tile]
 payload = 128
@@ -131,6 +169,7 @@ queue_depth = 64
         )
         .unwrap();
         assert_eq!(cfg.code, "gsm");
+        assert_eq!(cfg.backend, "cpu-radix4");
         assert_eq!(cfg.tile.payload, 128);
         assert_eq!(cfg.max_batch, 8);
         assert_eq!(cfg.workers, 4);
@@ -138,7 +177,8 @@ queue_depth = 64
 
     #[test]
     fn rejects_invalid() {
-        assert!(Config::from_toml("[coordinator]\nmax_batch = 0\n").is_err());
+        let e = Config::from_toml("[coordinator]\nmax_batch = 0\n").unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
         assert!(Config::from_toml("[coordinator]\nqueue_depth = 1\n").is_err());
     }
 }

@@ -1,16 +1,19 @@
 //! Backend construction for the engine thread. PJRT executables are not
 //! `Send`, so the spec (plain data) crosses the thread boundary and the
 //! backend is built *inside* the engine thread.
+//!
+//! `BackendSpec` is an internal lowering target: user-facing code
+//! configures backends through `api::DecoderBuilder`, which is the only
+//! place specs are constructed from user parameters.
 
 use std::path::PathBuf;
 use std::sync::Arc;
-
-use anyhow::{Context, Result};
 
 use crate::channel::quantize::ChannelPrecision;
 use crate::coding::packing::build_packing;
 use crate::coding::registry;
 use crate::coding::trellis::Trellis;
+use crate::error::{Result, ResultExt};
 use crate::runtime::{client, Artifact, ArtifactDecoder, Manifest};
 use crate::util::half::HalfKind;
 use crate::viterbi::packed::PackedDecoder;
@@ -45,24 +48,28 @@ impl BackendSpec {
     pub fn build(&self) -> Result<Box<dyn FrameDecoder>> {
         match self {
             BackendSpec::Artifact { dir, variant } => {
-                let manifest = Manifest::load(dir)?;
-                let meta = manifest.find(variant)?.clone();
-                let cl = client::cpu_client()?;
+                let manifest = Manifest::load(dir)
+                    .or_artifact(format!("loading manifest from {}", dir.display()))?;
+                let meta = manifest.find(variant).or_artifact("selecting variant")?.clone();
+                let cl = client::cpu_client().or_artifact("creating PJRT client")?;
                 let artifact = Artifact::load(&cl, &manifest, &meta)
-                    .with_context(|| format!("loading artifact {}", meta.name))?;
-                let code = artifact.code()?;
+                    .or_artifact(format!("loading artifact {}", meta.name))?;
+                let code = artifact.code().or_artifact("decoding artifact code")?;
                 let trellis = Arc::new(Trellis::new(code));
                 Ok(Box::new(ArtifactDecoder::new(Arc::new(artifact), trellis)))
             }
             BackendSpec::CpuPacked { code, scheme, stages, acc, chan, renorm_every } => {
-                let trellis = Arc::new(Trellis::new(registry::lookup(code)?));
-                let pk = build_packing(&trellis, scheme)?;
+                let code = registry::lookup(code).or_backend("cpu backend")?;
+                let trellis = Arc::new(Trellis::new(code));
+                let pk = build_packing(&trellis, scheme)
+                    .or_backend(format!("building {scheme} packing"))?;
                 Ok(Box::new(PackedDecoder::new(
                     trellis, pk, *stages, *acc, HalfKind::Bf16, *chan, *renorm_every,
                 )))
             }
             BackendSpec::Scalar { code, stages } => {
-                let trellis = Arc::new(Trellis::new(registry::lookup(code)?));
+                let code = registry::lookup(code).or_backend("scalar backend")?;
+                let trellis = Arc::new(Trellis::new(code));
                 Ok(Box::new(ScalarDecoder::new(trellis, *stages)))
             }
         }
@@ -72,6 +79,7 @@ impl BackendSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Error;
 
     #[test]
     fn cpu_backends_build() {
@@ -93,6 +101,13 @@ mod tests {
     #[test]
     fn missing_artifact_dir_errors() {
         let spec = BackendSpec::artifact("/nonexistent-dir", "radix4");
-        assert!(spec.build().is_err());
+        let e = spec.build().unwrap_err();
+        assert!(matches!(e, Error::Artifact(_)), "{e}");
+    }
+
+    #[test]
+    fn unknown_code_is_backend_error() {
+        let e = BackendSpec::Scalar { code: "nope".into(), stages: 32 }.build().unwrap_err();
+        assert!(matches!(e, Error::Backend(_)), "{e}");
     }
 }

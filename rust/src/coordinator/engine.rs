@@ -7,9 +7,8 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::coding::trellis::Trellis;
+use crate::error::Result;
 use crate::util::queue::Queue;
 use crate::viterbi::types::RawFrame;
 

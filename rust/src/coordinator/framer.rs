@@ -37,6 +37,11 @@ impl Framer {
         self.next_frame
     }
 
+    /// Coded symbols per trellis stage (chunk alignment unit).
+    pub fn beta(&self) -> usize {
+        self.beta
+    }
+
     /// Stage index where frame `fi`'s buffer begins.
     fn frame_start(&self, fi: usize) -> usize {
         (fi * self.cfg.payload).saturating_sub(self.cfg.head)

@@ -25,7 +25,7 @@ use crate::viterbi::types::FrameJob;
 
 pub use backend::BackendSpec;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Coordinator, SessionHandle};
+pub use server::{Coordinator, Session, SessionHandle};
 
 /// A frame travelling through the pipeline.
 #[derive(Clone, Debug)]

@@ -1,16 +1,16 @@
 //! The coordinator facade: wires framer -> batcher/engine -> traceback
 //! workers -> reassembly into a running pipeline and exposes the session
-//! API used by the CLI, examples and benches.
+//! API used by `api::DecoderBuilder::serve`, the CLI, examples and
+//! benches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-
 use crate::coding::trellis::Trellis;
+use crate::error::{Error, Result, ResultExt};
 use crate::util::queue::Queue;
 use crate::viterbi::tiled::TileConfig;
 
@@ -21,7 +21,9 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::reassembly::{run_reassembly, Msg};
 use super::FrameTask;
 
-/// Coordinator configuration (see `config::Config` for file-based setup).
+/// Coordinator configuration — the lowering target of
+/// [`crate::api::DecoderBuilder::to_coordinator_config`], which is the
+/// supported way to produce one.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub backend: BackendSpec,
@@ -65,18 +67,22 @@ impl Coordinator {
                 .name("tcvd-engine".into())
                 .spawn(move || {
                     run_engine(spec, policy, input_rx, raw_q_engine, m_engine, ready_tx)
-                })?,
+                })
+                .or_pipeline("spawning engine thread")?,
         );
         let (frame_stages, trellis) = ready_rx
             .recv()
-            .context("engine thread died during startup")?
-            .context("backend startup failed")?;
+            .or_pipeline("engine thread died during startup")?
+            .map_err(|e| e.context("backend startup failed"))?;
         if frame_stages != cfg.tile.frame_stages() {
-            bail!(
+            return Err(Error::config(format!(
                 "backend frame ({frame_stages} stages) does not match tile geometry \
                  ({} = head {} + payload {} + tail {})",
-                cfg.tile.frame_stages(), cfg.tile.head, cfg.tile.payload, cfg.tile.tail
-            );
+                cfg.tile.frame_stages(),
+                cfg.tile.head,
+                cfg.tile.payload,
+                cfg.tile.tail
+            )));
         }
 
         for w in 0..cfg.workers.max(1) {
@@ -87,14 +93,16 @@ impl Coordinator {
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("tcvd-traceback-{w}"))
-                    .spawn(move || run_traceback_worker(tr, rx, out, m))?,
+                    .spawn(move || run_traceback_worker(tr, rx, out, m))
+                    .or_pipeline("spawning traceback worker")?,
             );
         }
         let ctrl = msg_tx; // remaining clone for session control
         threads.push(
             std::thread::Builder::new()
                 .name("tcvd-reassembly".into())
-                .spawn(move || run_reassembly(msg_rx))?,
+                .spawn(move || run_reassembly(msg_rx))
+                .or_pipeline("spawning reassembler")?,
         );
 
         let beta = trellis.code().beta();
@@ -118,14 +126,14 @@ impl Coordinator {
         &self.tile
     }
 
-    /// Open a streaming session; returns the handle for pushing LLRs and
-    /// the receiver of in-order decoded payload chunks.
-    pub fn open_session(&self) -> Result<(SessionHandle, Receiver<Vec<u8>>)> {
+    /// Open a streaming session: push LLR chunks in, iterate in-order
+    /// decoded payload chunks out.
+    pub fn open_session(&self) -> Result<Session> {
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
         let (out_tx, out_rx) = mpsc::sync_channel(1024);
         self.ctrl
             .send(Msg::Open { session: id, out: out_tx })
-            .map_err(|_| anyhow::anyhow!("pipeline is shut down"))?;
+            .map_err(|_| Error::pipeline("pipeline is shut down"))?;
         let handle = SessionHandle {
             id,
             framer: Framer::new(self.tile, self.beta),
@@ -133,17 +141,17 @@ impl Coordinator {
             ctrl: Some(self.ctrl.clone()),
             metrics: self.metrics.clone(),
         };
-        Ok((handle, out_rx))
+        Ok(Session { handle, out: out_rx })
     }
 
     /// Convenience: decode one whole LLR stream through the pipeline
     /// (open session, push, finish, collect).
     pub fn decode_stream_blocking(&self, llr: &[f32], flushed_end: bool) -> Result<Vec<u8>> {
-        let (mut h, rx) = self.open_session()?;
-        h.push(llr)?;
-        h.finish(flushed_end)?;
+        let mut session = self.open_session()?;
+        session.push(llr)?;
+        session.finish(flushed_end)?;
         let mut out = Vec::new();
-        for chunk in rx {
+        for chunk in session {
             out.extend_from_slice(&chunk);
         }
         Ok(out)
@@ -153,14 +161,14 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Shut down: all session handles must be finished/dropped first.
-    /// Joins every pipeline thread.
+    /// Shut down: all sessions must be finished/dropped first. Joins
+    /// every pipeline thread.
     pub fn shutdown(self) -> Result<()> {
         let Coordinator { input, ctrl, threads, .. } = self;
         drop(input);
         drop(ctrl);
         for t in threads {
-            t.join().map_err(|_| anyhow::anyhow!("pipeline thread panicked"))?;
+            t.join().map_err(|_| Error::pipeline("pipeline thread panicked"))?;
         }
         Ok(())
     }
@@ -183,6 +191,11 @@ impl SessionHandle {
         self.id
     }
 
+    /// Point-in-time pipeline metrics (shared across sessions).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
     fn send_jobs(&mut self, base: u64, jobs: Vec<crate::viterbi::types::FrameJob>) -> Result<()> {
         let input = self.input.as_ref().expect("checked by callers");
         for (i, job) in jobs.into_iter().enumerate() {
@@ -194,24 +207,39 @@ impl SessionHandle {
                     job,
                     t_enq: Instant::now(),
                 })
-                .map_err(|_| anyhow::anyhow!("pipeline is shut down"))?;
+                .map_err(|_| Error::pipeline("pipeline is shut down"))?;
         }
         Ok(())
     }
 
     /// Push an LLR chunk (length must be a multiple of beta).
     pub fn push(&mut self, llr: &[f32]) -> Result<()> {
-        anyhow::ensure!(self.input.is_some(), "session already finished");
+        if self.input.is_none() {
+            return Err(Error::pipeline("session already finished"));
+        }
+        if llr.len() % self.framer_beta() != 0 {
+            return Err(Error::pipeline(format!(
+                "chunk length {} is not a multiple of beta {}",
+                llr.len(),
+                self.framer_beta()
+            )));
+        }
         let base = self.framer.frames_emitted() as u64;
         let jobs = self.framer.push(llr);
         self.send_jobs(base, jobs)
+    }
+
+    fn framer_beta(&self) -> usize {
+        self.framer.beta()
     }
 
     /// Flush the stream: emits the remaining (padded) frames, tells the
     /// reassembler the total frame count so it can close the output, and
     /// drops this handle's pipeline senders.
     pub fn finish(&mut self, flushed_end: bool) -> Result<()> {
-        anyhow::ensure!(self.input.is_some(), "session already finished");
+        if self.input.is_none() {
+            return Err(Error::pipeline("session already finished"));
+        }
         let base = self.framer.frames_emitted() as u64;
         let jobs = self.framer.finish(flushed_end);
         self.send_jobs(base, jobs)?;
@@ -219,8 +247,87 @@ impl SessionHandle {
         let ctrl = self.ctrl.take().expect("ctrl present until finish");
         self.input = None;
         ctrl.send(Msg::Finish { session: self.id, total_frames: total })
-            .map_err(|_| anyhow::anyhow!("pipeline is shut down"))?;
+            .map_err(|_| Error::pipeline("pipeline is shut down"))?;
         Ok(())
+    }
+}
+
+/// A full-duplex session: the push side ([`SessionHandle`]) plus the
+/// in-order decoded output stream.
+///
+/// Output access is either non-blocking ([`poll`](Session::poll)),
+/// blocking per chunk ([`next_chunk`](Session::next_chunk)), or through
+/// the blocking [`Iterator`] impl, which yields in-order payload chunks
+/// until the session's output is complete. Producer/consumer splits
+/// (push from one thread, drain from another) use
+/// [`split`](Session::split).
+pub struct Session {
+    handle: SessionHandle,
+    out: Receiver<Vec<u8>>,
+}
+
+impl Session {
+    pub fn id(&self) -> u64 {
+        self.handle.id()
+    }
+
+    /// Push an LLR chunk (length must be a multiple of beta). Blocks
+    /// when the pipeline queue is full (backpressure).
+    pub fn push(&mut self, llr: &[f32]) -> Result<()> {
+        self.handle.push(llr)
+    }
+
+    /// Flush the stream and release the push side; the output iterator
+    /// terminates once all frames are delivered.
+    pub fn finish(&mut self, flushed_end: bool) -> Result<()> {
+        self.handle.finish(flushed_end)
+    }
+
+    /// Non-blocking poll for the next in-order decoded chunk.
+    /// `None` means "nothing ready yet *or* stream complete" — use the
+    /// iterator / [`next_chunk`](Session::next_chunk) to distinguish.
+    pub fn poll(&mut self) -> Option<Vec<u8>> {
+        match self.out.try_recv() {
+            Ok(chunk) => Some(chunk),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Blocking receive of the next in-order decoded chunk; `None` once
+    /// the session output is complete.
+    pub fn next_chunk(&mut self) -> Option<Vec<u8>> {
+        self.out.recv().ok()
+    }
+
+    /// Point-in-time pipeline metrics (shared across sessions).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.handle.metrics()
+    }
+
+    /// Split into the push handle and the raw output receiver, for
+    /// producer/consumer thread pairs.
+    pub fn split(self) -> (SessionHandle, Receiver<Vec<u8>>) {
+        (self.handle, self.out)
+    }
+
+    /// Finish the stream and block until every decoded payload bit has
+    /// arrived.
+    pub fn finish_and_collect(mut self, flushed_end: bool) -> Result<Vec<u8>> {
+        self.finish(flushed_end)?;
+        let mut out = Vec::new();
+        for chunk in self {
+            out.extend_from_slice(&chunk);
+        }
+        Ok(out)
+    }
+}
+
+impl Iterator for Session {
+    type Item = Vec<u8>;
+
+    /// Blocking, in-order iteration over decoded payload chunks.
+    fn next(&mut self) -> Option<Vec<u8>> {
+        self.next_chunk()
     }
 }
 
@@ -304,16 +411,12 @@ mod tests {
         let tile = TileConfig { payload: 64, head: 24, tail: 24 };
         let coord = Coordinator::start(cpu_config(tile)).unwrap();
         let (bits, llr) = noisy_stream(7, 512, 5.0);
-        let (mut h, rx) = coord.open_session().unwrap();
+        let mut session = coord.open_session().unwrap();
         for chunk in llr.chunks(46) {
             // 23-stage odd chunks
-            h.push(chunk).unwrap();
+            session.push(chunk).unwrap();
         }
-        h.finish(true).unwrap();
-        let mut out = Vec::new();
-        for c in rx {
-            out.extend_from_slice(&c);
-        }
+        let out = session.finish_and_collect(true).unwrap();
         assert_eq!(out, bits);
         // scalar reference agrees (up to half rounding of B) at 5 dB
         let t = coord.trellis().clone();
@@ -326,6 +429,66 @@ mod tests {
     }
 
     #[test]
+    fn session_poll_and_metrics() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let coord = Coordinator::start(cpu_config(tile)).unwrap();
+        let (bits, llr) = noisy_stream(9, 128, 6.0);
+        let mut session = coord.open_session().unwrap();
+        session.push(&llr).unwrap();
+        session.finish(true).unwrap();
+        let mut out = Vec::new();
+        // drain via poll (non-blocking) + blocking fallback
+        loop {
+            match session.poll() {
+                Some(c) => out.extend_from_slice(&c),
+                None => match session.next_chunk() {
+                    Some(c) => out.extend_from_slice(&c),
+                    None => break,
+                },
+            }
+        }
+        assert_eq!(out, bits);
+        assert!(session.metrics().frames_out >= 4);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn split_supports_producer_consumer() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let coord = Coordinator::start(cpu_config(tile)).unwrap();
+        let (bits, llr) = noisy_stream(21, 256, 6.0);
+        let session = coord.open_session().unwrap();
+        let (mut handle, rx) = session.split();
+        let consumer = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for c in rx {
+                out.extend_from_slice(&c);
+            }
+            out
+        });
+        for chunk in llr.chunks(64) {
+            handle.push(chunk).unwrap();
+        }
+        handle.finish(true).unwrap();
+        assert_eq!(consumer.join().unwrap(), bits);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn push_after_finish_is_typed_error() {
+        let tile = TileConfig { payload: 32, head: 8, tail: 8 };
+        let coord = Coordinator::start(cpu_config(tile)).unwrap();
+        let (_, llr) = noisy_stream(3, 64, 6.0);
+        let mut session = coord.open_session().unwrap();
+        session.push(&llr).unwrap();
+        session.finish(true).unwrap();
+        let e = session.push(&llr).unwrap_err();
+        assert!(matches!(e, Error::Pipeline(_)), "{e}");
+        for _ in session {}
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
     fn mismatched_tile_rejected() {
         let tile = TileConfig { payload: 32, head: 16, tail: 16 };
         let mut cfg = cpu_config(tile);
@@ -333,6 +496,8 @@ mod tests {
         if let BackendSpec::CpuPacked { ref mut stages, .. } = cfg.backend {
             *stages = 128;
         }
-        assert!(Coordinator::start(cfg).is_err());
+        let e = Coordinator::start(cfg).map(|_| ()).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        assert!(e.to_string().contains("does not match"), "{e}");
     }
 }

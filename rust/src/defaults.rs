@@ -1,0 +1,71 @@
+//! Canonical default parameters, in one place.
+//!
+//! Historically `config::Config::default`, `main.rs` and every bench
+//! each carried their own copy of the tile geometry and artifact
+//! variant strings; they drifted (e.g. `..._b64` vs `..._b64_s48`).
+//! Everything now reads from here: `api::DecoderBuilder::new` starts
+//! from these values, `config::Config::default` mirrors them, and the
+//! benches/examples pull the variant names below.
+
+use crate::viterbi::tiled::TileConfig;
+
+/// Default standard code (registry key): the paper's (2,1,7) 171/133.
+pub const CODE: &str = "ccsds";
+
+/// Default artifact directory (relative to the working directory).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Default AOT artifact variant: radix-4 + dragonfly-group permutation,
+/// single-precision accumulator and channel, batch 64, 48 steps
+/// (= 96 trellis stages per frame).
+pub const VARIANT: &str = "radix4_jnp_acc-single_ch-single_b64_s48";
+
+/// Tile geometry matching [`VARIANT`]: 64 payload + 16/16 overlap = 96
+/// stages per frame.
+pub const TILE: TileConfig = TileConfig { payload: 64, head: 16, tail: 16 };
+
+/// Generous-overlap tile for CPU backends (whose frame length is free):
+/// 64 payload + 32/32 overlap, the BER-safe geometry used by selftest
+/// and the BER harness.
+pub const CPU_TILE: TileConfig = TileConfig { payload: 64, head: 32, tail: 32 };
+
+/// Dynamic batcher: max frames per execution.
+pub const MAX_BATCH: usize = 64;
+
+/// Dynamic batcher: flush deadline in microseconds.
+pub const BATCH_DEADLINE_US: u64 = 2000;
+
+/// Traceback worker threads.
+pub const WORKERS: usize = 2;
+
+/// Bounded input queue depth (frames) before backpressure.
+pub const QUEUE_DEPTH: usize = 1024;
+
+/// Path-metric renormalization period (stages) for CPU packed backends.
+pub const RENORM_EVERY: usize = 16;
+
+/// Artifact variant names used by the precision benches (Table I rows).
+pub const VARIANT_SINGLE_HALF: &str = "radix4_jnp_acc-single_ch-half_b64_s48";
+pub const VARIANT_HALF_SINGLE: &str = "radix4_jnp_acc-half_ch-single_b64_s48";
+pub const VARIANT_HALF_HALF: &str = "radix4_jnp_acc-half_ch-half_b64_s48";
+
+/// Radix-ablation artifact variants (E4).
+pub const VARIANT_RADIX2: &str = "radix2_jnp_acc-single_ch-single_b64_s96";
+pub const VARIANT_RADIX4_NOPERM: &str = "radix4_noperm_jnp_acc-single_ch-single_b64_s48";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_matches_default_variant_frame() {
+        // the b64_s48 artifact decodes 48 radix-4 steps = 96 stages
+        assert_eq!(TILE.frame_stages(), 96);
+        assert_eq!(CPU_TILE.frame_stages(), 128);
+    }
+
+    #[test]
+    fn queue_covers_batch() {
+        assert!(QUEUE_DEPTH >= MAX_BATCH);
+    }
+}

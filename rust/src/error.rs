@@ -1,0 +1,159 @@
+//! The typed public error of the `tcvd` crate.
+//!
+//! Every `tcvd::api` entry point (and the layers it lowers to — config,
+//! CLI, coordinator, tiled decoding, BER harness) reports failures as
+//! [`Error`], classified by which part of the stack rejected the
+//! request. `anyhow` remains an *internal* tool of the lower layers
+//! (runtime, coding, util); it never crosses the public API boundary —
+//! internal errors are folded into a typed variant with context at the
+//! layer border (see [`ResultExt`]).
+
+use std::fmt;
+
+/// What went wrong, by subsystem.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// Invalid configuration: unknown code or backend name, bad tile
+    /// geometry, malformed TOML, unparseable or unknown CLI flags.
+    Config(String),
+    /// Artifact problems: missing manifest, unknown variant, HLO
+    /// parse/compile failure, PJRT runtime unavailability.
+    Artifact(String),
+    /// Backend construction failures (packing build, decoder setup).
+    Backend(String),
+    /// Streaming pipeline failures: geometry mismatch at startup,
+    /// pushes into a shut-down pipeline, worker panics.
+    Pipeline(String),
+}
+
+impl Error {
+    /// Build a [`Error::Config`] from anything displayable.
+    pub fn config(msg: impl fmt::Display) -> Error {
+        Error::Config(msg.to_string())
+    }
+
+    /// Build a [`Error::Artifact`] from anything displayable.
+    pub fn artifact(msg: impl fmt::Display) -> Error {
+        Error::Artifact(msg.to_string())
+    }
+
+    /// Build a [`Error::Backend`] from anything displayable.
+    pub fn backend(msg: impl fmt::Display) -> Error {
+        Error::Backend(msg.to_string())
+    }
+
+    /// Build a [`Error::Pipeline`] from anything displayable.
+    pub fn pipeline(msg: impl fmt::Display) -> Error {
+        Error::Pipeline(msg.to_string())
+    }
+
+    /// The subsystem label this error is classified under.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Config(_) => "config",
+            Error::Artifact(_) => "artifact",
+            Error::Backend(_) => "backend",
+            Error::Pipeline(_) => "pipeline",
+        }
+    }
+
+    /// The human-readable message (without the kind prefix).
+    pub fn message(&self) -> &str {
+        match self {
+            Error::Config(m)
+            | Error::Artifact(m)
+            | Error::Backend(m)
+            | Error::Pipeline(m) => m,
+        }
+    }
+
+    /// Prepend context, preserving the variant: `context: message`.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        match self {
+            Error::Config(m) => Error::Config(format!("{ctx}: {m}")),
+            Error::Artifact(m) => Error::Artifact(format!("{ctx}: {m}")),
+            Error::Backend(m) => Error::Backend(format!("{ctx}: {m}")),
+            Error::Pipeline(m) => Error::Pipeline(format!("{ctx}: {m}")),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `tcvd::Result<T>`: `Result` defaulted to the typed [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Fold any displayable error (`anyhow::Error`, `std::io::Error`,
+/// parse errors, channel errors, ...) into a typed [`Error`] with
+/// context — the conversion used at the boundary between tcvd's
+/// anyhow-based internals and its typed public surface.
+pub trait ResultExt<T> {
+    /// Map the error into [`Error::Config`] as `ctx: cause`.
+    fn or_config(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Map the error into [`Error::Artifact`] as `ctx: cause`.
+    fn or_artifact(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Map the error into [`Error::Backend`] as `ctx: cause`.
+    fn or_backend(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Map the error into [`Error::Pipeline`] as `ctx: cause`.
+    fn or_pipeline(self, ctx: impl fmt::Display) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> ResultExt<T> for std::result::Result<T, E> {
+    fn or_config(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::Config(format!("{ctx}: {e}")))
+    }
+
+    fn or_artifact(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::Artifact(format!("{ctx}: {e}")))
+    }
+
+    fn or_backend(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::Backend(format!("{ctx}: {e}")))
+    }
+
+    fn or_pipeline(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::Pipeline(format!("{ctx}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_kind() {
+        let e = Error::config("unknown code \"x\"");
+        assert_eq!(e.to_string(), "config: unknown code \"x\"");
+        assert_eq!(e.kind(), "config");
+        assert_eq!(e.message(), "unknown code \"x\"");
+    }
+
+    #[test]
+    fn context_preserves_variant() {
+        let e = Error::artifact("no manifest").context("starting backend");
+        assert_eq!(e, Error::Artifact("starting backend: no manifest".into()));
+    }
+
+    #[test]
+    fn result_ext_classifies_foreign_errors() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.or_pipeline("reading stream").unwrap_err();
+        assert_eq!(e, Error::Pipeline("reading stream: gone".into()));
+    }
+
+    #[test]
+    fn interops_with_std_error() {
+        fn takes_std(_: &dyn std::error::Error) {}
+        let e = Error::backend("boom");
+        takes_std(&e);
+    }
+}

@@ -13,8 +13,16 @@
 //!   streams, batches frames across sessions, executes the AOT artifact
 //!   on a PJRT CPU client, and performs traceback + reassembly on the
 //!   hot path. Python is never on the request path.
+//!
+//! The supported entry point is the builder-first facade in [`api`]:
+//! [`DecoderBuilder`] validates one coherent parameter set and lowers
+//! it to either a one-shot [`Decoder`] or the serving
+//! [`Coordinator`](coordinator::Coordinator). All public entry points
+//! report the typed [`Error`]; `anyhow` is internal plumbing only.
 
 pub mod util;
+pub mod error;
+pub mod defaults;
 pub mod cli;
 pub mod coding;
 pub mod channel;
@@ -23,3 +31,7 @@ pub mod ber;
 pub mod config;
 pub mod runtime;
 pub mod coordinator;
+pub mod api;
+
+pub use api::{BackendKind, Decoder, DecoderBuilder};
+pub use error::{Error, Result};

@@ -1,6 +1,6 @@
 //! `tcvd` — tensor-formulated parallel Viterbi decoder (launcher).
 //!
-//! Subcommands:
+//! Subcommands (each supports `--help`):
 //! * `info`      — platform, artifact manifest, registered codes
 //! * `selftest`  — encode/corrupt/decode round trip on every backend
 //! * `encode`    — encode random or file bits, write coded bits
@@ -8,60 +8,153 @@
 //! * `ber`       — Eb/N0 sweep (Fig-13-style), JSON + table output
 //! * `serve`     — run the streaming coordinator under a synthetic
 //!                 multi-session SDR workload, report throughput/latency
+//!
+//! Every pipeline is constructed through `tcvd::api::DecoderBuilder`
+//! (TOML config via `--config`, then `--flag` overrides); all errors
+//! are the typed `tcvd::Error`.
 
 use std::path::PathBuf;
-use std::time::Duration;
 
-use anyhow::{Context, Result};
-
+use tcvd::api::{self, DecoderBuilder};
 use tcvd::ber::{measure_ber, sweep, BerSetup};
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
-use tcvd::cli::{backend_from_flags, print_usage, Args};
-use tcvd::coding::{registry, Encoder, Trellis};
-use tcvd::config::Config;
-use tcvd::coordinator::server::CoordinatorConfig;
-use tcvd::coordinator::{BackendSpec, Coordinator};
+use tcvd::cli::{print_usage, Args, CommandSpec, FlagSpec};
+use tcvd::coding::{registry, Encoder};
+use tcvd::defaults;
+use tcvd::error::{Error, Result, ResultExt};
 use tcvd::runtime::{client, Manifest};
 use tcvd::util::rng::Rng;
-use tcvd::viterbi::tiled::TileConfig;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&argv) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
+/// The declared interface of every subcommand: pipeline-constructing
+/// commands inherit the builder's option set from `api::builder_flags`.
+fn command_specs() -> Vec<CommandSpec> {
+    let artifacts_flag = || {
+        FlagSpec::new(
+            "artifacts",
+            "DIR",
+            format!("artifact directory (default {:?})", defaults::ARTIFACTS_DIR),
+        )
+    };
+    vec![
+        CommandSpec::new(
+            "info",
+            "platform, artifact manifest, registered codes",
+            vec![artifacts_flag()],
+        ),
+        CommandSpec::new(
+            "selftest",
+            "encode/corrupt/decode round trip on every backend",
+            vec![
+                artifacts_flag(),
+                FlagSpec::new("bits", "N", "payload bits (default 4096)"),
+                FlagSpec::new("snr", "DB", "Eb/N0 in dB (default 5.0)"),
+                FlagSpec::new("seed", "N", "PRNG seed (default 7)"),
+            ],
+        ),
+        CommandSpec::new(
+            "encode",
+            "encode random or file bits, write coded bits",
+            vec![
+                FlagSpec::new(
+                    "code",
+                    "NAME",
+                    format!("standard code (default {:?})", defaults::CODE),
+                ),
+                FlagSpec::new("bits", "N", "random payload bits (default 1024)"),
+                FlagSpec::new("seed", "N", "PRNG seed for random payload (default 1)"),
+                FlagSpec::new("in", "PATH", "read payload bits from file instead"),
+                FlagSpec::new("out", "PATH", "write packed coded bits here"),
+            ],
+        ),
+        CommandSpec::new("decode", "decode an LLR stream (f32 little-endian file)", {
+            let mut f = api::builder_flags();
+            f.push(FlagSpec::new("in", "PATH", "LLR input file, f32 little-endian (required)"));
+            f.push(FlagSpec::new("out", "PATH", "write packed decoded bits here"));
+            f
+        }),
+        CommandSpec::new("ber", "Eb/N0 sweep (Fig-13-style), JSON + table output", {
+            // one-shot decode path: serving-only knobs would be no-ops
+            let mut f: Vec<FlagSpec> = api::builder_flags()
+                .into_iter()
+                .filter(|fl| {
+                    !matches!(fl.name, "workers" | "max-batch" | "batch-deadline-us" | "queue-depth")
+                })
+                .collect();
+            f.push(FlagSpec::new("snr", "A:B:STEP", "Eb/N0 sweep in dB (default 0:6:1)"));
+            f.push(FlagSpec::new("errors", "N", "target bit errors per point (default 100)"));
+            f.push(FlagSpec::new("max-bits", "N", "bit cap per point (default 1000000)"));
+            f.push(FlagSpec::new("hard", "", "hard-decision (+-1) inputs"));
+            f.push(FlagSpec::new("exact-llr", "", "exact LLRs 2y/sigma^2 instead of raw symbols"));
+            f.push(FlagSpec::new("seed", "N", "measurement seed (default 0x7C5D)"));
+            f.push(FlagSpec::new("out", "PATH", "write the sweep as JSON here"));
+            f
+        }),
+        CommandSpec::new("serve", "streaming coordinator under a synthetic SDR workload", {
+            let mut f = api::builder_flags();
+            f.push(FlagSpec::new("sessions", "N", "concurrent sessions (default 8)"));
+            f.push(FlagSpec::new("bits", "N", "payload bits per session (default 65536)"));
+            f.push(FlagSpec::new("snr", "DB", "Eb/N0 in dB (default 5.0)"));
+            f.push(FlagSpec::new("seed", "N", "workload seed (default 99)"));
+            f.push(FlagSpec::new("json", "", "also print metrics as JSON"));
+            f
+        }),
+    ]
+}
+
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
-    match args.command.as_str() {
+    let specs = command_specs();
+    if matches!(args.command.as_str(), "" | "help") {
+        print_usage(&specs);
+        return Ok(());
+    }
+    let Some(spec) = specs.iter().find(|s| s.name == args.command) else {
+        print_usage(&specs);
+        return Err(Error::config(format!("unknown subcommand {:?}", args.command)));
+    };
+    if args.get_bool("help") {
+        print!("{}", spec.usage());
+        return Ok(());
+    }
+    spec.check(&args)?;
+    match spec.name {
         "info" => cmd_info(&args),
         "selftest" => cmd_selftest(&args),
         "encode" => cmd_encode(&args),
         "decode" => cmd_decode(&args),
         "ber" => cmd_ber(&args),
         "serve" => cmd_serve(&args),
-        "" | "help" | "--help" => {
-            print_usage();
-            Ok(())
-        }
-        other => {
-            print_usage();
-            anyhow::bail!("unknown subcommand {other:?}")
-        }
+        _ => unreachable!("spec table covers dispatch"),
     }
 }
 
+/// `--config tcvd.toml` first, then individual `--flag` overrides.
+fn builder_from_args(args: &Args) -> Result<DecoderBuilder> {
+    let b = match args.get("config") {
+        Some(p) => DecoderBuilder::from_toml_file(std::path::Path::new(p))?,
+        None => DecoderBuilder::new(),
+    };
+    b.apply_flags(args)
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    args.check_known(&["artifacts"])?;
-    let c = client::cpu_client()?;
-    println!("{}", client::platform_summary(&c));
+    match client::cpu_client() {
+        Ok(c) => println!("{}", client::platform_summary(&c)),
+        Err(e) => println!("(no PJRT client: {e})"),
+    }
     println!("\nregistered codes:");
     for sc in registry::STANDARD_CODES {
         println!("  {:8} {}", sc.name, sc.description);
     }
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let dir = PathBuf::from(args.get_or("artifacts", defaults::ARTIFACTS_DIR));
     match Manifest::load(&dir) {
         Ok(m) => {
             println!("\nartifacts in {}:", dir.display());
@@ -78,7 +171,6 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {
-    args.check_known(&["artifacts", "bits", "snr", "seed"])?;
     let n_bits = args.get_usize("bits", 4096)?;
     let snr = args.get_f64("snr", 5.0)?;
     let seed = args.get_u64("seed", 7)?;
@@ -92,29 +184,18 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     let rx = ch.transmit(&tx);
     let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
 
-    let dir = args.get_or("artifacts", "artifacts");
-    // the b64_s48 artifact decodes 96-stage frames: 64 payload + 16/16
-    let tile_cpu = TileConfig { payload: 64, head: 32, tail: 32 };
-    let tile_pjrt = TileConfig { payload: 64, head: 16, tail: 16 };
-    let backends: Vec<(&str, TileConfig, BackendSpec)> = vec![
-        ("scalar", tile_cpu,
-         BackendSpec::Scalar { code: "ccsds".into(), stages: tile_cpu.frame_stages() }),
-        ("cpu-radix2", tile_cpu,
-         backend_from_flags("cpu-radix2", &dir, "", tile_cpu.frame_stages())?),
-        ("cpu-radix4", tile_cpu,
-         backend_from_flags("cpu-radix4", &dir, "", tile_cpu.frame_stages())?),
-        ("pjrt-artifact", tile_pjrt,
-         BackendSpec::artifact(dir.clone(), "radix4_jnp_acc-single_ch-single_b64_s48")),
+    let dir = args.get_or("artifacts", defaults::ARTIFACTS_DIR);
+    // CPU backends use the generous 64+32/32 tile; the artifact default
+    // tile (64+16/16) matches the b64_s48 frame.
+    let builders: Vec<(&str, DecoderBuilder)> = vec![
+        ("scalar", DecoderBuilder::new().backend_name("scalar")?.tile(defaults::CPU_TILE)),
+        ("cpu-radix2", DecoderBuilder::new().backend_name("cpu-radix2")?.tile(defaults::CPU_TILE)),
+        ("cpu-radix4", DecoderBuilder::new().backend_name("cpu-radix4")?.tile(defaults::CPU_TILE)),
+        ("pjrt-artifact", DecoderBuilder::new().artifacts_dir(&dir)),
     ];
-    for (name, tile, spec) in backends {
-        let coord = match Coordinator::start(CoordinatorConfig {
-            backend: spec,
-            tile,
-            max_batch: 64,
-            batch_deadline: Duration::from_micros(200),
-            workers: 2,
-            queue_depth: 256,
-        }) {
+    for (name, builder) in builders {
+        let builder = builder.max_batch(64).batch_deadline_us(200).workers(2).queue_depth(256);
+        let coord = match builder.serve() {
             Ok(c) => c,
             Err(e) => {
                 println!("{name:14} SKIP ({e})");
@@ -134,12 +215,12 @@ fn cmd_selftest(args: &Args) -> Result<()> {
 }
 
 fn cmd_encode(args: &Args) -> Result<()> {
-    args.check_known(&["code", "bits", "seed", "out", "in"])?;
-    let code = registry::lookup(&args.get_or("code", "ccsds"))?;
+    let code = registry::lookup(&args.get_or("code", defaults::CODE))
+        .map_err(|e| Error::config(e))?;
     let mut enc = Encoder::new(code);
     let payload: Vec<u8> = match args.get("in") {
         Some(path) => std::fs::read(path)
-            .with_context(|| format!("reading {path}"))?
+            .or_config(format!("reading {path}"))?
             .iter()
             .flat_map(|b| (0..8).map(move |i| (b >> i) & 1))
             .collect(),
@@ -150,7 +231,7 @@ fn cmd_encode(args: &Args) -> Result<()> {
         Some(path) => {
             let packed = tcvd::util::bitvec::BitVec::from_bits(&coded);
             let bytes: Vec<u8> = packed.words().iter().flat_map(|w| w.to_le_bytes()).collect();
-            std::fs::write(path, bytes)?;
+            std::fs::write(path, bytes).or_pipeline(format!("writing {path}"))?;
             println!("encoded {} info bits -> {} coded bits -> {path}", n_in, coded.len());
         }
         None => println!(
@@ -163,47 +244,24 @@ fn cmd_encode(args: &Args) -> Result<()> {
 }
 
 fn cmd_decode(args: &Args) -> Result<()> {
-    args.check_known(&["in", "out", "artifacts", "variant", "payload", "head", "tail",
-                       "backend", "workers", "batch-deadline-us", "config"])?;
-    let cfg = match args.get("config") {
-        Some(p) => Config::from_file(std::path::Path::new(p))?,
-        None => Config::default(),
-    };
-    let path = args.get("in").context("--in <llr.f32le> is required")?;
-    let raw = std::fs::read(path)?;
-    anyhow::ensure!(raw.len() % 4 == 0, "LLR file must be f32 little-endian");
+    let builder = builder_from_args(args)?;
+    let path = args.get("in").ok_or_else(|| Error::config("--in <llr.f32le> is required"))?;
+    let raw = std::fs::read(path).or_config(format!("reading {path}"))?;
+    if raw.len() % 4 != 0 {
+        return Err(Error::config("LLR file must be f32 little-endian"));
+    }
     let llr: Vec<f32> = raw
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect();
 
-    let tile = TileConfig {
-        payload: args.get_usize("payload", cfg.tile.payload)?,
-        head: args.get_usize("head", cfg.tile.head)?,
-        tail: args.get_usize("tail", cfg.tile.tail)?,
-    };
-    let backend = backend_from_flags(
-        &args.get_or("backend", "artifact"),
-        &args.get_or("artifacts", &cfg.artifacts_dir),
-        &args.get_or("variant", &cfg.variant),
-        tile.frame_stages(),
-    )?;
-    let coord = Coordinator::start(CoordinatorConfig {
-        backend,
-        tile,
-        max_batch: cfg.max_batch,
-        batch_deadline: Duration::from_micros(
-            args.get_u64("batch-deadline-us", cfg.batch_deadline_us)?,
-        ),
-        workers: args.get_usize("workers", cfg.workers)?,
-        queue_depth: cfg.queue_depth,
-    })?;
+    let coord = builder.serve()?;
     let bits = coord.decode_stream_blocking(&llr, false)?;
     let snap = coord.metrics();
     if let Some(p) = args.get("out") {
         let packed = tcvd::util::bitvec::BitVec::from_bits(&bits);
         let bytes: Vec<u8> = packed.words().iter().flat_map(|w| w.to_le_bytes()).collect();
-        std::fs::write(p, bytes)?;
+        std::fs::write(p, bytes).or_pipeline(format!("writing {p}"))?;
     }
     println!(
         "decoded {} bits in {:.3}s ({:.2} Mb/s info) frames={} mean_batch={:.1}",
@@ -218,16 +276,16 @@ fn cmd_decode(args: &Args) -> Result<()> {
 }
 
 fn cmd_ber(args: &Args) -> Result<()> {
-    args.check_known(&["snr", "errors", "max-bits", "backend", "artifacts", "variant",
-                       "payload", "head", "tail", "hard", "exact-llr", "out", "seed"])?;
     let snrs = sweep::parse_range(&args.get_or("snr", "0:6:1"))?;
-    let tile = TileConfig {
-        payload: args.get_usize("payload", 64)?,
-        head: args.get_usize("head", 32)?,
-        tail: args.get_usize("tail", 32)?,
+    // ber defaults to the CPU radix-4 backend with the generous tile;
+    // an explicit --config replaces those defaults wholesale
+    let base = match args.get("config") {
+        Some(p) => DecoderBuilder::from_toml_file(std::path::Path::new(p))?,
+        None => DecoderBuilder::new().backend_name("cpu-radix4")?.tile(defaults::CPU_TILE),
     };
+    let builder = base.apply_flags(args)?;
     let setup = BerSetup {
-        tile,
+        tile: builder.tile_config(),
         target_errors: args.get_usize("errors", 100)?,
         max_bits: args.get_usize("max-bits", 1_000_000)?,
         bits_per_round: 8192,
@@ -235,18 +293,12 @@ fn cmd_ber(args: &Args) -> Result<()> {
         exact_llr: args.get_bool("exact-llr"),
         seed: args.get_u64("seed", 0x7C5D)?,
     };
-    let backend = backend_from_flags(
-        &args.get_or("backend", "cpu-radix4"),
-        &args.get_or("artifacts", "artifacts"),
-        &args.get_or("variant", "radix4_jnp_acc-single_ch-single_b64_s48"),
-        tile.frame_stages(),
-    )?;
-    let mut dec = backend.build()?;
-    let trellis = Trellis::new(registry::paper_code());
+    let mut dec = builder.build()?;
+    let trellis = dec.trellis().clone();
     println!("{:>8} {:>12} {:>12} {:>10}", "Eb/N0", "bits", "errors", "BER");
     let mut points = Vec::new();
     for &db in &snrs {
-        let p = measure_ber(dec.as_mut(), &trellis, db, &setup)?;
+        let p = measure_ber(dec.as_frame_decoder(), &trellis, db, &setup)?;
         println!(
             "{:8.2} {:12} {:12} {:10.3e}{}",
             db,
@@ -259,38 +311,17 @@ fn cmd_ber(args: &Args) -> Result<()> {
     }
     if let Some(out) = args.get("out") {
         let j = sweep::curves_json(&[(dec.label(), points)]);
-        std::fs::write(out, j.to_string_pretty())?;
+        std::fs::write(out, j.to_string_pretty()).or_pipeline(format!("writing {out}"))?;
         println!("wrote {out}");
     }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["sessions", "bits", "snr", "backend", "artifacts", "variant",
-                       "payload", "head", "tail", "workers", "max-batch",
-                       "batch-deadline-us", "seed", "json"])?;
     let sessions = args.get_usize("sessions", 8)?;
     let bits_per_session = args.get_usize("bits", 65536)?;
     let snr = args.get_f64("snr", 5.0)?;
-    let tile = TileConfig {
-        payload: args.get_usize("payload", 64)?,
-        head: args.get_usize("head", 16)?,
-        tail: args.get_usize("tail", 16)?,
-    };
-    let backend = backend_from_flags(
-        &args.get_or("backend", "artifact"),
-        &args.get_or("artifacts", "artifacts"),
-        &args.get_or("variant", "radix4_jnp_acc-single_ch-single_b64_s48"),
-        tile.frame_stages(),
-    )?;
-    let coord = Coordinator::start(CoordinatorConfig {
-        backend,
-        tile,
-        max_batch: args.get_usize("max-batch", 64)?,
-        batch_deadline: Duration::from_micros(args.get_u64("batch-deadline-us", 2000)?),
-        workers: args.get_usize("workers", 2)?,
-        queue_depth: 1024,
-    })?;
+    let coord = builder_from_args(args)?.serve()?;
 
     let seed0 = args.get_u64("seed", 99)?;
     let code = registry::paper_code();
@@ -309,15 +340,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let mut ch = AwgnChannel::new(snr, code.rate(), seed0 ^ ((s as u64) << 8));
                 let rx = ch.transmit(&tx);
                 let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
-                let (mut h, out) = coord.open_session()?;
+                let mut session = coord.open_session()?;
                 for chunk in llr.chunks(2048) {
-                    h.push(chunk)?; // SDR-sized chunks, backpressured
+                    session.push(chunk)?; // SDR-sized chunks, backpressured
                 }
-                h.finish(true)?;
-                let mut decoded = Vec::new();
-                for c in out {
-                    decoded.extend_from_slice(&c);
-                }
+                let decoded = session.finish_and_collect(true)?;
                 let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
                 Ok((decoded.len(), errors))
             }));

@@ -5,7 +5,7 @@
 //! emitted. Larger overlap carries more history and restores BER at the
 //! cost of redundant work — the E3 ablation sweeps this.
 
-use anyhow::{bail, Result};
+use crate::error::{Error, Result};
 
 use super::types::{FrameDecoder, FrameJob};
 
@@ -40,11 +40,17 @@ impl TileConfig {
 pub fn make_frames(llr: &[f32], beta: usize, cfg: &TileConfig,
                    flushed_end: bool) -> Result<Vec<FrameJob>> {
     if llr.len() % beta != 0 {
-        bail!("llr length {} not a multiple of beta {beta}", llr.len());
+        return Err(Error::pipeline(format!(
+            "llr length {} not a multiple of beta {beta}",
+            llr.len()
+        )));
     }
     let n = llr.len() / beta;
     if n % cfg.payload != 0 {
-        bail!("stream stages {n} not a multiple of payload {}", cfg.payload);
+        return Err(Error::pipeline(format!(
+            "stream stages {n} not a multiple of payload {}",
+            cfg.payload
+        )));
     }
     let stages = cfg.frame_stages();
     let n_frames = n / cfg.payload;
@@ -83,8 +89,11 @@ pub fn make_frames(llr: &[f32], beta: usize, cfg: &TileConfig,
 pub fn decode_stream(dec: &mut dyn FrameDecoder, llr: &[f32], beta: usize,
                      cfg: &TileConfig, flushed_end: bool) -> Result<Vec<u8>> {
     if dec.frame_stages() != cfg.frame_stages() {
-        bail!("decoder frame ({}) != tile geometry ({})",
-              dec.frame_stages(), cfg.frame_stages());
+        return Err(Error::pipeline(format!(
+            "decoder frame ({}) != tile geometry ({})",
+            dec.frame_stages(),
+            cfg.frame_stages()
+        )));
     }
     let jobs = make_frames(llr, beta, cfg, flushed_end)?;
     let mut out = Vec::with_capacity(llr.len() / beta);

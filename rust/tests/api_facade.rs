@@ -1,0 +1,233 @@
+//! Facade-level integration tests: `DecoderBuilder` validation, the
+//! TOML -> builder mapping, bit-exact equivalence of the one-shot
+//! `Decoder` with the scalar reference, and a serving smoke test — all
+//! through `tcvd::api` only.
+
+use std::sync::Arc;
+
+use tcvd::api::{BackendKind, DecoderBuilder};
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::cli::Args;
+use tcvd::coding::{registry, trellis::Trellis, Encoder};
+use tcvd::coordinator::BackendSpec;
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::scalar;
+use tcvd::Error;
+
+fn args(line: &str) -> Args {
+    let argv: Vec<String> = line.split_whitespace().map(String::from).collect();
+    Args::parse(&argv).unwrap()
+}
+
+fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut bits = Rng::new(seed).bits(payload_bits - 6);
+    bits.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&bits);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xFACE);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+#[test]
+fn builder_rejects_bad_code_name() {
+    let e = DecoderBuilder::new().code("martian").validate().unwrap_err();
+    assert!(matches!(e, Error::Config(_)), "{e}");
+    assert!(e.to_string().contains("unknown code"), "{e}");
+}
+
+#[test]
+fn builder_rejects_zero_workers() {
+    let e = DecoderBuilder::new().workers(0).validate().unwrap_err();
+    assert!(matches!(e, Error::Config(_)), "{e}");
+}
+
+#[test]
+fn builder_rejects_queue_smaller_than_batch() {
+    let e = DecoderBuilder::new().max_batch(64).queue_depth(4).validate().unwrap_err();
+    assert!(e.to_string().contains("queue_depth"), "{e}");
+}
+
+#[test]
+fn builder_rejects_unknown_backend_and_scheme() {
+    assert!(DecoderBuilder::new().backend_name("gpu-magic").is_err());
+    let e = DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix8"))
+        .validate()
+        .unwrap_err();
+    assert!(e.to_string().contains("packing scheme"), "{e}");
+}
+
+#[test]
+fn toml_maps_onto_builder() {
+    let b = DecoderBuilder::from_toml(
+        r#"
+code = "ccsds"
+backend = "cpu-radix4"
+
+[tile]
+payload = 32
+head = 16
+tail = 16
+
+[coordinator]
+max_batch = 8
+batch_deadline_us = 500
+workers = 3
+queue_depth = 32
+"#,
+    )
+    .unwrap();
+    let cfg = b.to_coordinator_config();
+    assert_eq!(cfg.tile.payload, 32);
+    assert_eq!(cfg.tile.frame_stages(), 64);
+    assert_eq!(cfg.max_batch, 8);
+    assert_eq!(cfg.batch_deadline.as_micros(), 500);
+    assert_eq!(cfg.workers, 3);
+    assert_eq!(cfg.queue_depth, 32);
+    match cfg.backend {
+        BackendSpec::CpuPacked { ref scheme, stages, .. } => {
+            assert_eq!(scheme, "radix4");
+            assert_eq!(stages, 64);
+        }
+        other => panic!("expected CpuPacked, got {other:?}"),
+    }
+}
+
+#[test]
+fn toml_then_cli_flags_override() {
+    let b = DecoderBuilder::from_toml("[coordinator]\nworkers = 3\n")
+        .unwrap()
+        .apply_flags(&args("decode --workers 5 --payload 128 --backend scalar"))
+        .unwrap();
+    let cfg = b.to_coordinator_config();
+    assert_eq!(cfg.workers, 5);
+    assert_eq!(cfg.tile.payload, 128);
+    assert!(matches!(cfg.backend, BackendSpec::Scalar { .. }));
+}
+
+#[test]
+fn bad_flag_values_are_config_errors() {
+    let e = DecoderBuilder::new().apply_flags(&args("decode --payload abc")).unwrap_err();
+    assert!(matches!(e, Error::Config(_)), "{e}");
+}
+
+#[test]
+fn decode_frame_matches_scalar_reference_bit_for_bit() {
+    let t = Arc::new(Trellis::new(registry::paper_code()));
+    let stages = 64;
+    // noisy frame, flushed to state 0 at both ends
+    let mut payload = Rng::new(17).bits(stages - 6);
+    payload.extend_from_slice(&[0; 6]);
+    let mut enc = Encoder::new(t.code().clone());
+    let coded = enc.encode(&payload);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(4.0, 0.5, 99);
+    let rx = ch.transmit(&tx);
+    let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+
+    // reference: scalar Alg 1 + Alg 2 directly
+    let lam0 = scalar::initial_metrics(64, Some(0));
+    let want = scalar::decode(&t, &llr, &lam0, Some(0));
+
+    // facade: scalar backend, whole-frame tile
+    let mut dec = DecoderBuilder::new()
+        .backend(BackendKind::Scalar)
+        .tile_dims(stages, 0, 0)
+        .build()
+        .unwrap();
+    let got = dec.decode_frame(&llr, Some(0), Some(0)).unwrap();
+    assert_eq!(got, want, "facade scalar decode differs from ScalarDecoder path");
+    assert_eq!(got, payload, "4 dB frame should decode clean");
+}
+
+#[test]
+fn decode_stream_through_facade_matches_payload() {
+    let (bits, llr) = noisy_stream(31, 512, 5.0);
+    let mut dec = DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix4"))
+        .tile_dims(64, 32, 32)
+        .build()
+        .unwrap();
+    let got = dec.decode_stream(&llr, true).unwrap();
+    assert_eq!(got, bits);
+}
+
+#[test]
+fn serve_smoke_on_cpu_backend() {
+    let coord = DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix4"))
+        .tile_dims(32, 16, 16)
+        .max_batch(8)
+        .batch_deadline_us(300)
+        .workers(2)
+        .queue_depth(64)
+        .serve()
+        .unwrap();
+    let (bits, llr) = noisy_stream(77, 256, 5.5);
+    let out = coord.decode_stream_blocking(&llr, true).unwrap();
+    assert_eq!(out, bits);
+    let snap = coord.metrics();
+    assert_eq!(snap.frames_in, snap.frames_out);
+    coord.shutdown().unwrap();
+}
+
+/// A fake artifacts dir with a manifest.json whose frame length
+/// disagrees with the tile: the builder must reject the geometry
+/// *before* trying to compile anything; with a matching geometry the
+/// failure is the (typed) artifact-load error instead.
+#[test]
+fn artifact_tile_mismatch_is_config_error() {
+    let dir = std::env::temp_dir().join(format!("tcvd-api-facade-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+  "artifacts": [
+    {
+      "name": "fake_radix4_b8_s16",
+      "path": "fake_radix4_b8_s16.hlo.txt",
+      "scheme": "radix4",
+      "impl": "jnp",
+      "acc": "single",
+      "chan": "single",
+      "batch": 8,
+      "n_steps": 16,
+      "rho": 2,
+      "gamma": 4,
+      "width": 4,
+      "n_ops": 1,
+      "ops_per_stage": 0.5,
+      "renorm_every": 16,
+      "k": 7,
+      "polys_octal": ["171", "133"],
+      "n_states": 64,
+      "stages_per_frame": 32
+    }
+  ]
+}"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+
+    // default tile is 96 stages; the fake artifact frame is 32
+    let e = DecoderBuilder::new()
+        .artifacts_dir(&dir)
+        .variant("fake_radix4")
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(matches!(e, Error::Config(_)), "{e}");
+    assert!(e.to_string().contains("does not match"), "{e}");
+
+    // matching tile (32 = 16 + 8 + 8): geometry passes, artifact load
+    // fails (no HLO / stub runtime) with a typed Artifact error
+    let e2 = DecoderBuilder::new()
+        .artifacts_dir(&dir)
+        .variant("fake_radix4")
+        .tile_dims(16, 8, 8)
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(matches!(e2, Error::Artifact(_)), "{e2}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

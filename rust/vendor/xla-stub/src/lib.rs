@@ -1,0 +1,213 @@
+//! Offline stub of the `xla` (xla-rs) PJRT binding.
+//!
+//! The build image carries no XLA/PJRT shared libraries, so this crate
+//! provides the exact type surface `tcvd::runtime` compiles against:
+//!
+//! * [`Literal`] is fully functional host-side (shape + f32/i32 storage)
+//!   so literal packing round-trips and its tests work.
+//! * [`PjRtClient::cpu`] succeeds and reports itself as a stub, so
+//!   `tcvd info` can print a platform summary.
+//! * [`HloModuleProto::from_text_file`] and [`PjRtClient::compile`]
+//!   always fail with [`UNAVAILABLE`], which makes every artifact
+//!   backend construction fail fast with a clear message — callers
+//!   (selftest, quickstart, the coordinator) already treat that as
+//!   "fall back to a CPU backend".
+//!
+//! To run real AOT artifacts, point the `xla` entry of the root
+//! `Cargo.toml` at the actual xla-rs crate; no tcvd source changes are
+//! required.
+
+use std::error::Error as StdError;
+use std::fmt;
+use std::path::Path;
+
+/// The message every unavailable PJRT entry point reports.
+pub const UNAVAILABLE: &str = "PJRT runtime unavailable: tcvd was built against the vendored \
+     xla stub (offline image); artifact backends are disabled — use a cpu-* or scalar backend, \
+     or rebuild with the real xla-rs crate";
+
+/// Stub error type (message only).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold in this stub.
+pub trait ElementType: Copy {
+    #[doc(hidden)]
+    fn store(v: &[Self]) -> Literal;
+    #[doc(hidden)]
+    fn load(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+/// A host-side literal: flat storage plus a shape.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    f32s: Option<Vec<f32>>,
+    i32s: Option<Vec<i32>>,
+    dims: Vec<i64>,
+}
+
+impl ElementType for f32 {
+    fn store(v: &[Self]) -> Literal {
+        Literal { f32s: Some(v.to_vec()), i32s: None, dims: vec![v.len() as i64] }
+    }
+
+    fn load(lit: &Literal) -> Result<Vec<Self>> {
+        lit.f32s.clone().ok_or_else(|| Error("literal does not hold f32 data".into()))
+    }
+}
+
+impl ElementType for i32 {
+    fn store(v: &[Self]) -> Literal {
+        Literal { f32s: None, i32s: Some(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn load(lit: &Literal) -> Result<Vec<Self>> {
+        lit.i32s.clone().ok_or_else(|| Error("literal does not hold i32 data".into()))
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a flat slice.
+    pub fn vec1<T: ElementType>(v: &[T]) -> Literal {
+        T::store(v)
+    }
+
+    /// Number of stored elements.
+    pub fn element_count(&self) -> usize {
+        match (&self.f32s, &self.i32s) {
+            (Some(v), _) => v.len(),
+            (_, Some(v)) => v.len(),
+            _ => 0,
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    /// Flat copy of the data as `T`.
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        T::load(self)
+    }
+
+    /// Destructure a 2-tuple literal. Tuple literals only come back from
+    /// executions, which this stub cannot run.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module. Never constructible in the stub: parsing is part of
+/// the PJRT runtime surface.
+pub enum HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path;
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation handle (never constructible in the stub).
+pub enum XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match *proto {}
+    }
+}
+
+/// A compiled executable (never constructible in the stub).
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match *self {}
+    }
+}
+
+/// A device buffer (never constructible in the stub).
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match *self {}
+    }
+}
+
+/// The PJRT client. Construction succeeds (so platform info prints);
+/// compilation is where the stub reports unavailability.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn platform_version(&self) -> String {
+        "stub (no PJRT runtime linked; artifact execution disabled)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let lit = Literal::vec1(&data).reshape(&[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&data).reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn client_is_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.platform_version().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+    }
+}
