@@ -89,6 +89,10 @@ fn main() -> tcvd::Result<()> {
              snap.latency_p50_us, snap.latency_p99_us);
     println!("forward/traceback : {:.1} ms / {:.1} ms total",
              snap.forward_ns_total as f64 / 1e6, snap.traceback_ns_total as f64 / 1e6);
+    println!("engine shards     : {} (total steals {})", snap.shards.len(), snap.steals_total());
+    for (i, sh) in snap.shards.iter().enumerate() {
+        println!("  shard {i}: frames={} execs={} steals={}", sh.frames, sh.execs, sh.steals);
+    }
     let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
     coord.shutdown()?;
     Ok(())

@@ -67,7 +67,8 @@ fn main() -> tcvd::Result<()> {
             .variant(variant)
             .tile(tile)
             .workers(3)
-            .queue_depth(2048);
+            .queue_depth(2048)
+            .shards(1); // per-executable ablation: keep one engine
         let coord = match builder.serve() {
             Ok(c) => c,
             Err(e) => {

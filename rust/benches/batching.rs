@@ -1,7 +1,10 @@
 //! E5 — coordinator serving ablation: dynamic-batch size / deadline /
-//! session-count sweep over the PJRT artifact backend. The paper's
-//! throughput rests on frame-parallel launches; this shows how batch
-//! occupancy drives throughput and what it costs in latency.
+//! session-count sweep over the PJRT artifact backend, plus an engine
+//! shard-scaling sweep over the CPU tensor-emulation backend. The
+//! paper's throughput rests on frame-parallel launches; this shows how
+//! batch occupancy drives throughput, what it costs in latency, and how
+//! aggregate throughput scales when `serve()` is sharded across
+//! multiple engine threads.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -9,6 +12,7 @@ mod common;
 use std::sync::Arc;
 
 use tcvd::api::DecoderBuilder;
+use tcvd::defaults;
 use tcvd::util::json::{self, Json};
 
 fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
@@ -19,6 +23,7 @@ fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
             .batch_deadline_us(deadline_us)
             .workers(3)
             .queue_depth(2048)
+            .shards(1) // single engine: isolates the batching policy
             .serve()?,
     );
     let per_session = info_bits / sessions;
@@ -42,6 +47,43 @@ fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
         snap.latency_p50_us,
         snap.latency_p99_us,
     ))
+}
+
+/// Shard-scaling run on the CPU tensor-emulation backend (always
+/// available, unlike the artifact): N sessions decode concurrently
+/// through a coordinator with `shards` engine threads. Outputs are
+/// checked bit-exact against the transmitted payloads, so the sweep
+/// also witnesses the shard-invariance guarantee.
+fn run_sharded(shards: usize, sessions: usize, info_bits: usize)
+               -> tcvd::Result<(f64, f64, u64)> {
+    let coord = Arc::new(
+        DecoderBuilder::new()
+            .backend_name("cpu-radix4")?
+            .tile(defaults::CPU_TILE)
+            .shards(shards)
+            .workers(2)
+            .max_batch(16)
+            .batch_deadline_us(200)
+            .queue_depth(2048)
+            .serve()?,
+    );
+    let per_session = info_bits / sessions;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for i in 0..sessions {
+            let coord = coord.clone();
+            s.spawn(move || {
+                let (payload, llr) = common::workload(9000 + i as u64, per_session, 6.0);
+                let out = coord.decode_stream_blocking(&llr, true).unwrap();
+                assert_eq!(out, payload, "shards={shards} session {i}: output not bit-exact");
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    let coord = Arc::try_unwrap(coord).ok().expect("done");
+    coord.shutdown()?;
+    Ok((common::mbps(info_bits, wall), snap.mean_batch, snap.steals_total()))
 }
 
 fn main() -> tcvd::Result<()> {
@@ -92,10 +134,41 @@ fn main() -> tcvd::Result<()> {
             }
         }
     }
+    // shard scaling: aggregate serve() throughput vs engine shard count
+    // (CPU emulation backend so the sweep runs without artifacts)
+    let shard_bits = if common::full_rigor() { 1_048_576 } else { 262_144 };
+    println!("\nshard scaling — 8 sessions, cpu-radix4 emulation, {shard_bits} info bits");
+    println!("{:>7} | {:>10} {:>11} {:>8} {:>9}", "shards", "Mb/s", "mean_batch", "steals", "speedup");
+    let mut shard_rows = Vec::new();
+    let mut base_mbps = None;
+    for shards in [1usize, 2, 4, 8] {
+        match run_sharded(shards, 8, shard_bits) {
+            Ok((mbps, mean_batch, steals)) => {
+                let base = *base_mbps.get_or_insert(mbps);
+                println!(
+                    "{shards:>7} | {mbps:>10.2} {mean_batch:>11.1} {steals:>8} {:>8.2}x",
+                    mbps / base
+                );
+                shard_rows.push(json::obj(vec![
+                    ("shards", json::num(shards as f64)),
+                    ("mbps", json::num(mbps)),
+                    ("mean_batch", json::num(mean_batch)),
+                    ("steals", json::num(steals as f64)),
+                    ("speedup", json::num(mbps / base)),
+                ]));
+            }
+            Err(e) => {
+                println!("{shards:>7} | SKIP ({e})");
+                break;
+            }
+        }
+    }
     common::write_json("batching", &json::obj(vec![
         ("experiment", json::s("E5/batching")),
         ("info_bits", json::num(info_bits as f64)),
         ("rows", Json::Arr(rows)),
+        ("shard_info_bits", json::num(shard_bits as f64)),
+        ("shard_rows", Json::Arr(shard_rows)),
     ]));
     Ok(())
 }

@@ -17,7 +17,10 @@ use tcvd::util::json::{self, Json};
 
 fn run_combo(variant: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
     // default tile (64+16/16) matches the b64_s48 artifact frames
-    let coord = DecoderBuilder::new().variant(variant).workers(3).queue_depth(2048).serve()?;
+    // single shard: Table-I numbers are per-executable; shard scaling
+    // is the batching bench's sweep
+    let coord =
+        DecoderBuilder::new().variant(variant).workers(3).queue_depth(2048).shards(1).serve()?;
     // split across 4 concurrent sessions to keep batches full
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {

@@ -2,36 +2,51 @@
 //! configuration to the serving pipeline.
 //!
 //! Everything the CLI, the examples, the benches and downstream users
-//! construct goes through [`DecoderBuilder`]:
+//! construct goes through [`DecoderBuilder`]. One-shot decoding
+//! (offline / BER studies):
 //!
-//! ```no_run
+//! ```
 //! use tcvd::api::{BackendKind, DecoderBuilder};
 //!
 //! let llr = vec![0.0f32; 128 * 2]; // 128 trellis stages of rate-1/2 LLRs
-//!
-//! // one-shot decoding (offline / BER studies)
 //! let mut dec = DecoderBuilder::new()
 //!     .backend(BackendKind::cpu("radix4"))
 //!     .tile_dims(64, 32, 32)
 //!     .build()?;
 //! let bits = dec.decode_stream(&llr, true)?;
 //! assert_eq!(bits.len(), 128);
-//!
-//! // streaming serving pipeline (many concurrent sessions)
-//! let coord = DecoderBuilder::new()
-//!     .backend_name("artifact")?
-//!     .workers(3)
-//!     .serve()?;
-//! let mut session = coord.open_session()?;
-//! session.push(&llr)?;
-//! session.finish(true)?;
-//! for _chunk in session { /* in-order decoded payload bits */ }
 //! # Ok::<(), tcvd::Error>(())
 //! ```
 //!
-//! The builder validates at [`DecoderBuilder::build`]/
-//! [`DecoderBuilder::serve`] and reports failures as the typed
-//! [`tcvd::Error`](crate::Error); `anyhow` never crosses this boundary.
+//! The streaming serving pipeline fans sessions out across engine
+//! shards ([`DecoderBuilder::shards`], default: available parallelism)
+//! and delivers each session's decoded payload strictly in order:
+//!
+//! ```
+//! use tcvd::api::{BackendKind, DecoderBuilder};
+//!
+//! let coord = DecoderBuilder::new()
+//!     .backend(BackendKind::cpu("radix4"))
+//!     .tile_dims(32, 16, 16)
+//!     .shards(2)
+//!     .workers(2)
+//!     .serve()?;
+//! let mut session = coord.open_session()?;
+//! session.push(&vec![0.5f32; 32 * 2])?; // one payload tile of LLRs
+//! let bits = session.finish_and_collect(false)?;
+//! assert_eq!(bits.len(), 32);
+//! coord.shutdown()?;
+//! # Ok::<(), tcvd::Error>(())
+//! ```
+//!
+//! The production backend is the AOT PJRT artifact
+//! ([`BackendKind::Artifact`], the default — needs `make artifacts`);
+//! the CPU backends emulate the same tensor arithmetic and are used
+//! throughout the tests. The builder validates at
+//! [`DecoderBuilder::build`]/[`DecoderBuilder::serve`] and reports
+//! failures as the typed [`tcvd::Error`](crate::Error); `anyhow` never
+//! crosses this boundary. The pipeline architecture behind `serve()` is
+//! documented in `docs/ARCHITECTURE.md`.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -50,7 +65,7 @@ use crate::viterbi::types::{FrameDecoder, FrameJob};
 
 pub use crate::channel::quantize::ChannelPrecision;
 pub use crate::viterbi::tiled::TileConfig;
-pub use crate::coordinator::{MetricsSnapshot, Session, SessionHandle};
+pub use crate::coordinator::{MetricsSnapshot, Session, SessionHandle, ShardSnapshot};
 pub use crate::error::{Error, Result};
 pub use crate::util::half::HalfKind;
 pub use crate::viterbi::types::AccPrecision;
@@ -113,6 +128,7 @@ pub struct DecoderBuilder {
     batch_deadline: Duration,
     workers: usize,
     queue_depth: usize,
+    shards: usize,
 }
 
 impl Default for DecoderBuilder {
@@ -130,6 +146,7 @@ impl Default for DecoderBuilder {
             batch_deadline: Duration::from_micros(defaults::BATCH_DEADLINE_US),
             workers: defaults::WORKERS,
             queue_depth: defaults::QUEUE_DEPTH,
+            shards: defaults::default_shards(),
         }
     }
 }
@@ -254,6 +271,19 @@ impl DecoderBuilder {
         self
     }
 
+    /// Engine shards: how many backend instances the pipeline runs,
+    /// each on its own thread with its own work queue. The dispatcher
+    /// routes frames to a session's home shard by affinity hash and
+    /// idle shards steal work, so aggregate `serve()` throughput scales
+    /// with the shard count until the machine saturates. The one-shot
+    /// [`Decoder::decode_stream`] also fans frames out across this many
+    /// lanes. Default: available parallelism
+    /// ([`crate::defaults::default_shards`]).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
     /// Build a builder from a parsed [`Config`] (the TOML view).
     pub fn from_config(cfg: &Config) -> Result<DecoderBuilder> {
         let b = DecoderBuilder {
@@ -265,6 +295,7 @@ impl DecoderBuilder {
             batch_deadline: Duration::from_micros(cfg.batch_deadline_us),
             workers: cfg.workers,
             queue_depth: cfg.queue_depth,
+            shards: cfg.shards,
             ..DecoderBuilder::new()
         };
         b.backend_name(&cfg.backend)
@@ -305,6 +336,7 @@ impl DecoderBuilder {
             args.get_u64("batch-deadline-us", self.batch_deadline.as_micros() as u64)?,
         );
         self.queue_depth = args.get_usize("queue-depth", self.queue_depth)?;
+        self.shards = args.get_usize("shards", self.shards)?;
         self.renorm_every = args.get_usize("renorm-every", self.renorm_every)?;
         Ok(self)
     }
@@ -328,6 +360,9 @@ impl DecoderBuilder {
         }
         if self.workers == 0 {
             return Err(Error::config("workers must be positive"));
+        }
+        if self.shards == 0 {
+            return Err(Error::config("shards must be positive"));
         }
         if self.max_batch == 0 {
             return Err(Error::config("max_batch must be positive"));
@@ -389,6 +424,7 @@ impl DecoderBuilder {
             batch_deadline: self.batch_deadline,
             workers: self.workers,
             queue_depth: self.queue_depth,
+            shards: self.shards,
         }
     }
 
@@ -426,7 +462,8 @@ impl DecoderBuilder {
         self.validate()?;
         self.check_artifact_geometry()?;
         let tile = self.tile;
-        let inner = self.to_backend_spec().build()?;
+        let spec = self.to_backend_spec();
+        let inner = spec.build()?;
         if inner.frame_stages() != tile.frame_stages() {
             return Err(Error::config(format!(
                 "backend frame ({} stages) does not match tile geometry ({} stages)",
@@ -435,7 +472,7 @@ impl DecoderBuilder {
             )));
         }
         let beta = inner.trellis().code().beta();
-        Ok(Decoder { inner, tile, beta })
+        Ok(Decoder { inner, spec, tile, beta, shards: self.shards })
     }
 
     /// Start the streaming serving pipeline and return the running
@@ -505,6 +542,15 @@ pub fn builder_flags() -> Vec<FlagSpec> {
             format!("input queue depth in frames (default {})", defaults::QUEUE_DEPTH),
         ),
         FlagSpec::new(
+            "shards",
+            "N",
+            format!(
+                "engine shards, one backend instance each (default: available \
+                 parallelism, {} here)",
+                defaults::default_shards()
+            ),
+        ),
+        FlagSpec::new(
             "renorm-every",
             "N",
             format!(
@@ -515,13 +561,38 @@ pub fn builder_flags() -> Vec<FlagSpec> {
     ]
 }
 
+/// Minimum frames a [`Decoder::decode_stream`] fan-out lane must
+/// receive before spawning it is worth the lane's backend
+/// construction.
+pub const MIN_FRAMES_PER_LANE: usize = 4;
+
+/// Decode `jobs` through `dec` in backend-sized batches, one emitted
+/// bit vector per frame.
+fn decode_jobs(dec: &mut dyn FrameDecoder, jobs: &[FrameJob]) -> Vec<Vec<u8>> {
+    let mut out = Vec::with_capacity(jobs.len());
+    for batch in jobs.chunks(dec.max_batch().max(1)) {
+        out.extend(dec.decode_batch(batch));
+    }
+    out
+}
+
 /// A one-shot decoder built by [`DecoderBuilder::build`]: wraps the
 /// scalar / packed / artifact frame decoders behind one interface for
 /// offline decoding and BER measurement.
+///
+/// [`decode_stream`](Decoder::decode_stream) fans frames out across
+/// [`DecoderBuilder::shards`] parallel lanes (each lane builds its own
+/// backend instance from the same spec), so offline decoding of long
+/// streams scales with the core count while staying bit-identical to
+/// the single-lane result.
 pub struct Decoder {
     inner: Box<dyn FrameDecoder>,
+    /// The lowered spec, recloned per fan-out lane (backends are not
+    /// `Send`, so each lane builds its own instance in-thread).
+    spec: BackendSpec,
     tile: TileConfig,
     beta: usize,
+    shards: usize,
 }
 
 impl Decoder {
@@ -556,12 +627,54 @@ impl Decoder {
         Ok(out.remove(0))
     }
 
-    /// Decode a whole LLR stream through the reference tiler (frames
-    /// cut per the builder's tile geometry, payload bits reassembled in
-    /// order). The stream must cover a whole number of payload tiles;
-    /// `flushed_end` marks an encoder flushed to state 0.
+    /// Decode a whole LLR stream (frames cut per the builder's tile
+    /// geometry, payload bits reassembled in order). The stream must
+    /// cover a whole number of payload tiles; `flushed_end` marks an
+    /// encoder flushed to state 0.
+    ///
+    /// With [`DecoderBuilder::shards`] > 1 the frames are decoded on up
+    /// to that many parallel lanes (frame decoding is independent
+    /// across frames — the paper's parallelism source), each lane
+    /// building its own backend instance from the spec; the output is
+    /// bit-identical to the single-lane reference tiler for every lane
+    /// count. Because lane backends cannot outlive the call (they are
+    /// not `Send`, so they live on the transient lane threads), a lane
+    /// is only opened when it has at least [`MIN_FRAMES_PER_LANE`]
+    /// frames to amortize its backend construction; short streams
+    /// decode on the caller thread with the already-built backend.
     pub fn decode_stream(&mut self, llr: &[f32], flushed_end: bool) -> Result<Vec<u8>> {
-        tiled::decode_stream(self.inner.as_mut(), llr, self.beta, &self.tile, flushed_end)
+        let jobs = tiled::make_frames(llr, self.beta, &self.tile, flushed_end)?;
+        let lanes = self.shards.min(jobs.len() / MIN_FRAMES_PER_LANE).max(1);
+        if lanes == 1 {
+            // single lane: reuse the already-built backend directly
+            return Ok(decode_jobs(self.inner.as_mut(), &jobs).concat());
+        }
+        let per_lane = jobs.len().div_ceil(lanes);
+        let chunks: Vec<&[FrameJob]> = jobs.chunks(per_lane).collect();
+        let spec = &self.spec;
+        let inner = self.inner.as_mut();
+        let mut parts: Vec<Result<Vec<Vec<u8>>>> = Vec::with_capacity(chunks.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for chunk in &chunks[1..] {
+                handles.push(scope.spawn(move || -> Result<Vec<Vec<u8>>> {
+                    let mut dec = spec.build()?;
+                    Ok(decode_jobs(dec.as_mut(), chunk))
+                }));
+            }
+            // lane 0 runs on the caller thread with the existing backend
+            parts.push(Ok(decode_jobs(inner, chunks[0])));
+            for h in handles {
+                parts.push(h.join().expect("decode lane panicked"));
+            }
+        });
+        let mut out = Vec::with_capacity(llr.len() / self.beta);
+        for part in parts {
+            for bits in part? {
+                out.extend_from_slice(&bits);
+            }
+        }
+        Ok(out)
     }
 
     /// Trellis stages per frame.
@@ -610,6 +723,24 @@ mod tests {
     fn zero_workers_rejected() {
         let e = DecoderBuilder::new().workers(0).validate().unwrap_err();
         assert!(e.to_string().contains("workers"), "{e}");
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let e = DecoderBuilder::new().shards(0).validate().unwrap_err();
+        assert!(e.to_string().contains("shards"), "{e}");
+    }
+
+    #[test]
+    fn shards_flow_into_coordinator_config() {
+        let cfg = DecoderBuilder::new().shards(5).to_coordinator_config();
+        assert_eq!(cfg.shards, 5);
+        let argv: Vec<String> =
+            ["serve", "--shards", "3"].iter().map(|s| s.to_string()).collect();
+        let b = DecoderBuilder::new()
+            .apply_flags(&crate::cli::Args::parse(&argv).unwrap())
+            .unwrap();
+        assert_eq!(b.to_coordinator_config().shards, 3);
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //!
 //! Flags are `--key value` pairs and boolean `--switch`es. Each
 //! subcommand in `main.rs` declares a [`CommandSpec`] — largely
-//! generated from the `api::DecoderBuilder` option set — which rejects
-//! unknown flags (typos fail instead of being silently ignored) and
-//! renders the per-subcommand `--help` text.
+//! generated from the `api::DecoderBuilder` option set
+//! (`api::builder_flags`), so a new builder option (e.g. `--shards`)
+//! appears on every pipeline-constructing subcommand with its default
+//! rendered into the help text. Specs reject unknown flags (typos fail
+//! instead of being silently ignored) and render the per-subcommand
+//! `--help` text.
 
 use std::collections::BTreeMap;
 

@@ -88,7 +88,7 @@ fn fill3_i(o: usize, a: usize, b: usize, v: i32) -> Vec<Vec<Vec<i32>>> {
     vec![vec![vec![v; b]; a]; o]
 }
 
-/// Theta_f of a butterfly (Eq 17): [4][beta] of ±1, row order
+/// Theta_f of a butterfly (Eq 17): `[4][beta]` of ±1, row order
 /// (i0,j0),(i1,j0),(i0,j1),(i1,j1).
 fn theta_butterfly(t: &Trellis, f: u32) -> Vec<Vec<f32>> {
     let beta = t.code().beta();

@@ -4,7 +4,7 @@
 //! * state = previous k-1 input bits, newest at MSB;
 //! * next state on input u: `(u << (k-2)) | (state >> 1)`;
 //! * polynomial MSB multiplies the current input bit (paper Eq 1);
-//! * branch output bit b = parity(poly[b] & ((u << (k-1)) | state)).
+//! * branch output bit b = parity of `poly[b] & ((u << (k-1)) | state)`.
 
 use anyhow::{bail, Result};
 

@@ -40,11 +40,11 @@ pub fn bits_field(x: u32, hi: u32, lo: u32) -> u32 {
 #[derive(Clone, Debug)]
 pub struct Trellis {
     code: Code,
-    /// next[state][u] — successor state.
+    /// `next[state][u]` — successor state.
     pub next: Vec<[u32; 2]>,
-    /// out[state][u] — beta-bit branch output.
+    /// `out[state][u]` — beta-bit branch output.
     pub out: Vec<[u32; 2]>,
-    /// prev[state] — the two predecessors (low index first).
+    /// `prev[state]` — the two predecessors (low index first).
     pub prev: Vec<[u32; 2]>,
 }
 

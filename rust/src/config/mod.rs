@@ -35,6 +35,8 @@ pub struct Config {
     pub workers: usize,
     /// Bounded queue depth (frames) before backpressure.
     pub queue_depth: usize,
+    /// Engine shards (backend instances); default: available parallelism.
+    pub shards: usize,
 }
 
 impl Default for Config {
@@ -49,6 +51,7 @@ impl Default for Config {
             batch_deadline_us: defaults::BATCH_DEADLINE_US,
             workers: defaults::WORKERS,
             queue_depth: defaults::QUEUE_DEPTH,
+            shards: defaults::default_shards(),
         }
     }
 }
@@ -102,6 +105,9 @@ impl Config {
         if let Some(v) = doc.get("coordinator", "queue_depth") {
             cfg.queue_depth = v.as_usize().or_config("coordinator.queue_depth")?;
         }
+        if let Some(v) = doc.get("coordinator", "shards") {
+            cfg.shards = v.as_usize().or_config("coordinator.shards")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -117,6 +123,9 @@ impl Config {
         }
         if self.workers == 0 {
             return Err(Error::config("workers must be positive"));
+        }
+        if self.shards == 0 {
+            return Err(Error::config("shards must be positive"));
         }
         if self.queue_depth < self.max_batch {
             return Err(Error::config(format!(
@@ -165,6 +174,7 @@ max_batch = 8
 batch_deadline_us = 500
 workers = 4
 queue_depth = 64
+shards = 6
 "#,
         )
         .unwrap();
@@ -173,6 +183,7 @@ queue_depth = 64
         assert_eq!(cfg.tile.payload, 128);
         assert_eq!(cfg.max_batch, 8);
         assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.shards, 6);
     }
 
     #[test]
@@ -180,5 +191,6 @@ queue_depth = 64
         let e = Config::from_toml("[coordinator]\nmax_batch = 0\n").unwrap_err();
         assert!(matches!(e, Error::Config(_)), "{e}");
         assert!(Config::from_toml("[coordinator]\nqueue_depth = 1\n").is_err());
+        assert!(Config::from_toml("[coordinator]\nshards = 0\n").is_err());
     }
 }

@@ -1,10 +1,13 @@
-//! Backend construction for the engine thread. PJRT executables are not
-//! `Send`, so the spec (plain data) crosses the thread boundary and the
-//! backend is built *inside* the engine thread.
+//! Backend construction for the engine shards. PJRT executables are
+//! not `Send`, so the spec (plain data) crosses the thread boundary and
+//! each engine shard builds its *own* backend instance inside its
+//! thread — N shards means N independent executables, which is exactly
+//! what lets their forward passes run concurrently.
 //!
 //! `BackendSpec` is an internal lowering target: user-facing code
 //! configures backends through `api::DecoderBuilder`, which is the only
-//! place specs are constructed from user parameters.
+//! place specs are constructed from user parameters. The recipe for
+//! adding a new backend lives in `docs/ARCHITECTURE.md`.
 
 use std::path::PathBuf;
 use std::sync::Arc;

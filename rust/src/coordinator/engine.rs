@@ -1,9 +1,11 @@
-//! The execution engine thread: dynamic batching + the tensor forward
-//! pass. One engine thread owns the (non-`Send`) PJRT executable —
-//! serializing launches exactly like a CUDA stream — and ships raw
-//! survivors to the traceback worker pool.
+//! The execution engine shards: dynamic batching + the tensor forward
+//! pass. Each shard thread owns one (non-`Send`) backend instance —
+//! serializing launches exactly like a CUDA stream — pulls frames from
+//! its own work queue (stealing from siblings when idle), and ships raw
+//! survivors to the shared traceback worker pool.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -14,7 +16,11 @@ use crate::viterbi::types::RawFrame;
 
 use super::backend::BackendSpec;
 use super::metrics::Metrics;
+use super::shard::{self, Pop, ShardQueue};
 use super::{DecodedFrame, FrameTask};
+
+/// How often an idle shard re-scans sibling queues for stealable work.
+pub const STEAL_POLL: Duration = Duration::from_micros(200);
 
 /// Dynamic batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -31,14 +37,22 @@ pub struct RawTask {
     pub raw: RawFrame,
 }
 
-/// Run the engine loop (call from a dedicated thread). Signals readiness
-/// (or a startup error) through `ready`, then batches `rx` into
-/// executions until the channel closes.
-pub fn run_engine(
+/// Run one engine shard loop (call from a dedicated thread).
+///
+/// Builds the backend *inside* the thread (PJRT executables are not
+/// `Send`), signals readiness — or a startup error — through `ready`,
+/// then batches its queue (`queues[shard_idx]`) into executions until
+/// the dispatcher closes every shard queue. An idle shard steals the
+/// oldest frame from the deepest sibling queue rather than sleeping.
+/// The last shard to exit closes the raw-survivor queue so the shared
+/// traceback pool winds down; `live` counts the shards still running.
+pub fn run_engine_shard(
+    shard_idx: usize,
     spec: BackendSpec,
     policy: BatchPolicy,
-    rx: Receiver<FrameTask>,
+    queues: Arc<Vec<ShardQueue>>,
     out: Arc<Queue<RawTask>>,
+    live: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
     ready: SyncSender<Result<(usize, Arc<Trellis>)>>, // (frame_stages, trellis)
 ) {
@@ -49,50 +63,64 @@ pub fn run_engine(
         }
         Err(e) => {
             let _ = ready.send(Err(e));
-            out.close();
+            if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+                out.close();
+            }
             return;
         }
     };
+    let own = &queues[shard_idx];
+    let stats = metrics.shard(shard_idx);
     let max_batch = policy.max_batch.min(dec.max_batch()).max(1);
     let mut batch: Vec<FrameTask> = Vec::with_capacity(max_batch);
 
-    loop {
-        // block for the first frame of the batch
-        match rx.recv() {
-            Ok(t) => batch.push(t),
-            Err(_) => break, // input closed, all work drained
-        }
+    'serve: loop {
+        // acquire the first frame of the batch: own queue first, else
+        // steal from the deepest sibling (work-stealing for idle shards)
+        let first = loop {
+            match own.pop_timeout(STEAL_POLL) {
+                Pop::Item(t) => break t,
+                Pop::Closed => break 'serve, // shutdown: all queues drain
+                Pop::Timeout => {
+                    if let Some(t) = shard::steal(&queues, shard_idx) {
+                        stats.steals.fetch_add(1, Ordering::Relaxed);
+                        break t;
+                    }
+                }
+            }
+        };
         let t0 = Instant::now();
-        // fill until full or deadline
+        batch.push(first);
+        // fill from the own queue until full or deadline
         while batch.len() < max_batch {
-            let left = policy.deadline.checked_sub(t0.elapsed());
-            match left {
+            match policy.deadline.checked_sub(t0.elapsed()) {
                 None => break,
-                Some(d) => match rx.recv_timeout(d) {
-                    Ok(t) => batch.push(t),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
+                Some(left) => match own.pop_timeout(left) {
+                    Pop::Item(t) => batch.push(t),
+                    Pop::Timeout | Pop::Closed => break,
                 },
             }
         }
-        // execute
+        // execute the forward pass
         let jobs: Vec<_> = batch.iter().map(|t| t.job.clone()).collect();
         let fwd_start = Instant::now();
         let raws = dec.forward_batch(&jobs);
-        metrics.record_exec(batch.len(), fwd_start.elapsed().as_nanos() as u64);
+        metrics.record_exec(shard_idx, batch.len(), fwd_start.elapsed().as_nanos() as u64);
+        stats.queue_depth.store(own.len() as u64, Ordering::Relaxed);
         for (task, raw) in batch.drain(..).zip(raws) {
             if !out.push(RawTask { task, raw }) {
-                out.close();
-                return; // downstream gone
+                break 'serve; // downstream gone
             }
         }
     }
-    out.close(); // input drained: let workers wind down
+    if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+        out.close(); // every shard drained: let the traceback pool wind down
+    }
 }
 
 /// Run a traceback worker loop (call from worker threads). Pulls raw
-/// frames from the shared queue, runs Alg 2, emits decoded frames to the
-/// reassembler.
+/// frames from the queue shared by all engine shards, runs Alg 2, and
+/// emits decoded frames to the reassembler.
 pub fn run_traceback_worker(
     trellis: Arc<Trellis>,
     rx: Arc<Queue<RawTask>>,

@@ -1,6 +1,9 @@
 //! Streaming framer: the incremental version of `viterbi::tiled::
 //! make_frames`, producing identical frames from chunked input (verified
-//! against it in tests).
+//! against it in tests). Frames carry monotonically increasing
+//! per-session sequence numbers, which is all the downstream pipeline
+//! (dispatcher, shards, reassembly) needs to restore order — the framer
+//! is the single point where a stream's framing is decided.
 
 use crate::viterbi::tiled::TileConfig;
 use crate::viterbi::types::FrameJob;

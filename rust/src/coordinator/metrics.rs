@@ -1,4 +1,12 @@
-//! Pipeline metrics: throughput, latency percentiles, batch occupancy.
+//! Pipeline metrics: throughput, latency percentiles, batch occupancy,
+//! and per-shard counters (queue depth, frames decoded, steal count).
+//!
+//! One [`Metrics`] hub is shared by every pipeline stage; sessions read
+//! point-in-time [`MetricsSnapshot`]s through
+//! [`Session::metrics`](super::Session::metrics). The global counters
+//! aggregate across shards; `shards[i]` isolates engine shard `i`, and
+//! the per-shard `frames`/`execs` counters always sum to the global
+//! `frames_out`/`execs` once a workload has drained.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -6,6 +14,19 @@ use std::time::Instant;
 
 use crate::util::json::{self, Json};
 use crate::util::stats::LogHistogram;
+
+/// Counters for one engine shard.
+#[derive(Default)]
+pub struct ShardStats {
+    /// Frames this shard ran the forward pass for.
+    pub frames: AtomicU64,
+    /// Batched executions this shard launched.
+    pub execs: AtomicU64,
+    /// Frames this shard stole from sibling queues while idle.
+    pub steals: AtomicU64,
+    /// Last observed depth of this shard's work queue (gauge).
+    pub queue_depth: AtomicU64,
+}
 
 /// Shared metrics hub (updated by every pipeline stage).
 pub struct Metrics {
@@ -17,12 +38,20 @@ pub struct Metrics {
     pub exec_frames: AtomicU64,
     pub forward_ns: AtomicU64,
     pub traceback_ns: AtomicU64,
+    shards: Vec<ShardStats>,
     latency: Mutex<LogHistogram>,
     occupancy: Mutex<LogHistogram>,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
+        Metrics::new(1)
+    }
+}
+
+impl Metrics {
+    /// A metrics hub for a pipeline with `n_shards` engine shards.
+    pub fn new(n_shards: usize) -> Self {
         Metrics {
             start: Instant::now(),
             frames_in: AtomicU64::new(0),
@@ -32,24 +61,30 @@ impl Default for Metrics {
             exec_frames: AtomicU64::new(0),
             forward_ns: AtomicU64::new(0),
             traceback_ns: AtomicU64::new(0),
+            shards: (0..n_shards.max(1)).map(|_| ShardStats::default()).collect(),
             latency: Mutex::new(LogHistogram::new()),
             occupancy: Mutex::new(LogHistogram::new()),
         }
     }
-}
 
-impl Metrics {
-    pub fn new() -> Self {
-        Self::default()
+    /// The counters of engine shard `i`.
+    pub fn shard(&self, i: usize) -> &ShardStats {
+        &self.shards[i]
     }
 
-    pub fn record_exec(&self, frames: usize, forward_ns: u64) {
+    /// Record one batched execution by shard `shard` covering `frames`
+    /// frames.
+    pub fn record_exec(&self, shard: usize, frames: usize, forward_ns: u64) {
         self.execs.fetch_add(1, Ordering::Relaxed);
         self.exec_frames.fetch_add(frames as u64, Ordering::Relaxed);
         self.forward_ns.fetch_add(forward_ns, Ordering::Relaxed);
+        let s = &self.shards[shard];
+        s.execs.fetch_add(1, Ordering::Relaxed);
+        s.frames.fetch_add(frames as u64, Ordering::Relaxed);
         self.occupancy.lock().unwrap().record(frames as u64);
     }
 
+    /// Record one decoded frame delivered to the reassembler.
     pub fn record_delivery(&self, bits: usize, enq: Instant, traceback_ns: u64) {
         self.frames_out.fetch_add(1, Ordering::Relaxed);
         self.bits_out.fetch_add(bits as u64, Ordering::Relaxed);
@@ -74,8 +109,31 @@ impl Metrics {
             traceback_ns_total: self.traceback_ns.load(Ordering::Relaxed),
             latency_p50_us: lat.percentile(50.0) as f64 / 1e3,
             latency_p99_us: lat.percentile(99.0) as f64 / 1e3,
+            shards: self
+                .shards
+                .iter()
+                .map(|s| ShardSnapshot {
+                    frames: s.frames.load(Ordering::Relaxed),
+                    execs: s.execs.load(Ordering::Relaxed),
+                    steals: s.steals.load(Ordering::Relaxed),
+                    queue_depth: s.queue_depth.load(Ordering::Relaxed),
+                })
+                .collect(),
         }
     }
+}
+
+/// Point-in-time view of one engine shard's counters.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    /// Frames this shard ran the forward pass for.
+    pub frames: u64,
+    /// Batched executions this shard launched.
+    pub execs: u64,
+    /// Frames this shard stole from sibling queues while idle.
+    pub steals: u64,
+    /// Last observed depth of this shard's work queue.
+    pub queue_depth: u64,
 }
 
 /// A point-in-time view of the metrics.
@@ -92,9 +150,16 @@ pub struct MetricsSnapshot {
     pub traceback_ns_total: u64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
+    /// Per-shard counters, indexed by shard id.
+    pub shards: Vec<ShardSnapshot>,
 }
 
 impl MetricsSnapshot {
+    /// Total frames stolen across all shards.
+    pub fn steals_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.steals).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("elapsed_s", json::num(self.elapsed_s)),
@@ -108,6 +173,22 @@ impl MetricsSnapshot {
             ("traceback_ns_total", json::num(self.traceback_ns_total as f64)),
             ("latency_p50_us", json::num(self.latency_p50_us)),
             ("latency_p99_us", json::num(self.latency_p99_us)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("frames", json::num(s.frames as f64)),
+                                ("execs", json::num(s.execs as f64)),
+                                ("steals", json::num(s.steals as f64)),
+                                ("queue_depth", json::num(s.queue_depth as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -118,9 +199,9 @@ mod tests {
 
     #[test]
     fn snapshot_math() {
-        let m = Metrics::new();
-        m.record_exec(8, 1000);
-        m.record_exec(4, 1000);
+        let m = Metrics::new(2);
+        m.record_exec(0, 8, 1000);
+        m.record_exec(1, 4, 1000);
         let t = Instant::now();
         m.record_delivery(64, t, 500);
         m.record_delivery(64, t, 500);
@@ -132,5 +213,32 @@ mod tests {
         assert!(s.throughput_bps > 0.0);
         let j = s.to_json().to_string_pretty();
         assert!(j.contains("throughput_bps"));
+        assert!(j.contains("steals"));
+    }
+
+    #[test]
+    fn shard_counters_isolate_and_sum() {
+        let m = Metrics::new(3);
+        m.record_exec(0, 5, 10);
+        m.record_exec(2, 3, 10);
+        m.shard(2).steals.fetch_add(2, Ordering::Relaxed);
+        m.shard(1).queue_depth.store(7, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shards.len(), 3);
+        assert_eq!(s.shards[0].frames, 5);
+        assert_eq!(s.shards[1].frames, 0);
+        assert_eq!(s.shards[2].frames, 3);
+        assert_eq!(s.shards[1].queue_depth, 7);
+        assert_eq!(s.steals_total(), 2);
+        let shard_frames: u64 = s.shards.iter().map(|sh| sh.frames).sum();
+        assert_eq!(shard_frames, 8);
+        let shard_execs: u64 = s.shards.iter().map(|sh| sh.execs).sum();
+        assert_eq!(shard_execs, s.execs);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let m = Metrics::new(0);
+        assert_eq!(m.snapshot().shards.len(), 1);
     }
 }

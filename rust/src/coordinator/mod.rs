@@ -2,19 +2,42 @@
 //! tensor-formulated decoder).
 //!
 //! Shape: a vLLM-router-like pipeline specialized for convolutional
-//! decoding. Many concurrent *sessions* (radio streams) push LLR chunks;
-//! a per-session **framer** cuts them into overlapped frames (§III
-//! tiling); a **dynamic batcher** packs frames from all sessions into
-//! full artifact batches (size + deadline policy); the **engine thread**
-//! owns the PJRT executable and runs the tensor forward pass; a
-//! **traceback worker pool** runs the backward procedure (the paper's
-//! scalar-core stage); the **reassembler** restores per-session bit
-//! order and delivers in-order decoded payloads with backpressure end to
-//! end. Python is never on this path.
+//! decoding. Many concurrent *sessions* (radio streams) push LLR
+//! chunks; a per-session **framer** cuts them into overlapped frames
+//! (§III tiling); a **dispatcher** routes each frame to its session's
+//! home **engine shard** by affinity hash — every shard owns a private
+//! backend instance (the PJRT executable or its CPU emulation), a
+//! bounded work queue and a **dynamic batcher**, and idle shards steal
+//! from the deepest sibling queue; a shared **traceback worker pool**
+//! runs the backward procedure (the paper's scalar-core stage); the
+//! **reassembler** restores per-session bit order and delivers in-order
+//! decoded payloads with backpressure end to end. Python is never on
+//! this path.
+//!
+//! ```text
+//! sessions ──framer──▶ input ──dispatcher──▶ shard queues ──engines──▶
+//!   raw survivors ──traceback pool──▶ reassembly ──▶ per-session output
+//! ```
+//!
+//! Guarantees (documented in full in `docs/ARCHITECTURE.md`):
+//!
+//! * **Ordering** — each session's decoded payload chunks arrive in
+//!   stream order, regardless of which shard decoded which frame or in
+//!   what order frames finished.
+//! * **Determinism** — decoded bits are a pure function of the LLR
+//!   stream and the decoder configuration; the shard count and thread
+//!   scheduling never change the output.
+//! * **Backpressure** — `Session::push` blocks once the input channel
+//!   plus the shard queues are full; frames are never dropped.
+//!
+//! Construction goes through [`crate::api::DecoderBuilder::serve`]; the
+//! shard count comes from [`crate::api::DecoderBuilder::shards`]
+//! (default: available parallelism).
 
 pub mod framer;
 pub mod metrics;
 pub mod backend;
+pub mod shard;
 pub mod engine;
 pub mod reassembly;
 pub mod server;
@@ -24,8 +47,9 @@ use std::time::Instant;
 use crate::viterbi::types::FrameJob;
 
 pub use backend::BackendSpec;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use server::{Coordinator, Session, SessionHandle};
+pub use shard::home_shard;
 
 /// A frame travelling through the pipeline.
 #[derive(Clone, Debug)]

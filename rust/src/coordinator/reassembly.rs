@@ -1,6 +1,16 @@
 //! Per-session in-order reassembly: decoded frames arrive out of order
-//! from the worker pool; each session's payload bits are delivered to its
-//! consumer strictly in sequence.
+//! from the worker pool — and, with a sharded coordinator, from frames
+//! decoded on different engine shards in any interleaving — yet each
+//! session's payload bits are delivered to its consumer strictly in
+//! sequence.
+//!
+//! This stage is what makes shard routing and work-stealing invisible
+//! to sessions: frames are buffered per session keyed by their sequence
+//! number and released only when contiguous, so the delivery order is a
+//! pure function of the framing, never of scheduling. A session's
+//! output channel closes once `total_frames` (announced by
+//! `Session::finish`) have been delivered, which terminates the
+//! consumer-side iterator.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, SyncSender};

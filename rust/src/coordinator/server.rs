@@ -1,9 +1,17 @@
-//! The coordinator facade: wires framer -> batcher/engine -> traceback
-//! workers -> reassembly into a running pipeline and exposes the session
-//! API used by `api::DecoderBuilder::serve`, the CLI, examples and
-//! benches.
+//! The coordinator facade: wires framer -> dispatcher -> engine shards
+//! -> traceback workers -> reassembly into a running pipeline and
+//! exposes the session API used by `api::DecoderBuilder::serve`, the
+//! CLI, examples and benches.
+//!
+//! Threading model (see `docs/ARCHITECTURE.md` for the full picture):
+//! one dispatcher thread routes frames to `shards` engine threads (each
+//! owning a private backend instance and work queue, with work-stealing
+//! between them), `workers` traceback threads drain the shared
+//! raw-survivor queue, and one reassembly thread restores per-session
+//! order. Per-session delivery is strictly in sequence regardless of
+//! which shard decoded each frame.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -15,10 +23,11 @@ use crate::util::queue::Queue;
 use crate::viterbi::tiled::TileConfig;
 
 use super::backend::BackendSpec;
-use super::engine::{run_engine, run_traceback_worker, BatchPolicy, RawTask};
+use super::engine::{run_engine_shard, run_traceback_worker, BatchPolicy, RawTask};
 use super::framer::Framer;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::reassembly::{run_reassembly, Msg};
+use super::shard::{run_dispatcher, ShardQueue};
 use super::FrameTask;
 
 /// Coordinator configuration — the lowering target of
@@ -32,6 +41,9 @@ pub struct CoordinatorConfig {
     pub batch_deadline: Duration,
     pub workers: usize,
     pub queue_depth: usize,
+    /// Engine shards: independent backend instances, each on its own
+    /// thread with its own work queue (clamped to at least 1).
+    pub shards: usize,
 }
 
 /// A running decode pipeline.
@@ -41,49 +53,78 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     tile: TileConfig,
     beta: usize,
+    n_shards: usize,
     trellis: Arc<Trellis>,
     next_session: AtomicU64,
     threads: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the pipeline: spawns the engine thread (which builds the
-    /// backend and compiles the artifact), the traceback workers and the
-    /// reassembler. Blocks until the backend is ready.
+    /// Start the pipeline: spawns the engine shards (each builds its
+    /// own backend instance in-thread), the dispatcher, the traceback
+    /// workers and the reassembler. Blocks until every shard's backend
+    /// is ready.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
-        let metrics = Arc::new(Metrics::new());
+        let n_shards = cfg.shards.max(1);
+        let metrics = Arc::new(Metrics::new(n_shards));
         let (input_tx, input_rx) = mpsc::sync_channel::<FrameTask>(cfg.queue_depth);
+        // per-shard queues sized so the total frames buffered past the
+        // input channel stay within ~one extra queue_depth
+        let per_shard_cap = (cfg.queue_depth / n_shards).max(cfg.max_batch).max(1);
+        let shard_qs: Arc<Vec<ShardQueue>> =
+            Arc::new((0..n_shards).map(|_| ShardQueue::new(per_shard_cap)).collect());
         let raw_q: Arc<Queue<RawTask>> = Arc::new(Queue::new());
         let (msg_tx, msg_rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::sync_channel(1);
+        let (ready_tx, ready_rx) = mpsc::sync_channel(n_shards);
+        let live = Arc::new(AtomicUsize::new(n_shards));
 
         let mut threads = Vec::new();
         let policy = BatchPolicy { max_batch: cfg.max_batch, deadline: cfg.batch_deadline };
-        let spec = cfg.backend.clone();
-        let m_engine = metrics.clone();
-        let raw_q_engine = raw_q.clone();
-        threads.push(
-            std::thread::Builder::new()
-                .name("tcvd-engine".into())
-                .spawn(move || {
-                    run_engine(spec, policy, input_rx, raw_q_engine, m_engine, ready_tx)
-                })
-                .or_pipeline("spawning engine thread")?,
-        );
-        let (frame_stages, trellis) = ready_rx
-            .recv()
-            .or_pipeline("engine thread died during startup")?
-            .map_err(|e| e.context("backend startup failed"))?;
-        if frame_stages != cfg.tile.frame_stages() {
-            return Err(Error::config(format!(
-                "backend frame ({frame_stages} stages) does not match tile geometry \
-                 ({} = head {} + payload {} + tail {})",
-                cfg.tile.frame_stages(),
-                cfg.tile.head,
-                cfg.tile.payload,
-                cfg.tile.tail
-            )));
+        for i in 0..n_shards {
+            let spec = cfg.backend.clone();
+            let queues = shard_qs.clone();
+            let out = raw_q.clone();
+            let live = live.clone();
+            let m = metrics.clone();
+            let ready = ready_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tcvd-engine-{i}"))
+                    .spawn(move || run_engine_shard(i, spec, policy, queues, out, live, m, ready))
+                    .or_pipeline("spawning engine shard")?,
+            );
         }
+        drop(ready_tx); // shards hold the only senders now
+        {
+            let queues = shard_qs.clone();
+            let m = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tcvd-dispatch".into())
+                    .spawn(move || run_dispatcher(input_rx, queues, m))
+                    .or_pipeline("spawning dispatcher")?,
+            );
+        }
+        // every shard must come up, and all geometries must agree
+        let mut trellis: Option<Arc<Trellis>> = None;
+        for _ in 0..n_shards {
+            let (frame_stages, t) = ready_rx
+                .recv()
+                .or_pipeline("engine shard died during startup")?
+                .map_err(|e| e.context("backend startup failed"))?;
+            if frame_stages != cfg.tile.frame_stages() {
+                return Err(Error::config(format!(
+                    "backend frame ({frame_stages} stages) does not match tile geometry \
+                     ({} = head {} + payload {} + tail {})",
+                    cfg.tile.frame_stages(),
+                    cfg.tile.head,
+                    cfg.tile.payload,
+                    cfg.tile.tail
+                )));
+            }
+            trellis.get_or_insert(t);
+        }
+        let trellis = trellis.expect("n_shards >= 1");
 
         for w in 0..cfg.workers.max(1) {
             let rx = raw_q.clone();
@@ -112,6 +153,7 @@ impl Coordinator {
             metrics,
             tile: cfg.tile,
             beta,
+            n_shards,
             trellis,
             next_session: AtomicU64::new(0),
             threads,
@@ -124,6 +166,11 @@ impl Coordinator {
 
     pub fn tile(&self) -> &TileConfig {
         &self.tile
+    }
+
+    /// Number of engine shards this pipeline runs.
+    pub fn shards(&self) -> usize {
+        self.n_shards
     }
 
     /// Open a streaming session: push LLR chunks in, iterate in-order
@@ -355,6 +402,7 @@ mod tests {
             batch_deadline: Duration::from_micros(500),
             workers: 2,
             queue_depth: 64,
+            shards: 2,
         }
     }
 
@@ -380,6 +428,10 @@ mod tests {
         let snap = coord.metrics();
         assert_eq!(snap.frames_in, 8);
         assert_eq!(snap.frames_out, 8);
+        assert_eq!(coord.shards(), 2);
+        assert_eq!(snap.shards.len(), 2);
+        let shard_frames: u64 = snap.shards.iter().map(|s| s.frames).sum();
+        assert_eq!(shard_frames, snap.frames_out);
         coord.shutdown().unwrap();
     }
 

@@ -1,0 +1,284 @@
+//! Sharding primitives: the per-shard bounded work queue and the
+//! dispatcher that routes frames from the session-facing input channel
+//! onto engine shards.
+//!
+//! Routing is **session-affinity hashed** ([`home_shard`]): every frame
+//! of a session lands on the same home shard, which keeps a shard's
+//! dynamic batcher warm with frames from a stable session set and
+//! bounds the survivor state any one shard holds (the memory argument
+//! of arXiv 2011.09337). Because overlapped frames decode independently
+//! (the block-parallel property of Peng et al., arXiv 1608.00066), any
+//! shard may decode any frame — so an **idle shard steals** from the
+//! deepest sibling queue instead of sleeping, and the reassembly stage
+//! restores per-session order by sequence number afterwards.
+//!
+//! See `docs/ARCHITECTURE.md` for the full data-flow and threading
+//! model.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::FrameTask;
+
+/// Result of a bounded-wait pop from a [`ShardQueue`].
+pub enum Pop {
+    /// A frame was dequeued.
+    Item(FrameTask),
+    /// The wait elapsed with the queue still empty (and open).
+    Timeout,
+    /// The queue is closed *and* fully drained.
+    Closed,
+}
+
+/// A bounded blocking FIFO owned by one engine shard.
+///
+/// Three parties touch it: the dispatcher pushes (blocking when full —
+/// the backpressure link between the session input channel and the
+/// shard), the owning engine pops with a deadline (the batching wait),
+/// and sibling engines [`try_pop`](ShardQueue::try_pop) to steal work
+/// when idle. Items still drain after [`close`](ShardQueue::close);
+/// only a closed *and* empty queue reports [`Pop::Closed`].
+pub struct ShardQueue {
+    inner: Mutex<Inner>,
+    /// Wakes consumers (the owner's pop and stealers) on arrival/close.
+    cv_items: Condvar,
+    /// Wakes the dispatcher when space frees up or the queue closes.
+    cv_space: Condvar,
+    cap: usize,
+}
+
+struct Inner {
+    q: VecDeque<FrameTask>,
+    closed: bool,
+}
+
+impl ShardQueue {
+    /// A queue holding at most `cap` frames (clamped to at least 1).
+    pub fn new(cap: usize) -> ShardQueue {
+        ShardQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            cv_items: Condvar::new(),
+            cv_space: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Bounded blocking push; returns false (dropping the frame) once
+    /// the queue is closed.
+    pub fn push(&self, task: FrameTask) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while !g.closed && g.q.len() >= self.cap {
+            g = self.cv_space.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.q.push_back(task);
+        drop(g);
+        self.cv_items.notify_one();
+        true
+    }
+
+    /// Non-blocking pop — the steal path.
+    pub fn try_pop(&self) -> Option<FrameTask> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.q.pop_front();
+        if item.is_some() {
+            drop(g);
+            self.cv_space.notify_one();
+        }
+        item
+    }
+
+    /// Pop, waiting up to `wait` for an item. The wait is measured
+    /// against a deadline fixed on entry, so wakeups that lose the race
+    /// to a stealer (item gone again by the time the lock is held) do
+    /// not extend the total wait beyond `wait`.
+    pub fn pop_timeout(&self, wait: Duration) -> Pop {
+        // None = effectively unbounded (absurdly large `wait`)
+        let deadline = Instant::now().checked_add(wait);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.cv_space.notify_one();
+                return Pop::Item(item);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let remaining = match deadline {
+                Some(d) => {
+                    let r = d.saturating_duration_since(Instant::now());
+                    if r.is_zero() {
+                        return Pop::Timeout;
+                    }
+                    r
+                }
+                None => Duration::from_secs(3600),
+            };
+            let (guard, _res) = self.cv_items.wait_timeout(g, remaining).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Close the queue: wakes the dispatcher and every consumer.
+    /// Remaining items still drain through pops.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv_items.notify_all();
+        self.cv_space.notify_all();
+    }
+
+    /// Current queue depth in frames.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Session-affinity routing: the home shard for a session id. A
+/// Fibonacci multiplicative hash spreads sequentially-allocated session
+/// ids across shards without correlating with the allocation order.
+pub fn home_shard(session: u64, n_shards: usize) -> usize {
+    debug_assert!(n_shards > 0);
+    ((session.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) % n_shards.max(1) as u64) as usize
+}
+
+/// Steal one frame on behalf of shard `me`: scan the sibling queues,
+/// take the oldest frame of the deepest one. Returns `None` when every
+/// sibling is empty.
+pub fn steal(queues: &[ShardQueue], me: usize) -> Option<FrameTask> {
+    let mut best: Option<usize> = None;
+    let mut best_len = 0usize;
+    for (j, q) in queues.iter().enumerate() {
+        if j == me {
+            continue;
+        }
+        let len = q.len();
+        if len > best_len {
+            best_len = len;
+            best = Some(j);
+        }
+    }
+    best.and_then(|j| queues[j].try_pop())
+}
+
+/// Run the dispatcher loop (one thread): route every frame arriving on
+/// the session input channel to its session's home shard, maintaining
+/// the per-shard queue-depth gauge. Exits — closing every shard queue
+/// so the engines wind down — when the input channel closes, i.e. when
+/// the coordinator and every session handle dropped their senders.
+pub fn run_dispatcher(
+    rx: Receiver<FrameTask>,
+    shards: Arc<Vec<ShardQueue>>,
+    metrics: Arc<Metrics>,
+) {
+    let n = shards.len();
+    for task in rx {
+        let s = home_shard(task.session, n);
+        if !shards[s].push(task) {
+            break; // queues force-closed under us: shutting down
+        }
+        metrics.shard(s).queue_depth.store(shards[s].len() as u64, Ordering::Relaxed);
+    }
+    for q in shards.iter() {
+        q.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::viterbi::types::FrameJob;
+    use std::time::Instant;
+
+    fn task(session: u64, seq: u64) -> FrameTask {
+        FrameTask {
+            session,
+            seq,
+            job: FrameJob {
+                llr: vec![0.0; 4],
+                start_state: None,
+                end_state: None,
+                emit_from: 0,
+                emit_len: 2,
+            },
+            t_enq: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_and_close_semantics() {
+        let q = ShardQueue::new(8);
+        assert!(q.push(task(1, 0)));
+        assert!(q.push(task(1, 1)));
+        assert_eq!(q.len(), 2);
+        match q.pop_timeout(Duration::from_millis(1)) {
+            Pop::Item(t) => assert_eq!(t.seq, 0),
+            _ => panic!("expected item"),
+        }
+        q.close();
+        assert!(!q.push(task(1, 2)), "push after close must be rejected");
+        // remaining item drains, then Closed
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Item(_)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_space() {
+        let q = Arc::new(ShardQueue::new(1));
+        assert!(q.push(task(0, 0)));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(task(0, 1)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!h.is_finished(), "push into a full queue must block");
+        assert!(q.try_pop().is_some());
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn pop_times_out_on_empty_queue() {
+        let q = ShardQueue::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Timeout));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn home_shard_is_stable_and_in_range() {
+        for n in 1..=9usize {
+            for session in 0..200u64 {
+                let s = home_shard(session, n);
+                assert!(s < n);
+                assert_eq!(s, home_shard(session, n), "routing must be deterministic");
+            }
+        }
+        // sequential ids must not all collapse onto one shard
+        let hits: std::collections::HashSet<usize> =
+            (0..32u64).map(|s| home_shard(s, 8)).collect();
+        assert!(hits.len() > 2, "hash spreads sessions: {hits:?}");
+    }
+
+    #[test]
+    fn steal_takes_from_deepest_sibling() {
+        let queues: Vec<ShardQueue> = (0..3).map(|_| ShardQueue::new(16)).collect();
+        queues[0].push(task(0, 0)); // own work: must never be "stolen"
+        queues[1].push(task(1, 0));
+        queues[2].push(task(2, 0));
+        queues[2].push(task(2, 1));
+        let got = steal(&queues, 0).expect("work available");
+        assert_eq!(got.session, 2, "deepest queue is shard 2");
+        assert!(steal(&queues, 0).is_some());
+        assert!(steal(&queues, 0).is_some());
+        assert!(steal(&queues, 0).is_none(), "own queue is never stolen from");
+        assert_eq!(queues[0].len(), 1);
+    }
+}

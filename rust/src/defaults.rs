@@ -38,6 +38,14 @@ pub const BATCH_DEADLINE_US: u64 = 2000;
 /// Traceback worker threads.
 pub const WORKERS: usize = 2;
 
+/// Default engine shard count: one independent backend instance (and
+/// engine thread) per available hardware thread, so `serve()` scales
+/// across the machine out of the box. Falls back to 1 when the
+/// parallelism cannot be queried.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Bounded input queue depth (frames) before backpressure.
 pub const QUEUE_DEPTH: usize = 1024;
 
@@ -67,5 +75,10 @@ mod tests {
     #[test]
     fn queue_covers_batch() {
         assert!(QUEUE_DEPTH >= MAX_BATCH);
+    }
+
+    #[test]
+    fn default_shards_is_positive() {
+        assert!(default_shards() >= 1);
     }
 }

@@ -17,8 +17,48 @@
 //! The supported entry point is the builder-first facade in [`api`]:
 //! [`DecoderBuilder`] validates one coherent parameter set and lowers
 //! it to either a one-shot [`Decoder`] or the serving
-//! [`Coordinator`](coordinator::Coordinator). All public entry points
-//! report the typed [`Error`]; `anyhow` is internal plumbing only.
+//! [`Coordinator`](coordinator::Coordinator), which scales across
+//! engine shards ([`api::DecoderBuilder::shards`]). All public entry
+//! points report the typed [`Error`]; `anyhow` is internal plumbing
+//! only. The serving pipeline's data flow, threading model and
+//! ordering guarantees are documented in `docs/ARCHITECTURE.md`.
+//!
+//! # Quick start
+//!
+//! One-shot decoding on the scalar baseline (no artifacts needed):
+//!
+//! ```
+//! use tcvd::{BackendKind, DecoderBuilder};
+//!
+//! let mut dec = DecoderBuilder::new()
+//!     .backend(BackendKind::Scalar)
+//!     .tile_dims(16, 0, 0)
+//!     .build()?;
+//! // 16 trellis stages of rate-1/2 LLRs (positive LLR ⇒ bit 0)
+//! let bits = dec.decode_stream(&vec![1.0f32; 16 * 2], true)?;
+//! assert_eq!(bits, vec![0u8; 16]);
+//! # Ok::<(), tcvd::Error>(())
+//! ```
+//!
+//! Streaming many concurrent sessions through the sharded coordinator:
+//!
+//! ```
+//! use tcvd::{BackendKind, DecoderBuilder};
+//!
+//! let coord = DecoderBuilder::new()
+//!     .backend(BackendKind::cpu("radix4"))
+//!     .tile_dims(32, 16, 16)
+//!     .shards(2) // two engine threads, each with its own backend
+//!     .serve()?;
+//! let mut session = coord.open_session()?;
+//! session.push(&vec![0.5f32; 32 * 2])?;
+//! let bits = session.finish_and_collect(false)?;
+//! assert_eq!(bits.len(), 32);
+//! // per-shard counters: frames, execs, steals, queue depth
+//! assert_eq!(coord.metrics().shards.len(), 2);
+//! coord.shutdown()?;
+//! # Ok::<(), tcvd::Error>(())
+//! ```
 
 pub mod util;
 pub mod error;

@@ -85,7 +85,10 @@ fn command_specs() -> Vec<CommandSpec> {
             let mut f: Vec<FlagSpec> = api::builder_flags()
                 .into_iter()
                 .filter(|fl| {
-                    !matches!(fl.name, "workers" | "max-batch" | "batch-deadline-us" | "queue-depth")
+                    !matches!(
+                        fl.name,
+                        "workers" | "max-batch" | "batch-deadline-us" | "queue-depth" | "shards"
+                    )
                 })
                 .collect();
             f.push(FlagSpec::new("snr", "A:B:STEP", "Eb/N0 sweep in dB (default 0:6:1)"));
@@ -194,7 +197,10 @@ fn cmd_selftest(args: &Args) -> Result<()> {
         ("pjrt-artifact", DecoderBuilder::new().artifacts_dir(&dir)),
     ];
     for (name, builder) in builders {
-        let builder = builder.max_batch(64).batch_deadline_us(200).workers(2).queue_depth(256);
+        // two shards: exercises the sharded dispatcher without paying
+        // for a full per-core fleet of artifact compilations
+        let builder =
+            builder.max_batch(64).batch_deadline_us(200).workers(2).queue_depth(256).shards(2);
         let coord = match builder.serve() {
             Ok(c) => c,
             Err(e) => {
@@ -369,6 +375,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.latency_p50_us,
             snap.latency_p99_us
         );
+        for (i, sh) in snap.shards.iter().enumerate() {
+            println!(
+                "shard {i}: frames={} execs={} steals={} queue_depth={}",
+                sh.frames, sh.execs, sh.steals, sh.queue_depth
+            );
+        }
         if args.get_bool("json") {
             println!("{}", snap.to_json().to_string_pretty());
         }

@@ -1,9 +1,29 @@
 //! Tiled / overlapped frame decoding of long streams (paper §III,
-//! refs [4-7]): the n-stage stream is cut into frames of `f` payload
+//! refs \[4-7\]): the n-stage stream is cut into frames of `f` payload
 //! stages plus `head` + `tail` overlap stages; frames decode
 //! independently (the parallelism source) and only the payload bits are
 //! emitted. Larger overlap carries more history and restores BER at the
 //! cost of redundant work — the E3 ablation sweeps this.
+//!
+//! Frame independence is what every parallel layer above builds on: the
+//! coordinator's engine shards batch frames from many sessions and
+//! steal across queues, and the one-shot
+//! [`Decoder::decode_stream`](crate::api::Decoder::decode_stream) fans
+//! frames out over threads — all bit-identical to the serial reference
+//! tiler in this module because each [`FrameJob`] is decoded in
+//! isolation.
+//!
+//! ```
+//! use tcvd::viterbi::tiled::{make_frames, TileConfig};
+//!
+//! let cfg = TileConfig { payload: 32, head: 8, tail: 8 };
+//! let llr = vec![1.0f32; 64 * 2]; // 64 stages of rate-1/2 LLRs
+//! let jobs = make_frames(&llr, 2, &cfg, true).unwrap();
+//! assert_eq!(jobs.len(), 2); // one frame per payload tile
+//! assert_eq!(jobs[0].start_state, Some(0)); // stream head is pinned
+//! assert_eq!(jobs[1].emit_from, 8); // warm-up overlap is not emitted
+//! assert!((cfg.overhead() - 1.5).abs() < 1e-12); // Eq-5 redundancy
+//! ```
 
 use crate::error::{Error, Result};
 

@@ -58,7 +58,7 @@ pub enum Survivors {
 #[derive(Clone, Debug)]
 pub struct RawFrame {
     pub surv: Survivors,
-    /// Final path metrics [n_states].
+    /// Final path metrics `[n_states]`.
     pub lam: Vec<f32>,
 }
 

@@ -47,6 +47,7 @@ fn pjrt_pipeline_decodes_multisession_workload() {
             batch_deadline: Duration::from_micros(500),
             workers: 2,
             queue_depth: 512,
+            shards: 2,
         })
         .unwrap(),
     );
@@ -89,6 +90,7 @@ fn cpu_pipeline_survives_many_small_sessions() {
             batch_deadline: Duration::from_micros(200),
             workers: 3,
             queue_depth: 64,
+            shards: 2,
         })
         .unwrap(),
     );
@@ -119,6 +121,7 @@ fn backpressure_blocks_but_does_not_lose_frames() {
         batch_deadline: Duration::from_micros(50),
         workers: 1,
         queue_depth: 2,
+        shards: 1,
     })
     .unwrap();
     let (bits, llr) = noisy_stream(77, 2048, 6.0);
@@ -139,6 +142,7 @@ fn metrics_accumulate_sanely() {
         batch_deadline: Duration::from_micros(100),
         workers: 2,
         queue_depth: 64,
+        shards: 1,
     })
     .unwrap();
     let (_, llr) = noisy_stream(5, 1024, 5.0);

@@ -1,0 +1,161 @@
+//! Sharded-serving test suite: per-session output must be bit-exact,
+//! in order, and invariant across shard counts under interleaved
+//! multi-session load; per-shard metrics must sum to the session
+//! totals; idle shards must steal work from a backlogged sibling.
+
+use std::sync::Arc;
+
+use tcvd::api::{BackendKind, DecoderBuilder};
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{registry, Encoder};
+use tcvd::coordinator::Coordinator;
+use tcvd::util::rng::Rng;
+
+fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut bits = Rng::new(seed).bits(payload_bits - 6);
+    bits.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&bits);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xD15);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+fn session_payload_bits(s: usize) -> usize {
+    256 + 64 * (s % 3)
+}
+
+fn coordinator(shards: usize) -> Coordinator {
+    DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix4"))
+        .tile_dims(32, 16, 16)
+        .shards(shards)
+        .workers(2)
+        .max_batch(8)
+        .batch_deadline_us(200)
+        .queue_depth(256)
+        .serve()
+        .unwrap()
+}
+
+/// Interleaved multi-session load: every session streams odd-sized LLR
+/// chunks from its own thread. Returns each session's in-order decoded
+/// payload; checks the metrics-consistency invariants on the way out.
+fn run_sessions(shards: usize, n_sessions: usize) -> Vec<Vec<u8>> {
+    let coord = Arc::new(coordinator(shards));
+    let mut joins = Vec::new();
+    for s in 0..n_sessions {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let (_, llr) = noisy_stream(4000 + s as u64, session_payload_bits(s), 6.0);
+            let mut session = c.open_session().unwrap();
+            for chunk in llr.chunks(50) {
+                // 25-stage chunks: exercises partial-frame buffering
+                session.push(chunk).unwrap();
+            }
+            session.finish_and_collect(true).unwrap()
+        }));
+    }
+    let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    let snap = coord.metrics();
+    assert_eq!(snap.frames_in, snap.frames_out, "shards={shards}: frames lost");
+    assert_eq!(snap.shards.len(), shards, "one counter block per shard");
+    let shard_frames: u64 = snap.shards.iter().map(|sh| sh.frames).sum();
+    assert_eq!(
+        shard_frames, snap.frames_out,
+        "shards={shards}: per-shard frame counters must sum to the session total"
+    );
+    let shard_execs: u64 = snap.shards.iter().map(|sh| sh.execs).sum();
+    assert_eq!(
+        shard_execs, snap.execs,
+        "shards={shards}: per-shard exec counters must sum to the global count"
+    );
+
+    let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
+    coord.shutdown().unwrap();
+    outs
+}
+
+#[test]
+fn shard_counts_agree_bit_exactly() {
+    let n_sessions = 6;
+    let baseline = run_sessions(1, n_sessions);
+    // the decoded payload is the transmitted payload, in order
+    for (s, out) in baseline.iter().enumerate() {
+        let (bits, _) = noisy_stream(4000 + s as u64, session_payload_bits(s), 6.0);
+        assert_eq!(out, &bits, "session {s} output differs from its payload");
+    }
+    // shard count must never change any session's output
+    for shards in [2usize, 8] {
+        let outs = run_sessions(shards, n_sessions);
+        assert_eq!(outs, baseline, "{shards} shards changed decoded output");
+    }
+}
+
+#[test]
+fn idle_shards_steal_from_a_backlogged_home_shard() {
+    // one hot session (every frame hashes to the same home shard), four
+    // shards, one frame per execution: the idle shards must pick up the
+    // backlog via work-stealing, and the output must stay bit-exact.
+    let coord = DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix4"))
+        .tile_dims(32, 16, 16)
+        .shards(4)
+        .workers(2)
+        .max_batch(1)
+        .batch_deadline_us(0)
+        .queue_depth(512)
+        .serve()
+        .unwrap();
+    assert_eq!(coord.shards(), 4);
+    let (bits, llr) = noisy_stream(9999, 4096, 6.0);
+    let out = coord.decode_stream_blocking(&llr, true).unwrap();
+    assert_eq!(out, bits);
+    let snap = coord.metrics();
+    assert!(
+        snap.steals_total() > 0,
+        "idle shards never stole from the backlogged home shard: {:?}",
+        snap.shards
+    );
+    let active = snap.shards.iter().filter(|sh| sh.frames > 0).count();
+    assert!(active > 1, "all work stayed on one shard: {:?}", snap.shards);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn sharded_one_shot_decoder_matches_single_lane() {
+    let (bits, llr) = noisy_stream(555, 2048, 5.5);
+    let builder = DecoderBuilder::new()
+        .backend(BackendKind::cpu("radix4"))
+        .tile_dims(64, 32, 32);
+    let reference = builder.clone().shards(1).build().unwrap().decode_stream(&llr, true).unwrap();
+    assert_eq!(reference, bits);
+    for lanes in [2usize, 3, 8] {
+        let got =
+            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr, true).unwrap();
+        assert_eq!(got, reference, "{lanes}-lane one-shot decode diverged");
+    }
+}
+
+#[test]
+fn session_metrics_expose_shard_counters() {
+    let coord = coordinator(2);
+    let (_, llr) = noisy_stream(31, 512, 6.0);
+    let mut session = coord.open_session().unwrap();
+    session.push(&llr).unwrap();
+    let snap = session.metrics();
+    assert_eq!(snap.shards.len(), 2, "session metrics must carry per-shard counters");
+    session.finish(true).unwrap();
+    for _ in session {}
+    let snap = coord.metrics();
+    let shard_frames: u64 = snap.shards.iter().map(|sh| sh.frames).sum();
+    assert_eq!(shard_frames, snap.frames_out);
+    // the JSON view carries the shard array for dashboards
+    let json = snap.to_json().to_string_pretty();
+    assert!(json.contains("\"shards\""), "{json}");
+    assert!(json.contains("steals"), "{json}");
+    coord.shutdown().unwrap();
+}
