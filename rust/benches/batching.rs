@@ -14,6 +14,8 @@ use std::sync::Arc;
 use tcvd::api::DecoderBuilder;
 use tcvd::defaults;
 use tcvd::util::json::{self, Json};
+use tcvd::viterbi::tiled;
+use tcvd::viterbi::types::FrameDecoder;
 
 fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
        -> tcvd::Result<(f64, f64, f64, f64)> {
@@ -84,6 +86,31 @@ fn run_sharded(shards: usize, sessions: usize, info_bits: usize)
     let coord = Arc::try_unwrap(coord).ok().expect("done");
     coord.shutdown()?;
     Ok((common::mbps(info_bits, wall), snap.mean_batch, snap.steals_total()))
+}
+
+/// Survivor-storage sweep (see `docs/MEMORY.md`): peak survivor bytes
+/// per frame plus one-shot throughput for one survivor layout on the
+/// default CPU tile (64 payload + 32/32 overlap = 128 stages). The
+/// measured peak is the quantity the worked memory-budget example in
+/// `docs/MEMORY.md` quotes; outputs are checked bit-exact so the sweep
+/// also witnesses layout equivalence.
+fn run_survivor(backend: &str, info_bits: usize) -> tcvd::Result<(f64, usize)> {
+    let mut dec = DecoderBuilder::new()
+        .backend_name(backend)?
+        .tile(defaults::CPU_TILE)
+        .shards(1)
+        .build()?;
+    let (payload, llr) = common::workload(4242, info_bits, 6.0);
+    // peak survivor bytes per frame: forward real frames, read the
+    // survivor store each one materialized
+    let jobs = tiled::make_frames(&llr, 2, &defaults::CPU_TILE, true)?;
+    let probe = dec.as_frame_decoder().forward_batch(&jobs[..jobs.len().min(4)]);
+    let peak_bytes = probe.iter().map(|r| r.surv.bytes()).max().unwrap_or(0);
+    let t0 = std::time::Instant::now();
+    let out = dec.decode_stream(&llr, true)?;
+    let wall = t0.elapsed();
+    assert_eq!(out, payload, "{backend}: one-shot decode not bit-exact");
+    Ok((common::mbps(info_bits, wall), peak_bytes))
 }
 
 fn main() -> tcvd::Result<()> {
@@ -163,12 +190,53 @@ fn main() -> tcvd::Result<()> {
             }
         }
     }
+    // survivor-storage sweep: compact vs packed vs scalar layouts on
+    // the same tile geometry (docs/MEMORY.md memory model)
+    let surv_bits = if common::full_rigor() { 1_048_576 } else { 262_144 };
+    println!(
+        "\nsurvivor storage — one-shot decode, {} tile ({} stages), {surv_bits} info bits",
+        "64+32/32", defaults::CPU_TILE.frame_stages()
+    );
+    println!(
+        "{:>12} | {:>10} {:>16} {:>10}",
+        "backend", "Mb/s", "surv bytes/frame", "vs scalar"
+    );
+    let mut surv_rows = Vec::new();
+    let mut scalar_bytes: Option<usize> = None;
+    for backend in ["scalar", "cpu-radix4", "compact"] {
+        match run_survivor(backend, surv_bits) {
+            Ok((mbps, bytes)) => {
+                if backend == "scalar" {
+                    scalar_bytes = Some(bytes);
+                }
+                let mut row = vec![
+                    ("backend", json::s(backend)),
+                    ("mbps", json::num(mbps)),
+                    ("peak_survivor_bytes_per_frame", json::num(bytes as f64)),
+                ];
+                // the ratio column only exists relative to a measured
+                // scalar baseline — never silently rebase on another row
+                match scalar_bytes {
+                    Some(base) => {
+                        let ratio = base as f64 / bytes as f64;
+                        println!("{backend:>12} | {mbps:>10.2} {bytes:>16} {ratio:>9.1}x");
+                        row.push(("reduction_vs_scalar", json::num(ratio)));
+                    }
+                    None => println!("{backend:>12} | {mbps:>10.2} {bytes:>16} {:>10}", "-"),
+                }
+                surv_rows.push(json::obj(row));
+            }
+            Err(e) => println!("{backend:>12} | SKIP ({e})"),
+        }
+    }
     common::write_json("batching", &json::obj(vec![
         ("experiment", json::s("E5/batching")),
         ("info_bits", json::num(info_bits as f64)),
         ("rows", Json::Arr(rows)),
         ("shard_info_bits", json::num(shard_bits as f64)),
         ("shard_rows", Json::Arr(shard_rows)),
+        ("survivor_info_bits", json::num(surv_bits as f64)),
+        ("survivor_rows", Json::Arr(surv_rows)),
     ]));
     Ok(())
 }

@@ -42,7 +42,10 @@
 //! The production backend is the AOT PJRT artifact
 //! ([`BackendKind::Artifact`], the default — needs `make artifacts`);
 //! the CPU backends emulate the same tensor arithmetic and are used
-//! throughout the tests. The builder validates at
+//! throughout the tests. Memory-tight deployments select
+//! [`BackendKind::Compact`], which stores survivors as bit-packed
+//! decision words (1/32 the survivor memory of the scalar layout,
+//! bit-identical output — see `docs/MEMORY.md`). The builder validates at
 //! [`DecoderBuilder::build`]/[`DecoderBuilder::serve`] and reports
 //! failures as the typed [`tcvd::Error`](crate::Error); `anyhow` never
 //! crosses this boundary. The pipeline architecture behind `serve()` is
@@ -75,6 +78,7 @@ pub use crate::viterbi::types::AccPrecision;
 pub const BACKEND_NAMES: &[&str] = &[
     "artifact",
     "scalar",
+    "compact",
     "cpu-radix2",
     "cpu-radix4",
     "cpu-radix4-noperm",
@@ -98,6 +102,14 @@ pub enum BackendKind {
     },
     /// Scalar Alg-1/Alg-2 baseline (the correctness oracle).
     Scalar,
+    /// Memory-efficient survivor storage: scalar arithmetic with
+    /// bit-packed per-stage decision words (1/32 the survivor memory of
+    /// [`BackendKind::Scalar`], bit-identical output; arXiv
+    /// 2011.09337). Pick this when per-shard memory — survivor bytes
+    /// scale with `shards * queue_depth * frame_stages` — caps the
+    /// deployment before compute does; `docs/MEMORY.md` has the worked
+    /// budgets and the backend-selection table.
+    Compact,
 }
 
 impl BackendKind {
@@ -178,6 +190,7 @@ impl DecoderBuilder {
         match name {
             "artifact" | "pjrt" => self.backend = BackendKind::Artifact,
             "scalar" => self.backend = BackendKind::Scalar,
+            "compact" => self.backend = BackendKind::Compact,
             "cpu-radix2" => self.backend = BackendKind::cpu("radix2"),
             "cpu-radix4" => self.backend = BackendKind::cpu("radix4"),
             "cpu-radix4-noperm" => self.backend = BackendKind::cpu("radix4_noperm"),
@@ -387,7 +400,7 @@ impl DecoderBuilder {
                     return Err(Error::config("artifact backend needs a variant name"));
                 }
             }
-            BackendKind::Scalar => {}
+            BackendKind::Scalar | BackendKind::Compact => {}
         }
         Ok(())
     }
@@ -401,6 +414,10 @@ impl DecoderBuilder {
                 variant: self.variant.clone(),
             },
             BackendKind::Scalar => BackendSpec::Scalar {
+                code: self.code.clone(),
+                stages: self.tile.frame_stages(),
+            },
+            BackendKind::Compact => BackendSpec::Compact {
                 code: self.code.clone(),
                 stages: self.tile.frame_stages(),
             },
@@ -494,7 +511,7 @@ pub fn builder_flags() -> Vec<FlagSpec> {
         FlagSpec::new(
             "backend",
             "NAME",
-            format!("one of: {} (default \"artifact\")", BACKEND_NAMES.join(" ")),
+            format!("one of: {} (default {:?})", BACKEND_NAMES.join(" "), defaults::BACKEND),
         ),
         FlagSpec::new(
             "artifacts",
@@ -763,6 +780,27 @@ mod tests {
             BackendSpec::CpuPacked { acc, .. } => assert_eq!(acc, AccPrecision::Single),
             other => panic!("expected CpuPacked, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn compact_backend_builds_and_matches_scalar() {
+        let llr = vec![1.0f32; 64 * 2]; // positive LLR ⇒ all-zero stream
+        let mut s = DecoderBuilder::new()
+            .backend(BackendKind::Scalar)
+            .tile_dims(32, 8, 8)
+            .build()
+            .unwrap();
+        let mut c = DecoderBuilder::new()
+            .backend(BackendKind::Compact)
+            .tile_dims(32, 8, 8)
+            .build()
+            .unwrap();
+        assert_eq!(c.label(), "compact");
+        assert_eq!(c.frame_stages(), 48);
+        let a = s.decode_stream(&llr, true).unwrap();
+        let b = c.decode_stream(&llr, true).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, vec![0u8; 64]);
     }
 
     #[test]

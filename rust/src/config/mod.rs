@@ -43,7 +43,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             code: defaults::CODE.into(),
-            backend: "artifact".into(),
+            backend: defaults::BACKEND.into(),
             tile: defaults::TILE,
             artifacts_dir: defaults::ARTIFACTS_DIR.into(),
             variant: defaults::VARIANT.into(),
@@ -150,8 +150,15 @@ mod tests {
     fn defaults_come_from_defaults_module() {
         let cfg = Config::default();
         assert_eq!(cfg.code, defaults::CODE);
+        assert_eq!(cfg.backend, defaults::BACKEND);
         assert_eq!(cfg.variant, defaults::VARIANT);
         assert_eq!(cfg.tile.frame_stages(), defaults::TILE.frame_stages());
+    }
+
+    #[test]
+    fn parses_compact_backend() {
+        let cfg = Config::from_toml("backend = \"compact\"\n").unwrap();
+        assert_eq!(cfg.backend, "compact");
     }
 
     #[test]

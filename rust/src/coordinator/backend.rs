@@ -19,6 +19,7 @@ use crate::coding::trellis::Trellis;
 use crate::error::{Result, ResultExt};
 use crate::runtime::{client, Artifact, ArtifactDecoder, Manifest};
 use crate::util::half::HalfKind;
+use crate::viterbi::compact::CompactDecoder;
 use crate::viterbi::packed::PackedDecoder;
 use crate::viterbi::scalar::ScalarDecoder;
 use crate::viterbi::types::{AccPrecision, FrameDecoder};
@@ -39,6 +40,11 @@ pub enum BackendSpec {
     },
     /// Scalar Alg-1/Alg-2 baseline.
     Scalar { code: String, stages: usize },
+    /// Memory-efficient survivor storage (arXiv 2011.09337): scalar
+    /// Alg-1 arithmetic with bit-packed per-stage decision words in a
+    /// frame-sized ring — 1/32 the survivor memory of `Scalar`,
+    /// bit-identical output. Memory model: `docs/MEMORY.md`.
+    Compact { code: String, stages: usize },
 }
 
 impl BackendSpec {
@@ -75,6 +81,11 @@ impl BackendSpec {
                 let trellis = Arc::new(Trellis::new(code));
                 Ok(Box::new(ScalarDecoder::new(trellis, *stages)))
             }
+            BackendSpec::Compact { code, stages } => {
+                let code = registry::lookup(code).or_backend("compact backend")?;
+                let trellis = Arc::new(Trellis::new(code));
+                Ok(Box::new(CompactDecoder::new(trellis, *stages)))
+            }
         }
     }
 }
@@ -99,6 +110,10 @@ mod tests {
 
         let dec2 = BackendSpec::Scalar { code: "ccsds".into(), stages: 32 }.build().unwrap();
         assert_eq!(dec2.frame_stages(), 32);
+
+        let dec3 = BackendSpec::Compact { code: "ccsds".into(), stages: 32 }.build().unwrap();
+        assert_eq!(dec3.frame_stages(), 32);
+        assert_eq!(dec3.label(), "compact");
     }
 
     #[test]

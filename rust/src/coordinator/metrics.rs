@@ -26,6 +26,11 @@ pub struct ShardStats {
     pub steals: AtomicU64,
     /// Last observed depth of this shard's work queue (gauge).
     pub queue_depth: AtomicU64,
+    /// High-water mark of resident survivor bytes this shard
+    /// materialized in a single batched execution (gauge; the
+    /// memory-model quantity of `docs/MEMORY.md` — depends on the
+    /// backend's survivor layout and the frame geometry).
+    pub survivor_bytes: AtomicU64,
 }
 
 /// Shared metrics hub (updated by every pipeline stage).
@@ -73,14 +78,17 @@ impl Metrics {
     }
 
     /// Record one batched execution by shard `shard` covering `frames`
-    /// frames.
-    pub fn record_exec(&self, shard: usize, frames: usize, forward_ns: u64) {
+    /// frames whose forward pass materialized `survivor_bytes` of
+    /// survivor storage.
+    pub fn record_exec(&self, shard: usize, frames: usize, forward_ns: u64,
+                       survivor_bytes: usize) {
         self.execs.fetch_add(1, Ordering::Relaxed);
         self.exec_frames.fetch_add(frames as u64, Ordering::Relaxed);
         self.forward_ns.fetch_add(forward_ns, Ordering::Relaxed);
         let s = &self.shards[shard];
         s.execs.fetch_add(1, Ordering::Relaxed);
         s.frames.fetch_add(frames as u64, Ordering::Relaxed);
+        s.survivor_bytes.fetch_max(survivor_bytes as u64, Ordering::Relaxed);
         self.occupancy.lock().unwrap().record(frames as u64);
     }
 
@@ -117,6 +125,7 @@ impl Metrics {
                     execs: s.execs.load(Ordering::Relaxed),
                     steals: s.steals.load(Ordering::Relaxed),
                     queue_depth: s.queue_depth.load(Ordering::Relaxed),
+                    survivor_bytes: s.survivor_bytes.load(Ordering::Relaxed),
                 })
                 .collect(),
         }
@@ -134,6 +143,9 @@ pub struct ShardSnapshot {
     pub steals: u64,
     /// Last observed depth of this shard's work queue.
     pub queue_depth: u64,
+    /// High-water mark of resident survivor bytes from one batched
+    /// execution (see `docs/MEMORY.md` for the per-layout formulas).
+    pub survivor_bytes: u64,
 }
 
 /// A point-in-time view of the metrics.
@@ -160,6 +172,12 @@ impl MetricsSnapshot {
         self.shards.iter().map(|s| s.steals).sum()
     }
 
+    /// Peak single-batch survivor bytes across all shards (the
+    /// `docs/MEMORY.md` budget quantity, as actually observed).
+    pub fn survivor_bytes_peak(&self) -> u64 {
+        self.shards.iter().map(|s| s.survivor_bytes).max().unwrap_or(0)
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("elapsed_s", json::num(self.elapsed_s)),
@@ -184,6 +202,7 @@ impl MetricsSnapshot {
                                 ("execs", json::num(s.execs as f64)),
                                 ("steals", json::num(s.steals as f64)),
                                 ("queue_depth", json::num(s.queue_depth as f64)),
+                                ("survivor_bytes", json::num(s.survivor_bytes as f64)),
                             ])
                         })
                         .collect(),
@@ -200,8 +219,8 @@ mod tests {
     #[test]
     fn snapshot_math() {
         let m = Metrics::new(2);
-        m.record_exec(0, 8, 1000);
-        m.record_exec(1, 4, 1000);
+        m.record_exec(0, 8, 1000, 8192);
+        m.record_exec(1, 4, 1000, 4096);
         let t = Instant::now();
         m.record_delivery(64, t, 500);
         m.record_delivery(64, t, 500);
@@ -214,13 +233,27 @@ mod tests {
         let j = s.to_json().to_string_pretty();
         assert!(j.contains("throughput_bps"));
         assert!(j.contains("steals"));
+        assert!(j.contains("survivor_bytes"));
+    }
+
+    #[test]
+    fn survivor_bytes_gauge_is_a_high_water_mark() {
+        let m = Metrics::new(2);
+        m.record_exec(0, 4, 10, 4096);
+        m.record_exec(0, 8, 10, 8192);
+        m.record_exec(0, 2, 10, 2048); // smaller batch must not lower the peak
+        m.record_exec(1, 1, 10, 1024);
+        let s = m.snapshot();
+        assert_eq!(s.shards[0].survivor_bytes, 8192);
+        assert_eq!(s.shards[1].survivor_bytes, 1024);
+        assert_eq!(s.survivor_bytes_peak(), 8192);
     }
 
     #[test]
     fn shard_counters_isolate_and_sum() {
         let m = Metrics::new(3);
-        m.record_exec(0, 5, 10);
-        m.record_exec(2, 3, 10);
+        m.record_exec(0, 5, 10, 0);
+        m.record_exec(2, 3, 10, 0);
         m.shard(2).steals.fetch_add(2, Ordering::Relaxed);
         m.shard(1).queue_depth.store(7, Ordering::Relaxed);
         let s = m.snapshot();

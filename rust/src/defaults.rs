@@ -12,6 +12,12 @@ use crate::viterbi::tiled::TileConfig;
 /// Default standard code (registry key): the paper's (2,1,7) 171/133.
 pub const CODE: &str = "ccsds";
 
+/// Default backend name (one of `api::BACKEND_NAMES`): the AOT PJRT
+/// artifact. Memory-tight deployments switch to `"compact"` — the
+/// bit-packed survivor store (see `docs/MEMORY.md` for the selection
+/// table and per-shard budget math).
+pub const BACKEND: &str = "artifact";
+
 /// Default artifact directory (relative to the working directory).
 pub const ARTIFACTS_DIR: &str = "artifacts";
 

@@ -1,0 +1,468 @@
+//! Memory-efficient survivor storage (`BackendKind::Compact`): the
+//! scalar Alg-1 forward pass with survivors stored as **bit-packed
+//! per-stage decision words** instead of one `u32` predecessor per
+//! (stage, state).
+//!
+//! Every trellis state has exactly two predecessors (`prev[j] =
+//! [i0, i1]`, low index first), so the add-compare-select outcome is a
+//! single bit: *which* predecessor won. Storing that bit — rather than
+//! the predecessor's global index — shrinks survivor memory 32× against
+//! the scalar layout (`u32` per state per stage) and 8× against the
+//! radix layout (`u8` per state per step); in the radix-2^rho view the
+//! same store costs exactly `rho` bits per super-branch selection per
+//! step, which is the information-theoretic floor. This is the
+//! memory-efficient survivor organization of Mohammadidoost & Hashemi
+//! (arXiv 2011.09337) applied to our tiled frames; the full memory
+//! model (layouts, Eq-5 overhead interplay, per-shard budgets) is
+//! documented in `docs/MEMORY.md`.
+//!
+//! Decisions live in a [`DecisionRing`]: a fixed-capacity ring of at
+//! most `head + payload + tail` stages, allocated once per decoder and
+//! rewritten in place frame after frame, so the forward pass never
+//! materializes survivor state beyond one frame geometry. The per-frame
+//! [`CompactSurvivors`] snapshot handed to the traceback pool is the
+//! same bit-packed size.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tcvd::coding::{registry, trellis::Trellis};
+//! use tcvd::viterbi::compact::CompactDecoder;
+//! use tcvd::viterbi::types::{FrameDecoder, FrameJob};
+//!
+//! let t = Arc::new(Trellis::new(registry::paper_code()));
+//! let mut dec = CompactDecoder::new(t, 16);
+//! // 1 bit per state per stage: 16 stages x 64 states = 128 bytes
+//! assert_eq!(dec.survivor_bytes_per_frame(), 128);
+//! let job = FrameJob {
+//!     llr: vec![1.0f32; 16 * 2], // positive LLR ⇒ bit 0
+//!     start_state: Some(0),
+//!     end_state: Some(0),
+//!     emit_from: 0,
+//!     emit_len: 16,
+//! };
+//! let bits = dec.decode_batch(std::slice::from_ref(&job));
+//! assert_eq!(bits[0], vec![0u8; 16]);
+//! ```
+
+use std::sync::Arc;
+
+use crate::coding::trellis::Trellis;
+
+use super::scalar::initial_metrics;
+use super::types::{FrameDecoder, FrameJob, RawFrame, Survivors};
+
+/// Bit-packed survivor selections: `sel_bits` bits per (step, state).
+///
+/// Two layouts share this type, distinguished by `sel_bits`:
+///
+/// * `sel_bits == 1` — per-stage butterfly decisions (which of
+///   `prev[j]`'s two predecessors won); one step per trellis stage.
+///   This is what [`CompactDecoder`] emits.
+/// * `sel_bits == rho >= 2` — radix-2^rho super-branch selections (the
+///   winning left *local* state), one step per `rho` stages; the
+///   packed form of [`Survivors::Radix`](super::types::Survivors).
+///
+/// Both are decoded by
+/// [`traceback_compact`](super::traceback::traceback_compact), which
+/// applies the Thm-4 dragonfly index math (a butterfly is the rho = 1
+/// dragonfly). Entries are packed `64 / sel_bits` to a word, step-major
+/// then state-major, with each step starting on a word boundary so a
+/// step is a contiguous word slice.
+#[derive(Clone, Debug)]
+pub struct CompactSurvivors {
+    sel_bits: u32,
+    steps: usize,
+    n_states: usize,
+    words: Vec<u64>,
+}
+
+impl CompactSurvivors {
+    /// Packed entries per 64-bit word for a selector width.
+    #[inline]
+    fn entries_per_word(sel_bits: u32) -> usize {
+        64 / sel_bits as usize
+    }
+
+    /// Words needed to store one step (`n_states` selectors).
+    pub fn words_per_step(n_states: usize, sel_bits: u32) -> usize {
+        n_states.div_ceil(Self::entries_per_word(sel_bits))
+    }
+
+    /// Wrap pre-packed words (as produced by [`DecisionRing::snapshot`]).
+    pub fn from_words(sel_bits: u32, steps: usize, n_states: usize, words: Vec<u64>) -> Self {
+        assert!(sel_bits >= 1 && sel_bits <= 8, "selector width {sel_bits} out of range");
+        assert_eq!(
+            words.len(),
+            steps * Self::words_per_step(n_states, sel_bits),
+            "packed word count does not match {steps} steps x {n_states} states"
+        );
+        CompactSurvivors { sel_bits, steps, n_states, words }
+    }
+
+    /// Pack radix-form selections (`phi[tau * n_states + s]` = winning
+    /// left local state, `rho` bits each) into the compact layout.
+    pub fn from_radix(rho: u32, phi: &[u8], n_states: usize) -> Self {
+        assert_eq!(phi.len() % n_states, 0);
+        let steps = phi.len() / n_states;
+        let wps = Self::words_per_step(n_states, rho);
+        let epw = Self::entries_per_word(rho);
+        let mut words = vec![0u64; steps * wps];
+        for tau in 0..steps {
+            for s in 0..n_states {
+                let sel = phi[tau * n_states + s] as u64;
+                debug_assert!(sel < (1 << rho), "selector {sel} exceeds {rho} bits");
+                words[tau * wps + s / epw] |= sel << ((s % epw) as u32 * rho);
+            }
+        }
+        CompactSurvivors { sel_bits: rho, steps, n_states, words }
+    }
+
+    /// Selector width in bits (1 for per-stage decisions, rho for
+    /// radix-form selections).
+    pub fn sel_bits(&self) -> u32 {
+        self.sel_bits
+    }
+
+    /// Steps stored (stages for `sel_bits == 1`, stages / rho otherwise).
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Trellis states per step.
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    /// The selector for (step, state).
+    #[inline]
+    pub fn get(&self, step: usize, state: usize) -> u32 {
+        let epw = Self::entries_per_word(self.sel_bits);
+        let wps = self.n_states.div_ceil(epw);
+        let w = self.words[step * wps + state / epw];
+        ((w >> ((state % epw) as u32 * self.sel_bits)) & ((1 << self.sel_bits) - 1)) as u32
+    }
+
+    /// Resident heap bytes of the packed store (the quantity the
+    /// per-shard `survivor_bytes` gauge and `docs/MEMORY.md` count).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * std::mem::size_of::<u64>()
+    }
+}
+
+/// Fixed-capacity ring of bit-packed per-stage decision words.
+///
+/// Capacity is the frame geometry (`head + payload + tail` stages), set
+/// once at decoder construction; the forward pass writes stage slots
+/// with wrap-around addressing, so survivor storage stays bounded by
+/// one frame no matter how many frames stream through.
+/// [`snapshot`](DecisionRing::snapshot) linearizes the current frame's
+/// stages into a [`CompactSurvivors`] for the traceback pool.
+pub struct DecisionRing {
+    cap: usize,
+    wps: usize,
+    n_states: usize,
+    words: Vec<u64>,
+    /// Ring slot holding the current frame's stage 0.
+    start: usize,
+    /// Stages written for the current frame.
+    len: usize,
+}
+
+impl DecisionRing {
+    /// A ring holding at most `cap_stages` stages of 1-bit decisions.
+    pub fn new(cap_stages: usize, n_states: usize) -> Self {
+        let wps = CompactSurvivors::words_per_step(n_states, 1);
+        DecisionRing {
+            cap: cap_stages,
+            wps,
+            n_states,
+            words: vec![0u64; cap_stages * wps],
+            start: 0,
+            len: 0,
+        }
+    }
+
+    /// Begin a new frame: subsequent stages overwrite the oldest slots.
+    pub fn begin_frame(&mut self) {
+        if self.cap > 0 {
+            self.start = (self.start + self.len) % self.cap;
+        }
+        self.len = 0;
+    }
+
+    /// The (zeroed) word slot for the next stage; set bit `j` to record
+    /// that state `j`'s *high* predecessor (`prev[j][1]`) won.
+    pub fn push_stage(&mut self) -> &mut [u64] {
+        assert!(
+            self.len < self.cap,
+            "frame exceeds ring capacity of {} stages (head + payload + tail)",
+            self.cap
+        );
+        let slot = (self.start + self.len) % self.cap;
+        self.len += 1;
+        let w = &mut self.words[slot * self.wps..(slot + 1) * self.wps];
+        w.fill(0);
+        w
+    }
+
+    /// Ring capacity in stages.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident bytes of the ring itself (capacity, not fill level).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Linearize the current frame's stages into a packed survivor
+    /// store (stage 0 first, whatever the ring rotation).
+    pub fn snapshot(&self) -> CompactSurvivors {
+        let mut words = Vec::with_capacity(self.len * self.wps);
+        for i in 0..self.len {
+            let slot = (self.start + i) % self.cap;
+            words.extend_from_slice(&self.words[slot * self.wps..(slot + 1) * self.wps]);
+        }
+        CompactSurvivors::from_words(1, self.len, self.n_states, words)
+    }
+}
+
+/// The Alg-1 forward pass with bit-packed decisions written into
+/// `ring` (arithmetic identical to [`scalar::forward`] — f64 metric
+/// accumulation, ties select the low predecessor — so the decoded bits
+/// are bit-identical to the scalar reference).
+///
+/// Returns the final path metrics; the decisions for the frame are
+/// `ring.snapshot()`.
+///
+/// [`scalar::forward`]: super::scalar::forward
+pub fn forward_into(t: &Trellis, llr: &[f32], lam0: &[f32], ring: &mut DecisionRing) -> Vec<f32> {
+    let s_count = t.code().n_states();
+    let beta = t.code().beta();
+    assert_eq!(llr.len() % beta, 0, "llr length must be a multiple of beta");
+    assert_eq!(lam0.len(), s_count);
+    let n = llr.len() / beta;
+
+    let mut lam: Vec<f64> = lam0.iter().map(|&x| x as f64).collect();
+    let mut lam_next = vec![0f64; s_count];
+    let mut delta = vec![[0f64; 2]; s_count];
+    ring.begin_frame();
+
+    for t_idx in 0..n {
+        let l = &llr[t_idx * beta..(t_idx + 1) * beta];
+        for i in 0..s_count {
+            for u in 0..2usize {
+                let a = t.out[i][u];
+                let mut d = 0f64;
+                for (b, &lb) in l.iter().enumerate() {
+                    d += if (a >> b) & 1 == 0 { lb as f64 } else { -(lb as f64) };
+                }
+                delta[i][u] = d;
+            }
+        }
+        let w = ring.push_stage();
+        for j in 0..s_count {
+            let [i0, i1] = t.prev[j];
+            let u = t.code().branch_input(j as u32) as usize;
+            let l0 = lam[i0 as usize] + delta[i0 as usize][u];
+            let l1 = lam[i1 as usize] + delta[i1 as usize][u];
+            if l0 >= l1 {
+                lam_next[j] = l0;
+            } else {
+                lam_next[j] = l1;
+                w[j / 64] |= 1u64 << (j % 64);
+            }
+        }
+        std::mem::swap(&mut lam, &mut lam_next);
+    }
+    lam.iter().map(|&x| x as f32).collect()
+}
+
+/// One-shot forward pass allocating its own ring (tests, doc-examples;
+/// the decoder reuses a ring across frames instead).
+pub fn forward_compact(t: &Trellis, llr: &[f32], lam0: &[f32]) -> (CompactSurvivors, Vec<f32>) {
+    let n = llr.len() / t.code().beta();
+    let mut ring = DecisionRing::new(n.max(1), t.code().n_states());
+    let lam = forward_into(t, llr, lam0, &mut ring);
+    (ring.snapshot(), lam)
+}
+
+/// `FrameDecoder` with bit-packed survivor storage — the
+/// `BackendKind::Compact` backend. Decodes bit-identically to
+/// [`ScalarDecoder`](super::scalar::ScalarDecoder) at 1/32 of its
+/// survivor memory.
+pub struct CompactDecoder {
+    trellis: Arc<Trellis>,
+    stages: usize,
+    ring: DecisionRing,
+}
+
+impl CompactDecoder {
+    pub fn new(trellis: Arc<Trellis>, stages: usize) -> Self {
+        let n_states = trellis.code().n_states();
+        CompactDecoder { ring: DecisionRing::new(stages, n_states), trellis, stages }
+    }
+
+    /// Survivor bytes a full frame occupies (the `docs/MEMORY.md`
+    /// per-frame quantity: `frame_stages * ceil(n_states / 64) * 8`).
+    pub fn survivor_bytes_per_frame(&self) -> usize {
+        self.ring.bytes()
+    }
+}
+
+impl FrameDecoder for CompactDecoder {
+    fn frame_stages(&self) -> usize {
+        self.stages
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn trellis(&self) -> &Arc<Trellis> {
+        &self.trellis
+    }
+
+    fn forward_batch(&mut self, jobs: &[FrameJob]) -> Vec<RawFrame> {
+        let s_count = self.trellis.code().n_states();
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let lam0 = initial_metrics(s_count, job.start_state);
+            let lam = forward_into(&self.trellis, &job.llr, &lam0, &mut self.ring);
+            out.push(RawFrame { surv: Survivors::Compact(self.ring.snapshot()), lam });
+        }
+        out
+    }
+
+    fn label(&self) -> String {
+        "compact".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{awgn::AwgnChannel, bpsk};
+    use crate::coding::{poly::Code, Encoder};
+    use crate::viterbi::scalar::{self, ScalarDecoder};
+    use crate::viterbi::traceback::{traceback_compact, traceback_scalar};
+
+    fn trellis() -> Arc<Trellis> {
+        Arc::new(Trellis::new(Code::from_octal(7, &["171", "133"]).unwrap()))
+    }
+
+    fn noisy_llrs(seed: u64, n_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+        let t = trellis();
+        let mut enc = Encoder::new(t.code().clone());
+        let mut bits = crate::util::rng::Rng::new(seed).bits(n_bits - 6);
+        bits.extend_from_slice(&[0; 6]);
+        let coded = enc.encode(&bits);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xC0FFEE);
+        let rx = ch.transmit(&tx);
+        (bits, rx.iter().map(|&x| x as f32).collect())
+    }
+
+    #[test]
+    fn forward_decisions_match_scalar_predecessors() {
+        let t = trellis();
+        let (_, llr) = noisy_llrs(42, 64, 3.0);
+        let lam0 = scalar::initial_metrics(64, Some(0));
+        let (phi, lam_s) = scalar::forward(&t, &llr, &lam0);
+        let (surv, lam_c) = forward_compact(&t, &llr, &lam0);
+        assert_eq!(lam_s, lam_c, "final metrics must be identical");
+        assert_eq!(surv.steps(), 64);
+        for stage in 0..64 {
+            for j in 0..64usize {
+                let pred = phi[stage * 64 + j];
+                let bit = surv.get(stage, j);
+                assert_eq!(
+                    t.prev[j][bit as usize], pred,
+                    "stage {stage} state {j}: decision bit does not select the scalar predecessor"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compact_decode_equals_scalar_decode() {
+        let t = trellis();
+        for seed in 0..6u64 {
+            let (bits, llr) = noisy_llrs(seed + 300, 128, 4.0);
+            let lam0 = scalar::initial_metrics(64, Some(0));
+            let oracle = scalar::decode(&t, &llr, &lam0, Some(0));
+            let (surv, lam) = forward_compact(&t, &llr, &lam0);
+            let out = traceback_compact(&t, &surv, &lam, Some(0));
+            assert_eq!(out, oracle, "seed {seed}");
+            assert_eq!(out, bits, "seed {seed}: 4 dB n=128 decodes clean");
+        }
+    }
+
+    #[test]
+    fn ring_reuses_capacity_across_frames() {
+        let t = trellis();
+        let mut dec = CompactDecoder::new(t.clone(), 32);
+        let bytes = dec.survivor_bytes_per_frame();
+        assert_eq!(bytes, 32 * 8, "32 stages x 64 states / 8 bits-per-byte");
+        let mut sdec = ScalarDecoder::new(t, 32);
+        // several frames through the same ring: wrap-around must not
+        // corrupt decisions (start rotates with every frame)
+        for seed in 0..5u64 {
+            let (_, llr) = noisy_llrs(seed + 900, 32, 5.0);
+            let job = FrameJob {
+                llr,
+                start_state: Some(0),
+                end_state: Some(0),
+                emit_from: 0,
+                emit_len: 32,
+            };
+            let got = dec.decode_batch(std::slice::from_ref(&job));
+            let want = sdec.decode_batch(std::slice::from_ref(&job));
+            assert_eq!(got, want, "frame {seed} diverged after ring reuse");
+        }
+    }
+
+    #[test]
+    fn survivor_bytes_are_32x_smaller_than_scalar() {
+        let t = trellis();
+        let (_, llr) = noisy_llrs(7, 96, 5.0);
+        let lam0 = scalar::initial_metrics(64, Some(0));
+        let (phi, _) = scalar::forward(&t, &llr, &lam0);
+        let (surv, _) = forward_compact(&t, &llr, &lam0);
+        let scalar_bytes = phi.len() * std::mem::size_of::<u32>();
+        assert_eq!(surv.bytes() * 32, scalar_bytes);
+    }
+
+    #[test]
+    fn from_radix_roundtrips_selectors() {
+        // rho = 2: 32 selectors per word, values 0..4
+        let phi: Vec<u8> = (0..3 * 64).map(|i| (i % 4) as u8).collect();
+        let c = CompactSurvivors::from_radix(2, &phi, 64);
+        assert_eq!(c.sel_bits(), 2);
+        assert_eq!(c.steps(), 3);
+        assert_eq!(c.bytes(), 3 * 2 * 8);
+        for tau in 0..3 {
+            for s in 0..64 {
+                assert_eq!(c.get(tau, s), (phi[tau * 64 + s]) as u32, "tau {tau} s {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn odd_state_counts_pack_correctly() {
+        // k = 5 -> 16 states: exercises a non-64-multiple state count
+        let t = Arc::new(Trellis::new(Code::from_octal(5, &["23", "33"]).unwrap()));
+        let mut enc = Encoder::new(t.code().clone());
+        let mut bits = crate::util::rng::Rng::new(77).bits(28);
+        bits.extend_from_slice(&[0; 4]);
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let lam0 = scalar::initial_metrics(16, Some(0));
+        let (phi, lam) = scalar::forward(&t, &llr, &lam0);
+        let oracle = traceback_scalar(&t, &phi, &lam, Some(0));
+        let (surv, lam_c) = forward_compact(&t, &llr, &lam0);
+        let out = traceback_compact(&t, &surv, &lam_c, Some(0));
+        assert_eq!(out, oracle);
+        assert_eq!(out, bits);
+    }
+}

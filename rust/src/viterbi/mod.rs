@@ -6,6 +6,9 @@
 //!   accumulator precision, max/argmax epilogue), so BER studies can run
 //!   at CPU speed while staying faithful to the tensor formulation.
 //! * `radix2` / `radix4` — named constructors over `packed`.
+//! * `compact` — the scalar forward pass with bit-packed survivor
+//!   storage (1 bit per state per stage), the memory-efficient layout
+//!   of arXiv 2011.09337; see `docs/MEMORY.md` for the memory model.
 //! * `traceback` — the backward procedure (shared by every path; in the
 //!   paper it runs on scalar CUDA cores because it cannot be a matmul).
 //! * `tiled` — framed/overlapped decoding of long streams (§III).
@@ -13,9 +16,11 @@
 pub mod types;
 pub mod scalar;
 pub mod packed;
+pub mod compact;
 pub mod traceback;
 pub mod tiled;
 
+pub use compact::CompactDecoder;
 pub use packed::PackedDecoder;
 pub use scalar::ScalarDecoder;
-pub use types::{AccPrecision, FrameDecoder, FrameJob, NEG};
+pub use types::{AccPrecision, FrameDecoder, FrameJob, Survivors, NEG};

@@ -12,6 +12,34 @@
 //! This is what lets BER sweeps (Fig 13) run at CPU speed while staying
 //! faithful to the tensor formulation; cross-checked against the PJRT
 //! artifact in `rust/tests/integration_runtime.rs`.
+//!
+//! A forward + traceback round trip (the split the serving pipeline
+//! runs on different threads — forward on the engine shard, traceback
+//! on the worker pool):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tcvd::coding::{registry, trellis::Trellis};
+//! use tcvd::viterbi::packed::presets;
+//! use tcvd::viterbi::types::{FrameDecoder, FrameJob};
+//!
+//! let t = Arc::new(Trellis::new(registry::paper_code()));
+//! let mut dec = presets::radix4(t, 16); // 16 stages = 8 radix-4 steps
+//! let job = FrameJob {
+//!     llr: vec![1.0f32; 16 * 2], // positive LLR ⇒ bit 0
+//!     start_state: Some(0),
+//!     end_state: Some(0),
+//!     emit_from: 0,
+//!     emit_len: 16,
+//! };
+//! // forward pass: radix-form survivors + final path metrics ...
+//! let raws = dec.forward_batch(std::slice::from_ref(&job));
+//! assert_eq!(raws.len(), 1);
+//! // ... then the backward procedure (Alg 2) emits the bits
+//! let trellis = dec.trellis().clone();
+//! let bits = raws[0].traceback(&trellis, &job);
+//! assert_eq!(bits, vec![0u8; 16]);
+//! ```
 
 use std::sync::Arc;
 

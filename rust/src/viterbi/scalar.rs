@@ -13,6 +13,11 @@ use super::types::{FrameDecoder, FrameJob, RawFrame, Survivors, NEG};
 ///
 /// `llr`: flat `n * beta` soft values; `lam0`: initial path metrics.
 /// Returns (`phi` \[n\]\[S\] predecessor states, final metrics \[S\]).
+///
+/// `compact::forward_into` mirrors this arithmetic with a bit-packed
+/// decision store — any change to the metric accumulation or tie-break
+/// here must be applied there too (the cross-backend property tests in
+/// `rust/tests/compact_equivalence.rs` pin the bit-identity).
 pub fn forward(t: &Trellis, llr: &[f32], lam0: &[f32]) -> (Vec<u32>, Vec<f32>) {
     let s_count = t.code().n_states();
     let beta = t.code().beta();

@@ -22,7 +22,10 @@
 //! assert_eq!(jobs.len(), 2); // one frame per payload tile
 //! assert_eq!(jobs[0].start_state, Some(0)); // stream head is pinned
 //! assert_eq!(jobs[1].emit_from, 8); // warm-up overlap is not emitted
-//! assert!((cfg.overhead() - 1.5).abs() < 1e-12); // Eq-5 redundancy
+//! // Eq-5 redundancy (f + v) / f, with the paper's overlap v realized
+//! // as head + tail stages of context around the payload:
+//! assert!((cfg.overhead() - (32.0 + 8.0 + 8.0) / 32.0).abs() < 1e-12);
+//! assert!((cfg.overhead() - 1.5).abs() < 1e-12);
 //! ```
 
 use crate::error::{Error, Result};
@@ -30,13 +33,22 @@ use crate::error::{Error, Result};
 use super::types::{FrameDecoder, FrameJob};
 
 /// Frame geometry.
+///
+/// The paper's Eq-5 models one overlap quantity `v` per frame; our
+/// geometry splits that context into `head` (metric warm-up *before*
+/// the payload) and `tail` (traceback convergence *after* it), so the
+/// paper's `v` maps to `head + tail` here.
+/// [`overhead`](TileConfig::overhead) and its doctest pin this
+/// correspondence.
 #[derive(Clone, Copy, Debug)]
 pub struct TileConfig {
     /// Payload stages decoded per frame (paper's `f`).
     pub payload: usize,
-    /// Warm-up stages before the payload (history for metric convergence).
+    /// Warm-up stages before the payload (history for metric
+    /// convergence; part of the paper's `v`).
     pub head: usize,
-    /// Stages after the payload (traceback convergence; paper's `v`).
+    /// Stages after the payload (traceback convergence; part of the
+    /// paper's `v`).
     pub tail: usize,
 }
 
@@ -45,7 +57,10 @@ impl TileConfig {
         self.head + self.payload + self.tail
     }
 
-    /// The paper's Eq-5 storage overhead factor (1 + v/f).
+    /// The paper's Eq-5 storage/compute overhead factor `(f + v) / f`,
+    /// with `v = head + tail` (both overlap sides count toward the
+    /// redundant stages a frame decodes but does not emit):
+    /// `(payload + head + tail) / payload`.
     pub fn overhead(&self) -> f64 {
         1.0 + (self.head + self.tail) as f64 / self.payload as f64
     }

@@ -1,8 +1,44 @@
 //! The backward procedure (Alg 2). Cannot be expressed as a matmul
 //! (paper §V-A), so it runs here — on the Rust hot path for artifact
-//! decodes, mirroring the paper's scalar-CUDA traceback.
+//! decodes, mirroring the paper's scalar-CUDA traceback. In the serving
+//! pipeline these functions run on the shared traceback worker pool;
+//! offline they are reached through
+//! [`RawFrame::traceback`](super::types::RawFrame::traceback), which
+//! dispatches on the survivor form the forward pass emitted:
+//!
+//! * [`traceback_scalar`] — predecessor *global state* per
+//!   (stage, state), the Alg-1 `phi` layout (`u32` each);
+//! * [`traceback_radix`] — winning left *local* state per
+//!   (step, state), the radix-2^rho layout (`u8` each);
+//! * [`traceback_compact`] — the same selections bit-packed to `rho`
+//!   bits each (1 bit per state per stage for the butterfly case); see
+//!   `docs/MEMORY.md` for the storage comparison.
+//!
+//! A full forward + traceback round trip against the scalar reference:
+//!
+//! ```
+//! use tcvd::coding::{registry, trellis::Trellis};
+//! use tcvd::viterbi::{compact, scalar, traceback};
+//!
+//! let t = Trellis::new(registry::paper_code());
+//! // noiseless LLRs for the all-zero 8-stage stream (positive ⇒ bit 0)
+//! let llr = vec![1.0f32; 8 * 2];
+//! let lam0 = scalar::initial_metrics(64, Some(0));
+//!
+//! // Alg 1 (scalar survivor layout) + Alg 2
+//! let (phi, lam) = scalar::forward(&t, &llr, &lam0);
+//! let bits = traceback::traceback_scalar(&t, &phi, &lam, Some(0));
+//! assert_eq!(bits, vec![0u8; 8]);
+//!
+//! // the bit-packed survivor layout decodes identically
+//! let (surv, lam_c) = compact::forward_compact(&t, &llr, &lam0);
+//! let bits_c = traceback::traceback_compact(&t, &surv, &lam_c, Some(0));
+//! assert_eq!(bits_c, bits);
+//! ```
 
 use crate::coding::trellis::Trellis;
+
+use super::compact::CompactSurvivors;
 
 /// Traceback over scalar-form survivors (`phi[t*S + j]` = predecessor
 /// *global state* of j at stage t). Returns the decoded input bits.
@@ -24,6 +60,9 @@ pub fn traceback_scalar(t: &Trellis, phi: &[u32], lam_final: &[f32],
 /// *local* state, 0..2^rho-1, of the super-branch into global state s over
 /// stages [tau*rho, (tau+1)*rho)). Emits rho bits per step: the input bit
 /// consumed at local step x is bit x of the right local state (Thm 4).
+/// [`traceback_compact`] applies the same index math to the bit-packed
+/// store — keep the two walks in lockstep (the equivalence is pinned by
+/// this module's tests and `rust/tests/compact_equivalence.rs`).
 pub fn traceback_radix(t: &Trellis, rho: u32, phi: &[u8], lam_final: &[f32],
                        end_state: Option<u32>) -> Vec<u8> {
     let s_count = t.code().n_states();
@@ -40,6 +79,34 @@ pub fn traceback_radix(t: &Trellis, rho: u32, phi: &[u8], lam_final: &[f32],
         }
         let iloc = phi[tau * s_count + j as usize] as u32;
         debug_assert!(iloc < (1 << rho), "phi out of range: {iloc}");
+        j = (f << rho) + iloc; // Thm 4, local stage x = 0
+    }
+    out
+}
+
+/// Traceback over bit-packed selections (`surv.get(tau, s)` = winning
+/// left local state, `sel_bits` wide). The index math is Thm 4 with
+/// rho = `sel_bits`; rho = 1 is the butterfly case, where the selector
+/// picks between the two predecessors `prv(j)` and this reduces to
+/// [`traceback_scalar`] exactly (`prv(j) = {2f, 2f+1}` for the
+/// dragonfly f = j mod S/2, so `2f + selector` *is* the predecessor).
+pub fn traceback_compact(t: &Trellis, surv: &CompactSurvivors, lam_final: &[f32],
+                         end_state: Option<u32>) -> Vec<u8> {
+    let s_count = t.code().n_states();
+    assert_eq!(surv.n_states(), s_count, "survivor store built for a different trellis");
+    let rho = surv.sel_bits();
+    let n_steps = surv.steps();
+    let ndf = t.n_dragonflies(rho) as u32;
+    let mut j = end_state.unwrap_or_else(|| argmax(lam_final) as u32);
+    let mut out = vec![0u8; n_steps * rho as usize];
+    for tau in (0..n_steps).rev() {
+        let f = j % ndf;
+        let jloc = j / ndf;
+        for x in 0..rho {
+            out[tau * rho as usize + x as usize] = ((jloc >> x) & 1) as u8;
+        }
+        let iloc = surv.get(tau, j as usize);
+        debug_assert!(iloc < (1 << rho), "selector out of range: {iloc}");
         j = (f << rho) + iloc; // Thm 4, local stage x = 0
     }
     out
@@ -99,5 +166,33 @@ mod tests {
         let out_r = traceback_radix(&t, 1, &phi_r, &lam, Some(0));
         assert_eq!(out_s, out_r);
         assert_eq!(out_s, bits);
+
+        // the bit-packed form of the same selections decodes identically
+        let surv = CompactSurvivors::from_radix(1, &phi_r, 64);
+        let out_c = traceback_compact(&t, &surv, &lam, Some(0));
+        assert_eq!(out_c, out_s);
+    }
+
+    #[test]
+    fn compact_rho2_agrees_with_radix4() {
+        // pack a radix-4 forward pass's selections (u8 each) into the
+        // 2-bit compact layout: traceback must be unchanged
+        use crate::viterbi::packed::presets;
+
+        let t = std::sync::Arc::new(trellis());
+        let mut enc = Encoder::new(t.code().clone());
+        let mut bits = crate::util::rng::Rng::new(5150).bits(58);
+        bits.extend_from_slice(&[0; 6]);
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let mut dec = presets::radix4(t.clone(), 64);
+        let lam0 = scalar::initial_metrics(64, Some(0));
+        let (phi, lam) = dec.forward(&llr, &lam0);
+        let out_r = traceback_radix(&t, 2, &phi, &lam, Some(0));
+        let surv = CompactSurvivors::from_radix(2, &phi, 64);
+        assert_eq!(surv.bytes() * 4, phi.len(), "2-bit packing is 4x denser than u8");
+        let out_c = traceback_compact(&t, &surv, &lam, Some(0));
+        assert_eq!(out_c, out_r);
+        assert_eq!(out_c, bits);
     }
 }

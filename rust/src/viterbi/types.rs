@@ -45,13 +45,31 @@ pub struct FrameJob {
 }
 
 /// Survivor information produced by a forward pass, in whichever form
-/// the backend emits it.
+/// the backend emits it. The forms trade memory for lookup directness;
+/// `docs/MEMORY.md` quantifies each layout.
 #[derive(Clone, Debug)]
 pub enum Survivors {
     /// Alg-1 form: predecessor *global state* per (stage, state).
     Scalar(Vec<u32>),
     /// Radix form: winning left *local* state (0..2^rho) per (step, state).
     Radix { rho: u32, phi: Vec<u8> },
+    /// Bit-packed form: the same selections at `rho` bits each (1 bit
+    /// per state per stage for butterfly decisions) — the
+    /// memory-efficient layout of `BackendKind::Compact`.
+    Compact(super::compact::CompactSurvivors),
+}
+
+impl Survivors {
+    /// Resident heap bytes of the survivor store for one frame — the
+    /// quantity the per-shard `survivor_bytes` metrics gauge reports
+    /// and `docs/MEMORY.md` budgets.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Survivors::Scalar(phi) => phi.len() * std::mem::size_of::<u32>(),
+            Survivors::Radix { phi, .. } => phi.len(),
+            Survivors::Compact(c) => c.bytes(),
+        }
+    }
 }
 
 /// Raw output of a forward pass for one frame (traceback still pending).
@@ -71,6 +89,9 @@ impl RawFrame {
             }
             Survivors::Radix { rho, phi } => {
                 super::traceback::traceback_radix(trellis, *rho, phi, &self.lam, job.end_state)
+            }
+            Survivors::Compact(surv) => {
+                super::traceback::traceback_compact(trellis, surv, &self.lam, job.end_state)
             }
         };
         bits[job.emit_from..job.emit_from + job.emit_len].to_vec()

@@ -1,0 +1,163 @@
+//! `BackendKind::Compact` equivalence suite: the bit-packed survivor
+//! backend must decode **bit-identically** to the scalar reference for
+//! every code, tile geometry and shard count, while its metrics
+//! snapshot reports the 32x-smaller resident survivor memory that
+//! `docs/MEMORY.md` budgets.
+
+use std::sync::Arc;
+
+use tcvd::api::{BackendKind, DecoderBuilder};
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder};
+use tcvd::util::check::{forall, gen};
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::compact::{forward_compact, CompactDecoder, CompactSurvivors};
+use tcvd::viterbi::scalar::{self, ScalarDecoder};
+use tcvd::viterbi::tiled::{decode_stream, TileConfig};
+use tcvd::viterbi::traceback::traceback_compact;
+
+fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut bits = Rng::new(seed).bits(payload_bits - 6);
+    bits.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&bits);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xC0DE);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+/// The packed forward + traceback equals the scalar oracle on random
+/// valid codes (not just the paper's), over generic continuous LLRs —
+/// including state counts that do not fill a 64-bit word.
+#[test]
+fn prop_compact_matches_scalar_for_random_codes() {
+    forall(
+        0xC0117AC7,
+        24,
+        |r: &mut Rng| {
+            let k = 4 + r.next_below(5) as u32; // 4..8 -> 8..128 states
+            let beta = 2 + r.next_below(2) as usize;
+            let polys: Vec<u32> = (0..beta)
+                .map(|_| {
+                    let msb = 1u32 << (k - 1);
+                    (r.next_u64() as u32 & (msb - 1)) | msb | 1
+                })
+                .collect();
+            let llr = gen::llrs(r, 48 * beta, 1.4);
+            (k, polys, llr)
+        },
+        |(k, polys, llr)| {
+            let code = Code::new(*k, polys.clone()).map_err(|e| e.to_string())?;
+            let s_count = code.n_states();
+            let t = Trellis::new(code);
+            let lam0 = scalar::initial_metrics(s_count, None);
+            let oracle = scalar::decode(&t, llr, &lam0, None);
+            let (surv, lam) = forward_compact(&t, llr, &lam0);
+            let out = traceback_compact(&t, &surv, &lam, None);
+            if out != oracle {
+                return Err(format!("compact decode diverged (k={k}, S={s_count})"));
+            }
+            let scalar_bytes = oracle.len() * s_count * std::mem::size_of::<u32>();
+            let packed = CompactSurvivors::words_per_step(s_count, 1) * 8 * oracle.len();
+            if surv.bytes() != packed {
+                return Err(format!("{} survivor bytes, expected {packed}", surv.bytes()));
+            }
+            // always strictly below the u32-per-state scalar layout
+            // (32x when states fill whole 64-bit words)
+            if surv.bytes() >= scalar_bytes {
+                return Err("compact store not smaller than scalar".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Streamed decoding through the reference tiler: compact equals scalar
+/// for random tile geometries (head/tail 0 included) on noisy streams.
+#[test]
+fn prop_compact_matches_scalar_across_tile_geometries() {
+    forall(
+        0x7115,
+        12,
+        |r: &mut Rng| {
+            let payload = [16usize, 32, 64][r.next_below(3) as usize];
+            let head = [0usize, 8, 17, 32][r.next_below(4) as usize];
+            let tail = [0usize, 8, 17, 32][r.next_below(4) as usize];
+            let frames = 2 + r.next_below(3) as usize;
+            (TileConfig { payload, head, tail }, frames, r.next_u64())
+        },
+        |&(cfg, frames, seed)| {
+            let t = Arc::new(Trellis::new(registry::paper_code()));
+            let (_, llr) = noisy_stream(seed % 100_000, cfg.payload * frames, 2.5);
+            let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
+            let want = decode_stream(&mut sdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let mut cdec = CompactDecoder::new(t, cfg.frame_stages());
+            let got = decode_stream(&mut cdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("tile {cfg:?}: compact stream decode diverged"))
+            }
+        },
+    );
+}
+
+fn run_backend_sessions(backend: BackendKind, shards: usize, n_sessions: usize)
+                        -> (Vec<Vec<u8>>, u64) {
+    let coord = Arc::new(
+        DecoderBuilder::new()
+            .backend(backend)
+            .tile_dims(32, 16, 16)
+            .shards(shards)
+            .workers(2)
+            .max_batch(8)
+            .batch_deadline_us(200)
+            .queue_depth(256)
+            .serve()
+            .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for s in 0..n_sessions {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let (_, llr) = noisy_stream(6000 + s as u64, 256 + 32 * (s % 3), 5.5);
+            let mut session = c.open_session().unwrap();
+            for chunk in llr.chunks(70) {
+                session.push(chunk).unwrap();
+            }
+            session.finish_and_collect(true).unwrap()
+        }));
+    }
+    let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let peak = coord.metrics().survivor_bytes_peak();
+    let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
+    coord.shutdown().unwrap();
+    (outs, peak)
+}
+
+/// The coordinator serving path: Compact output is invariant across
+/// shard counts and identical to the scalar backend, and the per-shard
+/// survivor-bytes gauge reports the bit-packed footprint (32x below the
+/// scalar layout for the same geometry).
+#[test]
+fn compact_shard_invariance_and_survivor_gauge() {
+    let n_sessions = 4;
+    let (scalar_outs, scalar_peak) = run_backend_sessions(BackendKind::Scalar, 1, n_sessions);
+    // 64-stage frames, 64 states: scalar stores u32 per (stage, state)
+    assert_eq!(scalar_peak, 64 * 64 * 4, "scalar survivor bytes per frame");
+    let mut compact_peak_seen = 0;
+    for shards in [1usize, 2, 8] {
+        let (outs, peak) = run_backend_sessions(BackendKind::Compact, shards, n_sessions);
+        assert_eq!(
+            outs, scalar_outs,
+            "{shards}-shard compact output differs from the scalar reference"
+        );
+        // max_batch is clamped to the backend's (1), so the gauge holds
+        // exactly one frame: 64 stages x 64 states / 8 bits per byte
+        assert_eq!(peak, 64 * 64 / 8, "shards={shards}: compact survivor gauge");
+        compact_peak_seen = peak;
+    }
+    assert_eq!(scalar_peak, 32 * compact_peak_seen, "compact is 32x smaller");
+}

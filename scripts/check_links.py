@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the repo docs (offline lychee substitute).
+
+Scans the markdown set the docs CI job guards -- README.md, docs/*.md,
+rust/README.md -- for inline links and fails (exit 1) on any relative
+link whose target file does not exist. External (http/https/mailto)
+links are skipped; pure in-page anchors (#...) are skipped; a
+file#anchor link is checked for the file part only.
+
+Usage: python3 scripts/check_links.py [repo_root]
+"""
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) inline links; deliberately simple — the docs use no
+# nested parens or reference-style targets for files.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root):
+    files = [os.path.join(root, "README.md"), os.path.join(root, "rust", "README.md")]
+    files += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_file(path, root):
+    errors = []
+    text = open(path, encoding="utf-8").read()
+    # ignore fenced code blocks: links in ``` blocks are illustrative
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for match in LINK_RE.finditer(text):
+        target = match.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            errors.append((os.path.relpath(path, root), match.group(1), resolved))
+    return errors
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    files = doc_files(root)
+    if not files:
+        print("check_links: no markdown files found under", root)
+        return 1
+    all_errors = []
+    for f in files:
+        all_errors.extend(check_file(f, root))
+    if all_errors:
+        print(f"check_links: {len(all_errors)} broken relative link(s):")
+        for src, link, resolved in all_errors:
+            print(f"  {src}: ({link}) -> missing {resolved}")
+        return 1
+    print(f"check_links: OK — {len(files)} files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
