@@ -51,16 +51,17 @@ fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
     ))
 }
 
-/// Shard-scaling run on the CPU tensor-emulation backend (always
-/// available, unlike the artifact): N sessions decode concurrently
-/// through a coordinator with `shards` engine threads. Outputs are
-/// checked bit-exact against the transmitted payloads, so the sweep
-/// also witnesses the shard-invariance guarantee.
-fn run_sharded(shards: usize, sessions: usize, info_bits: usize)
+/// Shard-scaling run on an always-available CPU backend (no artifacts
+/// needed): N sessions decode concurrently through a coordinator with
+/// `shards` engine threads. Outputs are checked bit-exact against the
+/// transmitted payloads, so the sweep also witnesses the
+/// shard-invariance guarantee — for the quantized `simd` backend this
+/// additionally witnesses that quantization is transparent at 6 dB.
+fn run_sharded(backend: &str, shards: usize, sessions: usize, info_bits: usize)
                -> tcvd::Result<(f64, f64, u64)> {
     let coord = Arc::new(
         DecoderBuilder::new()
-            .backend_name("cpu-radix4")?
+            .backend_name(backend)?
             .tile(defaults::CPU_TILE)
             .shards(shards)
             .workers(2)
@@ -77,7 +78,10 @@ fn run_sharded(shards: usize, sessions: usize, info_bits: usize)
             s.spawn(move || {
                 let (payload, llr) = common::workload(9000 + i as u64, per_session, 6.0);
                 let out = coord.decode_stream_blocking(&llr, true).unwrap();
-                assert_eq!(out, payload, "shards={shards} session {i}: output not bit-exact");
+                assert_eq!(
+                    out, payload,
+                    "{backend} shards={shards} session {i}: output not bit-exact"
+                );
             });
         }
     });
@@ -114,7 +118,7 @@ fn run_survivor(backend: &str, info_bits: usize) -> tcvd::Result<(f64, usize)> {
 }
 
 fn main() -> tcvd::Result<()> {
-    let info_bits = if common::full_rigor() { 2_097_152 } else { 524_288 };
+    let info_bits = common::budget(131_072, 524_288, 2_097_152);
     println!("E5 — dynamic batching sweep (radix-4 artifact, batch capacity 64)\n");
     println!(
         "{:>9} {:>10} {:>12} | {:>10} {:>11} {:>10} {:>10}",
@@ -162,37 +166,44 @@ fn main() -> tcvd::Result<()> {
         }
     }
     // shard scaling: aggregate serve() throughput vs engine shard count
-    // (CPU emulation backend so the sweep runs without artifacts)
-    let shard_bits = if common::full_rigor() { 1_048_576 } else { 262_144 };
-    println!("\nshard scaling — 8 sessions, cpu-radix4 emulation, {shard_bits} info bits");
-    println!("{:>7} | {:>10} {:>11} {:>8} {:>9}", "shards", "Mb/s", "mean_batch", "steals", "speedup");
+    // per CPU backend (BENCH_PR4.json's Mb/s-per-backend/shard matrix;
+    // no artifacts needed)
+    let shard_bits = common::budget(131_072, 262_144, 1_048_576);
     let mut shard_rows = Vec::new();
-    let mut base_mbps = None;
-    for shards in [1usize, 2, 4, 8] {
-        match run_sharded(shards, 8, shard_bits) {
-            Ok((mbps, mean_batch, steals)) => {
-                let base = *base_mbps.get_or_insert(mbps);
-                println!(
-                    "{shards:>7} | {mbps:>10.2} {mean_batch:>11.1} {steals:>8} {:>8.2}x",
-                    mbps / base
-                );
-                shard_rows.push(json::obj(vec![
-                    ("shards", json::num(shards as f64)),
-                    ("mbps", json::num(mbps)),
-                    ("mean_batch", json::num(mean_batch)),
-                    ("steals", json::num(steals as f64)),
-                    ("speedup", json::num(mbps / base)),
-                ]));
-            }
-            Err(e) => {
-                println!("{shards:>7} | SKIP ({e})");
-                break;
+    for backend in ["cpu-radix4", "simd"] {
+        println!("\nshard scaling — 8 sessions, {backend} backend, {shard_bits} info bits");
+        println!(
+            "{:>7} | {:>10} {:>11} {:>8} {:>9}",
+            "shards", "Mb/s", "mean_batch", "steals", "speedup"
+        );
+        let mut base_mbps = None;
+        for shards in [1usize, 2, 4, 8] {
+            match run_sharded(backend, shards, 8, shard_bits) {
+                Ok((mbps, mean_batch, steals)) => {
+                    let base = *base_mbps.get_or_insert(mbps);
+                    println!(
+                        "{shards:>7} | {mbps:>10.2} {mean_batch:>11.1} {steals:>8} {:>8.2}x",
+                        mbps / base
+                    );
+                    shard_rows.push(json::obj(vec![
+                        ("backend", json::s(backend)),
+                        ("shards", json::num(shards as f64)),
+                        ("mbps", json::num(mbps)),
+                        ("mean_batch", json::num(mean_batch)),
+                        ("steals", json::num(steals as f64)),
+                        ("speedup", json::num(mbps / base)),
+                    ]));
+                }
+                Err(e) => {
+                    println!("{shards:>7} | SKIP ({e})");
+                    break;
+                }
             }
         }
     }
-    // survivor-storage sweep: compact vs packed vs scalar layouts on
-    // the same tile geometry (docs/MEMORY.md memory model)
-    let surv_bits = if common::full_rigor() { 1_048_576 } else { 262_144 };
+    // survivor-storage sweep: compact vs packed vs scalar vs quantized
+    // simd layouts on the same tile geometry (docs/MEMORY.md model)
+    let surv_bits = common::budget(131_072, 262_144, 1_048_576);
     println!(
         "\nsurvivor storage — one-shot decode, {} tile ({} stages), {surv_bits} info bits",
         "64+32/32", defaults::CPU_TILE.frame_stages()
@@ -203,7 +214,7 @@ fn main() -> tcvd::Result<()> {
     );
     let mut surv_rows = Vec::new();
     let mut scalar_bytes: Option<usize> = None;
-    for backend in ["scalar", "cpu-radix4", "compact"] {
+    for backend in ["scalar", "cpu-radix4", "compact", "simd"] {
         match run_survivor(backend, surv_bits) {
             Ok((mbps, bytes)) => {
                 if backend == "scalar" {

@@ -16,6 +16,24 @@ pub fn full_rigor() -> bool {
     std::env::var("TCVD_BENCH_FULL").map_or(false, |v| v == "1")
 }
 
+/// Smoke mode (tiny budgets so CI can run the sweeps every push
+/// without them rotting): set TCVD_BENCH_SMOKE=1. `full_rigor` wins if
+/// both are set. `scripts/bench_snapshot.py --smoke` is the driver.
+pub fn smoke() -> bool {
+    !full_rigor() && std::env::var("TCVD_BENCH_SMOKE").map_or(false, |v| v == "1")
+}
+
+/// Pick an info-bit budget by rigor mode.
+pub fn budget(smoke_bits: usize, default_bits: usize, full_bits: usize) -> usize {
+    if full_rigor() {
+        full_bits
+    } else if smoke() {
+        smoke_bits
+    } else {
+        default_bits
+    }
+}
+
 /// Generate (payload, llr-stream) for the paper's code at an Eb/N0.
 pub fn workload(seed: u64, info_bits: usize, ebn0_db: f64) -> (Vec<u8>, Vec<f32>) {
     let code = registry::paper_code();

@@ -21,13 +21,20 @@ fn run_combo(variant: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
     // is the batching bench's sweep
     let coord =
         DecoderBuilder::new().variant(variant).workers(3).queue_depth(2048).shards(1).serve()?;
-    // split across 4 concurrent sessions to keep batches full
+    run_sessions(coord, llr)
+}
+
+/// Drive `llr` through a running coordinator as 4 concurrent sessions
+/// (keeps batches full), then shut it down; returns (Mb/s, mean batch
+/// occupancy).
+fn run_sessions(coord: tcvd::coordinator::Coordinator, llr: &[f32])
+                -> tcvd::Result<(f64, f64)> {
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
+        let coord = &coord;
         let quarters: Vec<&[f32]> = llr.chunks(llr.len() / 4).collect();
         let mut joins = Vec::new();
         for q in quarters {
-            let coord = &coord;
             joins.push(s.spawn(move || coord.decode_stream_blocking(q, false).unwrap()));
         }
         for j in joins {
@@ -41,8 +48,23 @@ fn run_combo(variant: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
     Ok((common::mbps(info_bits, wall), snap.mean_batch))
 }
 
+/// One CPU backend on the table-1 workload: single shard, CPU tile,
+/// same 4-session drive as the artifact combos. This is the
+/// scalar-vs-simd trajectory row of `BENCH_PR4.json`
+/// (`scripts/bench_snapshot.py`).
+fn run_cpu_backend(backend: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
+    let coord = DecoderBuilder::new()
+        .backend_name(backend)?
+        .tile(defaults::CPU_TILE)
+        .workers(3)
+        .queue_depth(2048)
+        .shards(1)
+        .serve()?;
+    run_sessions(coord, llr)
+}
+
 fn main() -> tcvd::Result<()> {
-    let info_bits = if common::full_rigor() { 4_194_304 } else { 1_048_576 };
+    let info_bits = common::budget(131_072, 1_048_576, 4_194_304);
     let (_, llr) = common::workload(2024, info_bits, 5.0);
 
     // (paper row, artifact variant)
@@ -74,12 +96,46 @@ fn main() -> tcvd::Result<()> {
             Err(e) => println!("{name:>15} | {paper:12.1} | SKIP ({e})"),
         }
     }
+    // CPU fast-path section: same workload, single shard, no artifacts
+    // needed — the scalar-vs-simd ratio BENCH_PR4.json tracks across
+    // PRs (the quantized SIMD ACS path must hold >= 3x scalar here)
+    println!("\nCPU backends — table-1 workload, single shard, CPU tile (64+32/32)");
+    println!("{:>12} | {:>10} | {:>12} | {:>10}", "backend", "this Mb/s", "mean batch", "vs scalar");
+    let mut cpu_rows = Vec::new();
+    let mut scalar_mbps = None;
+    for backend in ["scalar", "compact", "cpu-radix4", "simd"] {
+        match run_cpu_backend(backend, &llr) {
+            Ok((mbps, mean_batch)) => {
+                if backend == "scalar" {
+                    scalar_mbps = Some(mbps);
+                }
+                let mut row = vec![
+                    ("backend", json::s(backend)),
+                    ("mbps", json::num(mbps)),
+                    ("mean_batch", json::num(mean_batch)),
+                ];
+                match scalar_mbps {
+                    Some(base) => {
+                        println!(
+                            "{backend:>12} | {mbps:>10.2} | {mean_batch:>12.1} | {:>9.2}x",
+                            mbps / base
+                        );
+                        row.push(("speedup_vs_scalar", json::num(mbps / base)));
+                    }
+                    None => println!("{backend:>12} | {mbps:>10.2} | {mean_batch:>12.1} | {:>10}", "-"),
+                }
+                cpu_rows.push(json::obj(row));
+            }
+            Err(e) => println!("{backend:>12} | SKIP ({e})"),
+        }
+    }
     common::write_json(
         "table1_throughput",
         &json::obj(vec![
             ("experiment", json::s("E2/TableI")),
             ("info_bits", json::num(info_bits as f64)),
             ("rows", Json::Arr(rows)),
+            ("cpu_rows", Json::Arr(cpu_rows)),
         ]),
     );
     Ok(())

@@ -45,7 +45,10 @@
 //! throughout the tests. Memory-tight deployments select
 //! [`BackendKind::Compact`], which stores survivors as bit-packed
 //! decision words (1/32 the survivor memory of the scalar layout,
-//! bit-identical output — see `docs/MEMORY.md`). The builder validates at
+//! bit-identical output — see `docs/MEMORY.md`); CPU-serving
+//! deployments select [`BackendKind::Simd`], the quantized
+//! lane-parallel forward pass (scalar-identical bits at a multiple of
+//! the scalar throughput — see `docs/PERFORMANCE.md`). The builder validates at
 //! [`DecoderBuilder::build`]/[`DecoderBuilder::serve`] and reports
 //! failures as the typed [`tcvd::Error`](crate::Error); `anyhow` never
 //! crosses this boundary. The pipeline architecture behind `serve()` is
@@ -79,6 +82,7 @@ pub const BACKEND_NAMES: &[&str] = &[
     "artifact",
     "scalar",
     "compact",
+    "simd",
     "cpu-radix2",
     "cpu-radix4",
     "cpu-radix4-noperm",
@@ -110,6 +114,19 @@ pub enum BackendKind {
     /// deployment before compute does; `docs/MEMORY.md` has the worked
     /// budgets and the backend-selection table.
     Compact,
+    /// Quantized lane-parallel ACS fast path: i16 path metrics
+    /// (saturating adds, periodic renormalization), per-symbol
+    /// branch-metric dedup and a structure-of-arrays butterfly update
+    /// that runs many states per instruction (AVX2 kernel behind a
+    /// runtime check, portable autovectorized loop elsewhere), with
+    /// decisions bit-packed into the same survivor ring as
+    /// [`BackendKind::Compact`]. The fastest CPU forward pass —
+    /// bit-identical to [`BackendKind::Scalar`] on quantized inputs
+    /// (pinned by `rust/tests/simd_equivalence.rs`); hot-path anatomy
+    /// and the quantization model are in `docs/PERFORMANCE.md`.
+    /// [`DecoderBuilder::renorm_every`] sets the renormalization
+    /// period (clamped to the i16 headroom; 0 = widest safe period).
+    Simd,
 }
 
 impl BackendKind {
@@ -191,6 +208,7 @@ impl DecoderBuilder {
             "artifact" | "pjrt" => self.backend = BackendKind::Artifact,
             "scalar" => self.backend = BackendKind::Scalar,
             "compact" => self.backend = BackendKind::Compact,
+            "simd" => self.backend = BackendKind::Simd,
             "cpu-radix2" => self.backend = BackendKind::cpu("radix2"),
             "cpu-radix4" => self.backend = BackendKind::cpu("radix4"),
             "cpu-radix4-noperm" => self.backend = BackendKind::cpu("radix4_noperm"),
@@ -248,7 +266,9 @@ impl DecoderBuilder {
         self
     }
 
-    /// Path-metric renormalization period in stages (0 = off).
+    /// Path-metric renormalization period in stages (CPU packed
+    /// backends: 0 = off; `simd` backend: 0 = the widest period the
+    /// i16 headroom allows, larger values are clamped to it).
     pub fn renorm_every(mut self, stages: usize) -> Self {
         self.renorm_every = stages;
         self
@@ -400,7 +420,7 @@ impl DecoderBuilder {
                     return Err(Error::config("artifact backend needs a variant name"));
                 }
             }
-            BackendKind::Scalar | BackendKind::Compact => {}
+            BackendKind::Scalar | BackendKind::Compact | BackendKind::Simd => {}
         }
         Ok(())
     }
@@ -420,6 +440,11 @@ impl DecoderBuilder {
             BackendKind::Compact => BackendSpec::Compact {
                 code: self.code.clone(),
                 stages: self.tile.frame_stages(),
+            },
+            BackendKind::Simd => BackendSpec::Simd {
+                code: self.code.clone(),
+                stages: self.tile.frame_stages(),
+                renorm_every: self.renorm_every,
             },
             BackendKind::Cpu { scheme } => BackendSpec::CpuPacked {
                 code: self.code.clone(),
@@ -571,7 +596,7 @@ pub fn builder_flags() -> Vec<FlagSpec> {
             "renorm-every",
             "N",
             format!(
-                "metric renormalization period, CPU backends (default {})",
+                "metric renormalization period, cpu-*/simd backends (default {})",
                 defaults::RENORM_EVERY
             ),
         ),
@@ -801,6 +826,37 @@ mod tests {
         let b = c.decode_stream(&llr, true).unwrap();
         assert_eq!(a, b);
         assert_eq!(b, vec![0u8; 64]);
+    }
+
+    #[test]
+    fn simd_backend_builds_and_matches_scalar() {
+        let llr = vec![1.0f32; 64 * 2]; // positive LLR ⇒ all-zero stream
+        let mut s = DecoderBuilder::new()
+            .backend(BackendKind::Scalar)
+            .tile_dims(32, 8, 8)
+            .build()
+            .unwrap();
+        let mut c = DecoderBuilder::new()
+            .backend_name("simd")
+            .unwrap()
+            .tile_dims(32, 8, 8)
+            .build()
+            .unwrap();
+        assert_eq!(c.label(), "simd");
+        assert_eq!(c.frame_stages(), 48);
+        let a = s.decode_stream(&llr, true).unwrap();
+        let b = c.decode_stream(&llr, true).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, vec![0u8; 64]);
+    }
+
+    #[test]
+    fn renorm_every_flows_into_simd_spec() {
+        let b = DecoderBuilder::new().backend(BackendKind::Simd).renorm_every(4);
+        match b.to_backend_spec() {
+            BackendSpec::Simd { renorm_every, .. } => assert_eq!(renorm_every, 4),
+            other => panic!("expected Simd spec, got {other:?}"),
+        }
     }
 
     #[test]

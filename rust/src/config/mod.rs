@@ -162,6 +162,13 @@ mod tests {
     }
 
     #[test]
+    fn parses_simd_backend() {
+        let cfg = Config::from_toml("backend = \"simd\"\n").unwrap();
+        assert_eq!(cfg.backend, "simd");
+        crate::api::DecoderBuilder::from_config(&cfg).unwrap();
+    }
+
+    #[test]
     fn parses_full_config() {
         let cfg = Config::from_toml(
             r#"

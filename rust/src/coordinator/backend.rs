@@ -22,6 +22,7 @@ use crate::util::half::HalfKind;
 use crate::viterbi::compact::CompactDecoder;
 use crate::viterbi::packed::PackedDecoder;
 use crate::viterbi::scalar::ScalarDecoder;
+use crate::viterbi::simd::SimdDecoder;
 use crate::viterbi::types::{AccPrecision, FrameDecoder};
 
 /// What decoder the engine should run.
@@ -45,6 +46,13 @@ pub enum BackendSpec {
     /// frame-sized ring — 1/32 the survivor memory of `Scalar`,
     /// bit-identical output. Memory model: `docs/MEMORY.md`.
     Compact { code: String, stages: usize },
+    /// Quantized lane-parallel ACS fast path: i16 path metrics with
+    /// saturating adds and periodic renormalization, per-symbol
+    /// branch-metric dedup, structure-of-arrays butterfly update
+    /// (autovectorized, AVX2 kernel behind a runtime check), decisions
+    /// bit-packed into the `Compact` ring. Decodes bit-identically to
+    /// `Scalar` on grid LLRs; model in `docs/PERFORMANCE.md`.
+    Simd { code: String, stages: usize, renorm_every: usize },
 }
 
 impl BackendSpec {
@@ -86,6 +94,11 @@ impl BackendSpec {
                 let trellis = Arc::new(Trellis::new(code));
                 Ok(Box::new(CompactDecoder::new(trellis, *stages)))
             }
+            BackendSpec::Simd { code, stages, renorm_every } => {
+                let code = registry::lookup(code).or_backend("simd backend")?;
+                let trellis = Arc::new(Trellis::new(code));
+                Ok(Box::new(SimdDecoder::new(trellis, *stages, *renorm_every)))
+            }
         }
     }
 }
@@ -114,6 +127,12 @@ mod tests {
         let dec3 = BackendSpec::Compact { code: "ccsds".into(), stages: 32 }.build().unwrap();
         assert_eq!(dec3.frame_stages(), 32);
         assert_eq!(dec3.label(), "compact");
+
+        let dec4 = BackendSpec::Simd { code: "ccsds".into(), stages: 32, renorm_every: 16 }
+            .build()
+            .unwrap();
+        assert_eq!(dec4.frame_stages(), 32);
+        assert_eq!(dec4.label(), "simd");
     }
 
     #[test]

@@ -103,11 +103,12 @@ pub fn run_engine_shard(
         }
         // execute the forward pass
         let jobs: Vec<_> = batch.iter().map(|t| t.job.clone()).collect();
+        let bits: usize = jobs.iter().map(|j| j.emit_len).sum();
         let fwd_start = Instant::now();
         let raws = dec.forward_batch(&jobs);
         let surv_bytes: usize = raws.iter().map(|r| r.surv.bytes()).sum();
         metrics.record_exec(shard_idx, batch.len(), fwd_start.elapsed().as_nanos() as u64,
-                            surv_bytes);
+                            surv_bytes, bits);
         stats.queue_depth.store(own.len() as u64, Ordering::Relaxed);
         for (task, raw) in batch.drain(..).zip(raws) {
             if !out.push(RawTask { task, raw }) {

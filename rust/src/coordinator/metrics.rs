@@ -1,5 +1,6 @@
 //! Pipeline metrics: throughput, latency percentiles, batch occupancy,
-//! and per-shard counters (queue depth, frames decoded, steal count).
+//! and per-shard counters (queue depth, frames decoded, steal count,
+//! survivor-byte high-water mark, forward-throughput EWMA).
 //!
 //! One [`Metrics`] hub is shared by every pipeline stage; sessions read
 //! point-in-time [`MetricsSnapshot`]s through
@@ -31,7 +32,17 @@ pub struct ShardStats {
     /// memory-model quantity of `docs/MEMORY.md` — depends on the
     /// backend's survivor layout and the frame geometry).
     pub survivor_bytes: AtomicU64,
+    /// EWMA of this shard's forward-pass throughput in Mb/s of emitted
+    /// payload bits (gauge; f64 stored as bits, smoothing factor
+    /// [`THROUGHPUT_EWMA_ALPHA`]). Written only by the owning engine
+    /// thread via [`Metrics::record_exec`], so the read-modify-write
+    /// needs no CAS loop.
+    pub throughput_mbps: AtomicU64,
 }
+
+/// Smoothing factor of the per-shard `throughput_mbps` EWMA gauge: the
+/// weight of the newest batched execution.
+pub const THROUGHPUT_EWMA_ALPHA: f64 = 0.2;
 
 /// Shared metrics hub (updated by every pipeline stage).
 pub struct Metrics {
@@ -79,9 +90,9 @@ impl Metrics {
 
     /// Record one batched execution by shard `shard` covering `frames`
     /// frames whose forward pass materialized `survivor_bytes` of
-    /// survivor storage.
+    /// survivor storage and will emit `bits` payload bits.
     pub fn record_exec(&self, shard: usize, frames: usize, forward_ns: u64,
-                       survivor_bytes: usize) {
+                       survivor_bytes: usize, bits: usize) {
         self.execs.fetch_add(1, Ordering::Relaxed);
         self.exec_frames.fetch_add(frames as u64, Ordering::Relaxed);
         self.forward_ns.fetch_add(forward_ns, Ordering::Relaxed);
@@ -89,6 +100,17 @@ impl Metrics {
         s.execs.fetch_add(1, Ordering::Relaxed);
         s.frames.fetch_add(frames as u64, Ordering::Relaxed);
         s.survivor_bytes.fetch_max(survivor_bytes as u64, Ordering::Relaxed);
+        if forward_ns > 0 && bits > 0 {
+            // Mb/s = bits / (ns * 1e-9) / 1e6 = bits * 1000 / ns
+            let inst = bits as f64 * 1000.0 / forward_ns as f64;
+            let prev = f64::from_bits(s.throughput_mbps.load(Ordering::Relaxed));
+            let next = if prev == 0.0 {
+                inst
+            } else {
+                THROUGHPUT_EWMA_ALPHA * inst + (1.0 - THROUGHPUT_EWMA_ALPHA) * prev
+            };
+            s.throughput_mbps.store(next.to_bits(), Ordering::Relaxed);
+        }
         self.occupancy.lock().unwrap().record(frames as u64);
     }
 
@@ -126,6 +148,7 @@ impl Metrics {
                     steals: s.steals.load(Ordering::Relaxed),
                     queue_depth: s.queue_depth.load(Ordering::Relaxed),
                     survivor_bytes: s.survivor_bytes.load(Ordering::Relaxed),
+                    throughput_mbps: f64::from_bits(s.throughput_mbps.load(Ordering::Relaxed)),
                 })
                 .collect(),
         }
@@ -146,6 +169,10 @@ pub struct ShardSnapshot {
     /// High-water mark of resident survivor bytes from one batched
     /// execution (see `docs/MEMORY.md` for the per-layout formulas).
     pub survivor_bytes: u64,
+    /// EWMA of this shard's forward-pass throughput in Mb/s of payload
+    /// bits (0 until the shard has executed; see
+    /// [`THROUGHPUT_EWMA_ALPHA`]).
+    pub throughput_mbps: f64,
 }
 
 /// A point-in-time view of the metrics.
@@ -203,6 +230,7 @@ impl MetricsSnapshot {
                                 ("steals", json::num(s.steals as f64)),
                                 ("queue_depth", json::num(s.queue_depth as f64)),
                                 ("survivor_bytes", json::num(s.survivor_bytes as f64)),
+                                ("throughput_mbps", json::num(s.throughput_mbps)),
                             ])
                         })
                         .collect(),
@@ -219,8 +247,8 @@ mod tests {
     #[test]
     fn snapshot_math() {
         let m = Metrics::new(2);
-        m.record_exec(0, 8, 1000, 8192);
-        m.record_exec(1, 4, 1000, 4096);
+        m.record_exec(0, 8, 1000, 8192, 512);
+        m.record_exec(1, 4, 1000, 4096, 256);
         let t = Instant::now();
         m.record_delivery(64, t, 500);
         m.record_delivery(64, t, 500);
@@ -234,15 +262,16 @@ mod tests {
         assert!(j.contains("throughput_bps"));
         assert!(j.contains("steals"));
         assert!(j.contains("survivor_bytes"));
+        assert!(j.contains("throughput_mbps"));
     }
 
     #[test]
     fn survivor_bytes_gauge_is_a_high_water_mark() {
         let m = Metrics::new(2);
-        m.record_exec(0, 4, 10, 4096);
-        m.record_exec(0, 8, 10, 8192);
-        m.record_exec(0, 2, 10, 2048); // smaller batch must not lower the peak
-        m.record_exec(1, 1, 10, 1024);
+        m.record_exec(0, 4, 10, 4096, 64);
+        m.record_exec(0, 8, 10, 8192, 128);
+        m.record_exec(0, 2, 10, 2048, 32); // smaller batch must not lower the peak
+        m.record_exec(1, 1, 10, 1024, 16);
         let s = m.snapshot();
         assert_eq!(s.shards[0].survivor_bytes, 8192);
         assert_eq!(s.shards[1].survivor_bytes, 1024);
@@ -250,10 +279,29 @@ mod tests {
     }
 
     #[test]
+    fn throughput_gauge_is_an_ewma_of_exec_rates() {
+        let m = Metrics::new(2);
+        // 1000 bits in 1000 ns = 1000 Mb/s exactly
+        m.record_exec(0, 1, 1000, 0, 1000);
+        let s = m.snapshot();
+        assert!((s.shards[0].throughput_mbps - 1000.0).abs() < 1e-9, "first exec seeds the EWMA");
+        assert_eq!(s.shards[1].throughput_mbps, 0.0, "idle shard reports 0");
+        // second exec at 2000 Mb/s blends in with weight alpha
+        m.record_exec(0, 1, 1000, 0, 2000);
+        let want = THROUGHPUT_EWMA_ALPHA * 2000.0 + (1.0 - THROUGHPUT_EWMA_ALPHA) * 1000.0;
+        let s = m.snapshot();
+        assert!((s.shards[0].throughput_mbps - want).abs() < 1e-9, "EWMA blend");
+        // zero-duration / zero-bit execs must not poison the gauge
+        m.record_exec(0, 1, 0, 0, 100);
+        m.record_exec(0, 1, 100, 0, 0);
+        assert!((m.snapshot().shards[0].throughput_mbps - want).abs() < 1e-9);
+    }
+
+    #[test]
     fn shard_counters_isolate_and_sum() {
         let m = Metrics::new(3);
-        m.record_exec(0, 5, 10, 0);
-        m.record_exec(2, 3, 10, 0);
+        m.record_exec(0, 5, 10, 0, 0);
+        m.record_exec(2, 3, 10, 0, 0);
         m.shard(2).steals.fetch_add(2, Ordering::Relaxed);
         m.shard(1).queue_depth.store(7, Ordering::Relaxed);
         let s = m.snapshot();

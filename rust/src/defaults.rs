@@ -55,8 +55,22 @@ pub fn default_shards() -> usize {
 /// Bounded input queue depth (frames) before backpressure.
 pub const QUEUE_DEPTH: usize = 1024;
 
-/// Path-metric renormalization period (stages) for CPU packed backends.
+/// Path-metric renormalization period (stages) for the CPU packed and
+/// quantized SIMD backends.
 pub const RENORM_EVERY: usize = 16;
+
+/// Quantized SIMD backend: LLRs land on a grid with step
+/// `1 / SIMD_LLR_SCALE` (i.e. `q = round(llr * SIMD_LLR_SCALE)`); the
+/// quantization/renormalization model is documented in
+/// `docs/PERFORMANCE.md`.
+pub const SIMD_LLR_SCALE: f32 = 8.0;
+
+/// Quantized SIMD backend: per-LLR clamp magnitude on the grid (so one
+/// branch metric is at most `beta * SIMD_QMAX` and i16 path metrics
+/// keep exact headroom between renormalizations; see
+/// `viterbi::simd::Quantizer`, which shrinks this only for extreme
+/// `k * beta` codes).
+pub const SIMD_QMAX: i16 = 512;
 
 /// Artifact variant names used by the precision benches (Table I rows).
 pub const VARIANT_SINGLE_HALF: &str = "radix4_jnp_acc-single_ch-half_b64_s48";

@@ -193,6 +193,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     let builders: Vec<(&str, DecoderBuilder)> = vec![
         ("scalar", DecoderBuilder::new().backend_name("scalar")?.tile(defaults::CPU_TILE)),
         ("compact", DecoderBuilder::new().backend_name("compact")?.tile(defaults::CPU_TILE)),
+        ("simd", DecoderBuilder::new().backend_name("simd")?.tile(defaults::CPU_TILE)),
         ("cpu-radix2", DecoderBuilder::new().backend_name("cpu-radix2")?.tile(defaults::CPU_TILE)),
         ("cpu-radix4", DecoderBuilder::new().backend_name("cpu-radix4")?.tile(defaults::CPU_TILE)),
         ("pjrt-artifact", DecoderBuilder::new().artifacts_dir(&dir)),

@@ -243,29 +243,29 @@ pub fn forward_into(t: &Trellis, llr: &[f32], lam0: &[f32], ring: &mut DecisionR
     assert_eq!(lam0.len(), s_count);
     let n = llr.len() / beta;
 
+    let nsym = 1usize << beta;
     let mut lam: Vec<f64> = lam0.iter().map(|&x| x as f64).collect();
     let mut lam_next = vec![0f64; s_count];
-    let mut delta = vec![[0f64; 2]; s_count];
+    let mut bm = vec![0f64; nsym];
     ring.begin_frame();
 
     for t_idx in 0..n {
         let l = &llr[t_idx * beta..(t_idx + 1) * beta];
-        for i in 0..s_count {
-            for u in 0..2usize {
-                let a = t.out[i][u];
-                let mut d = 0f64;
-                for (b, &lb) in l.iter().enumerate() {
-                    d += if (a >> b) & 1 == 0 { lb as f64 } else { -(lb as f64) };
-                }
-                delta[i][u] = d;
+        // branch metric once per distinct output symbol (Eq 2), exactly
+        // as scalar::forward_with computes it
+        for a in 0..nsym {
+            let mut d = 0f64;
+            for (b, &lb) in l.iter().enumerate() {
+                d += if (a >> b) & 1 == 0 { lb as f64 } else { -(lb as f64) };
             }
+            bm[a] = d;
         }
         let w = ring.push_stage();
         for j in 0..s_count {
             let [i0, i1] = t.prev[j];
             let u = t.code().branch_input(j as u32) as usize;
-            let l0 = lam[i0 as usize] + delta[i0 as usize][u];
-            let l1 = lam[i1 as usize] + delta[i1 as usize][u];
+            let l0 = lam[i0 as usize] + bm[t.out[i0 as usize][u] as usize];
+            let l1 = lam[i1 as usize] + bm[t.out[i1 as usize][u] as usize];
             if l0 >= l1 {
                 lam_next[j] = l0;
             } else {

@@ -9,6 +9,11 @@
 //! * `compact` — the scalar forward pass with bit-packed survivor
 //!   storage (1 bit per state per stage), the memory-efficient layout
 //!   of arXiv 2011.09337; see `docs/MEMORY.md` for the memory model.
+//! * `simd` — the quantized (i16) lane-parallel ACS fast path:
+//!   per-symbol branch-metric dedup, structure-of-arrays butterflies,
+//!   saturating adds with periodic renormalization, decisions straight
+//!   into the `compact` bit-packed ring; the CPU analogue of the
+//!   tensor-core formulation (see `docs/PERFORMANCE.md`).
 //! * `traceback` — the backward procedure (shared by every path; in the
 //!   paper it runs on scalar CUDA cores because it cannot be a matmul).
 //! * `tiled` — framed/overlapped decoding of long streams (§III).
@@ -17,10 +22,12 @@ pub mod types;
 pub mod scalar;
 pub mod packed;
 pub mod compact;
+pub mod simd;
 pub mod traceback;
 pub mod tiled;
 
 pub use compact::CompactDecoder;
 pub use packed::PackedDecoder;
 pub use scalar::ScalarDecoder;
+pub use simd::SimdDecoder;
 pub use types::{AccPrecision, FrameDecoder, FrameJob, Survivors, NEG};

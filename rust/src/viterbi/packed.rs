@@ -65,10 +65,12 @@ pub struct PackedDecoder {
     cg: Vec<i32>,         // [o][r][c]
     pinv: Vec<u32>,       // [o][c][gamma]
     src: Vec<(usize, usize, usize)>,
-    // scratch
+    // scratch (allocated once, reused across frames and batches)
     lam: Vec<f32>,
     lam_next: Vec<f32>,
     dvals: Vec<f32>, // [o][r][c] D matrix
+    llr_q: Vec<f32>, // channel-quantized LLR staging buffer
+    lam0: Vec<f32>,  // initial-metric staging buffer
 }
 
 impl PackedDecoder {
@@ -126,6 +128,8 @@ impl PackedDecoder {
             lam: vec![0.0; s_count],
             lam_next: vec![0.0; s_count],
             dvals: vec![0.0; o_n * 16 * 16],
+            llr_q: Vec::with_capacity(stages * trellis.code().beta()),
+            lam0: Vec::with_capacity(s_count),
             trellis,
             pk,
             acc,
@@ -164,6 +168,9 @@ impl PackedDecoder {
         let mut lh = [0f32; 8]; // w <= 8 for every supported packing
         assert!(w <= 8, "packing width {w} exceeds the fast-path buffer");
         let identity_acc = matches!(self.acc, AccPrecision::Single);
+
+        #[cfg(debug_assertions)]
+        let scratch_ptrs = (self.lam.as_ptr(), self.lam_next.as_ptr(), self.dvals.as_ptr());
 
         for tau in 0..n_steps {
             // renormalize (paper half-precision saturation mitigation)
@@ -232,6 +239,17 @@ impl PackedDecoder {
             }
             std::mem::swap(&mut self.lam, &mut self.lam_next);
         }
+        #[cfg(debug_assertions)]
+        {
+            let now = (self.lam.as_ptr(), self.lam_next.as_ptr(), self.dvals.as_ptr());
+            // lam/lam_next swap per step, so compare as unordered pairs
+            debug_assert!(
+                (now.0 == scratch_ptrs.0 || now.0 == scratch_ptrs.1)
+                    && (now.1 == scratch_ptrs.0 || now.1 == scratch_ptrs.1)
+                    && now.2 == scratch_ptrs.2,
+                "steady-state stage loop must not reallocate scratch"
+            );
+        }
         (phi, self.lam.clone())
     }
 }
@@ -252,18 +270,29 @@ impl FrameDecoder for PackedDecoder {
     fn forward_batch(&mut self, jobs: &[FrameJob]) -> Vec<RawFrame> {
         let s_count = self.trellis.code().n_states();
         let rho = self.pk.rho;
-        jobs.iter()
-            .map(|job| {
-                let mut llr = job.llr.clone();
-                self.chan.quantize(&mut llr);
-                let lam0 = super::scalar::initial_metrics(s_count, job.start_state)
-                    .iter()
-                    .map(|&v| if v < 0.0 { neg_for(self.acc) } else { v })
-                    .collect::<Vec<_>>();
-                let (phi, lam) = self.forward(&llr, &lam0);
-                RawFrame { surv: Survivors::Radix { rho, phi }, lam }
-            })
-            .collect()
+        let neg = neg_for(self.acc);
+        // the staging buffers leave self while forward borrows it
+        // mutably; their allocations are reused across the whole batch
+        // and across forward_batch calls
+        let mut llr_q = std::mem::take(&mut self.llr_q);
+        let mut lam0 = std::mem::take(&mut self.lam0);
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            llr_q.clear();
+            llr_q.extend_from_slice(&job.llr);
+            self.chan.quantize(&mut llr_q);
+            super::scalar::initial_metrics_into(&mut lam0, s_count, job.start_state);
+            for v in lam0.iter_mut() {
+                if *v < 0.0 {
+                    *v = neg;
+                }
+            }
+            let (phi, lam) = self.forward(&llr_q, &lam0);
+            out.push(RawFrame { surv: Survivors::Radix { rho, phi }, lam });
+        }
+        self.llr_q = llr_q;
+        self.lam0 = lam0;
+        out
     }
 
     fn label(&self) -> String {

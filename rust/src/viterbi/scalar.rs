@@ -9,56 +9,101 @@ use crate::coding::trellis::Trellis;
 use super::traceback::traceback_scalar;
 use super::types::{FrameDecoder, FrameJob, RawFrame, Survivors, NEG};
 
+/// Reusable forward-pass scratch: path-metric double buffer plus the
+/// per-symbol branch-metric table. One instance per decoder, reused
+/// across `forward_batch` jobs so the steady-state batch loop allocates
+/// nothing but its per-frame outputs.
+pub struct ForwardScratch {
+    lam: Vec<f64>,
+    lam_next: Vec<f64>,
+    /// Branch metric per distinct output symbol (`2^beta` entries): a
+    /// stage only ever produces `2^beta` distinct `delta` values, not
+    /// `n_states * 2` (Eq 2 depends on the branch output alone).
+    bm: Vec<f64>,
+}
+
+impl ForwardScratch {
+    pub fn new(s_count: usize, beta: usize) -> Self {
+        ForwardScratch {
+            lam: Vec::with_capacity(s_count),
+            lam_next: vec![0f64; s_count],
+            bm: vec![0f64; 1 << beta],
+        }
+    }
+}
+
 /// Forward procedure (Alg 1) over `n` stages.
 ///
 /// `llr`: flat `n * beta` soft values; `lam0`: initial path metrics.
 /// Returns (`phi` \[n\]\[S\] predecessor states, final metrics \[S\]).
 ///
 /// `compact::forward_into` mirrors this arithmetic with a bit-packed
-/// decision store — any change to the metric accumulation or tie-break
-/// here must be applied there too (the cross-backend property tests in
-/// `rust/tests/compact_equivalence.rs` pin the bit-identity).
+/// decision store, and `simd::SimdDecoder` mirrors it in quantized i16
+/// — any change to the metric accumulation or tie-break here must be
+/// applied there too (the cross-backend property tests in
+/// `rust/tests/compact_equivalence.rs` and
+/// `rust/tests/simd_equivalence.rs` pin the bit-identity).
 pub fn forward(t: &Trellis, llr: &[f32], lam0: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let mut scratch = ForwardScratch::new(t.code().n_states(), t.code().beta());
+    forward_with(t, llr, lam0, &mut scratch)
+}
+
+/// [`forward`] with caller-provided scratch (the hot-path entry: no
+/// allocations beyond the `phi`/`lam` outputs).
+///
+/// The branch metric is computed **once per distinct output symbol**
+/// per stage (`2^beta` values — 4 for the paper's rate-1/2 code, far
+/// below `n_states * 2` for any code) instead of once per
+/// `(state, input)` branch; the per-symbol sum runs over the LLRs in
+/// the same order as the old per-branch loop, so the f64 results — and
+/// therefore every ACS decision — are bit-identical.
+pub fn forward_with(
+    t: &Trellis,
+    llr: &[f32],
+    lam0: &[f32],
+    scratch: &mut ForwardScratch,
+) -> (Vec<u32>, Vec<f32>) {
     let s_count = t.code().n_states();
     let beta = t.code().beta();
+    let nsym = 1usize << beta;
     assert_eq!(llr.len() % beta, 0, "llr length must be a multiple of beta");
     assert_eq!(lam0.len(), s_count);
     let n = llr.len() / beta;
 
-    let mut lam: Vec<f64> = lam0.iter().map(|&x| x as f64).collect();
-    let mut lam_next = vec![0f64; s_count];
+    scratch.lam.clear();
+    scratch.lam.extend(lam0.iter().map(|&x| x as f64));
+    scratch.lam_next.clear();
+    scratch.lam_next.resize(s_count, 0f64);
+    scratch.bm.clear();
+    scratch.bm.resize(nsym, 0f64);
     let mut phi = vec![0u32; n * s_count];
 
-    // branch metric delta[i][u] recomputed per stage (Eq 2)
-    let mut delta = vec![[0f64; 2]; s_count];
     for t_idx in 0..n {
         let l = &llr[t_idx * beta..(t_idx + 1) * beta];
-        for i in 0..s_count {
-            for u in 0..2usize {
-                let a = t.out[i][u];
-                let mut d = 0f64;
-                for (b, &lb) in l.iter().enumerate() {
-                    d += if (a >> b) & 1 == 0 { lb as f64 } else { -(lb as f64) };
-                }
-                delta[i][u] = d;
+        // branch metric once per distinct output symbol (Eq 2)
+        for a in 0..nsym {
+            let mut d = 0f64;
+            for (b, &lb) in l.iter().enumerate() {
+                d += if (a >> b) & 1 == 0 { lb as f64 } else { -(lb as f64) };
             }
+            scratch.bm[a] = d;
         }
         for j in 0..s_count {
             let [i0, i1] = t.prev[j];
             let u = t.code().branch_input(j as u32) as usize;
-            let l0 = lam[i0 as usize] + delta[i0 as usize][u];
-            let l1 = lam[i1 as usize] + delta[i1 as usize][u];
+            let l0 = scratch.lam[i0 as usize] + scratch.bm[t.out[i0 as usize][u] as usize];
+            let l1 = scratch.lam[i1 as usize] + scratch.bm[t.out[i1 as usize][u] as usize];
             if l0 >= l1 {
-                lam_next[j] = l0;
+                scratch.lam_next[j] = l0;
                 phi[t_idx * s_count + j] = i0;
             } else {
-                lam_next[j] = l1;
+                scratch.lam_next[j] = l1;
                 phi[t_idx * s_count + j] = i1;
             }
         }
-        std::mem::swap(&mut lam, &mut lam_next);
+        std::mem::swap(&mut scratch.lam, &mut scratch.lam_next);
     }
-    (phi, lam.iter().map(|&x| x as f32).collect())
+    (phi, scratch.lam.iter().map(|&x| x as f32).collect())
 }
 
 /// Full decode: forward + traceback.
@@ -69,13 +114,20 @@ pub fn decode(t: &Trellis, llr: &[f32], lam0: &[f32], end_state: Option<u32>) ->
 
 /// Initial metrics: known start state or all-equal.
 pub fn initial_metrics(s_count: usize, start_state: Option<u32>) -> Vec<f32> {
+    let mut l = Vec::new();
+    initial_metrics_into(&mut l, s_count, start_state);
+    l
+}
+
+/// [`initial_metrics`] into a reusable buffer (cleared first).
+pub fn initial_metrics_into(buf: &mut Vec<f32>, s_count: usize, start_state: Option<u32>) {
+    buf.clear();
     match start_state {
         Some(s) => {
-            let mut l = vec![NEG; s_count];
-            l[s as usize] = 0.0;
-            l
+            buf.resize(s_count, NEG);
+            buf[s as usize] = 0.0;
         }
-        None => vec![0.0; s_count],
+        None => buf.resize(s_count, 0.0),
     }
 }
 
@@ -83,11 +135,14 @@ pub fn initial_metrics(s_count: usize, start_state: Option<u32>) -> Vec<f32> {
 pub struct ScalarDecoder {
     trellis: Arc<Trellis>,
     stages: usize,
+    scratch: ForwardScratch,
+    lam0: Vec<f32>,
 }
 
 impl ScalarDecoder {
     pub fn new(trellis: Arc<Trellis>, stages: usize) -> Self {
-        ScalarDecoder { trellis, stages }
+        let scratch = ForwardScratch::new(trellis.code().n_states(), trellis.code().beta());
+        ScalarDecoder { trellis, stages, scratch, lam0: Vec::new() }
     }
 }
 
@@ -108,8 +163,9 @@ impl FrameDecoder for ScalarDecoder {
         let s_count = self.trellis.code().n_states();
         jobs.iter()
             .map(|job| {
-                let lam0 = initial_metrics(s_count, job.start_state);
-                let (phi, lam) = forward(&self.trellis, &job.llr, &lam0);
+                initial_metrics_into(&mut self.lam0, s_count, job.start_state);
+                let (phi, lam) =
+                    forward_with(&self.trellis, &job.llr, &self.lam0, &mut self.scratch);
                 RawFrame { surv: Survivors::Scalar(phi), lam }
             })
             .collect()

@@ -1,0 +1,622 @@
+//! Quantized lane-parallel ACS fast path (`BackendKind::Simd`): the
+//! CPU analogue of the paper's tensor-core forward pass.
+//!
+//! The forward recursion is the cost center of every CPU backend, and
+//! the scalar baseline runs it one state, one f64 add at a time. This
+//! backend reformulates the same butterfly ACS update so wide integer
+//! units execute it many states per instruction:
+//!
+//! * **i16 path metrics.** LLRs are quantized once per frame
+//!   (`q = round(llr * SIMD_LLR_SCALE)`, clamped to `±qmax`); path
+//!   metrics accumulate in `i16` with *saturating* adds and periodic
+//!   renormalization (subtract the running maximum), mirroring the
+//!   paper's reduced-precision concerns in §IX-B. Sixteen metrics fit
+//!   one 256-bit lane where the scalar oracle moves one f64.
+//! * **Per-symbol branch-metric dedup.** A stage has only `2^beta`
+//!   distinct branch metrics (4 for the paper's rate-1/2 code — Eq 2
+//!   depends on the branch *output symbol* alone, not on the
+//!   `n_states x 2` branches). The kernel
+//!   never materializes a per-state `delta` table: per butterfly
+//!   branch class it multiplies precomputed `±1` sign planes by the
+//!   stage's `beta` quantized LLRs — the vector form of the
+//!   `bm[2^beta]` lookup, with no gather in the hot loop.
+//! * **Structure-of-arrays butterflies.** State `j` and `j + S/2` share
+//!   the predecessor pair `{2f, 2f+1}` (`f = j mod S/2`, Thm 1), so
+//!   one even/odd split of the metric vector feeds two contiguous,
+//!   dependency-free half-loops that autovectorize; on x86_64 with
+//!   AVX2 (checked at runtime) an explicit `core::arch` kernel runs
+//!   the same update 16 butterflies per instruction, with the portable
+//!   loop as fallback everywhere else. Both produce identical bits.
+//! * **Zero-alloc steady state.** All scratch (quantized LLRs, metric
+//!   split, branch-metric planes, decision lanes) and the bit-packed
+//!   [`DecisionRing`] are allocated once at construction and reused
+//!   across every frame of every `forward_batch` call; the per-stage
+//!   loop performs no heap allocation (debug-asserted). Decisions go
+//!   straight into the ring and come out as the same
+//!   [`CompactSurvivors`](super::compact::CompactSurvivors) snapshots
+//!   the `compact` backend emits — one
+//!   shared ring serves the whole batch.
+//!
+//! **Bit-identity.** On LLRs that lie on the quantization grid the
+//! decoded bits are identical to the scalar f64 oracle: integer adds
+//! are exact, renormalization shifts every metric uniformly (ACS
+//! compares are unaffected), and the quantized "minus infinity"
+//! [`NEG_Q`] is chosen so a real path beats a NEG-descendant in every
+//! compare during the first `k - 1` stages (after which every state
+//! has a real path). Saturation at `i16::MIN` can reorder metrics only
+//! among hopeless states that the surviving path never visits.
+//! `rust/tests/simd_equivalence.rs` pins this across random codes,
+//! geometries, renorm intervals, shard counts and saturation-stress
+//! LLRs; `docs/PERFORMANCE.md` documents the model.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tcvd::coding::{registry, trellis::Trellis};
+//! use tcvd::viterbi::simd::SimdDecoder;
+//! use tcvd::viterbi::types::{FrameDecoder, FrameJob};
+//!
+//! let t = Arc::new(Trellis::new(registry::paper_code()));
+//! let mut dec = SimdDecoder::new(t, 16, 0); // renorm 0 = auto period
+//! let job = FrameJob {
+//!     llr: vec![1.0f32; 16 * 2], // positive LLR ⇒ bit 0
+//!     start_state: Some(0),
+//!     end_state: Some(0),
+//!     emit_from: 0,
+//!     emit_len: 16,
+//! };
+//! let bits = dec.decode_batch(std::slice::from_ref(&job));
+//! assert_eq!(bits[0], vec![0u8; 16]);
+//! ```
+
+use std::sync::Arc;
+
+use crate::coding::trellis::Trellis;
+use crate::defaults;
+
+use super::compact::DecisionRing;
+use super::types::{FrameDecoder, FrameJob, RawFrame, Survivors};
+
+/// Finite "minus infinity" for quantized path metrics: low enough that
+/// a NEG-descendant loses every ACS compare against a real path while
+/// the trellis warms up (`|NEG_Q| > 2 (k-1) beta qmax`, enforced by
+/// [`Quantizer::for_code`]), high enough above `i16::MIN` that one
+/// stage of saturating adds cannot wrap its ordering.
+pub const NEG_Q: i16 = -28000;
+
+/// LLR quantization for the i16 fast path: fixed scale, per-code clamp.
+///
+/// The grid is `q = round(x * SIMD_LLR_SCALE).clamp(±qmax)`. The clamp
+/// is [`defaults::SIMD_QMAX`] for every practical code and only
+/// shrinks for extreme `k * beta` products, preserving the NEG-Q
+/// separation invariant above. [`dequantize`](Quantizer::dequantize)
+/// maps a grid point back to the exact `f32` the scalar oracle must
+/// see for bit-identical comparison (multiples of `1/SIMD_LLR_SCALE`
+/// are exact in f32 and their stage sums are exact in f64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Quantizer {
+    qmax: i16,
+}
+
+impl Quantizer {
+    /// The quantizer for a code geometry.
+    pub fn for_code(k: u32, beta: usize) -> Quantizer {
+        // separation: NEG_Q + 2 (k-1) * bm_max < 0 with bm_max = beta*qmax
+        let sep = (-(NEG_Q as i64) - 1) / (2 * (k as i64 - 1) * beta as i64);
+        // headroom: even at the narrowest renormalization period (one
+        // stage), every real-path value — floor `-(1 + 2(k-1)) * bm_max`
+        // below the running maximum, plus one more add — stays above
+        // i16::MIN, so exactness never depends on the generator
+        // polynomials keeping the metric maximum monotone
+        let headroom = i16::MAX as i64 / ((2 * (k as i64 - 1) + 2) * beta as i64);
+        Quantizer { qmax: defaults::SIMD_QMAX.min(sep.min(headroom).max(1) as i16) }
+    }
+
+    /// Per-LLR clamp magnitude on the quantized grid.
+    pub fn qmax(&self) -> i16 {
+        self.qmax
+    }
+
+    /// One LLR onto the grid (round half away from zero, then clamp).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i16 {
+        let q = (x * defaults::SIMD_LLR_SCALE).round();
+        q.clamp(-(self.qmax as f32), self.qmax as f32) as i16
+    }
+
+    /// The exact `f32` a grid point represents.
+    #[inline]
+    pub fn dequantize(&self, q: i16) -> f32 {
+        q as f32 / defaults::SIMD_LLR_SCALE
+    }
+
+    /// Largest per-stage branch-metric magnitude on the grid.
+    pub fn branch_metric_max(&self, beta: usize) -> i32 {
+        self.qmax as i32 * beta as i32
+    }
+}
+
+/// `FrameDecoder` for the quantized SIMD fast path — the
+/// `BackendKind::Simd` backend. Emits the same bit-packed
+/// [`CompactSurvivors`](super::compact::CompactSurvivors) snapshots as
+/// the `compact` backend (1 bit per state per stage, one shared
+/// [`DecisionRing`] across the batch) and decodes bit-identically to
+/// the scalar oracle on grid LLRs.
+pub struct SimdDecoder {
+    trellis: Arc<Trellis>,
+    stages: usize,
+    /// Effective renormalization period in stages (>= 1; user value
+    /// clamped to the i16 headroom cap, 0 selects the cap).
+    renorm_every: usize,
+    quant: Quantizer,
+    beta: usize,
+    /// Butterfly count `S / 2`.
+    h: usize,
+    /// `±1` sign planes, `[class][bit][butterfly]` flattened: class 0/1
+    /// feed states `f` (low half, input 0) from predecessors `2f` /
+    /// `2f+1`, class 2/3 feed states `h + f` (high half, input 1).
+    sgn: Vec<i16>,
+    // --- scratch, allocated once, reused for every frame ---
+    q: Vec<i16>,
+    lam: Vec<i16>,
+    ev: Vec<i16>,
+    od: Vec<i16>,
+    /// Per-stage branch metrics, `[class][butterfly]` flattened.
+    bm: Vec<i16>,
+    /// Decision lanes (nonzero = the high predecessor won).
+    dec: Vec<i16>,
+    ring: DecisionRing,
+    use_avx2: bool,
+}
+
+impl SimdDecoder {
+    /// A decoder for `stages`-stage frames; `renorm_every` is the
+    /// renormalization period in stages (0 = the widest period the i16
+    /// headroom allows; larger requests are clamped to it).
+    pub fn new(trellis: Arc<Trellis>, stages: usize, renorm_every: usize) -> Self {
+        let code = trellis.code();
+        let s_count = code.n_states();
+        let beta = code.beta();
+        let h = s_count / 2;
+        let quant = Quantizer::for_code(code.k(), beta);
+        // headroom cap on the renormalization period R: real-path
+        // metrics live in [-(R + 2(k-1)) * bm_max, R * bm_max] around
+        // the running maximum (which may drift down bm_max per stage
+        // for codes whose branch outputs are not complementary), so
+        // (R + 2(k-1) + 1) * bm_max <= i16::MAX keeps every compared
+        // value exact — no saturation on any surviving path
+        let bm_max = quant.branch_metric_max(beta);
+        let spread = 2 * (code.k() as i32 - 1) + 1;
+        let cap = (i16::MAX as i32 / bm_max - spread).max(1) as usize;
+        let renorm = if renorm_every == 0 { cap } else { renorm_every.min(cap) };
+
+        let mut sgn = vec![0i16; 4 * beta * h];
+        for f in 0..h {
+            // branch classes: (class, predecessor, input bit u); states
+            // f and h + f share predecessors {2f, 2f+1} (Thm 1) and
+            // consume u = 0 / u = 1 respectively (u is the MSB of j)
+            for (cls, src, u) in [(0usize, 2 * f, 0usize), (1, 2 * f + 1, 0),
+                                  (2, 2 * f, 1), (3, 2 * f + 1, 1)] {
+                let sym = trellis.out[src][u];
+                for b in 0..beta {
+                    sgn[(cls * beta + b) * h + f] = if (sym >> b) & 1 == 0 { 1 } else { -1 };
+                }
+            }
+        }
+
+        #[cfg(target_arch = "x86_64")]
+        let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let use_avx2 = false;
+
+        SimdDecoder {
+            stages,
+            renorm_every: renorm,
+            quant,
+            beta,
+            h,
+            sgn,
+            q: Vec::with_capacity(stages * beta),
+            lam: vec![0i16; s_count],
+            ev: vec![0i16; h],
+            od: vec![0i16; h],
+            bm: vec![0i16; 4 * h],
+            dec: vec![0i16; s_count],
+            ring: DecisionRing::new(stages, s_count),
+            trellis,
+            use_avx2,
+        }
+    }
+
+    /// The quantizer this decoder applies to incoming LLRs (tests use
+    /// it to put the scalar oracle on the same grid).
+    pub fn quantizer(&self) -> Quantizer {
+        self.quant
+    }
+
+    /// Effective renormalization period in stages.
+    pub fn effective_renorm(&self) -> usize {
+        self.renorm_every
+    }
+
+    /// Survivor bytes a full frame occupies — identical to the
+    /// `compact` layout (`frame_stages * ceil(n_states / 64) * 8`).
+    pub fn survivor_bytes_per_frame(&self) -> usize {
+        self.ring.bytes()
+    }
+
+    /// Force the portable (non-AVX2) kernel; the lanes produce
+    /// identical bits either way, this exists so tests can pin that.
+    #[doc(hidden)]
+    pub fn force_portable(&mut self) {
+        self.use_avx2 = false;
+    }
+
+    /// Quantized forward pass for one frame already loaded into
+    /// `self.q`; decisions land in the ring, metrics in `self.lam`.
+    fn forward_quantized(&mut self, start_state: Option<u32>) {
+        let h = self.h;
+        let beta = self.beta;
+        assert_eq!(self.q.len() % beta, 0, "llr length must be a multiple of beta");
+        let n = self.q.len() / beta;
+
+        match start_state {
+            Some(s) => {
+                self.lam.fill(NEG_Q);
+                self.lam[s as usize] = 0;
+            }
+            None => self.lam.fill(0),
+        }
+        self.ring.begin_frame();
+
+        #[cfg(debug_assertions)]
+        let scratch_ptrs = (self.q.as_ptr(), self.lam.as_ptr(), self.ev.as_ptr(),
+                            self.od.as_ptr(), self.bm.as_ptr(), self.dec.as_ptr());
+
+        for t in 0..n {
+            if t > 0 && t % self.renorm_every == 0 {
+                let m = self.lam.iter().copied().max().unwrap_or(0);
+                for v in self.lam.iter_mut() {
+                    *v = v.saturating_sub(m);
+                }
+            }
+            // even/odd split: ev[f] = lam[2f], od[f] = lam[2f+1]
+            for f in 0..h {
+                self.ev[f] = self.lam[2 * f];
+                self.od[f] = self.lam[2 * f + 1];
+            }
+            // branch metrics per class, one sign-plane pass per LLR bit
+            // (the per-symbol dedup: every state's delta is one of the
+            // 2^beta values these planes reproduce)
+            self.bm.fill(0);
+            for b in 0..beta {
+                let lb = self.q[t * beta + b];
+                for cls in 0..4usize {
+                    let plane = &self.sgn[(cls * beta + b) * h..(cls * beta + b) * h + h];
+                    let out = &mut self.bm[cls * h..cls * h + h];
+                    for f in 0..h {
+                        out[f] += plane[f] * lb;
+                    }
+                }
+            }
+            // butterfly ACS: two contiguous half-loops (low half from
+            // classes 0/1, high half from classes 2/3)
+            let (bm_lo, bm_hi) = self.bm.split_at(2 * h);
+            let (bm_lo0, bm_lo1) = bm_lo.split_at(h);
+            let (bm_hi0, bm_hi1) = bm_hi.split_at(h);
+            let (lam_lo, lam_hi) = self.lam.split_at_mut(h);
+            let (dec_lo, dec_hi) = self.dec.split_at_mut(h);
+            acs_half(&self.ev, &self.od, bm_lo0, bm_lo1, lam_lo, dec_lo, self.use_avx2);
+            acs_half(&self.ev, &self.od, bm_hi0, bm_hi1, lam_hi, dec_hi, self.use_avx2);
+            // pack decision lanes into the ring's stage word
+            let w = self.ring.push_stage();
+            for (j, &d) in self.dec.iter().enumerate() {
+                if d != 0 {
+                    w[j >> 6] |= 1u64 << (j & 63);
+                }
+            }
+        }
+
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            scratch_ptrs,
+            (self.q.as_ptr(), self.lam.as_ptr(), self.ev.as_ptr(),
+             self.od.as_ptr(), self.bm.as_ptr(), self.dec.as_ptr()),
+            "steady-state stage loop must not reallocate scratch"
+        );
+    }
+}
+
+/// One half of the butterfly ACS update over `h` butterflies:
+/// `m0 = ev + bm0`, `m1 = od + bm1` (saturating), keep the max, record
+/// whether the high predecessor strictly won (ties keep the low
+/// predecessor, matching the scalar oracle's `l0 >= l1`).
+fn acs_half(ev: &[i16], od: &[i16], bm0: &[i16], bm1: &[i16],
+            lam: &mut [i16], dec: &mut [i16], use_avx2: bool) {
+    let h = ev.len();
+    let f0 = acs_half_vector(ev, od, bm0, bm1, lam, dec, use_avx2);
+    for f in f0..h {
+        let m0 = ev[f].saturating_add(bm0[f]);
+        let m1 = od[f].saturating_add(bm1[f]);
+        lam[f] = m0.max(m1);
+        dec[f] = (m1 > m0) as i16;
+    }
+}
+
+/// Run the explicit vector kernel over the largest prefix it covers,
+/// returning the first butterfly left for the portable tail (0 when no
+/// vector kernel applies).
+#[cfg(target_arch = "x86_64")]
+fn acs_half_vector(ev: &[i16], od: &[i16], bm0: &[i16], bm1: &[i16],
+                   lam: &mut [i16], dec: &mut [i16], use_avx2: bool) -> usize {
+    if use_avx2 && ev.len() >= 16 {
+        // SAFETY: AVX2 presence was checked at decoder construction
+        // (`use_avx2` is never set without the runtime feature check)
+        // and all six slices have length ev.len().
+        unsafe { avx2::acs_half_16(ev, od, bm0, bm1, lam, dec) };
+        ev.len() & !15
+    } else {
+        0
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn acs_half_vector(_ev: &[i16], _od: &[i16], _bm0: &[i16], _bm1: &[i16],
+                   _lam: &mut [i16], _dec: &mut [i16], _use_avx2: bool) -> usize {
+    0
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// The `acs_half` update, 16 butterflies per iteration, over the
+    /// largest multiple-of-16 prefix (the caller finishes the tail).
+    /// `_mm256_adds_epi16` is `i16::saturating_add`, `_mm256_max_epi16`
+    /// the max, `_mm256_cmpgt_epi16(m1, m0)` the strict high-wins test
+    /// — lane for lane the portable loop.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and all slices have length
+    /// >= `ev.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn acs_half_16(ev: &[i16], od: &[i16], bm0: &[i16], bm1: &[i16],
+                              lam: &mut [i16], dec: &mut [i16]) {
+        let n = ev.len() & !15;
+        let mut f = 0usize;
+        while f < n {
+            let e = _mm256_loadu_si256(ev.as_ptr().add(f) as *const __m256i);
+            let o = _mm256_loadu_si256(od.as_ptr().add(f) as *const __m256i);
+            let b0 = _mm256_loadu_si256(bm0.as_ptr().add(f) as *const __m256i);
+            let b1 = _mm256_loadu_si256(bm1.as_ptr().add(f) as *const __m256i);
+            let m0 = _mm256_adds_epi16(e, b0);
+            let m1 = _mm256_adds_epi16(o, b1);
+            _mm256_storeu_si256(lam.as_mut_ptr().add(f) as *mut __m256i,
+                                _mm256_max_epi16(m0, m1));
+            _mm256_storeu_si256(dec.as_mut_ptr().add(f) as *mut __m256i,
+                                _mm256_cmpgt_epi16(m1, m0));
+            f += 16;
+        }
+    }
+}
+
+impl FrameDecoder for SimdDecoder {
+    fn frame_stages(&self) -> usize {
+        self.stages
+    }
+
+    fn max_batch(&self) -> usize {
+        // frames are independent; batching amortizes queue hops and
+        // keeps the shared ring hot across the whole batch
+        defaults::MAX_BATCH
+    }
+
+    fn trellis(&self) -> &Arc<Trellis> {
+        &self.trellis
+    }
+
+    fn forward_batch(&mut self, jobs: &[FrameJob]) -> Vec<RawFrame> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            self.q.clear();
+            let quant = self.quant;
+            self.q.extend(job.llr.iter().map(|&x| quant.quantize(x)));
+            self.forward_quantized(job.start_state);
+            let lam = self.lam.iter().map(|&v| v as f32).collect();
+            out.push(RawFrame { surv: Survivors::Compact(self.ring.snapshot()), lam });
+        }
+        out
+    }
+
+    fn label(&self) -> String {
+        "simd".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{awgn::AwgnChannel, bpsk};
+    use crate::coding::{poly::Code, Encoder};
+    use crate::viterbi::scalar::{self, ScalarDecoder};
+
+    fn trellis() -> Arc<Trellis> {
+        Arc::new(Trellis::new(Code::from_octal(7, &["171", "133"]).unwrap()))
+    }
+
+    fn noisy_llrs(seed: u64, n_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+        let t = trellis();
+        let mut enc = Encoder::new(t.code().clone());
+        let mut bits = crate::util::rng::Rng::new(seed).bits(n_bits - 6);
+        bits.extend_from_slice(&[0; 6]);
+        let coded = enc.encode(&bits);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0x51D0);
+        let rx = ch.transmit(&tx);
+        (bits, rx.iter().map(|&x| x as f32).collect())
+    }
+
+    /// The scalar oracle fed the decoder's own grid values.
+    fn oracle_on_grid(t: &Trellis, q: Quantizer, llr: &[f32], start: Option<u32>,
+                      end: Option<u32>) -> Vec<u8> {
+        let deq: Vec<f32> = llr.iter().map(|&x| q.dequantize(q.quantize(x))).collect();
+        let lam0 = scalar::initial_metrics(t.code().n_states(), start);
+        scalar::decode(t, &deq, &lam0, end)
+    }
+
+    #[test]
+    fn quantizer_grid_roundtrips() {
+        let q = Quantizer::for_code(7, 2);
+        assert_eq!(q.qmax(), defaults::SIMD_QMAX);
+        assert_eq!(q.quantize(1.0), 8);
+        assert_eq!(q.quantize(-1.0), -8);
+        assert_eq!(q.quantize(1e9), q.qmax());
+        assert_eq!(q.quantize(-1e9), -q.qmax());
+        assert_eq!(q.dequantize(q.quantize(0.33)), 0.375); // 3/8
+        // separation invariant behind NEG_Q
+        assert!(2 * 6 * q.branch_metric_max(2) < -(NEG_Q as i32));
+    }
+
+    #[test]
+    fn extreme_codes_shrink_the_clamp() {
+        let q = Quantizer::for_code(16, 4);
+        assert!(q.qmax() < defaults::SIMD_QMAX);
+        assert!(2 * 15 * q.branch_metric_max(4) < -(NEG_Q as i32));
+        assert!(q.qmax() >= 1);
+    }
+
+    #[test]
+    fn matches_scalar_on_noisy_frames() {
+        let t = trellis();
+        let mut dec = SimdDecoder::new(t.clone(), 128, 0);
+        for seed in 0..8u64 {
+            let (bits, llr) = noisy_llrs(seed + 40, 128, 4.0);
+            let want = oracle_on_grid(&t, dec.quantizer(), &llr, Some(0), Some(0));
+            let job = FrameJob {
+                llr,
+                start_state: Some(0),
+                end_state: Some(0),
+                emit_from: 0,
+                emit_len: 128,
+            };
+            let got = dec.decode_batch(std::slice::from_ref(&job));
+            assert_eq!(got[0], want, "seed {seed}");
+            assert_eq!(got[0], bits, "seed {seed}: 4 dB n=128 decodes clean");
+        }
+    }
+
+    #[test]
+    fn renorm_periods_do_not_change_bits() {
+        let t = trellis();
+        let (_, llr) = noisy_llrs(77, 96, 3.0);
+        let job = FrameJob {
+            llr: llr.clone(),
+            start_state: Some(0),
+            end_state: None,
+            emit_from: 0,
+            emit_len: 96,
+        };
+        let base = SimdDecoder::new(t.clone(), 96, 0);
+        let want = oracle_on_grid(&t, base.quantizer(), &llr, Some(0), None);
+        for renorm in [1usize, 4, 16, 0] {
+            let mut dec = SimdDecoder::new(t.clone(), 96, renorm);
+            let got = dec.decode_batch(std::slice::from_ref(&job));
+            assert_eq!(got[0], want, "renorm {renorm}");
+        }
+        // 32767/1024 - (2*6 + 1) = 31 - 13: headroom minus warm-up spread
+        assert_eq!(base.effective_renorm(), 18, "auto period for qmax 512, beta 2, k 7");
+        assert_eq!(SimdDecoder::new(t, 96, 1000).effective_renorm(), 18, "cap applies");
+    }
+
+    #[test]
+    fn saturation_stress_matches_oracle_on_grid() {
+        // amplitudes at and far beyond the clamp: the grid clamps both
+        // decoders' inputs identically, decoded bits must still agree
+        let t = trellis();
+        let mut dec = SimdDecoder::new(t.clone(), 64, 16);
+        for (seed, amp) in [(1u64, 60.0f32), (2, 64.0), (3, 500.0)] {
+            let (_, mut llr) = noisy_llrs(seed + 700, 64, 2.0);
+            for v in llr.iter_mut() {
+                *v *= amp;
+            }
+            let want = oracle_on_grid(&t, dec.quantizer(), &llr, Some(0), Some(0));
+            let job = FrameJob {
+                llr,
+                start_state: Some(0),
+                end_state: Some(0),
+                emit_from: 0,
+                emit_len: 64,
+            };
+            let got = dec.decode_batch(std::slice::from_ref(&job));
+            assert_eq!(got[0], want, "seed {seed} amp {amp}");
+        }
+    }
+
+    #[test]
+    fn avx2_and_portable_kernels_agree() {
+        let t = trellis();
+        let (_, llr) = noisy_llrs(123, 256, 3.5);
+        let job = FrameJob {
+            llr,
+            start_state: Some(0),
+            end_state: None,
+            emit_from: 0,
+            emit_len: 256,
+        };
+        let mut fast = SimdDecoder::new(t.clone(), 256, 8);
+        let mut slow = SimdDecoder::new(t, 256, 8);
+        slow.force_portable();
+        let a = fast.decode_batch(std::slice::from_ref(&job));
+        let b = slow.decode_batch(std::slice::from_ref(&job));
+        assert_eq!(a, b, "explicit and portable kernels must be lane-identical");
+    }
+
+    #[test]
+    fn ring_is_shared_across_the_batch_and_calls() {
+        let t = trellis();
+        let mut dec = SimdDecoder::new(t.clone(), 32, 0);
+        assert_eq!(dec.survivor_bytes_per_frame(), 32 * 8);
+        let mut sdec = ScalarDecoder::new(t.clone(), 32);
+        let jobs: Vec<FrameJob> = (0..5u64)
+            .map(|seed| {
+                let (_, raw) = noisy_llrs(seed + 900, 32, 5.0);
+                let llr: Vec<f32> = raw
+                    .iter()
+                    .map(|&x| dec.quantizer().dequantize(dec.quantizer().quantize(x)))
+                    .collect();
+                FrameJob { llr, start_state: Some(0), end_state: Some(0),
+                           emit_from: 0, emit_len: 32 }
+            })
+            .collect();
+        // one batched call over the shared ring ...
+        let got = dec.decode_batch(&jobs);
+        let want = sdec.decode_batch(&jobs);
+        assert_eq!(got, want, "batched decode over one ring diverged from scalar");
+        // ... then the same ring again on a later call (wrap-around)
+        let got2 = dec.decode_batch(&jobs[..2]);
+        assert_eq!(got2[..], want[..2], "ring reuse across calls diverged");
+    }
+
+    #[test]
+    fn small_code_exercises_scalar_tail() {
+        // k = 3 -> 4 states, h = 2 butterflies: far below one AVX2
+        // vector, so the portable tail is the whole kernel
+        let t = Arc::new(Trellis::new(Code::from_octal(3, &["7", "5"]).unwrap()));
+        let mut enc = Encoder::new(t.code().clone());
+        let mut bits = crate::util::rng::Rng::new(9).bits(30);
+        bits.extend_from_slice(&[0; 2]);
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let mut dec = SimdDecoder::new(t.clone(), 32, 0);
+        let want = oracle_on_grid(&t, dec.quantizer(), &llr, Some(0), Some(0));
+        let job = FrameJob {
+            llr,
+            start_state: Some(0),
+            end_state: Some(0),
+            emit_from: 0,
+            emit_len: 32,
+        };
+        let got = dec.decode_batch(std::slice::from_ref(&job));
+        assert_eq!(got[0], want);
+        assert_eq!(got[0], bits);
+    }
+}

@@ -73,6 +73,17 @@ fn run_sessions(shards: usize, n_sessions: usize) -> Vec<Vec<u8>> {
         shard_execs, snap.execs,
         "shards={shards}: per-shard exec counters must sum to the global count"
     );
+    for (i, sh) in snap.shards.iter().enumerate() {
+        assert!(
+            sh.frames > 0 || sh.throughput_mbps == 0.0,
+            "shards={shards}: shard {i} reports throughput without decoding: {sh:?}"
+        );
+    }
+    assert!(
+        snap.shards.iter().any(|sh| sh.throughput_mbps > 0.0),
+        "shards={shards}: no shard reports forward throughput: {:?}",
+        snap.shards
+    );
 
     let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
     coord.shutdown().unwrap();
@@ -157,5 +168,13 @@ fn session_metrics_expose_shard_counters() {
     let json = snap.to_json().to_string_pretty();
     assert!(json.contains("\"shards\""), "{json}");
     assert!(json.contains("steals"), "{json}");
+    assert!(json.contains("throughput_mbps"), "{json}");
+    // the workload drained, so at least one shard decoded frames and
+    // its forward-throughput EWMA gauge must be live
+    assert!(
+        snap.shards.iter().any(|sh| sh.throughput_mbps > 0.0),
+        "no shard reports forward throughput: {:?}",
+        snap.shards
+    );
     coord.shutdown().unwrap();
 }

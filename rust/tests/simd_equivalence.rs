@@ -1,0 +1,243 @@
+//! `BackendKind::Simd` equivalence suite: the quantized (i16)
+//! lane-parallel fast path must decode **bit-identically** to the
+//! scalar f64 oracle on grid LLRs — for random codes, frame lengths,
+//! renormalization intervals, tile geometries and shard counts, and
+//! under saturation-stress LLRs at the quantization clamp. The
+//! quantization/renormalization model is documented in
+//! `docs/PERFORMANCE.md`.
+
+use std::sync::Arc;
+
+use tcvd::api::{BackendKind, DecoderBuilder};
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder};
+use tcvd::util::check::{forall, gen};
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::scalar::{self, ScalarDecoder};
+use tcvd::viterbi::simd::{Quantizer, SimdDecoder};
+use tcvd::viterbi::tiled::{decode_stream, TileConfig};
+use tcvd::viterbi::types::{FrameDecoder, FrameJob};
+
+fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut bits = Rng::new(seed).bits(payload_bits - 6);
+    bits.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&bits);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0x51AD);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+/// Snap LLRs onto the decoder's quantization grid, so the scalar
+/// oracle sees exactly the channel values the i16 path accumulates.
+fn snap(q: Quantizer, llr: &[f32]) -> Vec<f32> {
+    llr.iter().map(|&x| q.dequantize(q.quantize(x))).collect()
+}
+
+/// SIMD forward + traceback equals the scalar oracle on random valid
+/// codes (k 4..8, beta 2..3), random frame lengths and renormalization
+/// intervals, for known and unknown trellis ends.
+#[test]
+fn prop_simd_matches_scalar_for_random_codes() {
+    forall(
+        0x51D0_C0DE,
+        24,
+        |r: &mut Rng| {
+            let k = 4 + r.next_below(5) as u32; // 4..8 -> 8..128 states
+            let beta = 2 + r.next_below(2) as usize;
+            let polys: Vec<u32> = (0..beta)
+                .map(|_| {
+                    let msb = 1u32 << (k - 1);
+                    (r.next_u64() as u32 & (msb - 1)) | msb | 1
+                })
+                .collect();
+            let stages = 24 + r.next_below(41) as usize; // 24..64
+            let renorm = [1usize, 4, 16, 0][r.next_below(4) as usize];
+            let known_ends = r.next_bit() == 1;
+            let llr = gen::llrs(r, stages * beta, 1.4);
+            (k, polys, stages, renorm, known_ends, llr)
+        },
+        |(k, polys, stages, renorm, known_ends, llr)| {
+            let code = Code::new(*k, polys.clone()).map_err(|e| e.to_string())?;
+            let s_count = code.n_states();
+            let t = Arc::new(Trellis::new(code));
+            // known ends pin both trellis ends (the traceback starts at
+            // state 0 instead of the argmax); unknown ends exercise the
+            // argmax pick over the quantized final metrics
+            let (start, end) = if *known_ends { (Some(0), Some(0)) } else { (None, None) };
+            let mut dec = SimdDecoder::new(t.clone(), *stages, *renorm);
+            let deq = snap(dec.quantizer(), llr);
+            let lam0 = scalar::initial_metrics(s_count, start);
+            let oracle = scalar::decode(&t, &deq, &lam0, end);
+            let job = FrameJob {
+                llr: llr.clone(),
+                start_state: start,
+                end_state: end,
+                emit_from: 0,
+                emit_len: *stages,
+            };
+            let out = dec.decode_batch(std::slice::from_ref(&job));
+            if out[0] != oracle {
+                return Err(format!(
+                    "simd decode diverged (k={k}, S={s_count}, renorm={renorm})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Streamed decoding through the reference tiler on grid LLRs: simd
+/// equals scalar for random tile geometries (head/tail 0 included) and
+/// renormalization intervals on noisy streams.
+#[test]
+fn prop_simd_matches_scalar_across_tile_geometries() {
+    forall(
+        0x71D5,
+        12,
+        |r: &mut Rng| {
+            let payload = [16usize, 32, 64][r.next_below(3) as usize];
+            let head = [0usize, 8, 17, 32][r.next_below(4) as usize];
+            let tail = [0usize, 8, 17, 32][r.next_below(4) as usize];
+            let frames = 2 + r.next_below(3) as usize;
+            let renorm = [1usize, 7, 16, 0][r.next_below(4) as usize];
+            (TileConfig { payload, head, tail }, frames, renorm, r.next_u64())
+        },
+        |&(cfg, frames, renorm, seed)| {
+            let t = Arc::new(Trellis::new(registry::paper_code()));
+            let quant = Quantizer::for_code(7, 2);
+            let (_, raw) = noisy_stream(seed % 100_000, cfg.payload * frames, 2.5);
+            let llr = snap(quant, &raw);
+            let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
+            let want = decode_stream(&mut sdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let mut qdec = SimdDecoder::new(t, cfg.frame_stages(), renorm);
+            let got = decode_stream(&mut qdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("tile {cfg:?} renorm {renorm}: simd stream decode diverged"))
+            }
+        },
+    );
+}
+
+/// Saturation stress: LLR magnitudes at and far beyond the i16
+/// quantization clamp. The grid clamps both decoders' channel inputs
+/// identically and the renormalized i16 metrics must still produce the
+/// oracle's bits.
+#[test]
+fn prop_simd_matches_scalar_under_saturation_stress() {
+    forall(
+        0x5A70,
+        16,
+        |r: &mut Rng| {
+            let amp = [32.0f32, 64.0, 256.0, 4096.0][r.next_below(4) as usize];
+            let renorm = [1usize, 16, 0][r.next_below(3) as usize];
+            let stages = 32 + r.next_below(33) as usize;
+            let mut llr = gen::llrs(r, stages * 2, 1.1);
+            for v in llr.iter_mut() {
+                *v *= amp;
+            }
+            (stages, renorm, llr)
+        },
+        |(stages, renorm, llr)| {
+            let t = Arc::new(Trellis::new(registry::paper_code()));
+            let mut dec = SimdDecoder::new(t.clone(), *stages, *renorm);
+            let q = dec.quantizer();
+            let deq = snap(q, llr);
+            // the clamp must actually engage for this to stress anything
+            if !deq.iter().any(|&x| x.abs() >= q.dequantize(q.qmax()).abs()) {
+                return Err("stress case never reached the clamp".into());
+            }
+            let lam0 = scalar::initial_metrics(64, Some(0));
+            let oracle = scalar::decode(&t, &deq, &lam0, None);
+            let job = FrameJob {
+                llr: llr.clone(),
+                start_state: Some(0),
+                end_state: None,
+                emit_from: 0,
+                emit_len: *stages,
+            };
+            let out = dec.decode_batch(std::slice::from_ref(&job));
+            if out[0] != oracle {
+                return Err(format!("saturation stress diverged (renorm {renorm})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn run_backend_sessions(backend: BackendKind, shards: usize, n_sessions: usize)
+                        -> (Vec<Vec<u8>>, u64) {
+    let coord = Arc::new(
+        DecoderBuilder::new()
+            .backend(backend)
+            .tile_dims(32, 16, 16)
+            .shards(shards)
+            .workers(2)
+            .max_batch(8)
+            .batch_deadline_us(200)
+            .queue_depth(256)
+            .serve()
+            .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for s in 0..n_sessions {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let (_, llr) = noisy_stream(6000 + s as u64, 256 + 32 * (s % 3), 5.5);
+            let mut session = c.open_session().unwrap();
+            for chunk in llr.chunks(70) {
+                session.push(chunk).unwrap();
+            }
+            session.finish_and_collect(true).unwrap()
+        }));
+    }
+    let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let peak = coord.metrics().survivor_bytes_peak();
+    let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
+    coord.shutdown().unwrap();
+    (outs, peak)
+}
+
+/// The coordinator serving path: simd output is invariant across shard
+/// counts and — at an Eb/N0 where quantization is transparent —
+/// identical to the scalar backend's, while the survivor gauge shows
+/// the compact bit-packed layout (whole frames of 64 stages x 64
+/// states / 8 bits, batched).
+#[test]
+fn simd_shard_invariance_against_scalar() {
+    let n_sessions = 4;
+    let (scalar_outs, _) = run_backend_sessions(BackendKind::Scalar, 1, n_sessions);
+    let frame_bytes = 64 * 64 / 8;
+    for shards in [1usize, 2, 8] {
+        let (outs, peak) = run_backend_sessions(BackendKind::Simd, shards, n_sessions);
+        assert_eq!(
+            outs, scalar_outs,
+            "{shards}-shard simd output differs from the scalar reference"
+        );
+        // simd batches frames over one shared ring; every batched
+        // execution materializes whole bit-packed frames
+        assert!(peak >= frame_bytes, "shards={shards}: gauge below one frame ({peak})");
+        assert_eq!(peak % frame_bytes, 0, "shards={shards}: gauge not whole frames ({peak})");
+    }
+}
+
+/// The one-shot fan-out path builds simd lanes from the spec: output
+/// is invariant across lane counts and equal to the single-lane
+/// reference.
+#[test]
+fn simd_one_shot_lanes_agree() {
+    let (bits, llr) = noisy_stream(555, 2048, 5.5);
+    let builder = DecoderBuilder::new().backend(BackendKind::Simd).tile_dims(64, 32, 32);
+    let reference =
+        builder.clone().shards(1).build().unwrap().decode_stream(&llr, true).unwrap();
+    assert_eq!(reference, bits, "5.5 dB decodes clean through the quantized path");
+    for lanes in [2usize, 8] {
+        let got =
+            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr, true).unwrap();
+        assert_eq!(got, reference, "{lanes}-lane simd one-shot decode diverged");
+    }
+}

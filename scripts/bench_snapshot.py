@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Run the throughput sweeps and snapshot Mb/s per backend/shard count.
+
+Runs `cargo bench --bench table1_throughput` and `--bench batching`
+(which write `bench_results/*.json`), then aggregates the CPU-backend
+rows into one trajectory document, `BENCH_PR4.json`, so successive PRs
+can compare like-for-like numbers:
+
+  {
+    "mode": "smoke" | "default" | "full",
+    "table1_workload": {"info_bits": ..., "backends": {
+        "scalar": {"mbps": ..., "speedup_vs_scalar": 1.0}, ...}},
+    "shard_scaling": {"info_bits": ..., "rows": [
+        {"backend": "simd", "shards": 2, "mbps": ...}, ...]},
+    "survivor": {"rows": [...]},
+    "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...}
+  }
+
+CI runs `scripts/bench_snapshot.py --smoke` (tiny frame budgets via
+TCVD_BENCH_SMOKE=1) on every push to keep the sweeps from rotting;
+numbers meant for reading (docs/PERFORMANCE.md) come from a default or
+`--full` run on a quiet machine.
+
+Usage:
+  python3 scripts/bench_snapshot.py [--smoke | --full] [--out PATH]
+      [--skip-run] [--min-simd-ratio R]
+
+`--skip-run` aggregates existing bench_results/ JSON without invoking
+cargo. `--min-simd-ratio R` exits 1 if simd/scalar single-shard
+throughput on the table-1 workload is below R (the PR-4 acceptance
+floor is 3.0; leave it off in CI smoke runs, where container noise
+makes absolute ratios unreliable).
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "bench_results")
+
+
+def run_benches(mode):
+    env = dict(os.environ)
+    env.pop("TCVD_BENCH_SMOKE", None)
+    env.pop("TCVD_BENCH_FULL", None)
+    if mode == "smoke":
+        env["TCVD_BENCH_SMOKE"] = "1"
+    elif mode == "full":
+        env["TCVD_BENCH_FULL"] = "1"
+    for bench in ("table1_throughput", "batching"):
+        cmd = ["cargo", "bench", "--bench", bench]
+        print(f"bench_snapshot: running {' '.join(cmd)} (mode={mode})", flush=True)
+        proc = subprocess.run(cmd, cwd=REPO, env=env)
+        if proc.returncode != 0:
+            sys.exit(f"bench_snapshot: {' '.join(cmd)} failed "
+                     f"(rc={proc.returncode})")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        sys.exit(f"bench_snapshot: {path} missing — did the bench run? "
+                 "(drop --skip-run, or check the bench output for SKIPs)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI budgets")
+    ap.add_argument("--full", action="store_true", help="full-rigor budgets")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR4.json"))
+    ap.add_argument("--skip-run", action="store_true",
+                    help="aggregate existing bench_results/ without cargo")
+    ap.add_argument("--min-simd-ratio", type=float, default=None,
+                    help="fail below this simd/scalar table-1 ratio")
+    args = ap.parse_args()
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
+    mode = "smoke" if args.smoke else "full" if args.full else "default"
+
+    if not args.skip_run:
+        run_benches(mode)
+
+    table1 = load("table1_throughput.json")
+    batching = load("batching.json")
+
+    backends = {}
+    for row in table1.get("cpu_rows", []):
+        backends[row["backend"]] = {
+            "mbps": row["mbps"],
+            "speedup_vs_scalar": row.get("speedup_vs_scalar"),
+        }
+    if not backends:
+        sys.exit("bench_snapshot: table1_throughput.json has no cpu_rows — "
+                 "re-run the bench (old results file?)")
+
+    doc = {
+        "mode": mode,
+        "table1_workload": {
+            "info_bits": table1.get("info_bits"),
+            "backends": backends,
+        },
+        "shard_scaling": {
+            "info_bits": batching.get("shard_info_bits"),
+            "rows": batching.get("shard_rows", []),
+        },
+        "survivor": {
+            "info_bits": batching.get("survivor_info_bits"),
+            "rows": batching.get("survivor_rows", []),
+        },
+    }
+    scalar = backends.get("scalar", {}).get("mbps")
+    simd = backends.get("simd", {}).get("mbps")
+    if scalar and simd:
+        doc["summary"] = {
+            "scalar_mbps": scalar,
+            "simd_mbps": simd,
+            "simd_vs_scalar": simd / scalar,
+        }
+
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench_snapshot: wrote {args.out}")
+    if "summary" in doc:
+        s = doc["summary"]
+        print(f"bench_snapshot: scalar {s['scalar_mbps']:.2f} Mb/s, "
+              f"simd {s['simd_mbps']:.2f} Mb/s "
+              f"({s['simd_vs_scalar']:.2f}x)")
+        if args.min_simd_ratio is not None and s["simd_vs_scalar"] < args.min_simd_ratio:
+            sys.exit(f"bench_snapshot: simd/scalar ratio "
+                     f"{s['simd_vs_scalar']:.2f} below floor {args.min_simd_ratio}")
+    elif args.min_simd_ratio is not None:
+        sys.exit("bench_snapshot: --min-simd-ratio given but scalar/simd "
+                 "rows are missing from the bench output")
+
+
+if __name__ == "__main__":
+    main()
