@@ -49,7 +49,7 @@ fn main() -> tcvd::Result<()> {
         }
     };
 
-    let decoded = coord.decode_stream_blocking(&llr, true)?;
+    let decoded = coord.decode_stream_blocking(&llr)?;
     let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
     let snap = coord.metrics();
     println!(

@@ -60,7 +60,7 @@ fn main() -> tcvd::Result<()> {
                 let llr: Vec<f32> = noisy[..chunk.len()].iter().map(|&x| x as f32).collect();
                 handle.push(&llr)?;
             }
-            handle.finish(true)?;
+            handle.finish()?;
             let decoded = consumer.join().expect("consumer panicked");
             let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
             Ok((decoded.len(), errors))

@@ -11,7 +11,7 @@ mod common;
 
 use std::sync::Arc;
 
-use tcvd::api::DecoderBuilder;
+use tcvd::api::{DecoderBuilder, TerminationMode};
 use tcvd::coding::packing::build_packing;
 use tcvd::coding::{registry, trellis::Trellis};
 use tcvd::defaults;
@@ -30,7 +30,8 @@ fn main() -> tcvd::Result<()> {
     let mut rows = Vec::new();
     let mut bench_cpu = |name: &str, dec: &mut dyn FrameDecoder, q: f64| {
         let d = common::time_median(3, || {
-            tcvd::viterbi::tiled::decode_stream(dec, &llr, 2, &tile, true).unwrap();
+            tcvd::viterbi::tiled::decode_stream(dec, &llr, 2, &tile, TerminationMode::Flushed)
+                .unwrap();
         });
         let mbps = common::mbps(info_bits, d);
         let total_ops = q * (info_bits as f64);
@@ -66,6 +67,7 @@ fn main() -> tcvd::Result<()> {
         let builder = DecoderBuilder::new()
             .variant(variant)
             .tile(tile)
+            .termination(TerminationMode::Truncated) // mid-stream quarter slices
             .workers(3)
             .queue_depth(2048)
             .shards(1); // per-executable ablation: keep one engine
@@ -80,7 +82,7 @@ fn main() -> tcvd::Result<()> {
         std::thread::scope(|s| {
             for q in llr.chunks(llr.len() / 4) {
                 let coord = &coord;
-                s.spawn(move || coord.decode_stream_blocking(q, false).unwrap());
+                s.spawn(move || coord.decode_stream_blocking(q).unwrap());
             }
         });
         let mbps = common::mbps(info_bits, t0.elapsed());

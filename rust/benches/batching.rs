@@ -11,7 +11,7 @@ mod common;
 
 use std::sync::Arc;
 
-use tcvd::api::DecoderBuilder;
+use tcvd::api::{DecoderBuilder, TerminationMode};
 use tcvd::defaults;
 use tcvd::util::json::{self, Json};
 use tcvd::viterbi::tiled;
@@ -35,7 +35,7 @@ fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
             let coord = coord.clone();
             s.spawn(move || {
                 let (_, llr) = common::workload(7000 + i as u64, per_session, 5.0);
-                coord.decode_stream_blocking(&llr, true).unwrap();
+                coord.decode_stream_blocking(&llr).unwrap();
             });
         }
     });
@@ -77,7 +77,7 @@ fn run_sharded(backend: &str, shards: usize, sessions: usize, info_bits: usize)
             let coord = coord.clone();
             s.spawn(move || {
                 let (payload, llr) = common::workload(9000 + i as u64, per_session, 6.0);
-                let out = coord.decode_stream_blocking(&llr, true).unwrap();
+                let out = coord.decode_stream_blocking(&llr).unwrap();
                 assert_eq!(
                     out, payload,
                     "{backend} shards={shards} session {i}: output not bit-exact"
@@ -107,14 +107,56 @@ fn run_survivor(backend: &str, info_bits: usize) -> tcvd::Result<(f64, usize)> {
     let (payload, llr) = common::workload(4242, info_bits, 6.0);
     // peak survivor bytes per frame: forward real frames, read the
     // survivor store each one materialized
-    let jobs = tiled::make_frames(&llr, 2, &defaults::CPU_TILE, true)?;
+    let jobs = tiled::make_frames(&llr, 2, &defaults::CPU_TILE, TerminationMode::Flushed)?;
     let probe = dec.as_frame_decoder().forward_batch(&jobs[..jobs.len().min(4)]);
     let peak_bytes = probe.iter().map(|r| r.surv.bytes()).max().unwrap_or(0);
     let t0 = std::time::Instant::now();
-    let out = dec.decode_stream(&llr, true)?;
+    let out = dec.decode_stream(&llr)?;
     let wall = t0.elapsed();
     assert_eq!(out, payload, "{backend}: one-shot decode not bit-exact");
     Ok((common::mbps(info_bits, wall), peak_bytes))
+}
+
+/// Termination-mode sweep (see `docs/DECODING-MODES.md`): one-shot
+/// decode throughput over a fleet of short blocks, flushed vs
+/// tail-biting, at short frame lengths — the workload where the k-1
+/// flush overhead matters. Info throughput counts *data* bits only, so
+/// the flushed rows pay their per-block rate loss honestly (a flushed
+/// `p`-stage block carries `p - 6` data bits, a tail-biting block all
+/// `p`). Decoded blocks are checked against the payload, so the sweep
+/// also witnesses tail-biting correctness at 6 dB.
+fn run_termination(mode: tcvd::coding::TerminationMode, block_stages: usize, n_blocks: usize)
+                   -> tcvd::Result<(f64, usize)> {
+    use tcvd::channel::{awgn::AwgnChannel, bpsk};
+    use tcvd::coding::{registry, Encoder};
+
+    let code = registry::paper_code();
+    let data_bits = block_stages - mode.flush_stages(code.k());
+    let blocks: Vec<(Vec<u8>, Vec<f32>)> = (0..n_blocks)
+        .map(|i| {
+            let bits = tcvd::util::rng::Rng::new(0xB10C + i as u64).bits(data_bits);
+            let mut enc = Encoder::new(code.clone());
+            let (coded, _) = enc.encode_terminated(&bits, mode);
+            let tx = bpsk::modulate(&coded);
+            let mut ch = AwgnChannel::new(6.0, code.rate(), 0x7E12 ^ i as u64);
+            let rx = ch.transmit(&tx);
+            (bits, rx.iter().map(|&x| x as f32).collect())
+        })
+        .collect();
+    let mut dec = DecoderBuilder::new()
+        .backend_name("simd")?
+        .tile_dims(block_stages, 32, 32)
+        .termination(mode)
+        .shards(1)
+        .build()?;
+    let t0 = std::time::Instant::now();
+    let mut info_bits = 0usize;
+    for (bits, llr) in &blocks {
+        let out = dec.decode_stream(llr)?;
+        info_bits += bits.len();
+        assert_eq!(&out[..bits.len()], &bits[..], "{mode} block decode not bit-exact");
+    }
+    Ok((common::mbps(info_bits, t0.elapsed()), data_bits))
 }
 
 fn main() -> tcvd::Result<()> {
@@ -166,7 +208,7 @@ fn main() -> tcvd::Result<()> {
         }
     }
     // shard scaling: aggregate serve() throughput vs engine shard count
-    // per CPU backend (BENCH_PR4.json's Mb/s-per-backend/shard matrix;
+    // per CPU backend (BENCH_PR5.json's Mb/s-per-backend/shard matrix;
     // no artifacts needed)
     let shard_bits = common::budget(131_072, 262_144, 1_048_576);
     let mut shard_rows = Vec::new();
@@ -240,6 +282,40 @@ fn main() -> tcvd::Result<()> {
             Err(e) => println!("{backend:>12} | SKIP ({e})"),
         }
     }
+    // termination-mode sweep: flushed vs tail-biting info throughput on
+    // short blocks (BENCH_PR5.json's per-mode rows; docs/DECODING-MODES.md)
+    let n_blocks = common::budget(48, 256, 1024);
+    println!("\ntermination modes — simd backend, one-shot short blocks, {n_blocks} blocks");
+    println!(
+        "{:>12} {:>8} | {:>10} {:>10} {:>10}",
+        "mode", "stages", "data bits", "Mb/s", "rate eff."
+    );
+    let mut term_rows = Vec::new();
+    for block_stages in [64usize, 128] {
+        for mode in [
+            tcvd::coding::TerminationMode::Flushed,
+            tcvd::coding::TerminationMode::TailBiting,
+        ] {
+            match run_termination(mode, block_stages, n_blocks) {
+                Ok((mbps, data_bits)) => {
+                    let eff = data_bits as f64 / block_stages as f64;
+                    println!(
+                        "{:>12} {block_stages:>8} | {data_bits:>10} {mbps:>10.2} {eff:>10.3}",
+                        mode.as_str()
+                    );
+                    term_rows.push(json::obj(vec![
+                        ("mode", json::s(mode.as_str())),
+                        ("block_stages", json::num(block_stages as f64)),
+                        ("data_bits_per_block", json::num(data_bits as f64)),
+                        ("info_mbps", json::num(mbps)),
+                        ("rate_efficiency", json::num(eff)),
+                    ]));
+                }
+                Err(e) => println!("{:>12} {block_stages:>8} | SKIP ({e})", mode.as_str()),
+            }
+        }
+    }
+
     common::write_json("batching", &json::obj(vec![
         ("experiment", json::s("E5/batching")),
         ("info_bits", json::num(info_bits as f64)),
@@ -248,6 +324,8 @@ fn main() -> tcvd::Result<()> {
         ("shard_rows", Json::Arr(shard_rows)),
         ("survivor_info_bits", json::num(surv_bits as f64)),
         ("survivor_rows", Json::Arr(surv_rows)),
+        ("termination_blocks", json::num(n_blocks as f64)),
+        ("termination_rows", Json::Arr(term_rows)),
     ]));
     Ok(())
 }

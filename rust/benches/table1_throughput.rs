@@ -11,7 +11,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use tcvd::api::DecoderBuilder;
+use tcvd::api::{DecoderBuilder, TerminationMode};
 use tcvd::defaults;
 use tcvd::util::json::{self, Json};
 
@@ -19,8 +19,15 @@ fn run_combo(variant: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
     // default tile (64+16/16) matches the b64_s48 artifact frames
     // single shard: Table-I numbers are per-executable; shard scaling
     // is the batching bench's sweep
-    let coord =
-        DecoderBuilder::new().variant(variant).workers(3).queue_depth(2048).shards(1).serve()?;
+    // quarter-streams are mid-stream slices with no flushed end, so
+    // the pipeline decodes them as truncated streams
+    let coord = DecoderBuilder::new()
+        .variant(variant)
+        .termination(TerminationMode::Truncated)
+        .workers(3)
+        .queue_depth(2048)
+        .shards(1)
+        .serve()?;
     run_sessions(coord, llr)
 }
 
@@ -35,7 +42,7 @@ fn run_sessions(coord: tcvd::coordinator::Coordinator, llr: &[f32])
         let quarters: Vec<&[f32]> = llr.chunks(llr.len() / 4).collect();
         let mut joins = Vec::new();
         for q in quarters {
-            joins.push(s.spawn(move || coord.decode_stream_blocking(q, false).unwrap()));
+            joins.push(s.spawn(move || coord.decode_stream_blocking(q).unwrap()));
         }
         for j in joins {
             j.join().unwrap();
@@ -50,11 +57,12 @@ fn run_sessions(coord: tcvd::coordinator::Coordinator, llr: &[f32])
 
 /// One CPU backend on the table-1 workload: single shard, CPU tile,
 /// same 4-session drive as the artifact combos. This is the
-/// scalar-vs-simd trajectory row of `BENCH_PR4.json`
+/// scalar-vs-simd trajectory row of `BENCH_PR5.json`
 /// (`scripts/bench_snapshot.py`).
 fn run_cpu_backend(backend: &str, llr: &[f32]) -> tcvd::Result<(f64, f64)> {
     let coord = DecoderBuilder::new()
         .backend_name(backend)?
+        .termination(TerminationMode::Truncated)
         .tile(defaults::CPU_TILE)
         .workers(3)
         .queue_depth(2048)
@@ -97,7 +105,7 @@ fn main() -> tcvd::Result<()> {
         }
     }
     // CPU fast-path section: same workload, single shard, no artifacts
-    // needed — the scalar-vs-simd ratio BENCH_PR4.json tracks across
+    // needed — the scalar-vs-simd ratio BENCH_PR5.json tracks across
     // PRs (the quantized SIMD ACS path must hold >= 3x scalar here)
     println!("\nCPU backends — table-1 workload, single shard, CPU tile (64+32/32)");
     println!("{:>12} | {:>10} | {:>12} | {:>10}", "backend", "this Mb/s", "mean batch", "vs scalar");

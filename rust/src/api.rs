@@ -13,7 +13,7 @@
 //!     .backend(BackendKind::cpu("radix4"))
 //!     .tile_dims(64, 32, 32)
 //!     .build()?;
-//! let bits = dec.decode_stream(&llr, true)?;
+//! let bits = dec.decode_stream(&llr)?;
 //! assert_eq!(bits.len(), 128);
 //! # Ok::<(), tcvd::Error>(())
 //! ```
@@ -33,7 +33,7 @@
 //!     .serve()?;
 //! let mut session = coord.open_session()?;
 //! session.push(&vec![0.5f32; 32 * 2])?; // one payload tile of LLRs
-//! let bits = session.finish_and_collect(false)?;
+//! let bits = session.finish_and_collect()?;
 //! assert_eq!(bits.len(), 32);
 //! coord.shutdown()?;
 //! # Ok::<(), tcvd::Error>(())
@@ -70,6 +70,7 @@ use crate::viterbi::tiled;
 use crate::viterbi::types::{FrameDecoder, FrameJob};
 
 pub use crate::channel::quantize::ChannelPrecision;
+pub use crate::coding::TerminationMode;
 pub use crate::viterbi::tiled::TileConfig;
 pub use crate::coordinator::{MetricsSnapshot, Session, SessionHandle, ShardSnapshot};
 pub use crate::error::{Error, Result};
@@ -158,6 +159,7 @@ pub struct DecoderBuilder {
     workers: usize,
     queue_depth: usize,
     shards: usize,
+    termination: TerminationMode,
 }
 
 impl Default for DecoderBuilder {
@@ -176,6 +178,7 @@ impl Default for DecoderBuilder {
             workers: defaults::WORKERS,
             queue_depth: defaults::QUEUE_DEPTH,
             shards: defaults::default_shards(),
+            termination: defaults::TERMINATION,
         }
     }
 }
@@ -317,6 +320,26 @@ impl DecoderBuilder {
         self
     }
 
+    /// Stream termination mode — the workload axis deciding what the
+    /// decoder may assume about the trellis ends
+    /// (`docs/DECODING-MODES.md` is the guide):
+    /// [`TerminationMode::Flushed`] pins both ends (the default),
+    /// [`TerminationMode::TailBiting`] pins neither and frames the
+    /// stream *circularly* (LTE-style blocks, no flush-bit rate loss),
+    /// [`TerminationMode::Truncated`] pins only the start. Applies to
+    /// [`Decoder::decode_stream`] and to every session of
+    /// [`serve`](Self::serve).
+    pub fn termination(mut self, termination: TerminationMode) -> Self {
+        self.termination = termination;
+        self
+    }
+
+    /// Select the termination mode by CLI/TOML name (see
+    /// [`TerminationMode::NAMES`]).
+    pub fn termination_name(self, name: &str) -> Result<Self> {
+        Ok(self.termination(TerminationMode::parse_named(name)?))
+    }
+
     /// Build a builder from a parsed [`Config`] (the TOML view).
     pub fn from_config(cfg: &Config) -> Result<DecoderBuilder> {
         let b = DecoderBuilder {
@@ -331,7 +354,7 @@ impl DecoderBuilder {
             shards: cfg.shards,
             ..DecoderBuilder::new()
         };
-        b.backend_name(&cfg.backend)
+        b.backend_name(&cfg.backend)?.termination_name(&cfg.termination)
     }
 
     /// Build a builder from TOML text (`tcvd.toml` schema).
@@ -371,6 +394,10 @@ impl DecoderBuilder {
         self.queue_depth = args.get_usize("queue-depth", self.queue_depth)?;
         self.shards = args.get_usize("shards", self.shards)?;
         self.renorm_every = args.get_usize("renorm-every", self.renorm_every)?;
+        if let Some(v) = args.get("termination") {
+            let name = v.to_string();
+            self = self.termination_name(&name)?;
+        }
         Ok(self)
     }
 
@@ -382,6 +409,11 @@ impl DecoderBuilder {
     /// The tile geometry currently configured.
     pub fn tile_config(&self) -> TileConfig {
         self.tile
+    }
+
+    /// The termination mode currently configured.
+    pub fn termination_mode(&self) -> TerminationMode {
+        self.termination
     }
 
     /// Validate the full parameter set (also called by
@@ -467,6 +499,7 @@ impl DecoderBuilder {
             workers: self.workers,
             queue_depth: self.queue_depth,
             shards: self.shards,
+            termination: self.termination,
         }
     }
 
@@ -514,7 +547,14 @@ impl DecoderBuilder {
             )));
         }
         let beta = inner.trellis().code().beta();
-        Ok(Decoder { inner, spec, tile, beta, shards: self.shards })
+        Ok(Decoder {
+            inner,
+            spec,
+            tile,
+            beta,
+            shards: self.shards,
+            termination: self.termination,
+        })
     }
 
     /// Start the streaming serving pipeline and return the running
@@ -600,6 +640,15 @@ pub fn builder_flags() -> Vec<FlagSpec> {
                 defaults::RENORM_EVERY
             ),
         ),
+        FlagSpec::new(
+            "termination",
+            "MODE",
+            format!(
+                "stream termination, one of: {} (default {:?}; see docs/DECODING-MODES.md)",
+                TerminationMode::NAMES.join(" "),
+                defaults::TERMINATION.as_str()
+            ),
+        ),
     ]
 }
 
@@ -635,6 +684,7 @@ pub struct Decoder {
     tile: TileConfig,
     beta: usize,
     shards: usize,
+    termination: TerminationMode,
 }
 
 impl Decoder {
@@ -671,8 +721,10 @@ impl Decoder {
 
     /// Decode a whole LLR stream (frames cut per the builder's tile
     /// geometry, payload bits reassembled in order). The stream must
-    /// cover a whole number of payload tiles; `flushed_end` marks an
-    /// encoder flushed to state 0.
+    /// cover a whole number of payload tiles, and it is terminated per
+    /// the builder's [`termination`](DecoderBuilder::termination) mode
+    /// (a tail-biting stream is framed circularly, a flushed stream
+    /// pins both trellis ends).
     ///
     /// With [`DecoderBuilder::shards`] > 1 the frames are decoded on up
     /// to that many parallel lanes (frame decoding is independent
@@ -684,8 +736,8 @@ impl Decoder {
     /// is only opened when it has at least [`MIN_FRAMES_PER_LANE`]
     /// frames to amortize its backend construction; short streams
     /// decode on the caller thread with the already-built backend.
-    pub fn decode_stream(&mut self, llr: &[f32], flushed_end: bool) -> Result<Vec<u8>> {
-        let jobs = tiled::make_frames(llr, self.beta, &self.tile, flushed_end)?;
+    pub fn decode_stream(&mut self, llr: &[f32]) -> Result<Vec<u8>> {
+        let jobs = tiled::make_frames(llr, self.beta, &self.tile, self.termination)?;
         let lanes = self.shards.min(jobs.len() / MIN_FRAMES_PER_LANE).max(1);
         if lanes == 1 {
             // single lane: reuse the already-built backend directly
@@ -727,6 +779,11 @@ impl Decoder {
     /// The tile geometry this decoder streams with.
     pub fn tile(&self) -> &TileConfig {
         &self.tile
+    }
+
+    /// The termination mode this decoder frames streams under.
+    pub fn termination(&self) -> TerminationMode {
+        self.termination
     }
 
     /// The trellis the decoder was built over.
@@ -822,8 +879,8 @@ mod tests {
             .unwrap();
         assert_eq!(c.label(), "compact");
         assert_eq!(c.frame_stages(), 48);
-        let a = s.decode_stream(&llr, true).unwrap();
-        let b = c.decode_stream(&llr, true).unwrap();
+        let a = s.decode_stream(&llr).unwrap();
+        let b = c.decode_stream(&llr).unwrap();
         assert_eq!(a, b);
         assert_eq!(b, vec![0u8; 64]);
     }
@@ -844,10 +901,51 @@ mod tests {
             .unwrap();
         assert_eq!(c.label(), "simd");
         assert_eq!(c.frame_stages(), 48);
-        let a = s.decode_stream(&llr, true).unwrap();
-        let b = c.decode_stream(&llr, true).unwrap();
+        let a = s.decode_stream(&llr).unwrap();
+        let b = c.decode_stream(&llr).unwrap();
         assert_eq!(a, b);
         assert_eq!(b, vec![0u8; 64]);
+    }
+
+    #[test]
+    fn termination_flows_into_coordinator_config() {
+        let cfg = DecoderBuilder::new()
+            .termination(TerminationMode::TailBiting)
+            .to_coordinator_config();
+        assert_eq!(cfg.termination, TerminationMode::TailBiting);
+        // CLI spelling (and the tail_biting alias) both parse
+        let argv: Vec<String> =
+            ["serve", "--termination", "tail-biting"].iter().map(|s| s.to_string()).collect();
+        let b = DecoderBuilder::new()
+            .apply_flags(&crate::cli::Args::parse(&argv).unwrap())
+            .unwrap();
+        assert_eq!(b.termination_mode(), TerminationMode::TailBiting);
+        assert!(DecoderBuilder::new().termination_name("nope").is_err());
+        for &name in TerminationMode::NAMES {
+            DecoderBuilder::new().termination_name(name).unwrap();
+        }
+    }
+
+    #[test]
+    fn tail_biting_one_shot_decodes_circular_block() {
+        use crate::channel::bpsk;
+        use crate::coding::{registry, Encoder};
+
+        // 64-bit tail-biting block through the one-shot facade: the
+        // decoder must recover the payload with no pinned states
+        let bits = crate::util::rng::Rng::new(11).bits(64);
+        let mut enc = Encoder::new(registry::paper_code());
+        let (coded, n) = enc.encode_terminated(&bits, TerminationMode::TailBiting);
+        assert_eq!(n, 64);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let mut dec = DecoderBuilder::new()
+            .backend(BackendKind::Scalar)
+            .tile_dims(32, 32, 32)
+            .termination(TerminationMode::TailBiting)
+            .build()
+            .unwrap();
+        assert_eq!(dec.termination(), TerminationMode::TailBiting);
+        assert_eq!(dec.decode_stream(&llr).unwrap(), bits);
     }
 
     #[test]

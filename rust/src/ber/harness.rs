@@ -5,7 +5,7 @@
 use crate::channel::awgn::AwgnChannel;
 use crate::channel::bpsk;
 use crate::coding::trellis::Trellis;
-use crate::coding::Encoder;
+use crate::coding::{Encoder, TerminationMode};
 use crate::error::Result;
 use crate::util::rng::Rng;
 use crate::viterbi::tiled::{decode_stream, TileConfig};
@@ -15,6 +15,11 @@ use crate::viterbi::types::FrameDecoder;
 #[derive(Clone, Debug)]
 pub struct BerSetup {
     pub tile: TileConfig,
+    /// How each simulated round is terminated (and decoded): flushed
+    /// rounds spend `k - 1` stages on the flush; tail-biting/truncated
+    /// rounds carry payload in every stage. See `docs/DECODING-MODES.md`
+    /// for the BER implications of each mode.
+    pub termination: TerminationMode,
     /// Stop once this many bit errors are seen (paper's 100 rule).
     pub target_errors: usize,
     /// Hard cap on simulated information bits per point.
@@ -36,6 +41,7 @@ impl Default for BerSetup {
     fn default() -> Self {
         BerSetup {
             tile: TileConfig { payload: 64, head: 32, tail: 32 },
+            termination: TerminationMode::Flushed,
             target_errors: 100,
             max_bits: 2_000_000,
             bits_per_round: 4096,
@@ -71,8 +77,8 @@ pub fn measure_ber(dec: &mut dyn FrameDecoder, trellis: &Trellis, ebn0_db: f64,
                    setup: &BerSetup) -> Result<BerPoint> {
     let code = trellis.code();
     let beta = code.beta();
-    let flush = (code.k() - 1) as usize;
-    // payload size: fill whole frames after flush bits
+    let flush = setup.termination.flush_stages(code.k());
+    // payload size: fill whole frames after any flush stages
     let round_bits = {
         let p = setup.tile.payload;
         let want = setup.bits_per_round.max(p);
@@ -86,11 +92,10 @@ pub fn measure_ber(dec: &mut dyn FrameDecoder, trellis: &Trellis, ebn0_db: f64,
     let mut bits_done = 0usize;
     let mut errors = 0usize;
     while errors < setup.target_errors && bits_done < setup.max_bits {
-        let mut payload = rng.bits(round_bits);
-        payload.extend(std::iter::repeat(0).take(flush));
-        enc.reset();
-        let coded = enc.encode(&payload);
-        debug_assert_eq!(enc.state(), 0);
+        let payload = rng.bits(round_bits);
+        let (coded, n_stages) = enc.encode_terminated(&payload, setup.termination);
+        debug_assert_eq!(n_stages, round_bits + flush);
+        debug_assert!(setup.termination != TerminationMode::Flushed || enc.state() == 0);
         let tx = bpsk::modulate(&coded);
         let rx = channel.transmit(&tx);
         let llr: Vec<f32> = if setup.hard_decision {
@@ -101,7 +106,7 @@ pub fn measure_ber(dec: &mut dyn FrameDecoder, trellis: &Trellis, ebn0_db: f64,
         } else {
             rx.iter().map(|&x| x as f32).collect()
         };
-        let decoded = decode_stream(dec, &llr, beta, &setup.tile, true)?;
+        let decoded = decode_stream(dec, &llr, beta, &setup.tile, setup.termination)?;
         // count errors over the information payload only (not flush)
         errors += decoded[..round_bits]
             .iter()
@@ -157,6 +162,23 @@ mod tests {
         // this code at 2 dB is ~1-3e-2 in the literature
         assert!(ber > 1e-3 && ber < 1e-1, "ber at 2 dB = {ber}");
         let _ = theory::coded_union_bound(2.0);
+    }
+
+    #[test]
+    fn tail_biting_rounds_are_whole_tiles_and_clean_at_high_snr() {
+        let t = trellis();
+        let setup = BerSetup {
+            termination: TerminationMode::TailBiting,
+            target_errors: 10,
+            max_bits: 20_000,
+            bits_per_round: 2048,
+            ..Default::default()
+        };
+        let mut dec = ScalarDecoder::new(t.clone(), setup.tile.frame_stages());
+        let p = measure_ber(&mut dec, &t, 10.0, &setup).unwrap();
+        assert_eq!(p.errors, 0, "10 dB tail-biting should be error-free over 20k bits");
+        // no flush stages: every simulated stage carries payload
+        assert_eq!(p.bits % setup.tile.payload, 0);
     }
 
     #[test]

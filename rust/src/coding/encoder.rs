@@ -1,8 +1,35 @@
 //! The convolutional encoder (paper Fig 1a): the transmitter side of the
 //! verification system (Fig 12, steps 1-2) and of every workload
 //! generator in the benches.
+//!
+//! Every [`TerminationMode`] has an encoding entry here
+//! (`docs/DECODING-MODES.md` is the guide; the decoder-side counterpart
+//! is [`make_frames`](crate::viterbi::tiled::make_frames)):
+//!
+//! ```
+//! use tcvd::coding::{registry, Encoder, TerminationMode};
+//!
+//! let mut enc = Encoder::new(registry::paper_code()); // (2,1,7) 171/133
+//! let bits = [1, 0, 1, 1, 0, 1, 0, 0];
+//!
+//! // Flushed: k-1 = 6 zero bits appended, encoder returns to state 0.
+//! let (coded, n) = enc.encode_terminated(&bits, TerminationMode::Flushed);
+//! assert_eq!(n, 8 + 6);           // trellis length *includes* the flush
+//! assert_eq!(coded.len(), n * 2); // beta coded bits per trellis stage
+//! assert_eq!(enc.state(), 0);
+//!
+//! // Tail-biting: register pre-loaded with the last k-1 data bits, so
+//! // the end state equals the start state — and no flush-bit rate loss.
+//! let (coded, n) = enc.encode_terminated(&bits, TerminationMode::TailBiting);
+//! assert_eq!((coded.len(), n), (8 * 2, 8));
+//!
+//! // Truncated: no flush either, but the register just stops mid-air.
+//! let (coded, n) = enc.encode_terminated(&bits, TerminationMode::Truncated);
+//! assert_eq!((coded.len(), n), (8 * 2, 8));
+//! ```
 
 use super::poly::Code;
+use super::TerminationMode;
 use crate::util::bitvec::BitVec;
 
 /// Stateful convolutional encoder.
@@ -52,14 +79,78 @@ impl Encoder {
         out
     }
 
-    /// Encode and append k-1 zero flush bits, returning (coded bits,
-    /// total input length including flush). Flushing forces the trellis
-    /// back to state 0, which the decoder exploits (known end state).
+    /// Encode and append `k - 1` zero flush bits, returning
+    /// `(coded bits, flushed length)` where the **flushed length** is
+    /// `bits.len() + (k - 1)` — the number of *trellis stages* the coded
+    /// stream spans, not the number of information bits. Downstream
+    /// frame-length accounting (the tiler's payload alignment, the
+    /// survivor-ring sizing in `docs/MEMORY.md`) works in trellis
+    /// stages, so it is the flushed length that must be a multiple of
+    /// the tile payload. The coded vector always holds `beta` bits per
+    /// trellis stage: `coded.len() == flushed_len * beta`.
+    ///
+    /// Flushing forces the trellis back to state 0, which the decoder
+    /// exploits (known end state).
     pub fn encode_flushed(&mut self, bits: &[u8]) -> (Vec<u8>, usize) {
         let flush = vec![0u8; (self.code.k() - 1) as usize];
         let mut all = self.encode(bits);
         all.extend(self.encode(&flush));
         (all, bits.len() + flush.len())
+    }
+
+    /// Tail-biting encode: pre-load the shift register with the last
+    /// `k - 1` data bits (circularly repeated when the block is shorter
+    /// than that) so the encoder's end state **equals its start state**
+    /// — the LTE PBCH/PDCCH scheme that avoids the flush-bit rate loss.
+    /// Overwrites any prior encoder state. Returns `beta * bits.len()`
+    /// coded bits; the decoder side is
+    /// [`TerminationMode::TailBiting`].
+    ///
+    /// # Panics
+    /// Panics on an empty block (there is no register content to wrap).
+    pub fn encode_tail_biting(&mut self, bits: &[u8]) -> Vec<u8> {
+        assert!(!bits.is_empty(), "tail-biting needs at least one data bit");
+        let k = self.code.k() as usize;
+        let n = bits.len();
+        // state = previous k-1 inputs, newest at the MSB: seed it with
+        // the block's last k-1 bits (index (n - i) mod n for i = 1..k)
+        let mut state = 0u32;
+        for i in 1..k {
+            let idx = (n - 1) - ((i - 1) % n);
+            state |= (bits[idx] as u32) << (k - 1 - i);
+        }
+        self.state = state;
+        let out = self.encode(bits);
+        debug_assert_eq!(self.state, state, "tail-biting end state must equal start state");
+        out
+    }
+
+    /// Truncated encode: reset to state 0 and encode the block with no
+    /// flush bits at all. The register ends wherever the data drove it,
+    /// so the decoder ([`TerminationMode::Truncated`]) starts traceback
+    /// from the best-metric end state instead of a pinned one.
+    pub fn encode_truncated(&mut self, bits: &[u8]) -> Vec<u8> {
+        self.reset();
+        self.encode(bits)
+    }
+
+    /// Encode one standalone block under a [`TerminationMode`],
+    /// returning `(coded bits, trellis length)`. The trellis length is
+    /// the stage count the coded stream spans — `bits.len() + (k - 1)`
+    /// for [`Flushed`](TerminationMode::Flushed) (see
+    /// [`encode_flushed`](Self::encode_flushed)), `bits.len()` for the
+    /// other modes — and is the quantity the decoder's tile payload
+    /// must divide. Always starts from a fresh register (tail-biting
+    /// pre-loads it, the other modes reset to state 0).
+    pub fn encode_terminated(&mut self, bits: &[u8], mode: TerminationMode) -> (Vec<u8>, usize) {
+        match mode {
+            TerminationMode::Flushed => {
+                self.reset();
+                self.encode_flushed(bits)
+            }
+            TerminationMode::TailBiting => (self.encode_tail_biting(bits), bits.len()),
+            TerminationMode::Truncated => (self.encode_truncated(bits), bits.len()),
+        }
     }
 
     /// Encode into packed words (the paper's §III input compaction).
@@ -95,9 +186,58 @@ mod tests {
     #[test]
     fn flush_returns_to_zero() {
         let mut e = Encoder::new(ccsds());
-        let (_, n) = e.encode_flushed(&[1, 1, 0, 1, 0, 1, 1]);
+        let (coded, n) = e.encode_flushed(&[1, 1, 0, 1, 0, 1, 1]);
         assert_eq!(e.state(), 0);
+        // the returned length is the *flushed* trellis length (data +
+        // k-1 flush stages) — the stage count downstream frame-length
+        // accounting (tiling alignment, survivor-ring sizing) uses
         assert_eq!(n, 7 + 6);
+        assert_eq!(coded.len(), n * e.code().beta(), "beta coded bits per trellis stage");
+    }
+
+    #[test]
+    fn tail_biting_end_state_equals_start() {
+        let e0 = Encoder::new(ccsds());
+        for n in [1usize, 3, 5, 6, 7, 40, 129] {
+            let mut e = e0.clone();
+            let bits = crate::util::rng::Rng::new(n as u64).bits(n);
+            let coded = e.encode_tail_biting(&bits);
+            assert_eq!(coded.len(), n * 2, "n={n}");
+            // re-derive the preload: last k-1 bits, newest at MSB,
+            // wrapping circularly for blocks shorter than k-1
+            let mut want = 0u32;
+            for i in 1..7usize {
+                want |= (bits[(n - 1) - ((i - 1) % n)] as u32) << (6 - i);
+            }
+            assert_eq!(e.state(), want, "n={n}: end state must equal the preloaded start");
+        }
+    }
+
+    #[test]
+    fn tail_biting_matches_plain_encode_from_preload() {
+        // same coded bits as a plain encode started in the preloaded state
+        let bits = [1u8, 0, 1, 1, 0, 0, 1, 0, 1, 1];
+        let mut tb = Encoder::new(ccsds());
+        let coded = tb.encode_tail_biting(&bits);
+        let start = tb.state(); // == preload, by the invariant above
+        let mut plain = Encoder::new(ccsds());
+        plain.state = start;
+        assert_eq!(plain.encode(&bits), coded);
+    }
+
+    #[test]
+    fn encode_terminated_lengths_per_mode() {
+        let bits = crate::util::rng::Rng::new(9).bits(20);
+        let mut e = Encoder::new(ccsds());
+        let (c, n) = e.encode_terminated(&bits, TerminationMode::Flushed);
+        assert_eq!((n, c.len()), (26, 52));
+        assert_eq!(e.state(), 0);
+        let (c, n) = e.encode_terminated(&bits, TerminationMode::TailBiting);
+        assert_eq!((n, c.len()), (20, 40));
+        let (c, n) = e.encode_terminated(&bits, TerminationMode::Truncated);
+        assert_eq!((n, c.len()), (20, 40));
+        // truncated leaves the register wherever the data drove it
+        assert_ne!(e.state(), 0, "these 20 bits do not end in six zeros");
     }
 
     #[test]

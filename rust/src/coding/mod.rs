@@ -13,3 +13,105 @@ pub mod registry;
 pub use encoder::Encoder;
 pub use poly::Code;
 pub use trellis::Trellis;
+
+/// How a convolutional block is terminated — the workload axis that
+/// decides what the decoder may assume about the trellis ends
+/// (`docs/DECODING-MODES.md` is the full guide).
+///
+/// * [`Flushed`](TerminationMode::Flushed) — `k - 1` zero bits are
+///   appended so the encoder returns to state 0; the decoder pins both
+///   ends of the stream. Costs `(k - 1) / (n + k - 1)` of the rate.
+/// * [`TailBiting`](TerminationMode::TailBiting) — the shift register
+///   is pre-loaded with the last `k - 1` data bits so the start state
+///   equals the end state (LTE PBCH/PDCCH style); no flush bits, no
+///   rate loss. The decoder extends every frame *circularly* instead of
+///   pinning states.
+/// * [`Truncated`](TerminationMode::Truncated) — the block simply stops;
+///   no flush bits, but the last bits get weaker protection (the
+///   decoder starts traceback from the best-metric end state).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TerminationMode {
+    /// Zero-flush to state 0 at the block end (the classic default).
+    #[default]
+    Flushed,
+    /// Circular block: start state == end state, no flush bits.
+    TailBiting,
+    /// Direct truncation: no flush bits, unanchored end state.
+    Truncated,
+}
+
+impl TerminationMode {
+    /// The CLI / TOML names, in declaration order (`--termination`).
+    pub const NAMES: &'static [&'static str] = &["flushed", "tail-biting", "truncated"];
+
+    /// Canonical CLI/TOML name of this mode.
+    pub const fn as_str(self) -> &'static str {
+        match self {
+            TerminationMode::Flushed => "flushed",
+            TerminationMode::TailBiting => "tail-biting",
+            TerminationMode::Truncated => "truncated",
+        }
+    }
+
+    /// Parse a CLI/TOML name (`tail_biting`/`tailbiting` aliases accepted).
+    pub fn parse(name: &str) -> Option<TerminationMode> {
+        match name {
+            "flushed" => Some(TerminationMode::Flushed),
+            "tail-biting" | "tail_biting" | "tailbiting" => Some(TerminationMode::TailBiting),
+            "truncated" => Some(TerminationMode::Truncated),
+            _ => None,
+        }
+    }
+
+    /// [`parse`](Self::parse) with the canonical typed error — the one
+    /// parse-failure message shared by the builder and the CLI.
+    pub fn parse_named(name: &str) -> crate::error::Result<TerminationMode> {
+        TerminationMode::parse(name).ok_or_else(|| {
+            crate::error::Error::config(format!(
+                "unknown termination {name:?}; known: {}",
+                TerminationMode::NAMES.join(" ")
+            ))
+        })
+    }
+
+    /// Trellis stages appended beyond the data bits (`k - 1` flush
+    /// stages for [`Flushed`](TerminationMode::Flushed), 0 otherwise) —
+    /// the per-block rate overhead this mode pays.
+    pub fn flush_stages(self, k: u32) -> usize {
+        match self {
+            TerminationMode::Flushed => (k - 1) as usize,
+            TerminationMode::TailBiting | TerminationMode::Truncated => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for TerminationMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::TerminationMode;
+
+    #[test]
+    fn termination_names_roundtrip() {
+        for &name in TerminationMode::NAMES {
+            let mode = TerminationMode::parse(name).expect(name);
+            assert_eq!(mode.as_str(), name);
+        }
+        assert_eq!(TerminationMode::parse("tail_biting"), Some(TerminationMode::TailBiting));
+        assert_eq!(TerminationMode::parse("nope"), None);
+        assert_eq!(TerminationMode::default(), TerminationMode::Flushed);
+        let e = TerminationMode::parse_named("nope").unwrap_err();
+        assert!(e.to_string().contains("known: flushed tail-biting truncated"), "{e}");
+    }
+
+    #[test]
+    fn flush_stages_only_for_flushed() {
+        assert_eq!(TerminationMode::Flushed.flush_stages(7), 6);
+        assert_eq!(TerminationMode::TailBiting.flush_stages(7), 0);
+        assert_eq!(TerminationMode::Truncated.flush_stages(7), 0);
+    }
+}

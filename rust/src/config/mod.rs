@@ -37,6 +37,10 @@ pub struct Config {
     pub queue_depth: usize,
     /// Engine shards (backend instances); default: available parallelism.
     pub shards: usize,
+    /// Stream termination mode name (see
+    /// `coding::TerminationMode::NAMES`); validated when the builder
+    /// consumes this config.
+    pub termination: String,
 }
 
 impl Default for Config {
@@ -52,6 +56,7 @@ impl Default for Config {
             workers: defaults::WORKERS,
             queue_depth: defaults::QUEUE_DEPTH,
             shards: defaults::default_shards(),
+            termination: defaults::TERMINATION.as_str().to_string(),
         }
     }
 }
@@ -107,6 +112,9 @@ impl Config {
         }
         if let Some(v) = doc.get("coordinator", "shards") {
             cfg.shards = v.as_usize().or_config("coordinator.shards")?;
+        }
+        if let Some(v) = doc.get("", "termination") {
+            cfg.termination = v.as_str().or_config("termination")?.to_string();
         }
         cfg.validate()?;
         Ok(cfg)
@@ -166,6 +174,19 @@ mod tests {
         let cfg = Config::from_toml("backend = \"simd\"\n").unwrap();
         assert_eq!(cfg.backend, "simd");
         crate::api::DecoderBuilder::from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn parses_termination() {
+        use crate::coding::TerminationMode;
+        let cfg = Config::from_toml("termination = \"tail-biting\"\n").unwrap();
+        assert_eq!(cfg.termination, "tail-biting");
+        let b = crate::api::DecoderBuilder::from_config(&cfg).unwrap();
+        assert_eq!(b.termination_mode(), TerminationMode::TailBiting);
+        assert_eq!(Config::default().termination, "flushed");
+        // an unknown mode name is rejected when the builder consumes it
+        let bad = Config::from_toml("termination = \"rocket\"\n").unwrap();
+        assert!(crate::api::DecoderBuilder::from_config(&bad).is_err());
     }
 
     #[test]

@@ -4,8 +4,60 @@
 //! per-session sequence numbers, which is all the downstream pipeline
 //! (dispatcher, shards, reassembly) needs to restore order — the framer
 //! is the single point where a stream's framing is decided.
+//!
+//! The framer owns the stream's [`TerminationMode`]
+//! (`docs/DECODING-MODES.md`):
+//!
+//! * **Flushed / truncated** streams emit frames incrementally as their
+//!   windows complete, with a rolling buffer bounded by one frame
+//!   geometry plus the chunk size (see `gc`).
+//! * **Tail-biting** blocks are circular: frame 0's head context is the
+//!   *end* of the block, so no frame can be cut before
+//!   [`finish`](Framer::finish). The framer buffers the whole block (tail-biting
+//!   traffic is short blocks — that is the point of the mode) and emits
+//!   every circularly-extended frame at finish time, still in order.
+//!
+//! One frame per mode through the streaming interface:
+//!
+//! ```
+//! use tcvd::coding::TerminationMode;
+//! use tcvd::coordinator::framer::Framer;
+//! use tcvd::viterbi::tiled::TileConfig;
+//!
+//! let cfg = TileConfig { payload: 32, head: 8, tail: 8 };
+//! let llr = vec![0.5f32; 32 * 2]; // one payload tile of rate-1/2 LLRs
+//!
+//! // Flushed: the stream head is pinned to state 0. (The flushed *end*
+//! // state is only claimed when a frame's window lands exactly on the
+//! // stream end — here the tail overlap reaches past it, so the frame
+//! // is zero-padded and traceback starts from the best-metric state;
+//! // `viterbi::tiled::make_frames` documents the claim rule.)
+//! let mut fr = Framer::new(cfg, 2, TerminationMode::Flushed);
+//! let mut jobs = fr.push(&llr);
+//! jobs.extend(fr.finish()?);
+//! assert_eq!(jobs.len(), 1);
+//! assert_eq!((jobs[0].start_state, jobs[0].end_state), (Some(0), None));
+//!
+//! // Truncated: known start, and *never* a pinned end
+//! let mut fr = Framer::new(cfg, 2, TerminationMode::Truncated);
+//! let mut jobs = fr.push(&llr);
+//! jobs.extend(fr.finish()?);
+//! assert_eq!((jobs[0].start_state, jobs[0].end_state), (Some(0), None));
+//!
+//! // Tail-biting: nothing can be emitted before the block end arrives
+//! // (frame 0 wraps its head context around from the block tail) ...
+//! let mut fr = Framer::new(cfg, 2, TerminationMode::TailBiting);
+//! assert!(fr.push(&llr).is_empty());
+//! let jobs = fr.finish()?;
+//! // ... and no frame pins a state; the circular context replaces both
+//! assert_eq!((jobs[0].start_state, jobs[0].end_state), (None, None));
+//! assert_eq!(jobs[0].emit_from, cfg.head);
+//! # Ok::<(), tcvd::Error>(())
+//! ```
 
-use crate::viterbi::tiled::TileConfig;
+use crate::coding::TerminationMode;
+use crate::error::{Error, Result};
+use crate::viterbi::tiled::{self, TileConfig};
 use crate::viterbi::types::FrameJob;
 
 /// Cuts a pushed LLR stream into fixed-geometry overlapped frames.
@@ -13,6 +65,7 @@ use crate::viterbi::types::FrameJob;
 pub struct Framer {
     cfg: TileConfig,
     beta: usize,
+    termination: TerminationMode,
     /// Buffered LLRs starting at stage `buf_start`.
     buf: Vec<f32>,
     buf_start: usize,
@@ -24,10 +77,11 @@ pub struct Framer {
 }
 
 impl Framer {
-    pub fn new(cfg: TileConfig, beta: usize) -> Self {
+    pub fn new(cfg: TileConfig, beta: usize, termination: TerminationMode) -> Self {
         Framer {
             cfg,
             beta,
+            termination,
             buf: Vec::new(),
             buf_start: 0,
             next_frame: 0,
@@ -45,18 +99,29 @@ impl Framer {
         self.beta
     }
 
+    /// The termination mode this framer cuts frames for.
+    pub fn termination(&self) -> TerminationMode {
+        self.termination
+    }
+
     /// Stage index where frame `fi`'s buffer begins.
     fn frame_start(&self, fi: usize) -> usize {
         (fi * self.cfg.payload).saturating_sub(self.cfg.head)
     }
 
     /// Push an LLR chunk (`len % beta == 0`); returns all frames that
-    /// became complete.
+    /// became complete. Tail-biting streams always return an empty
+    /// vector here — their frames wrap around the block end and are all
+    /// emitted by [`finish`](Self::finish).
     pub fn push(&mut self, llr: &[f32]) -> Vec<FrameJob> {
         assert!(!self.finished, "push after finish");
         assert_eq!(llr.len() % self.beta, 0, "chunk not stage-aligned");
         self.buf.extend_from_slice(llr);
         self.stages_in += llr.len() / self.beta;
+        if self.termination == TerminationMode::TailBiting {
+            // circular block: every frame needs the (unknown) block end
+            return Vec::new();
+        }
 
         let stages = self.cfg.frame_stages();
         let mut out = Vec::new();
@@ -67,20 +132,36 @@ impl Framer {
         out
     }
 
-    /// Flush: pad the stream tail with zero LLRs and emit the remaining
-    /// frames. `flushed_end` marks whether the encoder was flushed to
-    /// state 0 at the true stream end.
-    pub fn finish(&mut self, flushed_end: bool) -> Vec<FrameJob> {
+    /// End of stream: emit the remaining frames. For flushed/truncated
+    /// streams the tail is padded with zero (uninformative) LLRs; for a
+    /// tail-biting block *all* frames are cut here, circularly extended
+    /// around the block, which therefore must contain a whole number of
+    /// payload tiles (typed error otherwise).
+    pub fn finish(&mut self) -> Result<Vec<FrameJob>> {
         assert!(!self.finished, "finish twice");
         self.finished = true;
+        if self.termination == TerminationMode::TailBiting {
+            if self.stages_in % self.cfg.payload != 0 {
+                return Err(Error::pipeline(format!(
+                    "tail-biting block of {} stages is not a multiple of the tile \
+                     payload {} (circular framing cannot pad)",
+                    self.stages_in, self.cfg.payload
+                )));
+            }
+            debug_assert_eq!(self.buf_start, 0, "tail-biting framer never gcs");
+            let jobs = tiled::tail_biting_frames(&self.buf, self.beta, &self.cfg);
+            self.next_frame = jobs.len();
+            return Ok(jobs);
+        }
         let stages = self.cfg.frame_stages();
         let n_frames = self.stages_in.div_ceil(self.cfg.payload);
         let mut out = Vec::new();
         while self.next_frame < n_frames {
             let is_last = self.next_frame + 1 == n_frames;
-            out.push(self.emit(self.next_frame, stages, true, is_last && flushed_end));
+            let flushed = self.termination == TerminationMode::Flushed;
+            out.push(self.emit(self.next_frame, stages, true, is_last && flushed));
         }
-        out
+        Ok(out)
     }
 
     fn emit(&mut self, fi: usize, stages: usize, pad: bool, flushed_last: bool) -> FrameJob {
@@ -109,7 +190,8 @@ impl Framer {
         }
     }
 
-    /// Drop buffered stages no future frame needs.
+    /// Drop buffered stages no future frame needs (never called for
+    /// tail-biting streams, whose every frame needs the whole block).
     fn gc(&mut self) {
         let keep_from = self.frame_start(self.next_frame);
         if keep_from > self.buf_start {
@@ -148,35 +230,70 @@ mod tests {
     #[test]
     fn matches_make_frames_whole_push() {
         let llr = random_llrs(128, 1);
-        let want = make_frames(&llr, 2, &cfg(), true).unwrap();
-        let mut fr = Framer::new(cfg(), 2);
+        let want = make_frames(&llr, 2, &cfg(), TerminationMode::Flushed).unwrap();
+        let mut fr = Framer::new(cfg(), 2, TerminationMode::Flushed);
         let mut got = fr.push(&llr);
-        got.extend(fr.finish(true));
+        got.extend(fr.finish().unwrap());
         assert_jobs_eq(&got, &want);
     }
 
     #[test]
     fn matches_make_frames_chunked() {
         let llr = random_llrs(256, 2);
-        let want = make_frames(&llr, 2, &cfg(), true).unwrap();
+        let want = make_frames(&llr, 2, &cfg(), TerminationMode::Flushed).unwrap();
         for chunk_stages in [1usize, 7, 31, 64] {
-            let mut fr = Framer::new(cfg(), 2);
+            let mut fr = Framer::new(cfg(), 2, TerminationMode::Flushed);
             let mut got = Vec::new();
             for chunk in llr.chunks(chunk_stages * 2) {
                 got.extend(fr.push(chunk));
             }
-            got.extend(fr.finish(true));
+            got.extend(fr.finish().unwrap());
             assert_jobs_eq(&got, &want);
         }
+    }
+
+    #[test]
+    fn matches_make_frames_truncated() {
+        let llr = random_llrs(128, 6);
+        let want = make_frames(&llr, 2, &cfg(), TerminationMode::Truncated).unwrap();
+        let mut fr = Framer::new(cfg(), 2, TerminationMode::Truncated);
+        let mut got = fr.push(&llr);
+        got.extend(fr.finish().unwrap());
+        assert_jobs_eq(&got, &want);
+        assert!(got.iter().all(|j| j.end_state.is_none()));
+    }
+
+    #[test]
+    fn matches_make_frames_tail_biting_chunked() {
+        let llr = random_llrs(128, 9);
+        let want = make_frames(&llr, 2, &cfg(), TerminationMode::TailBiting).unwrap();
+        for chunk_stages in [1usize, 7, 32, 128] {
+            let mut fr = Framer::new(cfg(), 2, TerminationMode::TailBiting);
+            for chunk in llr.chunks(chunk_stages * 2) {
+                assert!(fr.push(chunk).is_empty(), "tail-biting must defer to finish");
+            }
+            let got = fr.finish().unwrap();
+            assert_jobs_eq(&got, &want);
+            assert_eq!(fr.frames_emitted(), want.len());
+        }
+    }
+
+    #[test]
+    fn tail_biting_rejects_partial_tile() {
+        let mut fr = Framer::new(cfg(), 2, TerminationMode::TailBiting);
+        fr.push(&random_llrs(33, 4)); // 33 stages: not a multiple of 32
+        let e = fr.finish().unwrap_err();
+        assert!(matches!(e, Error::Pipeline(_)), "{e}");
+        assert!(e.to_string().contains("tail-biting"), "{e}");
     }
 
     #[test]
     fn partial_tail_padded() {
         // 100 stages with payload 32 -> 4 frames, last emits 4 bits
         let llr = random_llrs(100, 3);
-        let mut fr = Framer::new(cfg(), 2);
+        let mut fr = Framer::new(cfg(), 2, TerminationMode::Truncated);
         let mut jobs = fr.push(&llr);
-        jobs.extend(fr.finish(false));
+        jobs.extend(fr.finish().unwrap());
         assert_eq!(jobs.len(), 4);
         assert_eq!(jobs[3].emit_len, 4);
         let total: usize = jobs.iter().map(|j| j.emit_len).sum();
@@ -185,7 +302,7 @@ mod tests {
 
     #[test]
     fn gc_bounds_memory() {
-        let mut fr = Framer::new(cfg(), 2);
+        let mut fr = Framer::new(cfg(), 2, TerminationMode::Flushed);
         for i in 0..100 {
             fr.push(&random_llrs(64, i));
         }
@@ -197,8 +314,8 @@ mod tests {
     #[test]
     #[should_panic(expected = "push after finish")]
     fn push_after_finish_panics() {
-        let mut fr = Framer::new(cfg(), 2);
-        fr.finish(false);
+        let mut fr = Framer::new(cfg(), 2, TerminationMode::Truncated);
+        fr.finish().unwrap();
         fr.push(&[0.0, 0.0]);
     }
 }

@@ -18,6 +18,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coding::trellis::Trellis;
+use crate::coding::TerminationMode;
 use crate::error::{Error, Result, ResultExt};
 use crate::util::queue::Queue;
 use crate::viterbi::tiled::TileConfig;
@@ -44,6 +45,11 @@ pub struct CoordinatorConfig {
     /// Engine shards: independent backend instances, each on its own
     /// thread with its own work queue (clamped to at least 1).
     pub shards: usize,
+    /// How session streams are terminated — decides what each frame may
+    /// assume about the trellis ends and whether framing is linear
+    /// (flushed/truncated) or circular (tail-biting); see
+    /// `docs/DECODING-MODES.md`.
+    pub termination: TerminationMode,
 }
 
 /// A running decode pipeline.
@@ -54,6 +60,7 @@ pub struct Coordinator {
     tile: TileConfig,
     beta: usize,
     n_shards: usize,
+    termination: TerminationMode,
     trellis: Arc<Trellis>,
     next_session: AtomicU64,
     threads: Vec<JoinHandle<()>>,
@@ -154,6 +161,7 @@ impl Coordinator {
             tile: cfg.tile,
             beta,
             n_shards,
+            termination: cfg.termination,
             trellis,
             next_session: AtomicU64::new(0),
             threads,
@@ -173,6 +181,12 @@ impl Coordinator {
         self.n_shards
     }
 
+    /// The termination mode every session of this pipeline decodes
+    /// under (set via `DecoderBuilder::termination`).
+    pub fn termination(&self) -> TerminationMode {
+        self.termination
+    }
+
     /// Open a streaming session: push LLR chunks in, iterate in-order
     /// decoded payload chunks out.
     pub fn open_session(&self) -> Result<Session> {
@@ -183,7 +197,7 @@ impl Coordinator {
             .map_err(|_| Error::pipeline("pipeline is shut down"))?;
         let handle = SessionHandle {
             id,
-            framer: Framer::new(self.tile, self.beta),
+            framer: Framer::new(self.tile, self.beta, self.termination),
             input: Some(self.input.clone()),
             ctrl: Some(self.ctrl.clone()),
             metrics: self.metrics.clone(),
@@ -192,11 +206,12 @@ impl Coordinator {
     }
 
     /// Convenience: decode one whole LLR stream through the pipeline
-    /// (open session, push, finish, collect).
-    pub fn decode_stream_blocking(&self, llr: &[f32], flushed_end: bool) -> Result<Vec<u8>> {
+    /// (open session, push, finish, collect). The stream is terminated
+    /// per the pipeline's [`termination`](Self::termination) mode.
+    pub fn decode_stream_blocking(&self, llr: &[f32]) -> Result<Vec<u8>> {
         let mut session = self.open_session()?;
         session.push(llr)?;
-        session.finish(flushed_end)?;
+        session.finish()?;
         let mut out = Vec::new();
         for chunk in session {
             out.extend_from_slice(&chunk);
@@ -280,15 +295,31 @@ impl SessionHandle {
         self.framer.beta()
     }
 
-    /// Flush the stream: emits the remaining (padded) frames, tells the
-    /// reassembler the total frame count so it can close the output, and
-    /// drops this handle's pipeline senders.
-    pub fn finish(&mut self, flushed_end: bool) -> Result<()> {
+    /// End the stream: emits the remaining frames (all of them, for a
+    /// tail-biting block), tells the reassembler the total frame count
+    /// so it can close the output, and drops this handle's pipeline
+    /// senders. The termination semantics come from the pipeline
+    /// configuration (`DecoderBuilder::termination`).
+    pub fn finish(&mut self) -> Result<()> {
         if self.input.is_none() {
             return Err(Error::pipeline("session already finished"));
         }
         let base = self.framer.frames_emitted() as u64;
-        let jobs = self.framer.finish(flushed_end);
+        let jobs = match self.framer.finish() {
+            Ok(jobs) => jobs,
+            Err(e) => {
+                // the stream cannot be completed (e.g. a tail-biting
+                // block that is not a whole number of payload tiles):
+                // close the session with the frames already emitted so
+                // the pipeline is not left holding an open output, and
+                // surface the typed error to the caller
+                let total = self.framer.frames_emitted() as u64;
+                let ctrl = self.ctrl.take().expect("ctrl present until finish");
+                self.input = None;
+                let _ = ctrl.send(Msg::Finish { session: self.id, total_frames: total });
+                return Err(e);
+            }
+        };
         self.send_jobs(base, jobs)?;
         let total = self.framer.frames_emitted() as u64;
         let ctrl = self.ctrl.take().expect("ctrl present until finish");
@@ -324,10 +355,10 @@ impl Session {
         self.handle.push(llr)
     }
 
-    /// Flush the stream and release the push side; the output iterator
+    /// End the stream and release the push side; the output iterator
     /// terminates once all frames are delivered.
-    pub fn finish(&mut self, flushed_end: bool) -> Result<()> {
-        self.handle.finish(flushed_end)
+    pub fn finish(&mut self) -> Result<()> {
+        self.handle.finish()
     }
 
     /// Non-blocking poll for the next in-order decoded chunk.
@@ -359,8 +390,8 @@ impl Session {
 
     /// Finish the stream and block until every decoded payload bit has
     /// arrived.
-    pub fn finish_and_collect(mut self, flushed_end: bool) -> Result<Vec<u8>> {
-        self.finish(flushed_end)?;
+    pub fn finish_and_collect(mut self) -> Result<Vec<u8>> {
+        self.finish()?;
         let mut out = Vec::new();
         for chunk in self {
             out.extend_from_slice(&chunk);
@@ -403,6 +434,7 @@ mod tests {
             workers: 2,
             queue_depth: 64,
             shards: 2,
+            termination: TerminationMode::Flushed,
         }
     }
 
@@ -423,7 +455,7 @@ mod tests {
         let tile = TileConfig { payload: 32, head: 16, tail: 16 };
         let coord = Coordinator::start(cpu_config(tile)).unwrap();
         let (bits, llr) = noisy_stream(42, 256, 5.0);
-        let out = coord.decode_stream_blocking(&llr, true).unwrap();
+        let out = coord.decode_stream_blocking(&llr).unwrap();
         assert_eq!(out, bits);
         let snap = coord.metrics();
         assert_eq!(snap.frames_in, 8);
@@ -444,7 +476,7 @@ mod tests {
             let c = coord.clone();
             joins.push(std::thread::spawn(move || {
                 let (bits, llr) = noisy_stream(100 + s, 128, 5.0);
-                let out = c.decode_stream_blocking(&llr, true).unwrap();
+                let out = c.decode_stream_blocking(&llr).unwrap();
                 assert_eq!(out, bits, "session {s}");
             }));
         }
@@ -468,7 +500,7 @@ mod tests {
             // 23-stage odd chunks
             session.push(chunk).unwrap();
         }
-        let out = session.finish_and_collect(true).unwrap();
+        let out = session.finish_and_collect().unwrap();
         assert_eq!(out, bits);
         // scalar reference agrees (up to half rounding of B) at 5 dB
         let t = coord.trellis().clone();
@@ -487,7 +519,7 @@ mod tests {
         let (bits, llr) = noisy_stream(9, 128, 6.0);
         let mut session = coord.open_session().unwrap();
         session.push(&llr).unwrap();
-        session.finish(true).unwrap();
+        session.finish().unwrap();
         let mut out = Vec::new();
         // drain via poll (non-blocking) + blocking fallback
         loop {
@@ -521,7 +553,7 @@ mod tests {
         for chunk in llr.chunks(64) {
             handle.push(chunk).unwrap();
         }
-        handle.finish(true).unwrap();
+        handle.finish().unwrap();
         assert_eq!(consumer.join().unwrap(), bits);
         coord.shutdown().unwrap();
     }
@@ -533,9 +565,29 @@ mod tests {
         let (_, llr) = noisy_stream(3, 64, 6.0);
         let mut session = coord.open_session().unwrap();
         session.push(&llr).unwrap();
-        session.finish(true).unwrap();
+        session.finish().unwrap();
         let e = session.push(&llr).unwrap_err();
         assert!(matches!(e, Error::Pipeline(_)), "{e}");
+        for _ in session {}
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tail_biting_misaligned_block_is_typed_error() {
+        let tile = TileConfig { payload: 32, head: 8, tail: 8 };
+        let mut cfg = cpu_config(tile);
+        cfg.termination = TerminationMode::TailBiting;
+        let coord = Coordinator::start(cfg).unwrap();
+        assert_eq!(coord.termination(), TerminationMode::TailBiting);
+        let mut session = coord.open_session().unwrap();
+        session.push(&vec![0.0f32; 10 * 2]).unwrap(); // 10 stages: partial tile
+        let e = session.finish().unwrap_err();
+        assert!(matches!(e, Error::Pipeline(_)), "{e}");
+        assert!(e.to_string().contains("tail-biting"), "{e}");
+        // the session is poisoned but closed: a second finish is a typed
+        // error, the output stream terminates, and shutdown still joins
+        let e2 = session.finish().unwrap_err();
+        assert!(matches!(e2, Error::Pipeline(_)), "{e2}");
         for _ in session {}
         coord.shutdown().unwrap();
     }

@@ -7,6 +7,7 @@
 //! from these values, `config::Config::default` mirrors them, and the
 //! benches/examples pull the variant names below.
 
+use crate::coding::TerminationMode;
 use crate::viterbi::tiled::TileConfig;
 
 /// Default standard code (registry key): the paper's (2,1,7) 171/133.
@@ -54,6 +55,12 @@ pub fn default_shards() -> usize {
 
 /// Bounded input queue depth (frames) before backpressure.
 pub const QUEUE_DEPTH: usize = 1024;
+
+/// Default stream termination mode: zero-flushed blocks (both trellis
+/// ends pinned to state 0 — the classic deep-space convention). SDR /
+/// cellular block traffic (LTE PBCH/PDCCH style) switches to
+/// `"tail-biting"`; `docs/DECODING-MODES.md` has the selection table.
+pub const TERMINATION: TerminationMode = TerminationMode::Flushed;
 
 /// Path-metric renormalization period (stages) for the CPU packed and
 /// quantized SIMD backends.

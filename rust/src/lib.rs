@@ -35,7 +35,7 @@
 //!     .tile_dims(16, 0, 0)
 //!     .build()?;
 //! // 16 trellis stages of rate-1/2 LLRs (positive LLR ⇒ bit 0)
-//! let bits = dec.decode_stream(&vec![1.0f32; 16 * 2], true)?;
+//! let bits = dec.decode_stream(&vec![1.0f32; 16 * 2])?;
 //! assert_eq!(bits, vec![0u8; 16]);
 //! # Ok::<(), tcvd::Error>(())
 //! ```
@@ -52,7 +52,7 @@
 //!     .serve()?;
 //! let mut session = coord.open_session()?;
 //! session.push(&vec![0.5f32; 32 * 2])?;
-//! let bits = session.finish_and_collect(false)?;
+//! let bits = session.finish_and_collect()?;
 //! assert_eq!(bits.len(), 32);
 //! // per-shard counters: frames, execs, steals, queue depth
 //! assert_eq!(coord.metrics().shards.len(), 2);
@@ -74,4 +74,5 @@ pub mod coordinator;
 pub mod api;
 
 pub use api::{BackendKind, Decoder, DecoderBuilder};
+pub use coding::TerminationMode;
 pub use error::{Error, Result};

@@ -19,7 +19,7 @@ use tcvd::api::{self, DecoderBuilder};
 use tcvd::ber::{measure_ber, sweep, BerSetup};
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
 use tcvd::cli::{print_usage, Args, CommandSpec, FlagSpec};
-use tcvd::coding::{registry, Encoder};
+use tcvd::coding::{registry, Encoder, TerminationMode};
 use tcvd::defaults;
 use tcvd::error::{Error, Result, ResultExt};
 use tcvd::runtime::{client, Manifest};
@@ -51,7 +51,7 @@ fn command_specs() -> Vec<CommandSpec> {
         ),
         CommandSpec::new(
             "selftest",
-            "encode/corrupt/decode round trip on every backend",
+            "encode/corrupt/decode round trip on every backend and termination mode",
             vec![
                 artifacts_flag(),
                 FlagSpec::new("bits", "N", "payload bits (default 4096)"),
@@ -72,6 +72,15 @@ fn command_specs() -> Vec<CommandSpec> {
                 FlagSpec::new("seed", "N", "PRNG seed for random payload (default 1)"),
                 FlagSpec::new("in", "PATH", "read payload bits from file instead"),
                 FlagSpec::new("out", "PATH", "write packed coded bits here"),
+                FlagSpec::new(
+                    "termination",
+                    "MODE",
+                    format!(
+                        "block termination, one of: {} (default {:?})",
+                        TerminationMode::NAMES.join(" "),
+                        defaults::TERMINATION.as_str()
+                    ),
+                ),
             ],
         ),
         CommandSpec::new("decode", "decode an LLR stream (f32 little-endian file)", {
@@ -178,46 +187,85 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     let snr = args.get_f64("snr", 5.0)?;
     let seed = args.get_u64("seed", 7)?;
     let code = registry::paper_code();
-    let mut enc = Encoder::new(code.clone());
-    let mut payload = Rng::new(seed).bits(n_bits - 6);
-    payload.extend_from_slice(&[0; 6]);
-    let coded = enc.encode(&payload);
-    let tx = bpsk::modulate(&coded);
-    let mut ch = AwgnChannel::new(snr, code.rate(), seed ^ 0xA5A5);
-    let rx = ch.transmit(&tx);
-    let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
-
     let dir = args.get_or("artifacts", defaults::ARTIFACTS_DIR);
-    // CPU backends use the generous 64+32/32 tile; the artifact default
-    // tile (64+16/16) matches the b64_s48 frame.
-    let builders: Vec<(&str, DecoderBuilder)> = vec![
-        ("scalar", DecoderBuilder::new().backend_name("scalar")?.tile(defaults::CPU_TILE)),
-        ("compact", DecoderBuilder::new().backend_name("compact")?.tile(defaults::CPU_TILE)),
-        ("simd", DecoderBuilder::new().backend_name("simd")?.tile(defaults::CPU_TILE)),
-        ("cpu-radix2", DecoderBuilder::new().backend_name("cpu-radix2")?.tile(defaults::CPU_TILE)),
-        ("cpu-radix4", DecoderBuilder::new().backend_name("cpu-radix4")?.tile(defaults::CPU_TILE)),
-        ("pjrt-artifact", DecoderBuilder::new().artifacts_dir(&dir)),
-    ];
-    for (name, builder) in builders {
-        // two shards: exercises the sharded dispatcher without paying
-        // for a full per-core fleet of artifact compilations
-        let builder =
-            builder.max_batch(64).batch_deadline_us(200).workers(2).queue_depth(256).shards(2);
-        let coord = match builder.serve() {
-            Ok(c) => c,
-            Err(e) => {
-                println!("{name:14} SKIP ({e})");
-                continue;
-            }
-        };
-        let out = coord.decode_stream_blocking(&llr, true)?;
-        let errors = out.iter().zip(&payload).filter(|(a, b)| a != b).count();
-        let snap = coord.metrics();
-        println!(
-            "{name:14} errors={errors:4}/{n_bits}  frames={} mean_batch={:.1} p99={:.0}us",
-            snap.frames_out, snap.mean_batch, snap.latency_p99_us
-        );
-        coord.shutdown()?;
+
+    // one row per (backend, termination mode): every mode replays the
+    // same transmit chain with its own termination (flushed blocks
+    // carry the k-1 flush stages inside the same stage budget, so all
+    // three streams span n_bits trellis stages and tile identically)
+    let modes =
+        [TerminationMode::Flushed, TerminationMode::TailBiting, TerminationMode::Truncated];
+    for mode in modes {
+        let flush = mode.flush_stages(code.k());
+        let data = Rng::new(seed).bits(n_bits - flush);
+        let mut enc = Encoder::new(code.clone());
+        let (coded, n_stages) = enc.encode_terminated(&data, mode);
+        debug_assert_eq!(n_stages, n_bits);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(snr, code.rate(), seed ^ 0xA5A5);
+        let rx = ch.transmit(&tx);
+        let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+
+        // CPU backends use the generous 64+32/32 tile; the artifact
+        // default tile (64+16/16) matches the b64_s48 frame. The
+        // tensor-emulation and artifact rows only run under the
+        // default (flushed) workload to keep the table compact.
+        let mut builders: Vec<(&str, DecoderBuilder)> = vec![
+            ("scalar", DecoderBuilder::new().backend_name("scalar")?.tile(defaults::CPU_TILE)),
+            ("compact", DecoderBuilder::new().backend_name("compact")?.tile(defaults::CPU_TILE)),
+            ("simd", DecoderBuilder::new().backend_name("simd")?.tile(defaults::CPU_TILE)),
+        ];
+        if mode == TerminationMode::Flushed {
+            builders.push((
+                "cpu-radix2",
+                DecoderBuilder::new().backend_name("cpu-radix2")?.tile(defaults::CPU_TILE),
+            ));
+            builders.push((
+                "cpu-radix4",
+                DecoderBuilder::new().backend_name("cpu-radix4")?.tile(defaults::CPU_TILE),
+            ));
+            builders.push(("pjrt-artifact", DecoderBuilder::new().artifacts_dir(&dir)));
+        }
+        for (name, builder) in builders {
+            let label = format!("{name}/{mode}");
+            // two shards: exercises the sharded dispatcher without
+            // paying for a full per-core fleet of artifact compilations
+            let builder = builder
+                .termination(mode)
+                .max_batch(64)
+                .batch_deadline_us(200)
+                .workers(2)
+                .queue_depth(256)
+                .shards(2);
+            let coord = match builder.serve() {
+                Ok(c) => c,
+                Err(e) => {
+                    println!("{label:26} SKIP ({e})");
+                    continue;
+                }
+            };
+            // per-row SKIP on decode errors too (e.g. --bits not a
+            // whole number of tail-biting payload tiles), so one bad
+            // row never aborts the rest of the table
+            let out = match coord.decode_stream_blocking(&llr) {
+                Ok(out) => out,
+                Err(e) => {
+                    println!("{label:26} SKIP ({e})");
+                    coord.shutdown()?;
+                    continue;
+                }
+            };
+            let errors = out.iter().zip(&data).filter(|(a, b)| a != b).count();
+            let snap = coord.metrics();
+            println!(
+                "{label:26} errors={errors:4}/{}  frames={} mean_batch={:.1} p99={:.0}us",
+                data.len(),
+                snap.frames_out,
+                snap.mean_batch,
+                snap.latency_p99_us
+            );
+            coord.shutdown()?;
+        }
     }
     Ok(())
 }
@@ -234,16 +282,24 @@ fn cmd_encode(args: &Args) -> Result<()> {
             .collect(),
         None => Rng::new(args.get_u64("seed", 1)?).bits(args.get_usize("bits", 1024)?),
     };
-    let (coded, n_in) = enc.encode_flushed(&payload);
+    let mode =
+        TerminationMode::parse_named(&args.get_or("termination", defaults::TERMINATION.as_str()))?;
+    let (coded, n_in) = enc.encode_terminated(&payload, mode);
     match args.get("out") {
         Some(path) => {
             let packed = tcvd::util::bitvec::BitVec::from_bits(&coded);
             let bytes: Vec<u8> = packed.words().iter().flat_map(|w| w.to_le_bytes()).collect();
             std::fs::write(path, bytes).or_pipeline(format!("writing {path}"))?;
-            println!("encoded {} info bits -> {} coded bits -> {path}", n_in, coded.len());
+            println!(
+                "encoded {} info bits ({mode}, {} trellis stages) -> {} coded bits -> {path}",
+                payload.len(),
+                n_in,
+                coded.len()
+            );
         }
         None => println!(
-            "encoded {} info bits -> {} coded bits (use --out to save)",
+            "encoded {} info bits ({mode}, {} trellis stages) -> {} coded bits (use --out to save)",
+            payload.len(),
             n_in,
             coded.len()
         ),
@@ -264,7 +320,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
         .collect();
 
     let coord = builder.serve()?;
-    let bits = coord.decode_stream_blocking(&llr, false)?;
+    let bits = coord.decode_stream_blocking(&llr)?;
     let snap = coord.metrics();
     if let Some(p) = args.get("out") {
         let packed = tcvd::util::bitvec::BitVec::from_bits(&bits);
@@ -294,6 +350,7 @@ fn cmd_ber(args: &Args) -> Result<()> {
     let builder = base.apply_flags(args)?;
     let setup = BerSetup {
         tile: builder.tile_config(),
+        termination: builder.termination_mode(),
         target_errors: args.get_usize("errors", 100)?,
         max_bits: args.get_usize("max-bits", 1_000_000)?,
         bits_per_round: 8192,
@@ -333,6 +390,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let seed0 = args.get_u64("seed", 99)?;
     let code = registry::paper_code();
+    let mode = coord.termination();
     std::thread::scope(|scope| -> Result<()> {
         let mut joins = Vec::new();
         for s in 0..sessions {
@@ -341,9 +399,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             joins.push(scope.spawn(move || -> Result<(usize, usize)> {
                 let mut rng = Rng::new(seed0 + s as u64);
                 let mut enc = Encoder::new(code.clone());
-                let mut payload = rng.bits(bits_per_session - 6);
-                payload.extend_from_slice(&[0; 6]);
-                let coded = enc.encode(&payload);
+                // the synthetic workload matches the pipeline's
+                // termination mode (flushed blocks spend k-1 of the
+                // per-session stage budget on the flush)
+                let payload = rng.bits(bits_per_session - mode.flush_stages(code.k()));
+                let (coded, _) = enc.encode_terminated(&payload, mode);
                 let tx = bpsk::modulate(&coded);
                 let mut ch = AwgnChannel::new(snr, code.rate(), seed0 ^ ((s as u64) << 8));
                 let rx = ch.transmit(&tx);
@@ -352,7 +412,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 for chunk in llr.chunks(2048) {
                     session.push(chunk)?; // SDR-sized chunks, backpressured
                 }
-                let decoded = session.finish_and_collect(true)?;
+                let decoded = session.finish_and_collect()?;
                 let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
                 Ok((decoded.len(), errors))
             }));

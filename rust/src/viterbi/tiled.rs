@@ -13,12 +13,21 @@
 //! tiler in this module because each [`FrameJob`] is decoded in
 //! isolation.
 //!
+//! How the stream *ends* is a workload axis of its own
+//! ([`TerminationMode`], `docs/DECODING-MODES.md`): a flushed stream
+//! pins both trellis ends to state 0, a truncated stream pins only the
+//! head, and a tail-biting block pins neither — instead every frame
+//! (including the first and last) is extended **circularly**, wrapping
+//! head/tail context around the block so the boundary frames converge
+//! exactly like mid-stream tiles.
+//!
 //! ```
+//! use tcvd::coding::TerminationMode;
 //! use tcvd::viterbi::tiled::{make_frames, TileConfig};
 //!
 //! let cfg = TileConfig { payload: 32, head: 8, tail: 8 };
 //! let llr = vec![1.0f32; 64 * 2]; // 64 stages of rate-1/2 LLRs
-//! let jobs = make_frames(&llr, 2, &cfg, true).unwrap();
+//! let jobs = make_frames(&llr, 2, &cfg, TerminationMode::Flushed).unwrap();
 //! assert_eq!(jobs.len(), 2); // one frame per payload tile
 //! assert_eq!(jobs[0].start_state, Some(0)); // stream head is pinned
 //! assert_eq!(jobs[1].emit_from, 8); // warm-up overlap is not emitted
@@ -26,8 +35,15 @@
 //! // as head + tail stages of context around the payload:
 //! assert!((cfg.overhead() - (32.0 + 8.0 + 8.0) / 32.0).abs() < 1e-12);
 //! assert!((cfg.overhead() - 1.5).abs() < 1e-12);
+//!
+//! // tail-biting: no pinned states anywhere; every frame carries full
+//! // circular context, so even frame 0 warms up over `head` stages
+//! let tb = make_frames(&llr, 2, &cfg, TerminationMode::TailBiting).unwrap();
+//! assert!(tb.iter().all(|j| j.start_state.is_none() && j.end_state.is_none()));
+//! assert!(tb.iter().all(|j| j.emit_from == 8));
 //! ```
 
+use crate::coding::TerminationMode;
 use crate::error::{Error, Result};
 
 use super::types::{FrameDecoder, FrameJob};
@@ -68,12 +84,27 @@ impl TileConfig {
 
 /// Cut an LLR stream into overlapped `FrameJob`s.
 ///
-/// `llr` covers `n` stages (`n * beta` values); `n` must be a multiple of
-/// `payload` (pad upstream if needed). The first frame has no head
-/// overlap (the encoder start state is known instead); the last frame
-/// has no tail overlap (`end_state` applies if the stream was flushed).
+/// `llr` covers `n` stages (`n * beta` values); `n` must be a multiple
+/// of `payload` (pad upstream if needed). What the frames may assume
+/// about the trellis ends follows the [`TerminationMode`]:
+///
+/// * [`Flushed`](TerminationMode::Flushed) — the first frame pins
+///   `start_state = 0` (and carries no head overlap: the known state
+///   replaces warm-up history); the last frame pins `end_state = 0`
+///   when its window ends exactly at the stream end. Context beyond the
+///   stream is zero-padded (uninformative LLRs).
+/// * [`Truncated`](TerminationMode::Truncated) — like `Flushed` but the
+///   last frame never claims an end state (traceback starts from the
+///   best-metric state).
+/// * [`TailBiting`](TerminationMode::TailBiting) — no frame pins any
+///   state. Instead each frame's `head`/`tail` context is read
+///   **circularly** from the block (`stage (pay_start - head + s) mod
+///   n`), so the first frame warms up over the block's tail and the
+///   last frame's traceback converges over the block's head — every
+///   frame behaves like a mid-stream tile, which is what makes the
+///   single-wrap approximation converge (see `docs/DECODING-MODES.md`).
 pub fn make_frames(llr: &[f32], beta: usize, cfg: &TileConfig,
-                   flushed_end: bool) -> Result<Vec<FrameJob>> {
+                   termination: TerminationMode) -> Result<Vec<FrameJob>> {
     if llr.len() % beta != 0 {
         return Err(Error::pipeline(format!(
             "llr length {} not a multiple of beta {beta}",
@@ -86,6 +117,9 @@ pub fn make_frames(llr: &[f32], beta: usize, cfg: &TileConfig,
             "stream stages {n} not a multiple of payload {}",
             cfg.payload
         )));
+    }
+    if termination == TerminationMode::TailBiting {
+        return Ok(tail_biting_frames(llr, beta, cfg));
     }
     let stages = cfg.frame_stages();
     let n_frames = n / cfg.payload;
@@ -100,6 +134,7 @@ pub fn make_frames(llr: &[f32], beta: usize, cfg: &TileConfig,
         frame[..avail * beta].copy_from_slice(&llr[start * beta..(start + avail) * beta]);
         let is_first = fi == 0;
         let is_last = fi == n_frames - 1;
+        let flushed_end = termination == TerminationMode::Flushed;
         jobs.push(FrameJob {
             llr: frame,
             start_state: if is_first { Some(0) } else { None },
@@ -118,11 +153,42 @@ pub fn make_frames(llr: &[f32], beta: usize, cfg: &TileConfig,
     Ok(jobs)
 }
 
+/// The circularly-extended frames of one whole tail-biting block
+/// (`n` stages, already validated as a multiple of `cfg.payload`).
+/// Every frame gets the full `head + payload + tail` window read
+/// modulo the block length — blocks shorter than the overlap simply
+/// wrap more than once (the WAVA-style repeated-block view) — with
+/// uniform initial metrics and a best-end-state traceback
+/// (`start_state`/`end_state` both `None`). Shared by [`make_frames`]
+/// and the streaming `coordinator::framer::Framer`.
+pub(crate) fn tail_biting_frames(llr: &[f32], beta: usize, cfg: &TileConfig) -> Vec<FrameJob> {
+    let n = llr.len() / beta;
+    let stages = cfg.frame_stages();
+    let n_frames = n / cfg.payload;
+    let mut jobs = Vec::with_capacity(n_frames);
+    for fi in 0..n_frames {
+        let pay_start = fi * cfg.payload;
+        let mut frame = vec![0f32; stages * beta];
+        for s in 0..stages {
+            let src = ((pay_start + s) as i64 - cfg.head as i64).rem_euclid(n as i64) as usize;
+            frame[s * beta..(s + 1) * beta].copy_from_slice(&llr[src * beta..(src + 1) * beta]);
+        }
+        jobs.push(FrameJob {
+            llr: frame,
+            start_state: None,
+            end_state: None,
+            emit_from: cfg.head,
+            emit_len: cfg.payload,
+        });
+    }
+    jobs
+}
+
 /// Decode a whole stream through a `FrameDecoder`, reassembling payload
 /// bits in order. This is the single-threaded reference tiler; the
 /// coordinator implements the same contract with pipelined batching.
 pub fn decode_stream(dec: &mut dyn FrameDecoder, llr: &[f32], beta: usize,
-                     cfg: &TileConfig, flushed_end: bool) -> Result<Vec<u8>> {
+                     cfg: &TileConfig, termination: TerminationMode) -> Result<Vec<u8>> {
     if dec.frame_stages() != cfg.frame_stages() {
         return Err(Error::pipeline(format!(
             "decoder frame ({}) != tile geometry ({})",
@@ -130,7 +196,7 @@ pub fn decode_stream(dec: &mut dyn FrameDecoder, llr: &[f32], beta: usize,
             cfg.frame_stages()
         )));
     }
-    let jobs = make_frames(llr, beta, cfg, flushed_end)?;
+    let jobs = make_frames(llr, beta, cfg, termination)?;
     let mut out = Vec::with_capacity(llr.len() / beta);
     for chunk in jobs.chunks(dec.max_batch().max(1)) {
         for bits in dec.decode_batch(chunk) {
@@ -176,7 +242,7 @@ mod tests {
     fn frames_cover_stream_exactly_once() {
         let cfg = TileConfig { payload: 32, head: 8, tail: 8 };
         let llr = vec![0.5f32; 128 * 2];
-        let jobs = make_frames(&llr, 2, &cfg, true).unwrap();
+        let jobs = make_frames(&llr, 2, &cfg, TerminationMode::Flushed).unwrap();
         assert_eq!(jobs.len(), 4);
         let total: usize = jobs.iter().map(|j| j.emit_len).sum();
         assert_eq!(total, 128);
@@ -197,7 +263,7 @@ mod tests {
         // tiled with generous overlap
         let cfg = TileConfig { payload: 64, head: 32, tail: 32 };
         let mut dec = ScalarDecoder::new(t, cfg.frame_stages());
-        let tiled = decode_stream(&mut dec, &llr, 2, &cfg, true).unwrap();
+        let tiled = decode_stream(&mut dec, &llr, 2, &cfg, TerminationMode::Flushed).unwrap();
         assert_eq!(tiled, bits);
     }
 
@@ -207,8 +273,102 @@ mod tests {
         let (bits, llr) = noisy_stream(5, 512, 5.0);
         let cfg = TileConfig { payload: 64, head: 32, tail: 32 };
         let mut dec = presets::radix4(t, cfg.frame_stages());
-        let tiled = decode_stream(&mut dec, &llr, 2, &cfg, true).unwrap();
+        let tiled = decode_stream(&mut dec, &llr, 2, &cfg, TerminationMode::Flushed).unwrap();
         assert_eq!(tiled, bits);
+    }
+
+    #[test]
+    fn tail_biting_frames_wrap_circularly() {
+        // distinct LLR per stage so the wrap positions are verifiable
+        let cfg = TileConfig { payload: 32, head: 8, tail: 12 };
+        let n = 64usize;
+        let llr: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        let jobs = make_frames(&llr, 2, &cfg, TerminationMode::TailBiting).unwrap();
+        assert_eq!(jobs.len(), 2);
+        for (fi, job) in jobs.iter().enumerate() {
+            assert_eq!(job.start_state, None);
+            assert_eq!(job.end_state, None);
+            assert_eq!(job.emit_from, 8);
+            assert_eq!(job.emit_len, 32);
+            for s in 0..cfg.frame_stages() {
+                let src = ((fi * 32 + s) as i64 - 8).rem_euclid(n as i64) as usize;
+                assert_eq!(
+                    &job.llr[s * 2..s * 2 + 2],
+                    &llr[src * 2..src * 2 + 2],
+                    "frame {fi} stage {s} must map to stream stage {src}"
+                );
+            }
+        }
+        // frame 0's head context is the *end* of the block (the wrap)
+        assert_eq!(jobs[0].llr[0], llr[(n - 8) * 2]);
+        // the last frame's tail context wraps to the block's head
+        let last = &jobs[1];
+        assert_eq!(last.llr[(8 + 32) * 2], llr[0]);
+    }
+
+    #[test]
+    fn short_block_wraps_more_than_once() {
+        // overlap longer than the block: the circular extension repeats
+        // the block (the WAVA repeated-block view) instead of padding
+        let cfg = TileConfig { payload: 16, head: 24, tail: 24 };
+        let llr: Vec<f32> = (0..16 * 2).map(|i| i as f32).collect();
+        let jobs = make_frames(&llr, 2, &cfg, TerminationMode::TailBiting).unwrap();
+        assert_eq!(jobs.len(), 1);
+        let job = &jobs[0];
+        for s in 0..cfg.frame_stages() {
+            let src = (s as i64 - 24).rem_euclid(16) as usize;
+            assert_eq!(&job.llr[s * 2..s * 2 + 2], &llr[src * 2..src * 2 + 2], "stage {s}");
+        }
+    }
+
+    #[test]
+    fn tail_biting_stream_decodes_noiseless_and_noisy() {
+        let t = trellis();
+        let cfg = TileConfig { payload: 32, head: 32, tail: 32 };
+        let mut dec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
+        // noiseless: exact recovery for single- and multi-frame blocks
+        for (seed, n_bits) in [(1u64, 32usize), (2, 64), (3, 128)] {
+            let bits = crate::util::rng::Rng::new(seed).bits(n_bits);
+            let mut enc = Encoder::new(t.code().clone());
+            let coded = enc.encode_tail_biting(&bits);
+            let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+            let out = decode_stream(&mut dec, &llr, 2, &cfg, TerminationMode::TailBiting)
+                .unwrap();
+            assert_eq!(out, bits, "noiseless tail-biting block of {n_bits} bits");
+        }
+        // noisy at 5 dB (seeds pre-validated against the exact-chain
+        // reference simulation — margin is large at this SNR)
+        let cfg5 = TileConfig { payload: 64, head: 32, tail: 32 };
+        let mut dec5 = ScalarDecoder::new(t.clone(), cfg5.frame_stages());
+        for seed in 1200..1204u64 {
+            let bits = crate::util::rng::Rng::new(seed).bits(256);
+            let mut enc = Encoder::new(t.code().clone());
+            let coded = enc.encode_tail_biting(&bits);
+            let tx = bpsk::modulate(&coded);
+            let mut ch = AwgnChannel::new(5.0, 0.5, seed ^ 0x7B17);
+            let rx = ch.transmit(&tx);
+            let llr: Vec<f32> = rx.iter().map(|&x| x as f32).collect();
+            let out = decode_stream(&mut dec5, &llr, 2, &cfg5, TerminationMode::TailBiting)
+                .unwrap();
+            assert_eq!(out, bits, "seed {seed}: 5 dB tail-biting block decodes clean");
+        }
+    }
+
+    #[test]
+    fn truncated_stream_decodes_noiseless() {
+        let t = trellis();
+        let cfg = TileConfig { payload: 32, head: 16, tail: 16 };
+        let mut dec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
+        let bits = crate::util::rng::Rng::new(4).bits(96);
+        let mut enc = Encoder::new(t.code().clone());
+        let coded = enc.encode_truncated(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let out = decode_stream(&mut dec, &llr, 2, &cfg, TerminationMode::Truncated).unwrap();
+        assert_eq!(out, bits);
+        // the last frame must not have claimed a flushed end state
+        let jobs = make_frames(&llr, 2, &cfg, TerminationMode::Truncated).unwrap();
+        assert!(jobs.iter().all(|j| j.end_state.is_none()));
+        assert_eq!(jobs[0].start_state, Some(0), "truncated still pins the known start");
     }
 
     #[test]
@@ -221,12 +381,12 @@ mod tests {
         let whole = scalar::decode(&t, &llr, &lam0, Some(0));
         let cfg = TileConfig { payload: 32, head: 0, tail: 0 };
         let mut dec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
-        let tiled = decode_stream(&mut dec, &llr, 2, &cfg, true).unwrap();
+        let tiled = decode_stream(&mut dec, &llr, 2, &cfg, TerminationMode::Flushed).unwrap();
         assert_ne!(tiled, whole, "expected tile truncation errors at 1 dB");
         // generous overlap should recover (nearly) the unframed output
         let cfg2 = TileConfig { payload: 32, head: 48, tail: 48 };
         let mut dec2 = ScalarDecoder::new(t, cfg2.frame_stages());
-        let tiled2 = decode_stream(&mut dec2, &llr, 2, &cfg2, true).unwrap();
+        let tiled2 = decode_stream(&mut dec2, &llr, 2, &cfg2, TerminationMode::Flushed).unwrap();
         let diff: usize = tiled2.iter().zip(&whole).filter(|(a, b)| a != b).count();
         assert!(diff * 100 < whole.len(), "overlap 48 should nearly match: {diff}");
     }
@@ -234,7 +394,9 @@ mod tests {
     #[test]
     fn rejects_misaligned_stream() {
         let cfg = TileConfig { payload: 64, head: 0, tail: 0 };
-        assert!(make_frames(&vec![0.0; 130], 2, &cfg, false).is_err());
-        assert!(make_frames(&vec![0.0; 127], 2, &cfg, false).is_err());
+        for mode in [TerminationMode::Truncated, TerminationMode::TailBiting] {
+            assert!(make_frames(&vec![0.0; 130], 2, &cfg, mode).is_err());
+            assert!(make_frames(&vec![0.0; 127], 2, &cfg, mode).is_err());
+        }
     }
 }

@@ -151,7 +151,7 @@ fn decode_stream_through_facade_matches_payload() {
         .tile_dims(64, 32, 32)
         .build()
         .unwrap();
-    let got = dec.decode_stream(&llr, true).unwrap();
+    let got = dec.decode_stream(&llr).unwrap();
     assert_eq!(got, bits);
 }
 
@@ -167,7 +167,7 @@ fn serve_smoke_on_cpu_backend() {
         .serve()
         .unwrap();
     let (bits, llr) = noisy_stream(77, 256, 5.5);
-    let out = coord.decode_stream_blocking(&llr, true).unwrap();
+    let out = coord.decode_stream_blocking(&llr).unwrap();
     assert_eq!(out, bits);
     let snap = coord.metrics();
     assert_eq!(snap.frames_in, snap.frames_out);

@@ -13,6 +13,7 @@ use tcvd::util::check::{forall, gen};
 use tcvd::util::rng::Rng;
 use tcvd::viterbi::compact::{forward_compact, CompactDecoder, CompactSurvivors};
 use tcvd::viterbi::scalar::{self, ScalarDecoder};
+use tcvd::coding::TerminationMode;
 use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 use tcvd::viterbi::traceback::traceback_compact;
 
@@ -92,9 +93,11 @@ fn prop_compact_matches_scalar_across_tile_geometries() {
             let t = Arc::new(Trellis::new(registry::paper_code()));
             let (_, llr) = noisy_stream(seed % 100_000, cfg.payload * frames, 2.5);
             let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
-            let want = decode_stream(&mut sdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let want = decode_stream(&mut sdec, &llr, 2, &cfg, TerminationMode::Flushed)
+                .map_err(|e| e.to_string())?;
             let mut cdec = CompactDecoder::new(t, cfg.frame_stages());
-            let got = decode_stream(&mut cdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let got = decode_stream(&mut cdec, &llr, 2, &cfg, TerminationMode::Flushed)
+                .map_err(|e| e.to_string())?;
             if got == want {
                 Ok(())
             } else {
@@ -127,7 +130,7 @@ fn run_backend_sessions(backend: BackendKind, shards: usize, n_sessions: usize)
             for chunk in llr.chunks(70) {
                 session.push(chunk).unwrap();
             }
-            session.finish_and_collect(true).unwrap()
+            session.finish_and_collect().unwrap()
         }));
     }
     let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();

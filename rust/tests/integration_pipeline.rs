@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
-use tcvd::coding::{registry, Encoder};
+use tcvd::coding::{registry, Encoder, TerminationMode};
 use tcvd::coordinator::server::CoordinatorConfig;
 use tcvd::coordinator::{BackendSpec, Coordinator};
 use tcvd::util::rng::Rng;
@@ -48,6 +48,7 @@ fn pjrt_pipeline_decodes_multisession_workload() {
             workers: 2,
             queue_depth: 512,
             shards: 2,
+            termination: TerminationMode::Flushed,
         })
         .unwrap(),
     );
@@ -56,7 +57,7 @@ fn pjrt_pipeline_decodes_multisession_workload() {
         let c = coord.clone();
         joins.push(std::thread::spawn(move || {
             let (bits, llr) = noisy_stream(1000 + s, 4096, 5.0);
-            let out = c.decode_stream_blocking(&llr, true).unwrap();
+            let out = c.decode_stream_blocking(&llr).unwrap();
             assert_eq!(out.len(), bits.len());
             let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
             assert_eq!(errors, 0, "session {s}: {errors} errors at 5 dB");
@@ -91,6 +92,7 @@ fn cpu_pipeline_survives_many_small_sessions() {
             workers: 3,
             queue_depth: 64,
             shards: 2,
+            termination: TerminationMode::Flushed,
         })
         .unwrap(),
     );
@@ -99,7 +101,7 @@ fn cpu_pipeline_survives_many_small_sessions() {
         let c = coord.clone();
         joins.push(std::thread::spawn(move || {
             let (bits, llr) = noisy_stream(2000 + s, 64 + 32 * (s as usize % 5), 6.0);
-            let out = c.decode_stream_blocking(&llr, true).unwrap();
+            let out = c.decode_stream_blocking(&llr).unwrap();
             assert_eq!(out, bits, "session {s}");
         }));
     }
@@ -122,10 +124,11 @@ fn backpressure_blocks_but_does_not_lose_frames() {
         workers: 1,
         queue_depth: 2,
         shards: 1,
+        termination: TerminationMode::Flushed,
     })
     .unwrap();
     let (bits, llr) = noisy_stream(77, 2048, 6.0);
-    let out = coord.decode_stream_blocking(&llr, true).unwrap();
+    let out = coord.decode_stream_blocking(&llr).unwrap();
     assert_eq!(out, bits);
     let snap = coord.metrics();
     assert_eq!(snap.frames_in, snap.frames_out);
@@ -143,10 +146,11 @@ fn metrics_accumulate_sanely() {
         workers: 2,
         queue_depth: 64,
         shards: 1,
+        termination: TerminationMode::Flushed,
     })
     .unwrap();
     let (_, llr) = noisy_stream(5, 1024, 5.0);
-    let _ = coord.decode_stream_blocking(&llr, true).unwrap();
+    let _ = coord.decode_stream_blocking(&llr).unwrap();
     let s = coord.metrics();
     assert_eq!(s.frames_out, 16);
     assert_eq!(s.bits_out, 1024);

@@ -12,6 +12,7 @@ use tcvd::util::half::HalfKind;
 use tcvd::util::rng::Rng;
 use tcvd::viterbi::packed::presets;
 use tcvd::viterbi::scalar;
+use tcvd::coding::TerminationMode;
 use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 use tcvd::viterbi::types::{FrameDecoder, FrameJob};
 
@@ -114,7 +115,8 @@ fn prop_tiled_with_huge_overlap_equals_whole() {
             let whole = scalar::decode(&t, &llr, &lam0, Some(0));
             let cfg = TileConfig { payload: 64, head: 64, tail: 64 };
             let mut dec = scalar::ScalarDecoder::new(t.clone(), cfg.frame_stages());
-            let tiled = decode_stream(&mut dec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let tiled = decode_stream(&mut dec, &llr, 2, &cfg, TerminationMode::Flushed)
+                .map_err(|e| e.to_string())?;
             if tiled == whole { Ok(()) } else { Err("tiled != whole".into()) }
         },
     );

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use tcvd::api::{BackendKind, DecoderBuilder};
+use tcvd::api::{BackendKind, DecoderBuilder, TerminationMode};
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
 use tcvd::coding::{registry, Encoder};
 use tcvd::coordinator::Coordinator;
@@ -55,7 +55,7 @@ fn run_sessions(shards: usize, n_sessions: usize) -> Vec<Vec<u8>> {
                 // 25-stage chunks: exercises partial-frame buffering
                 session.push(chunk).unwrap();
             }
-            session.finish_and_collect(true).unwrap()
+            session.finish_and_collect().unwrap()
         }));
     }
     let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
@@ -123,7 +123,7 @@ fn idle_shards_steal_from_a_backlogged_home_shard() {
         .unwrap();
     assert_eq!(coord.shards(), 4);
     let (bits, llr) = noisy_stream(9999, 4096, 6.0);
-    let out = coord.decode_stream_blocking(&llr, true).unwrap();
+    let out = coord.decode_stream_blocking(&llr).unwrap();
     assert_eq!(out, bits);
     let snap = coord.metrics();
     assert!(
@@ -142,12 +142,97 @@ fn sharded_one_shot_decoder_matches_single_lane() {
     let builder = DecoderBuilder::new()
         .backend(BackendKind::cpu("radix4"))
         .tile_dims(64, 32, 32);
-    let reference = builder.clone().shards(1).build().unwrap().decode_stream(&llr, true).unwrap();
+    let reference = builder.clone().shards(1).build().unwrap().decode_stream(&llr).unwrap();
     assert_eq!(reference, bits);
     for lanes in [2usize, 3, 8] {
         let got =
-            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr, true).unwrap();
+            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr).unwrap();
         assert_eq!(got, reference, "{lanes}-lane one-shot decode diverged");
+    }
+}
+
+/// Tail-biting sessions through the compact backend: wrapped frames
+/// are exactly `head + payload + tail` stages, so they must fill — and
+/// never overflow — the frame-bounded `DecisionRing`, and the
+/// `survivor_bytes` / `throughput_mbps` gauges must be live and exact
+/// under circular framing. Outputs stay bit-exact and shard-invariant.
+#[test]
+fn tail_biting_sessions_exercise_survivor_and_throughput_gauges() {
+    // seeds pre-validated against the exact-chain reference simulation:
+    // every session decodes error-free at 6 dB on this geometry
+    fn tb_stream(seed: u64, data_bits: usize) -> (Vec<u8>, Vec<f32>) {
+        let code = registry::paper_code();
+        let bits = Rng::new(seed).bits(data_bits);
+        let mut enc = Encoder::new(code.clone());
+        let coded = enc.encode_tail_biting(&bits);
+        let tx = bpsk::modulate(&coded);
+        let mut ch = AwgnChannel::new(6.0, code.rate(), seed ^ 0xD15);
+        let rx = ch.transmit(&tx);
+        (bits, rx.iter().map(|&x| x as f32).collect())
+    }
+    let mut baseline: Option<Vec<Vec<u8>>> = None;
+    for shards in [1usize, 2, 8] {
+        let coord = Arc::new(
+            DecoderBuilder::new()
+                .backend(BackendKind::Compact)
+                .tile_dims(32, 16, 16)
+                .termination(TerminationMode::TailBiting)
+                .shards(shards)
+                .workers(2)
+                .max_batch(8)
+                .batch_deadline_us(200)
+                .queue_depth(256)
+                .serve()
+                .unwrap(),
+        );
+        let mut joins = Vec::new();
+        for s in 0..6usize {
+            let c = coord.clone();
+            joins.push(std::thread::spawn(move || {
+                let (bits, llr) = tb_stream(4100 + s as u64, 256 + 64 * (s % 3));
+                let mut session = c.open_session().unwrap();
+                for chunk in llr.chunks(50) {
+                    session.push(chunk).unwrap();
+                }
+                let out = session.finish_and_collect().unwrap();
+                assert_eq!(out, bits, "session {s}: tail-biting payload mismatch");
+                out
+            }));
+        }
+        let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        match &baseline {
+            None => baseline = Some(outs),
+            Some(b) => assert_eq!(&outs, b, "{shards} shards changed tail-biting output"),
+        }
+
+        let snap = coord.metrics();
+        assert_eq!(snap.frames_in, snap.frames_out, "shards={shards}: frames lost");
+        // the compact survivor store of one wrapped 64-stage frame is
+        // 64 stages x ceil(64 states / 64) words x 8 bytes = 512 bytes;
+        // the gauge is a per-exec high-water mark over whole batches,
+        // so it must be a nonzero multiple of that frame size (a frame
+        // larger than the ring would have panicked the engine shard)
+        let frame_bytes = 64 * 8;
+        let peak = snap.survivor_bytes_peak() as usize;
+        assert!(peak >= frame_bytes, "shards={shards}: survivor gauge never fed ({peak})");
+        assert_eq!(peak % frame_bytes, 0, "shards={shards}: peak {peak} not whole frames");
+        assert!(peak <= 8 * frame_bytes, "shards={shards}: peak {peak} exceeds max_batch");
+        // forward-throughput EWMA must be live on every shard that
+        // decoded frames, and on no shard that did not
+        for (i, sh) in snap.shards.iter().enumerate() {
+            if sh.frames > 0 {
+                assert!(
+                    sh.throughput_mbps > 0.0,
+                    "shards={shards}: shard {i} decoded tail-biting frames but gauge is dead"
+                );
+            } else {
+                assert_eq!(sh.throughput_mbps, 0.0, "shards={shards}: idle shard {i} non-zero");
+            }
+        }
+        assert!(snap.shards.iter().any(|sh| sh.frames > 0));
+
+        let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
+        coord.shutdown().unwrap();
     }
 }
 
@@ -159,7 +244,7 @@ fn session_metrics_expose_shard_counters() {
     session.push(&llr).unwrap();
     let snap = session.metrics();
     assert_eq!(snap.shards.len(), 2, "session metrics must carry per-shard counters");
-    session.finish(true).unwrap();
+    session.finish().unwrap();
     for _ in session {}
     let snap = coord.metrics();
     let shard_frames: u64 = snap.shards.iter().map(|sh| sh.frames).sum();

@@ -15,6 +15,7 @@ use tcvd::util::check::{forall, gen};
 use tcvd::util::rng::Rng;
 use tcvd::viterbi::scalar::{self, ScalarDecoder};
 use tcvd::viterbi::simd::{Quantizer, SimdDecoder};
+use tcvd::coding::TerminationMode;
 use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 use tcvd::viterbi::types::{FrameDecoder, FrameJob};
 
@@ -111,9 +112,11 @@ fn prop_simd_matches_scalar_across_tile_geometries() {
             let (_, raw) = noisy_stream(seed % 100_000, cfg.payload * frames, 2.5);
             let llr = snap(quant, &raw);
             let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
-            let want = decode_stream(&mut sdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let want = decode_stream(&mut sdec, &llr, 2, &cfg, TerminationMode::Flushed)
+                .map_err(|e| e.to_string())?;
             let mut qdec = SimdDecoder::new(t, cfg.frame_stages(), renorm);
-            let got = decode_stream(&mut qdec, &llr, 2, &cfg, true).map_err(|e| e.to_string())?;
+            let got = decode_stream(&mut qdec, &llr, 2, &cfg, TerminationMode::Flushed)
+                .map_err(|e| e.to_string())?;
             if got == want {
                 Ok(())
             } else {
@@ -192,7 +195,7 @@ fn run_backend_sessions(backend: BackendKind, shards: usize, n_sessions: usize)
             for chunk in llr.chunks(70) {
                 session.push(chunk).unwrap();
             }
-            session.finish_and_collect(true).unwrap()
+            session.finish_and_collect().unwrap()
         }));
     }
     let outs: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
@@ -233,11 +236,11 @@ fn simd_one_shot_lanes_agree() {
     let (bits, llr) = noisy_stream(555, 2048, 5.5);
     let builder = DecoderBuilder::new().backend(BackendKind::Simd).tile_dims(64, 32, 32);
     let reference =
-        builder.clone().shards(1).build().unwrap().decode_stream(&llr, true).unwrap();
+        builder.clone().shards(1).build().unwrap().decode_stream(&llr).unwrap();
     assert_eq!(reference, bits, "5.5 dB decodes clean through the quantized path");
     for lanes in [2usize, 8] {
         let got =
-            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr, true).unwrap();
+            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr).unwrap();
         assert_eq!(got, reference, "{lanes}-lane simd one-shot decode diverged");
     }
 }

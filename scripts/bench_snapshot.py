@@ -3,7 +3,7 @@
 
 Runs `cargo bench --bench table1_throughput` and `--bench batching`
 (which write `bench_results/*.json`), then aggregates the CPU-backend
-rows into one trajectory document, `BENCH_PR4.json`, so successive PRs
+rows into one trajectory document, `BENCH_PR5.json`, so successive PRs
 can compare like-for-like numbers:
 
   {
@@ -13,8 +13,19 @@ can compare like-for-like numbers:
     "shard_scaling": {"info_bits": ..., "rows": [
         {"backend": "simd", "shards": 2, "mbps": ...}, ...]},
     "survivor": {"rows": [...]},
-    "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...}
+    "termination": {"blocks": ..., "rows": [
+        {"mode": "flushed" | "tail-biting", "block_stages": ...,
+         "data_bits_per_block": ..., "info_mbps": ...,
+         "rate_efficiency": ...}, ...]},
+    "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...,
+                "tail_biting_vs_flushed_info": ...}
   }
+
+The `termination` rows come from the batching bench's flushed vs
+tail-biting short-block sweep (info Mb/s counts *data* bits, so the
+flushed rows pay the k-1 flush-bit rate loss; `docs/DECODING-MODES.md`
+explains the model). `summary.tail_biting_vs_flushed_info` is the
+info-throughput ratio at the shortest measured block length.
 
 CI runs `scripts/bench_snapshot.py --smoke` (tiny frame budgets via
 TCVD_BENCH_SMOKE=1) on every push to keep the sweeps from rotting;
@@ -74,7 +85,7 @@ def main():
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--smoke", action="store_true", help="tiny CI budgets")
     ap.add_argument("--full", action="store_true", help="full-rigor budgets")
-    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR4.json"))
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR5.json"))
     ap.add_argument("--skip-run", action="store_true",
                     help="aggregate existing bench_results/ without cargo")
     ap.add_argument("--min-simd-ratio", type=float, default=None,
@@ -114,7 +125,14 @@ def main():
             "info_bits": batching.get("survivor_info_bits"),
             "rows": batching.get("survivor_rows", []),
         },
+        "termination": {
+            "blocks": batching.get("termination_blocks"),
+            "rows": batching.get("termination_rows", []),
+        },
     }
+    if not doc["termination"]["rows"]:
+        sys.exit("bench_snapshot: batching.json has no termination_rows — "
+                 "re-run the bench (old results file?)")
     scalar = backends.get("scalar", {}).get("mbps")
     simd = backends.get("simd", {}).get("mbps")
     if scalar and simd:
@@ -123,6 +141,14 @@ def main():
             "simd_mbps": simd,
             "simd_vs_scalar": simd / scalar,
         }
+        # tail-biting vs flushed info throughput at the shortest block
+        term = doc["termination"]["rows"]
+        shortest = min((r["block_stages"] for r in term), default=None)
+        by_mode = {r["mode"]: r["info_mbps"] for r in term
+                   if r["block_stages"] == shortest}
+        if by_mode.get("flushed") and by_mode.get("tail-biting"):
+            doc["summary"]["tail_biting_vs_flushed_info"] = (
+                by_mode["tail-biting"] / by_mode["flushed"])
 
     with open(args.out, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=2, sort_keys=True)

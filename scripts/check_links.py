@@ -1,11 +1,18 @@
 #!/usr/bin/env python3
-"""Relative-link checker for the repo docs (offline lychee substitute).
+"""Relative-link and anchor checker for the repo docs (offline lychee
+substitute).
 
 Scans the markdown set the docs CI job guards -- README.md, docs/*.md,
-rust/README.md -- for inline links and fails (exit 1) on any relative
-link whose target file does not exist. External (http/https/mailto)
-links are skipped; pure in-page anchors (#...) are skipped; a
-file#anchor link is checked for the file part only.
+rust/README.md -- for inline links and fails (exit 1) on:
+
+* any relative link whose target file does not exist;
+* any `#fragment` (in-page `#section` links *and* the fragment part of
+  `file.md#section` links) that does not match a heading anchor in the
+  target document, using GitHub's heading-slug rules (lowercase,
+  punctuation stripped, spaces to dashes, `-1`/`-2` suffixes for
+  duplicate headings).
+
+External (http/https/mailto) links are skipped.
 
 Usage: python3 scripts/check_links.py [repo_root]
 """
@@ -19,7 +26,9 @@ import sys
 # nested parens or reference-style targets for files.
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
 
 
 def doc_files(root):
@@ -28,21 +37,71 @@ def doc_files(root):
     return [f for f in files if os.path.isfile(f)]
 
 
+def strip_code_blocks(text):
+    # links/headings inside ``` blocks are illustrative
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def github_slug(heading):
+    """GitHub's anchor slug for a heading line (good enough for our
+    docs: inline code/links unwrapped, punctuation dropped, spaces to
+    dashes; underscores are preserved, as GitHub does)."""
+    # unwrap inline markdown: `code`, [text](target), * emphasis
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    h = h.replace("`", "").replace("*", "")
+    h = h.strip().lower()
+    # drop everything that is not alphanumeric, underscore, space or dash
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    h = re.sub(r"\s+", "-", h.strip())
+    return h
+
+
+def anchors_of(path, cache={}):
+    """All valid heading anchors of a markdown file (with GitHub's
+    duplicate -1/-2 numbering)."""
+    if path in cache:
+        return cache[path]
+    anchors = set()
+    counts = {}
+    try:
+        text = strip_code_blocks(open(path, encoding="utf-8").read())
+    except OSError:
+        cache[path] = anchors
+        return anchors
+    for m in HEADING_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    cache[path] = anchors
+    return anchors
+
+
 def check_file(path, root):
     errors = []
-    text = open(path, encoding="utf-8").read()
-    # ignore fenced code blocks: links in ``` blocks are illustrative
-    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    text = strip_code_blocks(open(path, encoding="utf-8").read())
     for match in LINK_RE.finditer(text):
         target = match.group(1)
         if target.startswith(SKIP_PREFIXES):
             continue
-        target = target.split("#", 1)[0]
-        if not target:
-            continue
-        resolved = os.path.normpath(os.path.join(os.path.dirname(path), target))
+        file_part, _, fragment = target.partition("#")
+        resolved = (
+            path
+            if not file_part
+            else os.path.normpath(os.path.join(os.path.dirname(path), file_part))
+        )
         if not os.path.exists(resolved):
-            errors.append((os.path.relpath(path, root), match.group(1), resolved))
+            errors.append((os.path.relpath(path, root), match.group(1),
+                           f"missing {resolved}"))
+            continue
+        if fragment and resolved.endswith(".md"):
+            if fragment not in anchors_of(resolved):
+                errors.append((
+                    os.path.relpath(path, root),
+                    match.group(1),
+                    f"no heading anchor #{fragment} in "
+                    f"{os.path.relpath(resolved, root)}",
+                ))
     return errors
 
 
@@ -57,11 +116,11 @@ def main():
     for f in files:
         all_errors.extend(check_file(f, root))
     if all_errors:
-        print(f"check_links: {len(all_errors)} broken relative link(s):")
-        for src, link, resolved in all_errors:
-            print(f"  {src}: ({link}) -> missing {resolved}")
+        print(f"check_links: {len(all_errors)} broken link(s)/anchor(s):")
+        for src, link, why in all_errors:
+            print(f"  {src}: ({link}) -> {why}")
         return 1
-    print(f"check_links: OK — {len(files)} files, all relative links resolve")
+    print(f"check_links: OK — {len(files)} files, all relative links and anchors resolve")
     return 0
 
 
