@@ -1,9 +1,16 @@
-//! End-to-end SDR serving driver (the EXPERIMENTS.md §E2E run): a fleet
-//! of concurrent radio sessions stream chunked LLRs through the
-//! coordinator backed by the AOT PJRT artifact; reports aggregate
-//! throughput, latency percentiles, batching occupancy and BER. The
-//! pipeline comes from `tcvd::api::DecoderBuilder`; each session uses
-//! `Session::split` for its producer/consumer thread pair.
+//! End-to-end SDR serving driver (the EXPERIMENTS.md §E2E run), in two
+//! samples:
+//!
+//! 1. **Socket transport (primary)** — a `tcvd::net::Server` on a
+//!    loopback TCP port, with a fleet of concurrent radio sessions
+//!    streaming chunked LLRs through `TcpClient` (the same wire path
+//!    `tcvd serve --listen` exposes; see `docs/NETWORKING.md`). Runs on
+//!    the artifact-free SIMD backend.
+//! 2. **In-process** — the same fleet pushed straight into the
+//!    coordinator via `Session::split`, backed by the AOT PJRT
+//!    artifact (skipped with a note when no artifacts are built).
+//!
+//! Both report aggregate throughput, latency percentiles and BER.
 //!
 //! Run: `cargo run --release --example sdr_stream [sessions] [bits/session] [snr_db]`
 
@@ -12,20 +19,101 @@ use std::time::Instant;
 
 use tcvd::api::DecoderBuilder;
 use tcvd::channel::{awgn::AwgnChannel, bpsk};
-use tcvd::coding::{registry, Encoder};
+use tcvd::coding::{poly::Code, registry, Encoder};
+use tcvd::defaults;
+use tcvd::net::{NetConfig, Server, TcpClient};
 use tcvd::util::rng::Rng;
 
-fn main() -> tcvd::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let sessions: usize = args.get(1).map_or(8, |s| s.parse().unwrap());
-    let bits_per_session: usize = args.get(2).map_or(262_144, |s| s.parse().unwrap());
-    let snr: f64 = args.get(3).map_or(5.0, |s| s.parse().unwrap());
+/// One session's radio workload: flush-terminated payload, BPSK + AWGN.
+/// Returns (payload bits, noisy LLR stream).
+fn session_workload(code: &Code, bits: usize, snr: f64, s: usize) -> (Vec<u8>, Vec<f32>) {
+    let mut payload = Rng::new(1000 + s as u64).bits(bits - 6);
+    payload.extend_from_slice(&[0; 6]);
+    let mut enc = Encoder::new(code.clone());
+    let tx = bpsk::modulate(&enc.encode(&payload));
+    let mut ch = AwgnChannel::new(snr, code.rate(), 5000 + s as u64);
+    let llr: Vec<f32> = ch.transmit(&tx).iter().map(|&x| x as f32).collect();
+    (payload, llr)
+}
 
-    // default backend/tile/variant: the radix-4 + DG-permutation
-    // artifact at 64+16/16 tiling (defaults module)
-    let coord = Arc::new(DecoderBuilder::new().workers(3).queue_depth(2048).serve()?);
+fn print_results(label: &str, total_bits: usize, total_errors: usize, wall: f64) {
+    println!("\n== {label} results ==");
+    println!("info bits decoded : {total_bits}");
+    println!("bit errors        : {total_errors} (BER {:.2e})",
+             total_errors as f64 / total_bits as f64);
+    println!("wall time         : {wall:.3} s");
+    println!("info throughput   : {:.3} Mb/s", total_bits as f64 / wall / 1e6);
+    println!("coded throughput  : {:.3} Mb/s (2x info, rate 1/2)",
+             2.0 * total_bits as f64 / wall / 1e6);
+}
+
+/// Sample 1: the socket front-end on loopback TCP — every session is a
+/// real connection through the HELLO/ACK handshake and framed wire
+/// protocol.
+fn tcp_transport_sample(sessions: usize, bits_per_session: usize, snr: f64) -> tcvd::Result<()> {
+    let tile = defaults::CPU_TILE;
+    let builder = DecoderBuilder::new()
+        .backend_name("simd")?
+        .tile_dims(tile.payload, tile.head, tile.tail)
+        .workers(3)
+        .queue_depth(2048);
+    let server = Server::start(builder.clone(), Some("127.0.0.1:0"), None, NetConfig::default())?;
+    let addr = server.tcp_addr().expect("tcp serving enabled");
     println!(
-        "sdr_stream: {sessions} sessions x {bits_per_session} bits at {snr} dB \
+        "sdr_stream[tcp]: {sessions} sessions x {bits_per_session} bits at {snr} dB \
+         over {addr} (simd backend, {}+{}/{} tile)",
+        tile.payload, tile.head, tile.tail
+    );
+
+    let code = registry::paper_code();
+    let chunk_llrs = tile.payload * code.beta() * 16; // SDR-sized bursts
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for s in 0..sessions {
+        let code = code.clone();
+        let builder = builder.clone();
+        joins.push(std::thread::spawn(move || -> tcvd::Result<(usize, usize)> {
+            let (payload, llr) = session_workload(&code, bits_per_session, snr, s);
+            let mut client = TcpClient::connect(addr, &builder)?;
+            for part in llr.chunks(chunk_llrs) {
+                client.push(part)?;
+            }
+            let decoded = client.finish()?;
+            let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
+            Ok((decoded.len(), errors))
+        }));
+    }
+    let mut total_bits = 0usize;
+    let mut total_errors = 0usize;
+    for j in joins {
+        let (b, e) = j.join().expect("session panicked")?;
+        total_bits += b;
+        total_errors += e;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    print_results("tcp transport", total_bits, total_errors, wall);
+    println!("net sessions      : {} accepted, {} evicted, {} shed",
+             snap.net.sessions_accepted, snap.net.sessions_evicted, snap.net.sessions_shed);
+    println!("wire traffic      : {} bytes in, {} bytes out",
+             snap.net.bytes_in, snap.net.bytes_out);
+    println!("block latency     : p50 {:.0} us, p99 {:.0} us (finish -> last byte)",
+             snap.net.block_p50_us, snap.net.block_p99_us);
+    server.shutdown()
+}
+
+/// Sample 2: the original in-process fleet against the AOT artifact
+/// pipeline (radix-4 + DG-permutation at the default 64+16/16 tiling).
+fn in_process_sample(sessions: usize, bits_per_session: usize, snr: f64) -> tcvd::Result<()> {
+    let coord = match DecoderBuilder::new().workers(3).queue_depth(2048).serve() {
+        Ok(c) => Arc::new(c),
+        Err(e) => {
+            println!("\nsdr_stream[in-process]: skipped ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    println!(
+        "\nsdr_stream[in-process]: {sessions} sessions x {bits_per_session} bits at {snr} dB \
          (radix-4 + DG-permutation artifact, Q=0.5 ops/stage)"
     );
 
@@ -36,14 +124,7 @@ fn main() -> tcvd::Result<()> {
         let coord = coord.clone();
         let code = code.clone();
         joins.push(std::thread::spawn(move || -> tcvd::Result<(usize, usize)> {
-            let mut rng = Rng::new(1000 + s as u64);
-            let mut payload = rng.bits(bits_per_session - 6);
-            payload.extend_from_slice(&[0; 6]);
-            let mut enc = Encoder::new(code.clone());
-            let coded = enc.encode(&payload);
-            let tx = bpsk::modulate(&coded);
-            let mut ch = AwgnChannel::new(snr, code.rate(), 5000 + s as u64);
-
+            let (payload, llr) = session_workload(&code, bits_per_session, snr, s);
             let (mut handle, out) = coord.open_session()?.split();
             // consumer drains in-order decoded chunks as they arrive
             let consumer = std::thread::spawn(move || {
@@ -54,11 +135,8 @@ fn main() -> tcvd::Result<()> {
                 bits
             });
             // producer: stream SDR-sized chunks (1024 stages) as they "arrive"
-            let mut noisy = vec![0.0f64; 2048];
-            for chunk in tx.chunks(2048) {
-                ch.transmit_into(chunk, &mut noisy[..chunk.len()]);
-                let llr: Vec<f32> = noisy[..chunk.len()].iter().map(|&x| x as f32).collect();
-                handle.push(&llr)?;
+            for chunk in llr.chunks(2048) {
+                handle.push(chunk)?;
             }
             handle.finish()?;
             let decoded = consumer.join().expect("consumer panicked");
@@ -66,7 +144,6 @@ fn main() -> tcvd::Result<()> {
             Ok((decoded.len(), errors))
         }));
     }
-
     let mut total_bits = 0usize;
     let mut total_errors = 0usize;
     for j in joins {
@@ -76,14 +153,7 @@ fn main() -> tcvd::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = coord.metrics();
-    println!("\n== results ==");
-    println!("info bits decoded : {total_bits}");
-    println!("bit errors        : {total_errors} (BER {:.2e})",
-             total_errors as f64 / total_bits as f64);
-    println!("wall time         : {wall:.3} s");
-    println!("info throughput   : {:.3} Mb/s", total_bits as f64 / wall / 1e6);
-    println!("coded throughput  : {:.3} Mb/s (2x info, rate 1/2)",
-             2.0 * total_bits as f64 / wall / 1e6);
+    print_results("in-process", total_bits, total_errors, wall);
     println!("PJRT executions   : {} (mean batch {:.1}/64)", snap.execs, snap.mean_batch);
     println!("frame latency     : p50 {:.0} us, p99 {:.0} us",
              snap.latency_p50_us, snap.latency_p99_us);
@@ -94,6 +164,15 @@ fn main() -> tcvd::Result<()> {
         println!("  shard {i}: frames={} execs={} steals={}", sh.frames, sh.execs, sh.steals);
     }
     let coord = Arc::try_unwrap(coord).ok().expect("sessions done");
-    coord.shutdown()?;
-    Ok(())
+    coord.shutdown()
+}
+
+fn main() -> tcvd::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let sessions: usize = args.get(1).map_or(8, |s| s.parse().unwrap());
+    let bits_per_session: usize = args.get(2).map_or(262_144, |s| s.parse().unwrap());
+    let snr: f64 = args.get(3).map_or(5.0, |s| s.parse().unwrap());
+
+    tcp_transport_sample(sessions, bits_per_session, snr)?;
+    in_process_sample(sessions, bits_per_session, snr)
 }

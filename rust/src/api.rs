@@ -135,6 +135,24 @@ impl BackendKind {
     pub fn cpu(scheme: impl Into<String>) -> BackendKind {
         BackendKind::Cpu { scheme: scheme.into() }
     }
+
+    /// The CLI name of this backend (the inverse of
+    /// [`DecoderBuilder::backend_name`], modulo the precision-suffixed
+    /// `cpu-radix4-half*` aliases, which also name an accumulator
+    /// precision and therefore round-trip to plain `"cpu-radix4"`).
+    pub fn name(&self) -> String {
+        match self {
+            BackendKind::Artifact => "artifact".to_string(),
+            BackendKind::Scalar => "scalar".to_string(),
+            BackendKind::Compact => "compact".to_string(),
+            BackendKind::Simd => "simd".to_string(),
+            BackendKind::Cpu { scheme } => match scheme.as_str() {
+                "radix2" => "cpu-radix2".to_string(),
+                "radix4_noperm" => "cpu-radix4-noperm".to_string(),
+                _ => "cpu-radix4".to_string(),
+            },
+        }
+    }
 }
 
 /// Builder for every `tcvd` decode surface: one-shot ([`Decoder`]) and
@@ -404,6 +422,16 @@ impl DecoderBuilder {
     /// Trellis stages per frame under the current tile geometry.
     pub fn frame_stages(&self) -> usize {
         self.tile.frame_stages()
+    }
+
+    /// The standard-code name currently configured.
+    pub fn code_name(&self) -> &str {
+        &self.code
+    }
+
+    /// The backend currently configured.
+    pub fn backend_kind(&self) -> &BackendKind {
+        &self.backend
     }
 
     /// The tile geometry currently configured.

@@ -1,0 +1,136 @@
+//! `loadgen` — loopback load/soak harness for a running `tcvd serve`
+//! instance.
+//!
+//! Drives N concurrent worker threads, each churning sessions (one
+//! fresh TCP connection or UDP flow per block) against the server, and
+//! verifies every decoded block **bit-identical** against an
+//! in-process one-shot decoder oracle built from the same parameters.
+//! The builder flags must therefore describe the same pipeline the
+//! server runs — a mismatch is rejected at the HELLO handshake.
+//!
+//! Exits non-zero when any block mismatches, fails, or an optional
+//! latency/throughput bound (`--max-p99-ms` / `--min-mbps`) is missed,
+//! so it slots directly into CI as a smoke stage:
+//!
+//! ```text
+//! tcvd serve --listen 127.0.0.1:0 --backend simd &
+//! loadgen --connect <addr> --sessions 32 --smoke
+//! ```
+
+use tcvd::api::{self, DecoderBuilder};
+use tcvd::cli::{Args, CommandSpec, FlagSpec};
+use tcvd::defaults;
+use tcvd::error::{Error, Result};
+use tcvd::net::loadgen::{run, LoadgenOptions, Transport};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run_cli(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// The single-command interface (reuses the builder's flag vocabulary
+/// so the pipeline description matches `tcvd serve`'s).
+fn spec() -> CommandSpec {
+    let mut f = api::builder_flags();
+    f.push(FlagSpec::new(
+        "connect",
+        "ADDR",
+        "server address, host:port (required; TCP, or the UDP bind address with --udp)",
+    ));
+    f.push(FlagSpec::new("udp", "", "drive the UDP transport (one datagram = one block)"));
+    f.push(FlagSpec::new("sessions", "N", "concurrent worker sessions (default 8)"));
+    f.push(FlagSpec::new("blocks", "N", "blocks per session (default 4)"));
+    f.push(FlagSpec::new(
+        "block-stages",
+        "N",
+        "trellis stages per block, multiple of the tile payload (default 256)",
+    ));
+    f.push(FlagSpec::new("snr", "DB", "workload Eb/N0 in dB (default 5.0)"));
+    f.push(FlagSpec::new("seed", "N", "workload seed (default 1)"));
+    f.push(FlagSpec::new(
+        "max-retries",
+        "N",
+        "give up on a block after this many shed-retries (default 200)",
+    ));
+    f.push(FlagSpec::new("smoke", "", "CI preset: 2 blocks/session of one tile payload each"));
+    f.push(FlagSpec::new("max-p99-ms", "MS", "fail if p99 block latency exceeds this"));
+    f.push(FlagSpec::new("min-mbps", "MBPS", "fail if aggregate throughput is under this"));
+    f.push(FlagSpec::new("json", "", "print the report as JSON"));
+    CommandSpec::new("loadgen", "loopback load/soak harness for tcvd serve", f)
+}
+
+fn run_cli(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let spec = spec();
+    if args.get_bool("help") || args.command == "help" {
+        print!("{}", spec.usage());
+        return Ok(());
+    }
+    if !args.command.is_empty() || !args.positional.is_empty() {
+        return Err(Error::config("loadgen takes flags only (see `loadgen --help`)"));
+    }
+    spec.check(&args)?;
+    let Some(addr) = args.get("connect") else {
+        return Err(Error::config("--connect <ADDR> is required (the server's address)"));
+    };
+
+    // Pipeline description: SIMD backend + the CPU tile by default —
+    // the cheapest always-available config, mirrored by the CI serve
+    // invocation — overridable by --config and the builder flags.
+    let builder = match args.get("config") {
+        Some(p) => DecoderBuilder::from_toml_file(std::path::Path::new(p))?,
+        None => DecoderBuilder::new()
+            .backend_name("simd")?
+            .tile_dims(defaults::CPU_TILE.payload, defaults::CPU_TILE.head, defaults::CPU_TILE.tail),
+    }
+    .apply_flags(&args)?;
+
+    let mut opts = LoadgenOptions {
+        sessions: args.get_usize("sessions", 8)?,
+        blocks_per_session: args.get_usize("blocks", 4)?,
+        block_stages: args.get_usize("block-stages", 256)?,
+        ebn0_db: args.get_f64("snr", 5.0)?,
+        seed: args.get_u64("seed", 1)?,
+        transport: if args.get_bool("udp") { Transport::Udp } else { Transport::Tcp },
+        max_retries: args.get_usize("max-retries", 200)?,
+    };
+    if args.get_bool("smoke") {
+        // small + fast, still churning every session through the
+        // handshake / decode / teardown lifecycle
+        opts.blocks_per_session = args.get_usize("blocks", 2)?;
+        opts.block_stages = args.get_usize("block-stages", builder.tile_config().payload)?;
+    }
+    let max_p99_ms = match args.get("max-p99-ms") {
+        Some(_) => Some(args.get_f64("max-p99-ms", 0.0)?),
+        None => None,
+    };
+    let min_mbps = match args.get("min-mbps") {
+        Some(_) => Some(args.get_f64("min-mbps", 0.0)?),
+        None => None,
+    };
+
+    println!(
+        "loadgen: {} x {} blocks of {} stages over {} to {}",
+        opts.sessions,
+        opts.blocks_per_session,
+        opts.block_stages,
+        opts.transport.name(),
+        addr
+    );
+    let report = run(addr, &builder, &opts)?;
+    println!(
+        "loadgen: {} blocks verified, {} shed-retries, {} failures, {} mismatches",
+        report.blocks, report.shed_retries, report.failures, report.mismatches
+    );
+    println!(
+        "loadgen: {:.3} Mb/s aggregate over {:.3} s; latency p50 {:.3} ms, p99 {:.3} ms",
+        report.aggregate_mbps, report.elapsed_s, report.p50_ms, report.p99_ms
+    );
+    if args.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    report.check(max_p99_ms, min_mbps)
+}

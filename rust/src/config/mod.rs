@@ -41,6 +41,18 @@ pub struct Config {
     /// `coding::TerminationMode::NAMES`); validated when the builder
     /// consumes this config.
     pub termination: String,
+    /// `[net] listen`: TCP listen address for `tcvd serve` (absent =
+    /// no TCP serving unless given on the command line).
+    pub net_listen: Option<String>,
+    /// `[net] udp`: UDP bind address for `tcvd serve`.
+    pub net_udp: Option<String>,
+    /// `[net] max_sessions`: concurrent-session cap (TCP + UDP flows).
+    pub net_max_sessions: usize,
+    /// `[net] idle_timeout_ms`: idle session eviction timeout.
+    pub net_idle_timeout_ms: u64,
+    /// `[net] shed_queue_depth`: shed admissions once the summed shard
+    /// queue depth reaches this (absent = the pipeline `queue_depth`).
+    pub net_shed_queue_depth: Option<usize>,
 }
 
 impl Default for Config {
@@ -57,6 +69,11 @@ impl Default for Config {
             queue_depth: defaults::QUEUE_DEPTH,
             shards: defaults::default_shards(),
             termination: defaults::TERMINATION.as_str().to_string(),
+            net_listen: None,
+            net_udp: None,
+            net_max_sessions: defaults::NET_MAX_SESSIONS,
+            net_idle_timeout_ms: defaults::NET_IDLE_TIMEOUT_MS,
+            net_shed_queue_depth: None,
         }
     }
 }
@@ -116,6 +133,21 @@ impl Config {
         if let Some(v) = doc.get("", "termination") {
             cfg.termination = v.as_str().or_config("termination")?.to_string();
         }
+        if let Some(v) = doc.get("net", "listen") {
+            cfg.net_listen = Some(v.as_str().or_config("net.listen")?.to_string());
+        }
+        if let Some(v) = doc.get("net", "udp") {
+            cfg.net_udp = Some(v.as_str().or_config("net.udp")?.to_string());
+        }
+        if let Some(v) = doc.get("net", "max_sessions") {
+            cfg.net_max_sessions = v.as_usize().or_config("net.max_sessions")?;
+        }
+        if let Some(v) = doc.get("net", "idle_timeout_ms") {
+            cfg.net_idle_timeout_ms = v.as_usize().or_config("net.idle_timeout_ms")? as u64;
+        }
+        if let Some(v) = doc.get("net", "shed_queue_depth") {
+            cfg.net_shed_queue_depth = Some(v.as_usize().or_config("net.shed_queue_depth")?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -140,6 +172,12 @@ impl Config {
                 "queue_depth ({}) must be >= max_batch ({})",
                 self.queue_depth, self.max_batch
             )));
+        }
+        if self.net_max_sessions == 0 {
+            return Err(Error::config("net.max_sessions must be positive"));
+        }
+        if self.net_idle_timeout_ms == 0 {
+            return Err(Error::config("net.idle_timeout_ms must be positive"));
         }
         Ok(())
     }
@@ -219,6 +257,28 @@ shards = 6
         assert_eq!(cfg.max_batch, 8);
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.shards, 6);
+    }
+
+    #[test]
+    fn parses_net_section() {
+        let cfg = Config::from_toml(
+            "[net]\nlisten = \"127.0.0.1:7000\"\nudp = \"127.0.0.1:7001\"\n\
+             max_sessions = 64\nidle_timeout_ms = 5000\nshed_queue_depth = 48\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.net_listen.as_deref(), Some("127.0.0.1:7000"));
+        assert_eq!(cfg.net_udp.as_deref(), Some("127.0.0.1:7001"));
+        assert_eq!(cfg.net_max_sessions, 64);
+        assert_eq!(cfg.net_idle_timeout_ms, 5000);
+        assert_eq!(cfg.net_shed_queue_depth, Some(48));
+        // defaults: no listen addresses, defaults-module cap/timeout
+        let d = Config::default();
+        assert_eq!(d.net_listen, None);
+        assert_eq!(d.net_max_sessions, defaults::NET_MAX_SESSIONS);
+        assert_eq!(d.net_shed_queue_depth, None);
+        // net bounds are validated structurally
+        assert!(Config::from_toml("[net]\nmax_sessions = 0\n").is_err());
+        assert!(Config::from_toml("[net]\nidle_timeout_ms = 0\n").is_err());
     }
 
     #[test]

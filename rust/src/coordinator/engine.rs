@@ -19,8 +19,9 @@ use super::metrics::Metrics;
 use super::shard::{self, Pop, ShardQueue};
 use super::{DecodedFrame, FrameTask};
 
-/// How often an idle shard re-scans sibling queues for stealable work.
-pub const STEAL_POLL: Duration = Duration::from_micros(200);
+/// How often an idle shard re-scans sibling queues for stealable work
+/// (tuned in one place: [`crate::defaults::STEAL_POLL_US`]).
+pub const STEAL_POLL: Duration = Duration::from_micros(crate::defaults::STEAL_POLL_US);
 
 /// Dynamic batching policy.
 #[derive(Clone, Copy, Debug)]

@@ -44,6 +44,31 @@ pub struct ShardStats {
 /// weight of the newest batched execution.
 pub const THROUGHPUT_EWMA_ALPHA: f64 = 0.2;
 
+/// Counters for the socket serving front-end (`tcvd::net`). All zero
+/// for pipelines that never attach a network server.
+#[derive(Default)]
+pub struct NetStats {
+    /// Network sessions admitted (TCP handshakes accepted + new UDP
+    /// flows observed).
+    pub sessions_accepted: AtomicU64,
+    /// Sessions evicted: idle timeouts, dirty disconnects, per-session
+    /// protocol errors.
+    pub sessions_evicted: AtomicU64,
+    /// Sessions load-shed at admission (session cap reached or shard
+    /// queues saturated).
+    pub sessions_shed: AtomicU64,
+    /// Individual UDP blocks shed on an already-admitted flow because
+    /// the shard queues were saturated when the datagram arrived.
+    pub blocks_shed: AtomicU64,
+    /// TCP handshakes rejected for a config mismatch (client asked for
+    /// a code/backend/termination/tile the server does not run).
+    pub handshake_rejects: AtomicU64,
+    /// Wire bytes received (frame headers + payloads, UDP datagrams).
+    pub bytes_in: AtomicU64,
+    /// Wire bytes sent.
+    pub bytes_out: AtomicU64,
+}
+
 /// Shared metrics hub (updated by every pipeline stage).
 pub struct Metrics {
     start: Instant,
@@ -55,8 +80,11 @@ pub struct Metrics {
     pub forward_ns: AtomicU64,
     pub traceback_ns: AtomicU64,
     shards: Vec<ShardStats>,
+    /// Socket front-end counters (see [`NetStats`]).
+    pub net: NetStats,
     latency: Mutex<LogHistogram>,
     occupancy: Mutex<LogHistogram>,
+    net_latency: Mutex<LogHistogram>,
 }
 
 impl Default for Metrics {
@@ -78,8 +106,10 @@ impl Metrics {
             forward_ns: AtomicU64::new(0),
             traceback_ns: AtomicU64::new(0),
             shards: (0..n_shards.max(1)).map(|_| ShardStats::default()).collect(),
+            net: NetStats::default(),
             latency: Mutex::new(LogHistogram::new()),
             occupancy: Mutex::new(LogHistogram::new()),
+            net_latency: Mutex::new(LogHistogram::new()),
         }
     }
 
@@ -114,6 +144,20 @@ impl Metrics {
         self.occupancy.lock().unwrap().record(frames as u64);
     }
 
+    /// Record one completed network block/stream decode: the wall time
+    /// from the client's end-of-stream to the last decoded byte on the
+    /// wire (the per-session latency quantity of `docs/NETWORKING.md`).
+    pub fn record_net_block(&self, latency: std::time::Duration) {
+        self.net_latency.lock().unwrap().record(latency.as_nanos() as u64);
+    }
+
+    /// Sum of the per-shard queue-depth gauges: the admission signal
+    /// the net front-end sheds load on when it exceeds the configured
+    /// threshold.
+    pub fn queue_depth_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.queue_depth.load(Ordering::Relaxed)).sum()
+    }
+
     /// Record one decoded frame delivered to the reassembler.
     pub fn record_delivery(&self, bits: usize, enq: Instant, traceback_ns: u64) {
         self.frames_out.fetch_add(1, Ordering::Relaxed);
@@ -127,6 +171,7 @@ impl Metrics {
         let bits = self.bits_out.load(Ordering::Relaxed);
         let execs = self.execs.load(Ordering::Relaxed).max(1);
         let lat = self.latency.lock().unwrap();
+        let net_lat = self.net_latency.lock().unwrap();
         MetricsSnapshot {
             elapsed_s: elapsed,
             frames_in: self.frames_in.load(Ordering::Relaxed),
@@ -151,6 +196,18 @@ impl Metrics {
                     throughput_mbps: f64::from_bits(s.throughput_mbps.load(Ordering::Relaxed)),
                 })
                 .collect(),
+            net: NetSnapshot {
+                sessions_accepted: self.net.sessions_accepted.load(Ordering::Relaxed),
+                sessions_evicted: self.net.sessions_evicted.load(Ordering::Relaxed),
+                sessions_shed: self.net.sessions_shed.load(Ordering::Relaxed),
+                blocks_shed: self.net.blocks_shed.load(Ordering::Relaxed),
+                handshake_rejects: self.net.handshake_rejects.load(Ordering::Relaxed),
+                bytes_in: self.net.bytes_in.load(Ordering::Relaxed),
+                bytes_out: self.net.bytes_out.load(Ordering::Relaxed),
+                blocks: net_lat.count(),
+                block_p50_us: net_lat.percentile(50.0) as f64 / 1e3,
+                block_p99_us: net_lat.percentile(99.0) as f64 / 1e3,
+            },
         }
     }
 }
@@ -191,6 +248,50 @@ pub struct MetricsSnapshot {
     pub latency_p99_us: f64,
     /// Per-shard counters, indexed by shard id.
     pub shards: Vec<ShardSnapshot>,
+    /// Socket front-end counters (all zero without a network server).
+    pub net: NetSnapshot,
+}
+
+/// Point-in-time view of the socket front-end counters.
+#[derive(Clone, Debug, Default)]
+pub struct NetSnapshot {
+    /// Network sessions admitted (TCP + new UDP flows).
+    pub sessions_accepted: u64,
+    /// Sessions evicted (idle timeout, dirty disconnect, protocol error).
+    pub sessions_evicted: u64,
+    /// Sessions load-shed at admission (cap or queue saturation).
+    pub sessions_shed: u64,
+    /// UDP blocks shed on admitted flows under queue saturation.
+    pub blocks_shed: u64,
+    /// TCP handshakes rejected for a config mismatch.
+    pub handshake_rejects: u64,
+    /// Wire bytes received.
+    pub bytes_in: u64,
+    /// Wire bytes sent.
+    pub bytes_out: u64,
+    /// Completed network block/stream decodes measured for latency.
+    pub blocks: u64,
+    /// p50 of end-of-stream -> last-byte-delivered latency (us).
+    pub block_p50_us: f64,
+    /// p99 of end-of-stream -> last-byte-delivered latency (us).
+    pub block_p99_us: f64,
+}
+
+impl NetSnapshot {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("sessions_accepted", json::num(self.sessions_accepted as f64)),
+            ("sessions_evicted", json::num(self.sessions_evicted as f64)),
+            ("sessions_shed", json::num(self.sessions_shed as f64)),
+            ("blocks_shed", json::num(self.blocks_shed as f64)),
+            ("handshake_rejects", json::num(self.handshake_rejects as f64)),
+            ("bytes_in", json::num(self.bytes_in as f64)),
+            ("bytes_out", json::num(self.bytes_out as f64)),
+            ("blocks", json::num(self.blocks as f64)),
+            ("block_p50_us", json::num(self.block_p50_us)),
+            ("block_p99_us", json::num(self.block_p99_us)),
+        ])
+    }
 }
 
 impl MetricsSnapshot {
@@ -236,6 +337,7 @@ impl MetricsSnapshot {
                         .collect(),
                 ),
             ),
+            ("net", self.net.to_json()),
         ])
     }
 }
@@ -321,5 +423,34 @@ mod tests {
     fn zero_shards_clamps_to_one() {
         let m = Metrics::new(0);
         assert_eq!(m.snapshot().shards.len(), 1);
+    }
+
+    #[test]
+    fn net_counters_snapshot_and_serialize() {
+        let m = Metrics::new(2);
+        m.net.sessions_accepted.fetch_add(3, Ordering::Relaxed);
+        m.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+        m.net.sessions_shed.fetch_add(2, Ordering::Relaxed);
+        m.net.bytes_in.fetch_add(100, Ordering::Relaxed);
+        m.record_net_block(std::time::Duration::from_micros(500));
+        m.record_net_block(std::time::Duration::from_micros(700));
+        let s = m.snapshot();
+        assert_eq!(s.net.sessions_accepted, 3);
+        assert_eq!(s.net.sessions_evicted, 1);
+        assert_eq!(s.net.sessions_shed, 2);
+        assert_eq!(s.net.blocks, 2);
+        assert!(s.net.block_p50_us >= 400.0 && s.net.block_p99_us <= 800.0,
+                "p50={} p99={}", s.net.block_p50_us, s.net.block_p99_us);
+        let j = s.to_json().to_string_pretty();
+        assert!(j.contains("sessions_accepted"));
+        assert!(j.contains("block_p99_us"));
+    }
+
+    #[test]
+    fn queue_depth_total_sums_gauges() {
+        let m = Metrics::new(3);
+        m.shard(0).queue_depth.store(4, Ordering::Relaxed);
+        m.shard(2).queue_depth.store(6, Ordering::Relaxed);
+        assert_eq!(m.queue_depth_total(), 10);
     }
 }

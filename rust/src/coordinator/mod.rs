@@ -47,7 +47,7 @@ use std::time::Instant;
 use crate::viterbi::types::FrameJob;
 
 pub use backend::BackendSpec;
-pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, NetSnapshot, NetStats, ShardSnapshot};
 pub use server::{Coordinator, Session, SessionHandle};
 pub use shard::home_shard;
 

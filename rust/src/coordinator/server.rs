@@ -191,7 +191,7 @@ impl Coordinator {
     /// decoded payload chunks out.
     pub fn open_session(&self) -> Result<Session> {
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        let (out_tx, out_rx) = mpsc::sync_channel(1024);
+        let (out_tx, out_rx) = mpsc::sync_channel(crate::defaults::SESSION_OUTPUT_DEPTH);
         self.ctrl
             .send(Msg::Open { session: id, out: out_tx })
             .map_err(|_| Error::pipeline("pipeline is shut down"))?;
@@ -221,6 +221,13 @@ impl Coordinator {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The shared metrics hub itself (not a snapshot) — the counters
+    /// the net front-end increments for accepted/evicted/shed sessions
+    /// and reads for queue-saturation admission control.
+    pub fn metrics_hub(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 
     /// Shut down: all sessions must be finished/dropped first. Joins

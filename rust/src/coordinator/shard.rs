@@ -149,7 +149,8 @@ impl ShardQueue {
 /// ids across shards without correlating with the allocation order.
 pub fn home_shard(session: u64, n_shards: usize) -> usize {
     debug_assert!(n_shards > 0);
-    ((session.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) % n_shards.max(1) as u64) as usize
+    ((session.wrapping_mul(crate::defaults::SESSION_AFFINITY_MULTIPLIER) >> 32)
+        % n_shards.max(1) as u64) as usize
 }
 
 /// Steal one frame on behalf of shard `me`: scan the sibling queues,

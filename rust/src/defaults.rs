@@ -56,6 +56,37 @@ pub fn default_shards() -> usize {
 /// Bounded input queue depth (frames) before backpressure.
 pub const QUEUE_DEPTH: usize = 1024;
 
+/// Per-session output channel depth (decoded chunks buffered between
+/// the reassembler and a slow consumer before delivery blocks).
+pub const SESSION_OUTPUT_DEPTH: usize = 1024;
+
+/// Session-affinity hash multiplier (Fibonacci hashing on the golden
+/// ratio, `2^64 / phi`): `coordinator::home_shard` mixes the session id
+/// with this constant so consecutive ids spread evenly across engine
+/// shards while every frame of one session keeps the same home shard.
+pub const SESSION_AFFINITY_MULTIPLIER: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// How long an idle engine shard waits on its own queue before
+/// attempting to steal from siblings (microseconds).
+pub const STEAL_POLL_US: u64 = 200;
+
+// --- net: socket serving front-end (`tcvd::net`) -----------------------
+
+/// Hard cap on concurrent network sessions (TCP connections + live UDP
+/// flows). Admissions beyond the cap are load-shed with a typed reject.
+pub const NET_MAX_SESSIONS: usize = 1024;
+
+/// Idle eviction timeout for network sessions, in milliseconds: a TCP
+/// connection that sends nothing for this long is evicted (the session
+/// is closed through the normal `finish` path); a UDP flow with no
+/// datagrams for this long is swept from the flow table.
+pub const NET_IDLE_TIMEOUT_MS: u64 = 30_000;
+
+/// Upper bound on one length-prefixed wire frame's payload (bytes).
+/// Guards the server against allocating unbounded buffers from a
+/// malformed or hostile length prefix.
+pub const NET_MAX_FRAME_BYTES: usize = 1 << 22;
+
 /// Default stream termination mode: zero-flushed blocks (both trellis
 /// ends pinned to state 0 — the classic deep-space convention). SDR /
 /// cellular block traffic (LTE PBCH/PDCCH style) switches to

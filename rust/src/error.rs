@@ -24,6 +24,9 @@ pub enum Error {
     /// Streaming pipeline failures: geometry mismatch at startup,
     /// pushes into a shut-down pipeline, worker panics.
     Pipeline(String),
+    /// Network serving failures (`tcvd::net`): socket I/O, malformed
+    /// wire frames, handshake rejects, evicted or load-shed sessions.
+    Net(String),
 }
 
 impl Error {
@@ -47,6 +50,11 @@ impl Error {
         Error::Pipeline(msg.to_string())
     }
 
+    /// Build a [`Error::Net`] from anything displayable.
+    pub fn net(msg: impl fmt::Display) -> Error {
+        Error::Net(msg.to_string())
+    }
+
     /// The subsystem label this error is classified under.
     pub fn kind(&self) -> &'static str {
         match self {
@@ -54,6 +62,7 @@ impl Error {
             Error::Artifact(_) => "artifact",
             Error::Backend(_) => "backend",
             Error::Pipeline(_) => "pipeline",
+            Error::Net(_) => "net",
         }
     }
 
@@ -63,7 +72,8 @@ impl Error {
             Error::Config(m)
             | Error::Artifact(m)
             | Error::Backend(m)
-            | Error::Pipeline(m) => m,
+            | Error::Pipeline(m)
+            | Error::Net(m) => m,
         }
     }
 
@@ -74,6 +84,7 @@ impl Error {
             Error::Artifact(m) => Error::Artifact(format!("{ctx}: {m}")),
             Error::Backend(m) => Error::Backend(format!("{ctx}: {m}")),
             Error::Pipeline(m) => Error::Pipeline(format!("{ctx}: {m}")),
+            Error::Net(m) => Error::Net(format!("{ctx}: {m}")),
         }
     }
 }
@@ -102,6 +113,8 @@ pub trait ResultExt<T> {
     fn or_backend(self, ctx: impl fmt::Display) -> Result<T>;
     /// Map the error into [`Error::Pipeline`] as `ctx: cause`.
     fn or_pipeline(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Map the error into [`Error::Net`] as `ctx: cause`.
+    fn or_net(self, ctx: impl fmt::Display) -> Result<T>;
 }
 
 impl<T, E: fmt::Display> ResultExt<T> for std::result::Result<T, E> {
@@ -119,6 +132,10 @@ impl<T, E: fmt::Display> ResultExt<T> for std::result::Result<T, E> {
 
     fn or_pipeline(self, ctx: impl fmt::Display) -> Result<T> {
         self.map_err(|e| Error::Pipeline(format!("{ctx}: {e}")))
+    }
+
+    fn or_net(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::Net(format!("{ctx}: {e}")))
     }
 }
 

@@ -71,6 +71,7 @@ pub mod ber;
 pub mod config;
 pub mod runtime;
 pub mod coordinator;
+pub mod net;
 pub mod api;
 
 pub use api::{BackendKind, Decoder, DecoderBuilder};

@@ -6,8 +6,11 @@
 //! * `encode`    — encode random or file bits, write coded bits
 //! * `decode`    — decode an LLR stream (f32 little-endian file)
 //! * `ber`       — Eb/N0 sweep (Fig-13-style), JSON + table output
-//! * `serve`     — run the streaming coordinator under a synthetic
-//!                 multi-session SDR workload, report throughput/latency
+//! * `serve`     — serve the coordinator over TCP/UDP sockets
+//!                 (`--listen`/`--udp`; see `docs/NETWORKING.md`), or —
+//!                 with no listen address — run the legacy synthetic
+//!                 multi-session SDR workload and report metrics
+//! * `metrics`   — fetch a metrics snapshot from a running server
 //!
 //! Every pipeline is constructed through `tcvd::api::DecoderBuilder`
 //! (TOML config via `--config`, then `--flag` overrides); all errors
@@ -21,7 +24,9 @@ use tcvd::channel::{awgn::AwgnChannel, bpsk};
 use tcvd::cli::{print_usage, Args, CommandSpec, FlagSpec};
 use tcvd::coding::{registry, Encoder, TerminationMode};
 use tcvd::defaults;
+use tcvd::config::Config;
 use tcvd::error::{Error, Result, ResultExt};
+use tcvd::net::NetConfig;
 use tcvd::runtime::{client, Manifest};
 use tcvd::util::rng::Rng;
 
@@ -109,15 +114,51 @@ fn command_specs() -> Vec<CommandSpec> {
             f.push(FlagSpec::new("out", "PATH", "write the sweep as JSON here"));
             f
         }),
-        CommandSpec::new("serve", "streaming coordinator under a synthetic SDR workload", {
+        CommandSpec::new("serve", "serve over TCP/UDP sockets, or run the synthetic workload", {
             let mut f = api::builder_flags();
-            f.push(FlagSpec::new("sessions", "N", "concurrent sessions (default 8)"));
-            f.push(FlagSpec::new("bits", "N", "payload bits per session (default 65536)"));
-            f.push(FlagSpec::new("snr", "DB", "Eb/N0 in dB (default 5.0)"));
-            f.push(FlagSpec::new("seed", "N", "workload seed (default 99)"));
+            f.push(FlagSpec::new(
+                "listen",
+                "ADDR",
+                "TCP listen address (host:port; port 0 = OS-assigned). \
+                 Enables socket serving",
+            ));
+            f.push(FlagSpec::new("udp", "ADDR", "UDP bind address (one datagram = one block)"));
+            f.push(FlagSpec::new(
+                "max-sessions",
+                "N",
+                format!("concurrent-session cap (default {})", defaults::NET_MAX_SESSIONS),
+            ));
+            f.push(FlagSpec::new(
+                "idle-timeout-ms",
+                "MS",
+                format!("idle session eviction (default {})", defaults::NET_IDLE_TIMEOUT_MS),
+            ));
+            f.push(FlagSpec::new(
+                "shed-queue-depth",
+                "N",
+                "shed admissions at this summed shard queue depth (default: queue-depth)",
+            ));
+            f.push(FlagSpec::new(
+                "duration-s",
+                "S",
+                "serve for S seconds then print metrics and exit (default: run until killed)",
+            ));
+            f.push(FlagSpec::new("sessions", "N", "synthetic mode: concurrent sessions (default 8)"));
+            f.push(FlagSpec::new(
+                "bits",
+                "N",
+                "synthetic mode: payload bits per session (default 65536)",
+            ));
+            f.push(FlagSpec::new("snr", "DB", "synthetic mode: Eb/N0 in dB (default 5.0)"));
+            f.push(FlagSpec::new("seed", "N", "synthetic mode: workload seed (default 99)"));
             f.push(FlagSpec::new("json", "", "also print metrics as JSON"));
             f
         }),
+        CommandSpec::new(
+            "metrics",
+            "fetch a metrics snapshot (JSON) from a running tcvd server",
+            vec![FlagSpec::new("connect", "ADDR", "server TCP address (required)")],
+        ),
     ]
 }
 
@@ -144,6 +185,7 @@ fn run(argv: &[String]) -> Result<()> {
         "decode" => cmd_decode(&args),
         "ber" => cmd_ber(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         _ => unreachable!("spec table covers dispatch"),
     }
 }
@@ -382,11 +424,109 @@ fn cmd_ber(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr =
+        args.get("connect").ok_or_else(|| Error::config("--connect <host:port> is required"))?;
+    println!("{}", tcvd::net::fetch_metrics(addr)?);
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    // the [net] section needs the raw config, not just the builder
+    let cfg = match args.get("config") {
+        Some(p) => Some(Config::from_file(std::path::Path::new(p))?),
+        None => None,
+    };
+    let builder = match &cfg {
+        Some(c) => DecoderBuilder::from_config(c)?,
+        None => DecoderBuilder::new(),
+    }
+    .apply_flags(args)?;
+    let tcp = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| cfg.as_ref().and_then(|c| c.net_listen.clone()));
+    let udp = args
+        .get("udp")
+        .map(str::to_string)
+        .or_else(|| cfg.as_ref().and_then(|c| c.net_udp.clone()));
+    if tcp.is_some() || udp.is_some() {
+        let mut net = cfg.as_ref().map(NetConfig::from_config).unwrap_or_default();
+        net.max_sessions = args.get_usize("max-sessions", net.max_sessions)?;
+        net.idle_timeout = std::time::Duration::from_millis(
+            args.get_u64("idle-timeout-ms", net.idle_timeout.as_millis() as u64)?,
+        );
+        if let Some(v) = args.get("shed-queue-depth") {
+            let v = v.to_string();
+            net.shed_queue_depth =
+                Some(v.parse().or_config(format!("--shed-queue-depth {v:?}"))?);
+        }
+        if net.max_sessions == 0 {
+            return Err(Error::config("--max-sessions must be positive"));
+        }
+        if net.idle_timeout.is_zero() {
+            return Err(Error::config("--idle-timeout-ms must be positive"));
+        }
+        return cmd_serve_sockets(args, builder, tcp.as_deref(), udp.as_deref(), net);
+    }
+    cmd_serve_synthetic(args, builder)
+}
+
+/// Socket serving mode: bind, announce the bound addresses (parsed by
+/// scripts and the CI smoke stage), serve until `--duration-s` elapses
+/// or the process is killed.
+fn cmd_serve_sockets(
+    args: &Args,
+    builder: DecoderBuilder,
+    tcp: Option<&str>,
+    udp: Option<&str>,
+    net: NetConfig,
+) -> Result<()> {
+    let server = tcvd::net::Server::start(builder, tcp, udp, net)?;
+    if let Some(a) = server.tcp_addr() {
+        println!("tcvd serve: listening tcp={a}");
+    }
+    if let Some(a) = server.udp_addr() {
+        println!("tcvd serve: listening udp={a}");
+    }
+    let duration = args.get_f64("duration-s", 0.0)?;
+    if duration > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration));
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let snap = server.metrics();
+    println!(
+        "sessions: accepted={} evicted={} shed={} blocks_shed={} handshake_rejects={}",
+        snap.net.sessions_accepted,
+        snap.net.sessions_evicted,
+        snap.net.sessions_shed,
+        snap.net.blocks_shed,
+        snap.net.handshake_rejects
+    );
+    println!(
+        "wire: in={}B out={}B  blocks={} p50={:.0}us p99={:.0}us",
+        snap.net.bytes_in,
+        snap.net.bytes_out,
+        snap.net.blocks,
+        snap.net.block_p50_us,
+        snap.net.block_p99_us
+    );
+    if args.get_bool("json") {
+        println!("{}", snap.to_json().to_string_pretty());
+    }
+    server.shutdown()?;
+    Ok(())
+}
+
+/// Legacy synthetic mode: in-process multi-session SDR workload.
+fn cmd_serve_synthetic(args: &Args, builder: DecoderBuilder) -> Result<()> {
     let sessions = args.get_usize("sessions", 8)?;
     let bits_per_session = args.get_usize("bits", 65536)?;
     let snr = args.get_f64("snr", 5.0)?;
-    let coord = builder_from_args(args)?.serve()?;
+    let coord = builder.serve()?;
 
     let seed0 = args.get_u64("seed", 99)?;
     let code = registry::paper_code();

@@ -1,0 +1,372 @@
+//! Loopback load/soak harness for the socket front-end: N worker
+//! threads churn concurrent sessions against a running server — a
+//! fresh TCP connection (or UDP flow) per block, so the session
+//! lifecycle (admit / evict / shed) is exercised continuously, not
+//! just the steady state — and every decoded block is checked
+//! **bit-identical** against a one-shot [`Decoder`](crate::Decoder)
+//! oracle decoding the same LLRs in-process.
+//!
+//! Shed rejections are retried (and counted), so a run against an
+//! undersized server converges instead of failing; mismatches and
+//! hard failures never retry. The aggregate throughput / latency
+//! numbers feed `scripts/bench_snapshot.py`'s `net` section; the
+//! `loadgen` binary wraps this with CLI flags and JSON output.
+
+use std::time::{Duration, Instant};
+
+use crate::api::{DecoderBuilder, TerminationMode};
+use crate::channel::awgn::AwgnChannel;
+use crate::channel::bpsk;
+use crate::coding::{registry, Code, Encoder};
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::tcp::TcpClient;
+use super::udp::UdpClient;
+
+/// Which transport the harness drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    Tcp,
+    Udp,
+}
+
+impl Transport {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Tcp => "tcp",
+            Transport::Udp => "udp",
+        }
+    }
+}
+
+/// Harness parameters.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// Concurrent worker threads (each worker is one live session at a
+    /// time, reconnecting per block — session churn).
+    pub sessions: usize,
+    /// Blocks each worker decodes.
+    pub blocks_per_session: usize,
+    /// Trellis stages per block (must be a multiple of the tile
+    /// payload).
+    pub block_stages: usize,
+    /// AWGN channel Eb/N0 in dB.
+    pub ebn0_db: f64,
+    /// Workload RNG seed.
+    pub seed: u64,
+    /// Transport to drive.
+    pub transport: Transport,
+    /// Give up on one block after this many shed-retries.
+    pub max_retries: usize,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            sessions: 8,
+            blocks_per_session: 4,
+            block_stages: 256,
+            ebn0_db: 5.0,
+            seed: 1,
+            transport: Transport::Tcp,
+            max_retries: 200,
+        }
+    }
+}
+
+/// Aggregated result of one harness run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub transport: String,
+    pub sessions: usize,
+    /// Blocks decoded and verified.
+    pub blocks: u64,
+    /// Shed rejections observed (each was retried).
+    pub shed_retries: u64,
+    /// Blocks abandoned after `max_retries` sheds or a hard error.
+    pub failures: u64,
+    /// Blocks whose bits differed from the in-process oracle.
+    pub mismatches: u64,
+    /// Total decoded payload bits across all verified blocks.
+    pub payload_bits: u64,
+    /// Wall-clock run time.
+    pub elapsed_s: f64,
+    /// Aggregate decoded throughput across all sessions, Mb/s.
+    pub aggregate_mbps: f64,
+    /// Per-block end-to-end latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LoadgenReport {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("transport", json::s(&self.transport)),
+            ("sessions", json::num(self.sessions as f64)),
+            ("blocks", json::num(self.blocks as f64)),
+            ("shed_retries", json::num(self.shed_retries as f64)),
+            ("failures", json::num(self.failures as f64)),
+            ("mismatches", json::num(self.mismatches as f64)),
+            ("payload_bits", json::num(self.payload_bits as f64)),
+            ("elapsed_s", json::num(self.elapsed_s)),
+            ("aggregate_mbps", json::num(self.aggregate_mbps)),
+            ("p50_ms", json::num(self.p50_ms)),
+            ("p99_ms", json::num(self.p99_ms)),
+        ])
+    }
+
+    /// Soak verdict: every block verified bit-identical, nothing
+    /// abandoned, optional latency/throughput bounds hold.
+    pub fn check(&self, max_p99_ms: Option<f64>, min_aggregate_mbps: Option<f64>) -> Result<()> {
+        if self.mismatches > 0 {
+            return Err(Error::net(format!(
+                "{} of {} blocks differed from the in-process oracle",
+                self.mismatches, self.blocks
+            )));
+        }
+        if self.failures > 0 {
+            return Err(Error::net(format!("{} blocks failed or were abandoned", self.failures)));
+        }
+        if let Some(bound) = max_p99_ms {
+            if self.p99_ms > bound {
+                return Err(Error::net(format!(
+                    "p99 latency {:.3} ms exceeds the {bound:.3} ms bound",
+                    self.p99_ms
+                )));
+            }
+        }
+        if let Some(bound) = min_aggregate_mbps {
+            if self.aggregate_mbps < bound {
+                return Err(Error::net(format!(
+                    "aggregate throughput {:.3} Mb/s is under the {bound:.3} Mb/s bound",
+                    self.aggregate_mbps
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Synthesize one block's LLRs: random payload, terminated encode per
+/// the mode, BPSK + AWGN at `ebn0_db`. `stages` is the trellis length
+/// of the resulting stream.
+pub fn make_block_llrs(
+    code: &Code,
+    mode: TerminationMode,
+    stages: usize,
+    ebn0_db: f64,
+    seed: u64,
+) -> Vec<f32> {
+    let memory = (code.k() - 1) as usize;
+    let info = match mode {
+        TerminationMode::Flushed => stages.saturating_sub(memory).max(1),
+        _ => stages,
+    };
+    let bits = Rng::new(seed).bits(info);
+    let mut enc = Encoder::new(code.clone());
+    let (coded, n) = enc.encode_terminated(&bits, mode);
+    debug_assert_eq!(n, stages, "workload stage accounting");
+    let tx = bpsk::modulate(&coded);
+    let rate = 1.0 / code.beta() as f64;
+    let mut ch = AwgnChannel::new(ebn0_db, rate, seed ^ 0x5EED_F00D);
+    ch.transmit(&tx).iter().map(|&x| x as f32).collect()
+}
+
+fn is_shed(e: &Error) -> bool {
+    matches!(e, Error::Net(m) if m.contains("rejected") || m.contains("shed"))
+}
+
+struct WorkerTally {
+    blocks: u64,
+    shed_retries: u64,
+    failures: u64,
+    mismatches: u64,
+    payload_bits: u64,
+    latencies_ms: Vec<f64>,
+}
+
+fn run_worker(
+    addr: &str,
+    builder: &DecoderBuilder,
+    opts: &LoadgenOptions,
+    worker: usize,
+) -> Result<WorkerTally> {
+    // the oracle: same parameters, one in-process lane (bit-identical
+    // to any lane count), reused across this worker's blocks
+    let mut oracle = builder.clone().shards(1).build()?;
+    let code = registry::lookup(builder.code_name()).map_err(Error::config)?;
+    let mode = builder.termination_mode();
+    let beta = code.beta();
+    let chunk_llrs = (builder.tile_config().payload * beta).max(beta);
+    let mut tally = WorkerTally {
+        blocks: 0,
+        shed_retries: 0,
+        failures: 0,
+        mismatches: 0,
+        payload_bits: 0,
+        latencies_ms: Vec::with_capacity(opts.blocks_per_session),
+    };
+    for block in 0..opts.blocks_per_session {
+        let seed = opts
+            .seed
+            .wrapping_mul(1_000_003)
+            .wrapping_add((worker as u64) << 20)
+            .wrapping_add(block as u64);
+        let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
+        let want = oracle.decode_stream(&llr)?;
+        // fresh session per block: connect, decode, disconnect
+        let mut retries = 0;
+        let got = loop {
+            let t0 = Instant::now();
+            let attempt: Result<Vec<u8>> = match opts.transport {
+                Transport::Tcp => TcpClient::connect(addr, builder).and_then(|mut c| {
+                    for chunk in llr.chunks(chunk_llrs) {
+                        c.push(chunk)?;
+                    }
+                    c.finish()
+                }),
+                Transport::Udp => {
+                    let flow = (worker as u64) << 32 | block as u64;
+                    UdpClient::connect(addr, flow).and_then(|mut c| c.decode_block(&llr))
+                }
+            };
+            match attempt {
+                Ok(bits) => {
+                    tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    break Some(bits);
+                }
+                Err(e) if is_shed(&e) && retries < opts.max_retries => {
+                    retries += 1;
+                    tally.shed_retries += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break None,
+            }
+        };
+        match got {
+            Some(bits) if bits == want => {
+                tally.blocks += 1;
+                tally.payload_bits += bits.len() as u64;
+            }
+            Some(_) => tally.mismatches += 1,
+            None => tally.failures += 1,
+        }
+    }
+    Ok(tally)
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Run the harness against a server at `addr` (host:port; the UDP
+/// transport interprets it as the server's UDP address). The builder
+/// must describe the same pipeline the server runs — its parameters
+/// drive both the HELLO handshake and the in-process oracle.
+pub fn run(addr: &str, builder: &DecoderBuilder, opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    if opts.sessions == 0 || opts.blocks_per_session == 0 {
+        return Err(Error::config("loadgen needs at least one session and one block"));
+    }
+    let tile = builder.tile_config();
+    if opts.block_stages == 0 || opts.block_stages % tile.payload != 0 {
+        return Err(Error::config(format!(
+            "block_stages ({}) must be a positive multiple of the tile payload ({})",
+            opts.block_stages, tile.payload
+        )));
+    }
+    let t0 = Instant::now();
+    let mut tallies: Vec<Result<WorkerTally>> = Vec::with_capacity(opts.sessions);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(opts.sessions);
+        for w in 0..opts.sessions {
+            handles.push(scope.spawn(move || run_worker(addr, builder, opts, w)));
+        }
+        for h in handles {
+            tallies.push(h.join().expect("loadgen worker panicked"));
+        }
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let mut blocks = 0u64;
+    let mut shed_retries = 0u64;
+    let mut failures = 0u64;
+    let mut mismatches = 0u64;
+    let mut payload_bits = 0u64;
+    let mut latencies_ms = Vec::new();
+    for t in tallies {
+        let t = t?;
+        blocks += t.blocks;
+        shed_retries += t.shed_retries;
+        failures += t.failures;
+        mismatches += t.mismatches;
+        payload_bits += t.payload_bits;
+        latencies_ms.extend(t.latencies_ms);
+    }
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(LoadgenReport {
+        transport: opts.transport.name().to_string(),
+        sessions: opts.sessions,
+        blocks,
+        shed_retries,
+        failures,
+        mismatches,
+        payload_bits,
+        elapsed_s,
+        aggregate_mbps: payload_bits as f64 / elapsed_s.max(1e-9) / 1e6,
+        p50_ms: percentile(&latencies_ms, 50.0),
+        p99_ms: percentile(&latencies_ms, 99.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_stage_accounting_per_mode() {
+        let code = registry::paper_code();
+        for mode in
+            [TerminationMode::Flushed, TerminationMode::TailBiting, TerminationMode::Truncated]
+        {
+            let llr = make_block_llrs(&code, mode, 64, 6.0, 7);
+            assert_eq!(llr.len(), 64 * code.beta(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn report_check_enforces_bounds() {
+        let mut r = LoadgenReport {
+            transport: "tcp".into(),
+            sessions: 2,
+            blocks: 4,
+            shed_retries: 1,
+            failures: 0,
+            mismatches: 0,
+            payload_bits: 1024,
+            elapsed_s: 0.5,
+            aggregate_mbps: 10.0,
+            p50_ms: 1.0,
+            p99_ms: 5.0,
+        };
+        r.check(None, None).unwrap();
+        r.check(Some(10.0), Some(1.0)).unwrap();
+        assert!(r.check(Some(1.0), None).is_err(), "p99 bound");
+        assert!(r.check(None, Some(100.0)).is_err(), "throughput bound");
+        r.mismatches = 1;
+        assert!(r.check(None, None).is_err(), "mismatches fail the soak");
+        let j = r.to_json().to_string_pretty();
+        assert!(j.contains("aggregate_mbps"));
+    }
+
+    #[test]
+    fn bad_geometry_rejected() {
+        let b = crate::api::DecoderBuilder::new().tile_dims(64, 32, 32);
+        let opts = LoadgenOptions { block_stages: 100, ..LoadgenOptions::default() };
+        assert!(run("127.0.0.1:1", &b, &opts).is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! `tcvd::net` — the socket serving front-end: the sharded
+//! [`Coordinator`] exposed over TCP and UDP with session lifecycle,
+//! admission control and load-shedding. `std::net` only (the repo is
+//! offline): thread-per-connection TCP with the pipeline's bounded
+//! channels providing backpressure, and a single-threaded UDP datagram
+//! loop for block traffic.
+//!
+//! * **TCP** ([`tcp`]): one connection = one streaming [`Session`].
+//!   The length-prefixed framing and the HELLO handshake (code /
+//!   backend / termination / tile, lowered through
+//!   [`DecoderBuilder`]'s own name parsers) live in [`protocol`].
+//! * **UDP** ([`udp`]): one datagram = one self-contained block; a
+//!   flow (peer address + flow id) is the session-lifetime unit, built
+//!   for tail-biting block traffic.
+//! * **Lifecycle** ([`session_table`]): a hard cap on concurrent
+//!   sessions, idle eviction with configurable timeouts, and explicit
+//!   load-shedding (typed REJECT frames / SHED replies) once the shard
+//!   queues saturate — counted in [`Metrics`](crate::coordinator::Metrics)
+//!   and exported through the metrics endpoint.
+//! * **Load harness** ([`loadgen`]): churns N concurrent loopback
+//!   sessions and asserts bit-identity against the one-shot
+//!   [`Decoder`](crate::Decoder) oracle.
+//!
+//! Wire format tables, the session state machine and the
+//! eviction/shedding model are documented in `docs/NETWORKING.md`.
+
+pub mod loadgen;
+pub mod protocol;
+pub mod session_table;
+pub mod tcp;
+pub mod udp;
+
+use std::net::{SocketAddr, TcpListener, TcpStream, UdpSocket};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{BackendKind, DecoderBuilder, TerminationMode};
+use crate::config::Config;
+use crate::coordinator::{Coordinator, Metrics, MetricsSnapshot};
+use crate::defaults;
+use crate::error::{Error, Result, ResultExt};
+
+pub use protocol::{Ack, Hello, PROTO_VERSION};
+pub use session_table::{FlowTouch, SessionTable};
+pub use tcp::{fetch_metrics, TcpClient};
+pub use udp::UdpClient;
+
+/// Tunables of the socket front-end (the `[net]` TOML section /
+/// `tcvd serve` flags; defaults from [`crate::defaults`]).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Hard cap on concurrent sessions (TCP connections + UDP flows).
+    pub max_sessions: usize,
+    /// Idle eviction timeout (TCP read timeout / UDP flow sweep age).
+    pub idle_timeout: Duration,
+    /// Shed new sessions (and UDP blocks) once the summed shard queue
+    /// depth reaches this; `None` uses the pipeline's `queue_depth`.
+    pub shed_queue_depth: Option<usize>,
+    /// Upper bound on one TCP wire frame's payload, bytes.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_sessions: defaults::NET_MAX_SESSIONS,
+            idle_timeout: Duration::from_millis(defaults::NET_IDLE_TIMEOUT_MS),
+            shed_queue_depth: None,
+            max_frame_bytes: defaults::NET_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Read the `[net]` keys of a parsed [`Config`].
+    pub fn from_config(cfg: &Config) -> NetConfig {
+        NetConfig {
+            max_sessions: cfg.net_max_sessions,
+            idle_timeout: Duration::from_millis(cfg.net_idle_timeout_ms),
+            shed_queue_depth: cfg.net_shed_queue_depth,
+            max_frame_bytes: defaults::NET_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// The session contract one server serves: every TCP handshake must
+/// name exactly this code/backend/termination/tile (lowered through
+/// the same [`DecoderBuilder`] parsers the CLI uses), so a client
+/// never silently decodes against a pipeline with different framing.
+#[derive(Clone, Debug)]
+pub struct Contract {
+    code: String,
+    backend: BackendKind,
+    termination: TerminationMode,
+    payload: usize,
+    head: usize,
+    tail: usize,
+}
+
+impl Contract {
+    /// The contract of the pipeline `builder` describes.
+    pub fn of_builder(builder: &DecoderBuilder) -> Contract {
+        let tile = builder.tile_config();
+        Contract {
+            code: builder.code_name().to_string(),
+            backend: builder.backend_kind().clone(),
+            termination: builder.termination_mode(),
+            payload: tile.payload,
+            head: tile.head,
+            tail: tile.tail,
+        }
+    }
+
+    /// The HELLO a client of this contract sends.
+    pub fn hello(&self) -> Hello {
+        Hello {
+            version: PROTO_VERSION,
+            code: self.code.clone(),
+            backend: self.backend.name(),
+            termination: self.termination.as_str().to_string(),
+            payload_stages: self.payload as u32,
+            head_stages: self.head as u32,
+            tail_stages: self.tail as u32,
+        }
+    }
+
+    /// Validate a client HELLO against this contract. The names are
+    /// lowered through the builder facade's parsers (unknown names are
+    /// the same typed config errors the CLI reports), then compared
+    /// against the served pipeline.
+    pub fn check_hello(&self, hello: &Hello) -> Result<()> {
+        if hello.version != PROTO_VERSION {
+            return Err(Error::net(format!(
+                "protocol version {} not supported (server speaks {PROTO_VERSION})",
+                hello.version
+            )));
+        }
+        let asked = DecoderBuilder::new()
+            .code(&hello.code)
+            .backend_name(&hello.backend)?
+            .termination_name(&hello.termination)?;
+        if hello.code != self.code {
+            return Err(Error::net(format!(
+                "code mismatch: client asked for {:?}, server runs {:?}",
+                hello.code, self.code
+            )));
+        }
+        if *asked.backend_kind() != self.backend {
+            return Err(Error::net(format!(
+                "backend mismatch: client asked for {:?}, server runs {:?}",
+                hello.backend,
+                self.backend.name()
+            )));
+        }
+        if asked.termination_mode() != self.termination {
+            return Err(Error::net(format!(
+                "termination mismatch: client asked for {}, server runs {}",
+                hello.termination, self.termination
+            )));
+        }
+        let (p, h, t) =
+            (hello.payload_stages as usize, hello.head_stages as usize, hello.tail_stages as usize);
+        if (p, h, t) != (self.payload, self.head, self.tail) {
+            return Err(Error::net(format!(
+                "tile mismatch: client framed {p}+{h}/{t}, server runs {}+{}/{}",
+                self.payload, self.head, self.tail
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Shared state of one running server (transport loops + connection
+/// threads hold an `Arc` each).
+pub(crate) struct ServerCtx {
+    pub coord: Coordinator,
+    pub metrics: Arc<Metrics>,
+    pub contract: Contract,
+    pub net: NetConfig,
+    pub table: SessionTable,
+    /// Resolved queue-saturation threshold (see
+    /// [`NetConfig::shed_queue_depth`]).
+    pub shed_queue_depth: usize,
+    pub shutdown: AtomicBool,
+    /// Live TCP connection threads (shutdown drains this).
+    pub conns: AtomicUsize,
+}
+
+impl ServerCtx {
+    /// Admission signal: shed when the shard queues are saturated.
+    pub fn queues_saturated(&self) -> bool {
+        self.metrics.queue_depth_total() >= self.shed_queue_depth as u64
+    }
+}
+
+/// A running socket front-end over one [`Coordinator`]. Construct with
+/// [`Server::start`]; the OS-assigned addresses are readable via
+/// [`tcp_addr`](Server::tcp_addr) / [`udp_addr`](Server::udp_addr)
+/// (bind to port 0 for loopback tests).
+pub struct Server {
+    ctx: Arc<ServerCtx>,
+    tcp_addr: Option<SocketAddr>,
+    udp_addr: Option<SocketAddr>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the pipeline `builder` describes and serve it on the given
+    /// listen addresses (at least one of `tcp`/`udp`; `"127.0.0.1:0"`
+    /// binds an OS-assigned loopback port).
+    pub fn start(
+        builder: DecoderBuilder,
+        tcp: Option<&str>,
+        udp: Option<&str>,
+        net: NetConfig,
+    ) -> Result<Server> {
+        if tcp.is_none() && udp.is_none() {
+            return Err(Error::config("Server::start needs a TCP or UDP listen address"));
+        }
+        let contract = Contract::of_builder(&builder);
+        let shed_queue_depth =
+            net.shed_queue_depth.unwrap_or(builder.to_coordinator_config().queue_depth);
+        let coord = builder.serve()?;
+        let metrics = coord.metrics_hub();
+        let table = SessionTable::new(net.max_sessions, net.idle_timeout);
+        let listener = match tcp {
+            Some(addr) => {
+                Some(TcpListener::bind(addr).or_net(format!("binding tcp listener on {addr}"))?)
+            }
+            None => None,
+        };
+        let socket = match udp {
+            Some(addr) => {
+                Some(UdpSocket::bind(addr).or_net(format!("binding udp socket on {addr}"))?)
+            }
+            None => None,
+        };
+        let tcp_addr = match &listener {
+            Some(l) => Some(l.local_addr().or_net("reading tcp listener address")?),
+            None => None,
+        };
+        let udp_addr = match &socket {
+            Some(s) => Some(s.local_addr().or_net("reading udp socket address")?),
+            None => None,
+        };
+        let ctx = Arc::new(ServerCtx {
+            coord,
+            metrics,
+            contract,
+            net,
+            table,
+            shed_queue_depth,
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+        });
+        let mut threads = Vec::new();
+        if let Some(listener) = listener {
+            let ctx2 = ctx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tcvd-net-accept".into())
+                    .spawn(move || tcp::run_acceptor(listener, ctx2))
+                    .or_net("spawning tcp acceptor")?,
+            );
+        }
+        if let Some(socket) = socket {
+            let ctx2 = ctx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tcvd-net-udp".into())
+                    .spawn(move || udp::run_udp(socket, ctx2))
+                    .or_net("spawning udp loop")?,
+            );
+        }
+        Ok(Server { ctx, tcp_addr, udp_addr, threads })
+    }
+
+    /// The bound TCP listen address, if TCP serving is enabled.
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        self.tcp_addr
+    }
+
+    /// The bound UDP address, if UDP serving is enabled.
+    pub fn udp_addr(&self) -> Option<SocketAddr> {
+        self.udp_addr
+    }
+
+    /// Point-in-time pipeline + net metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.ctx.metrics.snapshot()
+    }
+
+    /// Stop accepting, drain connection threads (bounded wait), then
+    /// shut the pipeline down.
+    pub fn shutdown(self) -> Result<()> {
+        let Server { ctx, tcp_addr, udp_addr: _, threads } = self;
+        ctx.shutdown.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a no-op connection
+        if let Some(addr) = tcp_addr {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+        }
+        for t in threads {
+            t.join().map_err(|_| Error::net("transport thread panicked"))?;
+        }
+        // bounded wait for straggling connection threads; live clients
+        // see their sockets close when the threads exit
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while ctx.conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        match Arc::try_unwrap(ctx) {
+            Ok(ctx) => ctx.coord.shutdown(),
+            // a straggler still holds the context: dropping our Arc
+            // lets the pipeline unwind when the last thread exits
+            Err(_) => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cpu_builder() -> DecoderBuilder {
+        DecoderBuilder::new().backend_name("scalar").unwrap().tile_dims(16, 8, 8)
+    }
+
+    #[test]
+    fn contract_accepts_its_own_hello() {
+        let b = cpu_builder();
+        let c = Contract::of_builder(&b);
+        c.check_hello(&c.hello()).unwrap();
+    }
+
+    #[test]
+    fn contract_rejects_mismatches() {
+        let c = Contract::of_builder(&cpu_builder());
+        let mut h = c.hello();
+        h.backend = "simd".into();
+        assert!(c.check_hello(&h).is_err());
+        let mut h = c.hello();
+        h.termination = "tail-biting".into();
+        assert!(c.check_hello(&h).is_err());
+        let mut h = c.hello();
+        h.payload_stages = 64;
+        assert!(c.check_hello(&h).is_err());
+        let mut h = c.hello();
+        h.version = 99;
+        assert!(c.check_hello(&h).is_err());
+        // unknown names are typed config errors from the builder parsers
+        let mut h = c.hello();
+        h.backend = "quantum".into();
+        let e = c.check_hello(&h).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn server_needs_an_address() {
+        let e = Server::start(cpu_builder(), None, None, NetConfig::default()).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+}

@@ -1,0 +1,440 @@
+//! Wire protocol of the socket serving front-end: length-prefixed
+//! binary frames over TCP, fixed-header datagrams over UDP. The full
+//! format tables live in `docs/NETWORKING.md`; this module is the only
+//! place bytes are encoded or decoded, so the tables and the code stay
+//! reviewable side by side.
+//!
+//! TCP frame layout (all integers little-endian):
+//!
+//! ```text
+//! [ kind: u8 ][ len: u32 ][ payload: len bytes ]
+//! ```
+//!
+//! UDP request: `[ flow: u64 ][ seq: u32 ][ llr: len/4 f32 ]`;
+//! UDP reply: `[ flow: u64 ][ seq: u32 ][ status: u8 ][ bits... ]`.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Protocol version carried in the HELLO frame.
+pub const PROTO_VERSION: u16 = 1;
+
+/// TCP frame kinds. Client-to-server kinds have the high bit clear,
+/// server-to-client kinds have it set.
+pub mod kind {
+    /// Client handshake: version + code/backend/termination/tile.
+    pub const HELLO: u8 = 0x01;
+    /// Raw little-endian f32 LLRs appended to the session stream.
+    pub const DATA: u8 = 0x02;
+    /// End of stream: flush the framer and close the session output.
+    pub const FINISH: u8 = 0x03;
+    /// Request a metrics snapshot (valid before or during a session).
+    pub const METRICS_REQ: u8 = 0x04;
+    /// Server accepts the session: session id + frame geometry.
+    pub const ACK: u8 = 0x81;
+    /// In-order decoded payload bits (one byte per bit).
+    pub const BITS: u8 = 0x82;
+    /// All decoded bits delivered; the stream completed cleanly.
+    pub const END: u8 = 0x83;
+    /// Admission rejected: reason byte + human-readable detail.
+    pub const REJECT: u8 = 0x84;
+    /// Session-fatal error: typed `tcvd::Error` text; the server
+    /// closes the connection after sending this.
+    pub const ERROR: u8 = 0x85;
+    /// Metrics snapshot reply: JSON text.
+    pub const METRICS: u8 = 0x86;
+}
+
+/// Reject reasons (first payload byte of a REJECT frame).
+pub mod reject {
+    /// The concurrent-session cap is reached.
+    pub const SESSION_CAP: u8 = 1;
+    /// The shard queues are saturated (load shed).
+    pub const QUEUE_SATURATED: u8 = 2;
+    /// Handshake parameters do not match the served pipeline.
+    pub const CONFIG: u8 = 3;
+}
+
+/// Human-readable token for a reject reason byte (stable strings —
+/// clients and tests match on them).
+pub fn reject_reason_name(reason: u8) -> &'static str {
+    match reason {
+        reject::SESSION_CAP => "session-cap",
+        reject::QUEUE_SATURATED => "queue-saturated",
+        reject::CONFIG => "config",
+        _ => "unknown",
+    }
+}
+
+/// UDP reply status bytes.
+pub mod udp_status {
+    pub const OK: u8 = 0;
+    pub const SHED: u8 = 1;
+    pub const ERR: u8 = 2;
+}
+
+/// Fixed UDP header length: flow (8) + seq (4).
+pub const UDP_HEADER: usize = 12;
+
+/// TCP frame header length: kind (1) + len (4).
+pub const FRAME_HEADER: usize = 5;
+
+/// Outcome of one blocking frame read.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete frame: kind + payload.
+    Frame(u8, Vec<u8>),
+    /// Orderly EOF at a frame boundary (peer closed the connection).
+    Eof,
+    /// The socket read timeout elapsed (idle connection). A timeout
+    /// mid-frame also lands here; either way the connection is no
+    /// longer framable and must be closed.
+    TimedOut,
+}
+
+/// Write one frame: `kind | len | payload` as a single `write_all`.
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER + payload.len());
+    buf.push(kind);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf).map_err(io_err("writing frame"))?;
+    w.flush().map_err(io_err("flushing frame"))?;
+    Ok(())
+}
+
+/// Total wire bytes of a frame with `payload_len` payload bytes.
+pub fn frame_wire_bytes(payload_len: usize) -> u64 {
+    (FRAME_HEADER + payload_len) as u64
+}
+
+fn io_err(ctx: &'static str) -> impl Fn(std::io::Error) -> Error {
+    move |e| Error::net(format!("{ctx}: {e}"))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Blocking read of one frame. Distinguishes orderly EOF and read
+/// timeouts from hard I/O errors; enforces `max_len` on the length
+/// prefix before allocating.
+pub fn read_frame(r: &mut impl Read, max_len: usize) -> Result<ReadOutcome> {
+    let mut header = [0u8; FRAME_HEADER];
+    // first byte separately: EOF here is an orderly close
+    match r.read(&mut header[..1]) {
+        Ok(0) => return Ok(ReadOutcome::Eof),
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) => return Ok(ReadOutcome::TimedOut),
+        Err(e) => return Err(Error::net(format!("reading frame header: {e}"))),
+    }
+    match r.read_exact(&mut header[1..]) {
+        Ok(()) => {}
+        Err(e) if is_timeout(&e) => return Ok(ReadOutcome::TimedOut),
+        Err(e) => return Err(Error::net(format!("reading frame header: {e}"))),
+    }
+    let kind = header[0];
+    let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
+    if len > max_len {
+        return Err(Error::net(format!(
+            "frame of {len} bytes exceeds the {max_len}-byte limit"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    match r.read_exact(&mut payload) {
+        Ok(()) => Ok(ReadOutcome::Frame(kind, payload)),
+        Err(e) if is_timeout(&e) => Ok(ReadOutcome::TimedOut),
+        Err(e) => Err(Error::net(format!("reading {len}-byte frame payload: {e}"))),
+    }
+}
+
+fn push_str8(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > u8::MAX as usize {
+        return Err(Error::net(format!("string field too long ({} bytes)", s.len())));
+    }
+    buf.push(s.len() as u8);
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn take_str8<'a>(b: &mut &'a [u8]) -> Result<&'a str> {
+    let (&len, rest) = b.split_first().ok_or_else(|| Error::net("truncated string field"))?;
+    let len = len as usize;
+    if rest.len() < len {
+        return Err(Error::net("truncated string field"));
+    }
+    let (s, rest) = rest.split_at(len);
+    *b = rest;
+    std::str::from_utf8(s).map_err(|_| Error::net("string field is not UTF-8"))
+}
+
+fn take_u32(b: &mut &[u8]) -> Result<u32> {
+    if b.len() < 4 {
+        return Err(Error::net("truncated integer field"));
+    }
+    let (x, rest) = b.split_at(4);
+    *b = rest;
+    Ok(u32::from_le_bytes([x[0], x[1], x[2], x[3]]))
+}
+
+fn take_u64(b: &mut &[u8]) -> Result<u64> {
+    if b.len() < 8 {
+        return Err(Error::net("truncated integer field"));
+    }
+    let (x, rest) = b.split_at(8);
+    *b = rest;
+    Ok(u64::from_le_bytes([x[0], x[1], x[2], x[3], x[4], x[5], x[6], x[7]]))
+}
+
+/// HELLO payload: the session contract the client asks for. The server
+/// lowers the names through `DecoderBuilder`'s own parsers and rejects
+/// (REJECT/`config`) anything the served pipeline does not match.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u16,
+    pub code: String,
+    pub backend: String,
+    pub termination: String,
+    pub payload_stages: u32,
+    pub head_stages: u32,
+    pub tail_stages: u32,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&self.version.to_le_bytes());
+        push_str8(&mut buf, &self.code)?;
+        push_str8(&mut buf, &self.backend)?;
+        push_str8(&mut buf, &self.termination)?;
+        buf.extend_from_slice(&self.payload_stages.to_le_bytes());
+        buf.extend_from_slice(&self.head_stages.to_le_bytes());
+        buf.extend_from_slice(&self.tail_stages.to_le_bytes());
+        Ok(buf)
+    }
+
+    pub fn decode(mut b: &[u8]) -> Result<Hello> {
+        if b.len() < 2 {
+            return Err(Error::net("truncated HELLO"));
+        }
+        let version = u16::from_le_bytes([b[0], b[1]]);
+        b = &b[2..];
+        let code = take_str8(&mut b)?.to_string();
+        let backend = take_str8(&mut b)?.to_string();
+        let termination = take_str8(&mut b)?.to_string();
+        let payload_stages = take_u32(&mut b)?;
+        let head_stages = take_u32(&mut b)?;
+        let tail_stages = take_u32(&mut b)?;
+        if !b.is_empty() {
+            return Err(Error::net("trailing bytes in HELLO"));
+        }
+        Ok(Hello { version, code, backend, termination, payload_stages, head_stages, tail_stages })
+    }
+}
+
+/// ACK payload: session id + the pipeline's frame geometry (so clients
+/// can sanity-check their chunking).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ack {
+    pub session: u64,
+    pub frame_stages: u32,
+    pub beta: u32,
+}
+
+impl Ack {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16);
+        buf.extend_from_slice(&self.session.to_le_bytes());
+        buf.extend_from_slice(&self.frame_stages.to_le_bytes());
+        buf.extend_from_slice(&self.beta.to_le_bytes());
+        buf
+    }
+
+    pub fn decode(mut b: &[u8]) -> Result<Ack> {
+        let session = take_u64(&mut b)?;
+        let frame_stages = take_u32(&mut b)?;
+        let beta = take_u32(&mut b)?;
+        if !b.is_empty() {
+            return Err(Error::net("trailing bytes in ACK"));
+        }
+        Ok(Ack { session, frame_stages, beta })
+    }
+}
+
+/// REJECT payload: reason byte + UTF-8 detail.
+pub fn encode_reject(reason: u8, detail: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(1 + detail.len());
+    buf.push(reason);
+    buf.extend_from_slice(detail.as_bytes());
+    buf
+}
+
+/// Decode a REJECT payload into `(reason, detail)`.
+pub fn decode_reject(b: &[u8]) -> Result<(u8, String)> {
+    let (&reason, rest) = b.split_first().ok_or_else(|| Error::net("empty REJECT"))?;
+    Ok((reason, String::from_utf8_lossy(rest).into_owned()))
+}
+
+/// Encode an LLR slice as little-endian f32 bytes (DATA payload).
+pub fn encode_llrs(llr: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(llr.len() * 4);
+    for &x in llr {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode a DATA payload back into LLRs.
+pub fn decode_llrs(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(Error::net(format!("LLR payload of {} bytes is not f32-aligned", b.len())));
+    }
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// One UDP request datagram: a whole block of LLRs for flow `flow`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UdpBlock {
+    pub flow: u64,
+    pub seq: u32,
+    pub llr: Vec<f32>,
+}
+
+impl UdpBlock {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(UDP_HEADER + self.llr.len() * 4);
+        buf.extend_from_slice(&self.flow.to_le_bytes());
+        buf.extend_from_slice(&self.seq.to_le_bytes());
+        buf.extend_from_slice(&encode_llrs(&self.llr));
+        buf
+    }
+
+    pub fn decode(mut b: &[u8]) -> Result<UdpBlock> {
+        let flow = take_u64(&mut b)?;
+        let seq = take_u32(&mut b)?;
+        let llr = decode_llrs(b)?;
+        Ok(UdpBlock { flow, seq, llr })
+    }
+}
+
+/// One UDP reply datagram: echoed flow/seq + status + decoded bits
+/// (`status == OK`) or a UTF-8 error detail (`status == ERR`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct UdpReply {
+    pub flow: u64,
+    pub seq: u32,
+    pub status: u8,
+    pub body: Vec<u8>,
+}
+
+impl UdpReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(UDP_HEADER + 1 + self.body.len());
+        buf.extend_from_slice(&self.flow.to_le_bytes());
+        buf.extend_from_slice(&self.seq.to_le_bytes());
+        buf.push(self.status);
+        buf.extend_from_slice(&self.body);
+        buf
+    }
+
+    pub fn decode(mut b: &[u8]) -> Result<UdpReply> {
+        let flow = take_u64(&mut b)?;
+        let seq = take_u32(&mut b)?;
+        let (&status, body) = b.split_first().ok_or_else(|| Error::net("truncated UDP reply"))?;
+        Ok(UdpReply { flow, seq, status, body: body.to_vec() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, kind::DATA, &[1, 2, 3]).unwrap();
+        write_frame(&mut wire, kind::FINISH, &[]).unwrap();
+        let mut r = Cursor::new(wire);
+        match read_frame(&mut r, 1024).unwrap() {
+            ReadOutcome::Frame(k, p) => {
+                assert_eq!(k, kind::DATA);
+                assert_eq!(p, vec![1, 2, 3]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match read_frame(&mut r, 1024).unwrap() {
+            ReadOutcome::Frame(k, p) => {
+                assert_eq!(k, kind::FINISH);
+                assert!(p.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r, 1024).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.push(kind::DATA);
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let e = read_frame(&mut Cursor::new(wire), 1 << 20).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "{e}");
+        assert!(e.to_string().contains("exceeds"), "{e}");
+    }
+
+    #[test]
+    fn truncated_frame_is_hard_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, kind::BITS, &[9; 10]).unwrap();
+        wire.truncate(wire.len() - 3);
+        let e = read_frame(&mut Cursor::new(wire), 1024).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "{e}");
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let h = Hello {
+            version: PROTO_VERSION,
+            code: "ccsds".into(),
+            backend: "simd".into(),
+            termination: "tail-biting".into(),
+            payload_stages: 64,
+            head_stages: 32,
+            tail_stages: 32,
+        };
+        assert_eq!(Hello::decode(&h.encode().unwrap()).unwrap(), h);
+        assert!(Hello::decode(&[1]).is_err());
+        let mut long = h.encode().unwrap();
+        long.push(0);
+        assert!(Hello::decode(&long).is_err());
+    }
+
+    #[test]
+    fn ack_and_reject_roundtrip() {
+        let a = Ack { session: 7, frame_stages: 96, beta: 2 };
+        assert_eq!(Ack::decode(&a.encode()).unwrap(), a);
+        let (reason, detail) =
+            decode_reject(&encode_reject(reject::SESSION_CAP, "cap 2 reached")).unwrap();
+        assert_eq!(reason, reject::SESSION_CAP);
+        assert_eq!(reject_reason_name(reason), "session-cap");
+        assert_eq!(detail, "cap 2 reached");
+    }
+
+    #[test]
+    fn llr_roundtrip_and_alignment() {
+        let llr = vec![1.5f32, -0.25, 3.0];
+        assert_eq!(decode_llrs(&encode_llrs(&llr)).unwrap(), llr);
+        assert!(decode_llrs(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn udp_roundtrip() {
+        let b = UdpBlock { flow: 42, seq: 3, llr: vec![0.5, -1.0] };
+        assert_eq!(UdpBlock::decode(&b.encode()).unwrap(), b);
+        let r = UdpReply { flow: 42, seq: 3, status: udp_status::OK, body: vec![1, 0, 1] };
+        assert_eq!(UdpReply::decode(&r.encode()).unwrap(), r);
+        assert!(UdpBlock::decode(&[0; 5]).is_err());
+    }
+}

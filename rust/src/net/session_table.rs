@@ -1,0 +1,159 @@
+//! Session lifecycle bookkeeping for the socket front-end: one table
+//! owns the concurrent-session cap (TCP connections + live UDP flows
+//! count against the same cap) and the idle-eviction clock for UDP
+//! flows. TCP idle eviction rides the per-connection socket read
+//! timeout instead (see `net::tcp`), so the table only tracks TCP
+//! connections as a count.
+//!
+//! The table is pure bookkeeping: metrics counters are incremented by
+//! the transport loops, which know *why* a session came or went.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Key of one UDP flow: peer address + client-chosen flow id.
+pub type FlowKey = (SocketAddr, u64);
+
+/// Outcome of observing a datagram for a flow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlowTouch {
+    /// First datagram of a new flow; it was admitted.
+    New,
+    /// The flow is already live; its idle clock was reset.
+    Known,
+    /// A new flow could not be admitted: the session cap is reached.
+    AtCap,
+}
+
+struct Inner {
+    tcp_active: usize,
+    flows: HashMap<FlowKey, Instant>,
+}
+
+/// Shared session table (one per [`super::Server`]).
+pub struct SessionTable {
+    max_sessions: usize,
+    idle_timeout: Duration,
+    inner: Mutex<Inner>,
+}
+
+impl SessionTable {
+    pub fn new(max_sessions: usize, idle_timeout: Duration) -> SessionTable {
+        SessionTable {
+            max_sessions: max_sessions.max(1),
+            idle_timeout,
+            inner: Mutex::new(Inner { tcp_active: 0, flows: HashMap::new() }),
+        }
+    }
+
+    /// The idle timeout sessions are evicted after.
+    pub fn idle_timeout(&self) -> Duration {
+        self.idle_timeout
+    }
+
+    /// Live sessions right now (TCP connections + UDP flows).
+    pub fn active(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.tcp_active + g.flows.len()
+    }
+
+    /// Try to admit one TCP session; `false` when the cap is reached.
+    pub fn admit_tcp(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.tcp_active + g.flows.len() >= self.max_sessions {
+            return false;
+        }
+        g.tcp_active += 1;
+        true
+    }
+
+    /// Release one admitted TCP session.
+    pub fn release_tcp(&self) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.tcp_active > 0);
+        g.tcp_active = g.tcp_active.saturating_sub(1);
+    }
+
+    /// Observe a datagram for `key` at time `now`: admits new flows
+    /// against the session cap and resets the idle clock of known ones.
+    pub fn touch_flow(&self, key: FlowKey, now: Instant) -> FlowTouch {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(last) = g.flows.get_mut(&key) {
+            *last = now;
+            return FlowTouch::Known;
+        }
+        if g.tcp_active + g.flows.len() >= self.max_sessions {
+            return FlowTouch::AtCap;
+        }
+        g.flows.insert(key, now);
+        FlowTouch::New
+    }
+
+    /// Drop a flow explicitly (protocol error); `true` if it was live.
+    pub fn remove_flow(&self, key: &FlowKey) -> bool {
+        self.inner.lock().unwrap().flows.remove(key).is_some()
+    }
+
+    /// Evict every flow idle for longer than the timeout; returns how
+    /// many were evicted.
+    pub fn sweep_flows(&self, now: Instant) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let timeout = self.idle_timeout;
+        let before = g.flows.len();
+        g.flows.retain(|_, last| now.duration_since(*last) < timeout);
+        before - g.flows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(port: u16, flow: u64) -> FlowKey {
+        (SocketAddr::from(([127, 0, 0, 1], port)), flow)
+    }
+
+    #[test]
+    fn tcp_cap_is_enforced() {
+        let t = SessionTable::new(2, Duration::from_secs(1));
+        assert!(t.admit_tcp());
+        assert!(t.admit_tcp());
+        assert!(!t.admit_tcp(), "third admission must hit the cap");
+        t.release_tcp();
+        assert!(t.admit_tcp(), "released slot is reusable");
+        assert_eq!(t.active(), 2);
+    }
+
+    #[test]
+    fn flows_share_the_cap_with_tcp() {
+        let t = SessionTable::new(2, Duration::from_secs(1));
+        let now = Instant::now();
+        assert!(t.admit_tcp());
+        assert_eq!(t.touch_flow(key(9000, 1), now), FlowTouch::New);
+        assert_eq!(t.touch_flow(key(9000, 2), now), FlowTouch::AtCap);
+        assert_eq!(t.touch_flow(key(9000, 1), now), FlowTouch::Known, "known flows never shed");
+        assert_eq!(t.active(), 2);
+    }
+
+    #[test]
+    fn sweep_evicts_only_idle_flows() {
+        let t = SessionTable::new(8, Duration::from_millis(50));
+        let t0 = Instant::now();
+        t.touch_flow(key(9000, 1), t0);
+        t.touch_flow(key(9001, 1), t0 + Duration::from_millis(40));
+        assert_eq!(t.sweep_flows(t0 + Duration::from_millis(60)), 1);
+        assert_eq!(t.active(), 1, "the fresh flow survives");
+        assert_eq!(t.sweep_flows(t0 + Duration::from_millis(200)), 1);
+        assert_eq!(t.active(), 0);
+    }
+
+    #[test]
+    fn remove_flow_reports_liveness() {
+        let t = SessionTable::new(8, Duration::from_secs(1));
+        t.touch_flow(key(9000, 7), Instant::now());
+        assert!(t.remove_flow(&key(9000, 7)));
+        assert!(!t.remove_flow(&key(9000, 7)));
+    }
+}

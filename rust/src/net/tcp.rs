@@ -1,0 +1,405 @@
+//! TCP transport of the socket front-end: one connection is one
+//! streaming [`Session`](crate::coordinator::Session).
+//!
+//! Server side: an accept-loop thread spawns one thread per connection
+//! (`std::net` blocking I/O — the pipeline's bounded channels provide
+//! the backpressure). The connection thread reads frames; a small
+//! writer thread drains the session's in-order decoded output to BITS
+//! frames, so decoding overlaps with the client still pushing DATA.
+//! Idle eviction rides the socket read timeout: a connection that
+//! stays silent for the configured idle timeout is evicted (counted in
+//! `net.sessions_evicted`) and closed.
+//!
+//! Every connection path — clean END, dirty disconnect, protocol
+//! error, idle eviction — closes the pipeline session exactly once
+//! (`SessionHandle::finish`), so the reassembler never leaks session
+//! state and `Coordinator::shutdown` never hangs on an abandoned
+//! session.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::DecoderBuilder;
+use crate::coordinator::SessionHandle;
+use crate::defaults;
+use crate::error::{Error, Result, ResultExt};
+
+use super::protocol::{
+    decode_llrs, decode_reject, encode_llrs, encode_reject, frame_wire_bytes, kind, read_frame,
+    reject, reject_reason_name, write_frame, Ack, Hello, ReadOutcome,
+};
+use super::{Contract, ServerCtx};
+
+/// How long a client waits for a server frame before giving up.
+const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Write one frame under the shared writer lock and count its wire
+/// bytes.
+fn send(ctx: &ServerCtx, w: &Mutex<TcpStream>, frame_kind: u8, payload: &[u8]) -> Result<()> {
+    let mut g = w.lock().unwrap();
+    write_frame(&mut *g, frame_kind, payload)?;
+    ctx.metrics.net.bytes_out.fetch_add(frame_wire_bytes(payload.len()), Ordering::Relaxed);
+    Ok(())
+}
+
+fn send_error(ctx: &ServerCtx, w: &Mutex<TcpStream>, e: &Error) {
+    let _ = send(ctx, w, kind::ERROR, e.to_string().as_bytes());
+}
+
+fn send_metrics(ctx: &ServerCtx, w: &Mutex<TcpStream>) {
+    let snap = ctx.metrics.snapshot().to_json().to_string_pretty();
+    let _ = send(ctx, w, kind::METRICS, snap.as_bytes());
+}
+
+/// Accept loop (one per server). Exits when the shutdown flag is set;
+/// `Server::shutdown` unblocks it with a dummy self-connection.
+pub(crate) fn run_acceptor(listener: TcpListener, ctx: Arc<ServerCtx>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                ctx.conns.fetch_add(1, Ordering::SeqCst);
+                let ctx2 = ctx.clone();
+                let spawned = std::thread::Builder::new().name("tcvd-net-conn".into()).spawn(
+                    move || {
+                        handle_conn(stream, &ctx2);
+                        ctx2.conns.fetch_sub(1, Ordering::SeqCst);
+                    },
+                );
+                if spawned.is_err() {
+                    ctx.conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(_) => {
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // transient accept failure: keep serving
+            }
+        }
+    }
+}
+
+/// Outcome of the post-handshake session loop.
+enum Outcome {
+    /// FINISH processed; the instant it was received (latency clock).
+    Clean(Instant),
+    /// Dirty disconnect, idle timeout, or protocol/pipeline error.
+    Dirty,
+}
+
+fn handle_conn(stream: TcpStream, ctx: &Arc<ServerCtx>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(ctx.table.idle_timeout()));
+    let writer = match stream.try_clone() {
+        Ok(c) => Arc::new(Mutex::new(c)),
+        Err(_) => return,
+    };
+    let mut reader = stream;
+
+    // ---- handshake: METRICS_REQ is answered sessionless; a HELLO
+    // opens the session ----
+    let hello = loop {
+        match read_frame(&mut reader, ctx.net.max_frame_bytes) {
+            Ok(ReadOutcome::Frame(k, p)) => {
+                ctx.metrics.net.bytes_in.fetch_add(frame_wire_bytes(p.len()), Ordering::Relaxed);
+                match k {
+                    kind::METRICS_REQ => send_metrics(ctx, &writer),
+                    kind::HELLO => match Hello::decode(&p) {
+                        Ok(h) => break h,
+                        Err(e) => {
+                            send_error(ctx, &writer, &e);
+                            return;
+                        }
+                    },
+                    other => {
+                        send_error(
+                            ctx,
+                            &writer,
+                            &Error::net(format!("expected HELLO, got frame kind {other:#04x}")),
+                        );
+                        return;
+                    }
+                }
+            }
+            // silence or disconnect before a session existed: nothing
+            // to evict, nothing to count
+            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::TimedOut) | Err(_) => return,
+        }
+    };
+
+    if let Err(e) = ctx.contract.check_hello(&hello) {
+        ctx.metrics.net.handshake_rejects.fetch_add(1, Ordering::Relaxed);
+        let _ = send(ctx, &writer, kind::REJECT, &encode_reject(reject::CONFIG, e.message()));
+        return;
+    }
+    // admission: the saturation signal is checked before the cap so a
+    // saturated server sheds deterministically even with free slots
+    if ctx.queues_saturated() {
+        ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
+        let detail = format!("shard queues at depth {}", ctx.metrics.queue_depth_total());
+        let _ = send(ctx, &writer, kind::REJECT, &encode_reject(reject::QUEUE_SATURATED, &detail));
+        return;
+    }
+    if !ctx.table.admit_tcp() {
+        ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
+        let detail = format!("session cap {} reached", ctx.net.max_sessions);
+        let _ = send(ctx, &writer, kind::REJECT, &encode_reject(reject::SESSION_CAP, &detail));
+        return;
+    }
+
+    let session = match ctx.coord.open_session() {
+        Ok(s) => s,
+        Err(e) => {
+            ctx.table.release_tcp();
+            send_error(ctx, &writer, &e);
+            return;
+        }
+    };
+    ctx.metrics.net.sessions_accepted.fetch_add(1, Ordering::Relaxed);
+    let ack = Ack {
+        session: session.id(),
+        frame_stages: ctx.coord.tile().frame_stages() as u32,
+        beta: ctx.coord.trellis().code().beta() as u32,
+    };
+    let (mut handle, rx) = session.split();
+
+    // writer thread: drain the in-order decoded output to BITS frames.
+    // It always drains rx to exhaustion — even when the peer is gone —
+    // so the reassembler is never blocked on a dead connection.
+    let wctx = ctx.clone();
+    let wsock = writer.clone();
+    let writer_thread = std::thread::spawn(move || {
+        for chunk in rx {
+            let n = chunk.len();
+            let ok = {
+                let mut g = wsock.lock().unwrap();
+                write_frame(&mut *g, kind::BITS, &chunk).is_ok()
+            };
+            if ok {
+                wctx.metrics.net.bytes_out.fetch_add(frame_wire_bytes(n), Ordering::Relaxed);
+            }
+        }
+    });
+
+    let outcome = if send(ctx, &writer, kind::ACK, &ack.encode()).is_ok() {
+        run_session(&mut reader, ctx, &writer, &mut handle)
+    } else {
+        Outcome::Dirty
+    };
+    // the dirty paths have not closed the session yet: do it now (a
+    // second finish on an already-closed handle is a harmless typed
+    // error) so rx disconnects and the writer thread can exit
+    if matches!(outcome, Outcome::Dirty) {
+        let _ = handle.finish();
+    }
+    let _ = writer_thread.join();
+    match outcome {
+        Outcome::Clean(t_finish) => {
+            ctx.metrics.record_net_block(t_finish.elapsed());
+            let _ = send(ctx, &writer, kind::END, &[]);
+        }
+        Outcome::Dirty => {
+            ctx.metrics.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    ctx.table.release_tcp();
+}
+
+/// Post-ACK frame loop: DATA pushes, FINISH completes, METRICS_REQ
+/// snapshots. Never calls `finish` on a dirty exit — the caller owns
+/// the close-exactly-once discipline.
+fn run_session(
+    reader: &mut TcpStream,
+    ctx: &ServerCtx,
+    writer: &Mutex<TcpStream>,
+    handle: &mut SessionHandle,
+) -> Outcome {
+    loop {
+        match read_frame(reader, ctx.net.max_frame_bytes) {
+            Ok(ReadOutcome::Frame(k, p)) => {
+                ctx.metrics.net.bytes_in.fetch_add(frame_wire_bytes(p.len()), Ordering::Relaxed);
+                match k {
+                    kind::DATA => {
+                        if let Err(e) = decode_llrs(&p).and_then(|llr| handle.push(&llr)) {
+                            send_error(ctx, writer, &e);
+                            return Outcome::Dirty;
+                        }
+                    }
+                    kind::FINISH => {
+                        let t_finish = Instant::now();
+                        match handle.finish() {
+                            Ok(()) => return Outcome::Clean(t_finish),
+                            Err(e) => {
+                                // the framer rejected the stream shape
+                                // (e.g. a partial tail-biting tile);
+                                // finish() already closed the session
+                                send_error(ctx, writer, &e);
+                                return Outcome::Dirty;
+                            }
+                        }
+                    }
+                    kind::METRICS_REQ => send_metrics(ctx, writer),
+                    other => {
+                        send_error(
+                            ctx,
+                            writer,
+                            &Error::net(format!("unexpected frame kind {other:#04x} in session")),
+                        );
+                        return Outcome::Dirty;
+                    }
+                }
+            }
+            Ok(ReadOutcome::Eof) => return Outcome::Dirty,
+            Ok(ReadOutcome::TimedOut) => {
+                send_error(
+                    ctx,
+                    writer,
+                    &Error::net(format!(
+                        "session evicted: idle for {:?}",
+                        ctx.table.idle_timeout()
+                    )),
+                );
+                return Outcome::Dirty;
+            }
+            Err(e) => {
+                send_error(ctx, writer, &e);
+                return Outcome::Dirty;
+            }
+        }
+    }
+}
+
+/// A connected TCP decode session. `connect` performs the HELLO/ACK
+/// handshake from the builder's parameters; [`push`](TcpClient::push)
+/// streams LLR chunks; [`finish`](TcpClient::finish) flushes the
+/// stream and collects every decoded payload bit.
+pub struct TcpClient {
+    stream: TcpStream,
+    ack: Ack,
+}
+
+impl TcpClient {
+    /// Connect and handshake. The HELLO carries the builder's
+    /// code/backend/termination/tile; a server running anything else
+    /// rejects the session (the reject reason and detail land in the
+    /// returned [`Error::Net`]).
+    pub fn connect(addr: impl ToSocketAddrs, builder: &DecoderBuilder) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).or_net("connecting to tcvd server")?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT)).or_net("setting read timeout")?;
+        let hello = Contract::of_builder(builder).hello().encode()?;
+        write_frame(&mut (&stream), kind::HELLO, &hello)?;
+        match read_frame(&mut (&stream), defaults::NET_MAX_FRAME_BYTES)? {
+            ReadOutcome::Frame(kind::ACK, p) => {
+                Ok(TcpClient { ack: Ack::decode(&p)?, stream })
+            }
+            ReadOutcome::Frame(kind::REJECT, p) => {
+                let (reason, detail) = decode_reject(&p)?;
+                Err(Error::net(format!(
+                    "session rejected ({}): {detail}",
+                    reject_reason_name(reason)
+                )))
+            }
+            ReadOutcome::Frame(kind::ERROR, p) => {
+                Err(Error::net(format!("server error: {}", String::from_utf8_lossy(&p))))
+            }
+            ReadOutcome::Frame(k, _) => {
+                Err(Error::net(format!("unexpected frame kind {k:#04x} in handshake")))
+            }
+            ReadOutcome::Eof => Err(Error::net("server closed the connection during handshake")),
+            ReadOutcome::TimedOut => Err(Error::net("timed out waiting for the handshake reply")),
+        }
+    }
+
+    /// The server's ACK: session id + frame geometry.
+    pub fn ack(&self) -> Ack {
+        self.ack
+    }
+
+    /// Stream one LLR chunk (length must be a multiple of beta, like
+    /// [`Session::push`](crate::coordinator::Session::push)).
+    pub fn push(&mut self, llr: &[f32]) -> Result<()> {
+        write_frame(&mut (&self.stream), kind::DATA, &encode_llrs(llr))
+    }
+
+    /// End the stream and collect every decoded payload bit (one byte
+    /// per bit, in order). Consumes the client; the server closes the
+    /// connection after its END frame.
+    pub fn finish(self) -> Result<Vec<u8>> {
+        write_frame(&mut (&self.stream), kind::FINISH, &[])?;
+        let mut bits = Vec::new();
+        loop {
+            match read_frame(&mut (&self.stream), defaults::NET_MAX_FRAME_BYTES)? {
+                ReadOutcome::Frame(kind::BITS, p) => bits.extend_from_slice(&p),
+                ReadOutcome::Frame(kind::END, _) => return Ok(bits),
+                ReadOutcome::Frame(kind::ERROR, p) => {
+                    return Err(Error::net(format!(
+                        "server error: {}",
+                        String::from_utf8_lossy(&p)
+                    )))
+                }
+                ReadOutcome::Frame(k, _) => {
+                    return Err(Error::net(format!("unexpected frame kind {k:#04x} in stream")))
+                }
+                ReadOutcome::Eof => {
+                    return Err(Error::net("connection closed before the END frame"))
+                }
+                ReadOutcome::TimedOut => {
+                    return Err(Error::net("timed out waiting for decoded bits"))
+                }
+            }
+        }
+    }
+
+    /// Fetch a metrics snapshot over this session's connection.
+    pub fn metrics_json(&mut self) -> Result<String> {
+        write_frame(&mut (&self.stream), kind::METRICS_REQ, &[])?;
+        loop {
+            match read_frame(&mut (&self.stream), defaults::NET_MAX_FRAME_BYTES)? {
+                // in-flight decoded bits may interleave ahead of the
+                // metrics reply: losing them would corrupt the stream,
+                // so metrics_json is only valid before the first push
+                // or after finish on a fresh connection
+                ReadOutcome::Frame(kind::METRICS, p) => {
+                    return String::from_utf8(p).or_net("metrics reply is not UTF-8")
+                }
+                ReadOutcome::Frame(kind::ERROR, p) => {
+                    return Err(Error::net(format!(
+                        "server error: {}",
+                        String::from_utf8_lossy(&p)
+                    )))
+                }
+                ReadOutcome::Frame(k, _) => {
+                    return Err(Error::net(format!(
+                        "unexpected frame kind {k:#04x} awaiting metrics"
+                    )))
+                }
+                ReadOutcome::Eof => return Err(Error::net("connection closed awaiting metrics")),
+                ReadOutcome::TimedOut => return Err(Error::net("timed out awaiting metrics")),
+            }
+        }
+    }
+}
+
+/// One-shot metrics fetch: connect, METRICS_REQ, parse nothing — the
+/// raw JSON text is returned (the `tcvd metrics` peer command).
+pub fn fetch_metrics(addr: impl ToSocketAddrs) -> Result<String> {
+    let stream = TcpStream::connect(addr).or_net("connecting to tcvd server")?;
+    stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT)).or_net("setting read timeout")?;
+    write_frame(&mut (&stream), kind::METRICS_REQ, &[])?;
+    match read_frame(&mut (&stream), defaults::NET_MAX_FRAME_BYTES)? {
+        ReadOutcome::Frame(kind::METRICS, p) => {
+            String::from_utf8(p).or_net("metrics reply is not UTF-8")
+        }
+        ReadOutcome::Frame(k, _) => {
+            Err(Error::net(format!("unexpected frame kind {k:#04x} awaiting metrics")))
+        }
+        ReadOutcome::Eof => Err(Error::net("connection closed awaiting metrics")),
+        ReadOutcome::TimedOut => Err(Error::net("timed out awaiting metrics")),
+    }
+}

@@ -1,0 +1,204 @@
+//! UDP transport of the socket front-end: one datagram is one
+//! self-contained block (built for tail-biting block traffic, where
+//! every block is decodable on its own). A *flow* — peer address +
+//! client-chosen flow id — is the session-lifetime unit: new flows are
+//! admitted against the same session cap as TCP connections, idle
+//! flows are evicted by a periodic sweep, and blocks arriving while
+//! the shard queues are saturated are shed individually with a typed
+//! SHED reply (`net.blocks_shed`).
+//!
+//! The loop is single-threaded by design: each datagram decodes
+//! synchronously through `Coordinator::decode_stream_blocking`, which
+//! already fans the block's frames out across the engine shards, so a
+//! second layer of socket-side threading would only add reordering.
+//! One block must fit in one datagram (~64 KiB), which bounds block
+//! size at roughly 8k LLRs — datagram-sized blocks are the use case;
+//! longer streams belong on TCP.
+
+use std::net::{ToSocketAddrs, UdpSocket};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result, ResultExt};
+
+use super::protocol::{udp_status, UdpBlock, UdpReply};
+use super::session_table::FlowTouch;
+use super::ServerCtx;
+
+/// Maximum UDP datagram we read or write.
+const MAX_DATAGRAM: usize = 65536;
+
+/// How long a client waits for a reply datagram.
+const CLIENT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// The flow sweep period for a given idle timeout: often enough that
+/// eviction lag stays well under the timeout, bounded below so tiny
+/// test timeouts don't spin the loop.
+fn sweep_interval(idle_timeout: Duration) -> Duration {
+    (idle_timeout / 2).min(Duration::from_millis(250)).max(Duration::from_millis(10))
+}
+
+fn reply(socket: &UdpSocket, ctx: &ServerCtx, peer: std::net::SocketAddr, r: UdpReply) {
+    let wire = r.encode();
+    if socket.send_to(&wire, peer).is_ok() {
+        ctx.metrics.net.bytes_out.fetch_add(wire.len() as u64, Ordering::Relaxed);
+    }
+}
+
+/// UDP serving loop (one per server). The socket read timeout doubles
+/// as the sweep tick and the shutdown poll interval.
+pub(crate) fn run_udp(socket: UdpSocket, ctx: Arc<ServerCtx>) {
+    let sweep = sweep_interval(ctx.table.idle_timeout());
+    let _ = socket.set_read_timeout(Some(sweep));
+    let mut buf = vec![0u8; MAX_DATAGRAM];
+    let mut last_sweep = Instant::now();
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match socket.recv_from(&mut buf) {
+            Ok((n, peer)) => {
+                ctx.metrics.net.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                // an undecodable header has no flow/seq to echo: drop
+                if let Ok(block) = UdpBlock::decode(&buf[..n]) {
+                    handle_datagram(&socket, &ctx, peer, block);
+                }
+            }
+            // timeout: fall through to the sweep; other errors are
+            // transient on a datagram socket
+            Err(_) => {}
+        }
+        let now = Instant::now();
+        if now.duration_since(last_sweep) >= sweep {
+            let evicted = ctx.table.sweep_flows(now);
+            if evicted > 0 {
+                ctx.metrics.net.sessions_evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+            }
+            last_sweep = now;
+        }
+    }
+}
+
+fn handle_datagram(
+    socket: &UdpSocket,
+    ctx: &Arc<ServerCtx>,
+    peer: std::net::SocketAddr,
+    block: UdpBlock,
+) {
+    let key = (peer, block.flow);
+    let (flow, seq) = (block.flow, block.seq);
+    match ctx.table.touch_flow(key, Instant::now()) {
+        FlowTouch::AtCap => {
+            ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
+            let detail = format!("session cap {} reached", ctx.net.max_sessions);
+            let r = UdpReply { flow, seq, status: udp_status::SHED, body: detail.into_bytes() };
+            reply(socket, ctx, peer, r);
+            return;
+        }
+        FlowTouch::New => {
+            ctx.metrics.net.sessions_accepted.fetch_add(1, Ordering::Relaxed);
+        }
+        FlowTouch::Known => {}
+    }
+    // per-block load shed: the flow stays admitted, this block is
+    // dropped (the client retries once the queues drain)
+    if ctx.queues_saturated() {
+        ctx.metrics.net.blocks_shed.fetch_add(1, Ordering::Relaxed);
+        let detail = format!("shard queues at depth {}", ctx.metrics.queue_depth_total());
+        let r = UdpReply { flow, seq, status: udp_status::SHED, body: detail.into_bytes() };
+        reply(socket, ctx, peer, r);
+        return;
+    }
+    let t0 = Instant::now();
+    match ctx.coord.decode_stream_blocking(&block.llr) {
+        Ok(bits) => {
+            ctx.metrics.record_net_block(t0.elapsed());
+            reply(socket, ctx, peer, UdpReply { flow, seq, status: udp_status::OK, body: bits });
+        }
+        Err(e) => {
+            // a block the pipeline rejects (bad length, partial
+            // tail-biting tile) poisons the flow: evict it so the
+            // lifecycle mirrors a dirty TCP disconnect
+            if ctx.table.remove_flow(&key) {
+                ctx.metrics.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            let r = UdpReply {
+                flow,
+                seq,
+                status: udp_status::ERR,
+                body: e.to_string().into_bytes(),
+            };
+            reply(socket, ctx, peer, r);
+        }
+    }
+}
+
+/// A UDP decode flow. Each [`decode_block`](UdpClient::decode_block)
+/// sends one block datagram and blocks for its reply; stale replies
+/// (earlier sequence numbers) are discarded.
+pub struct UdpClient {
+    socket: UdpSocket,
+    flow: u64,
+    seq: u32,
+}
+
+impl UdpClient {
+    /// Bind an ephemeral local socket and direct it at `server` as flow
+    /// `flow`. No handshake happens — the flow is admitted (or shed)
+    /// when its first block arrives.
+    pub fn connect(server: impl ToSocketAddrs, flow: u64) -> Result<UdpClient> {
+        let socket = UdpSocket::bind(("0.0.0.0", 0)).or_net("binding udp client socket")?;
+        socket.connect(server).or_net("directing udp client at server")?;
+        socket.set_read_timeout(Some(CLIENT_RECV_TIMEOUT)).or_net("setting read timeout")?;
+        Ok(UdpClient { socket, flow, seq: 0 })
+    }
+
+    /// The flow id this client sends under.
+    pub fn flow(&self) -> u64 {
+        self.flow
+    }
+
+    /// Decode one block: returns the decoded payload bits, or a typed
+    /// [`Error::Net`] when the block was shed or rejected.
+    pub fn decode_block(&mut self, llr: &[f32]) -> Result<Vec<u8>> {
+        let seq = self.seq;
+        self.seq = self.seq.wrapping_add(1);
+        let wire = UdpBlock { flow: self.flow, seq, llr: llr.to_vec() }.encode();
+        if wire.len() > MAX_DATAGRAM {
+            return Err(Error::net(format!(
+                "block of {} LLRs does not fit one datagram (use the TCP transport)",
+                llr.len()
+            )));
+        }
+        self.socket.send(&wire).or_net("sending block datagram")?;
+        let mut buf = vec![0u8; MAX_DATAGRAM];
+        loop {
+            let n = self.socket.recv(&mut buf).map_err(|e| {
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) {
+                    Error::net("timed out waiting for the block reply")
+                } else {
+                    Error::net(format!("receiving block reply: {e}"))
+                }
+            })?;
+            let r = UdpReply::decode(&buf[..n])?;
+            if r.flow != self.flow || r.seq != seq {
+                continue; // stale reply from an earlier block
+            }
+            return match r.status {
+                udp_status::OK => Ok(r.body),
+                udp_status::SHED => Err(Error::net(format!(
+                    "block shed: {}",
+                    String::from_utf8_lossy(&r.body)
+                ))),
+                _ => Err(Error::net(format!(
+                    "server error: {}",
+                    String::from_utf8_lossy(&r.body)
+                ))),
+            };
+        }
+    }
+}

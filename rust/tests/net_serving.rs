@@ -1,0 +1,381 @@
+//! Socket front-end integration suite (`docs/NETWORKING.md`): a real
+//! [`Server`] on loopback OS-assigned ports, exercised end to end.
+//!
+//! * **Bit-identity**: every block decoded over TCP and over UDP is
+//!   identical to a one-shot in-process [`Decoder`] oracle decoding the
+//!   same LLRs — across backends {scalar, compact, simd}, every
+//!   termination mode, and shard counts {1, 2, 8}.
+//! * **Lifecycle**: session cap, queue-saturation shedding, idle
+//!   eviction (TCP read timeout + UDP flow sweep), dirty disconnects
+//!   mid-block, and flow poisoning — each pinned with exact counter
+//!   values from the metrics snapshot.
+//! * **Observability**: the metrics endpoint serves parseable JSON with
+//!   the net counters, and the loadgen harness soaks both transports.
+//!
+//! Everything binds `127.0.0.1:0`, so the suite is CI-safe.
+
+use std::time::{Duration, Instant};
+
+use tcvd::api::DecoderBuilder;
+use tcvd::coding::registry;
+use tcvd::net::loadgen::{self, make_block_llrs, LoadgenOptions, Transport};
+use tcvd::net::{fetch_metrics, NetConfig, Server, TcpClient, UdpClient};
+use tcvd::util::json::Json;
+
+const BACKENDS: [&str; 3] = ["scalar", "compact", "simd"];
+const MODES: [&str; 3] = ["flushed", "tail-biting", "truncated"];
+const SHARDS: [usize; 3] = [1, 2, 8];
+
+/// Small always-available pipeline: 16+8/8 tile (32-stage frames) on a
+/// CPU backend, modest serving knobs.
+fn builder(backend: &str, mode: &str, shards: usize) -> DecoderBuilder {
+    DecoderBuilder::new()
+        .backend_name(backend)
+        .unwrap()
+        .termination_name(mode)
+        .unwrap()
+        .tile_dims(16, 8, 8)
+        .workers(2)
+        .max_batch(8)
+        .queue_depth(64)
+        .shards(shards)
+}
+
+/// Start a loopback server (TCP + UDP) for `b`.
+fn start(b: DecoderBuilder, net: NetConfig) -> Server {
+    Server::start(b, Some("127.0.0.1:0"), Some("127.0.0.1:0"), net).unwrap()
+}
+
+/// One block's LLRs for the pipeline `b` describes (`stages` must be a
+/// multiple of the tile payload).
+fn block(b: &DecoderBuilder, stages: usize, seed: u64) -> Vec<f32> {
+    let code = registry::lookup(b.code_name()).unwrap();
+    make_block_llrs(&code, b.termination_mode(), stages, 6.0, seed)
+}
+
+/// Decode one whole block over a fresh TCP session, chunked one
+/// payload tile at a time.
+fn tcp_decode(addr: std::net::SocketAddr, b: &DecoderBuilder, llr: &[f32]) -> Vec<u8> {
+    let code = registry::lookup(b.code_name()).unwrap();
+    let chunk = b.tile_config().payload * code.beta();
+    let mut c = TcpClient::connect(addr, b).unwrap();
+    assert_eq!(c.ack().frame_stages, b.frame_stages() as u32);
+    for part in llr.chunks(chunk) {
+        c.push(part).unwrap();
+    }
+    c.finish().unwrap()
+}
+
+/// Poll `f` until it holds or `ms` elapse (counters race the
+/// connection threads; eviction rides timeouts).
+fn wait_for(ms: u64, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(ms);
+    loop {
+        if f() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return f();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The full serving matrix: backends x termination modes x shard
+/// counts, each block decoded over TCP *and* UDP and compared
+/// bit-for-bit against the in-process oracle.
+#[test]
+fn tcp_and_udp_match_the_oracle_across_the_matrix() {
+    for backend in BACKENDS {
+        for mode in MODES {
+            for shards in SHARDS {
+                let b = builder(backend, mode, shards);
+                let mut oracle = b.clone().shards(1).build().unwrap();
+                let server = start(b.clone(), NetConfig::default());
+                let tcp = server.tcp_addr().unwrap();
+                let udp = server.udp_addr().unwrap();
+                for seed in 0..2u64 {
+                    let llr = block(&b, 64, 31 * seed + 7);
+                    let want = oracle.decode_stream(&llr).unwrap();
+                    assert!(!want.is_empty());
+                    let got = tcp_decode(tcp, &b, &llr);
+                    assert_eq!(got, want, "tcp {backend}/{mode}/shards={shards}/seed={seed}");
+                    let mut u = UdpClient::connect(udp, 100 + seed).unwrap();
+                    let got = u.decode_block(&llr).unwrap();
+                    assert_eq!(got, want, "udp {backend}/{mode}/shards={shards}/seed={seed}");
+                }
+                let m = server.metrics();
+                assert_eq!(m.net.sessions_accepted, 4, "{backend}/{mode}/{shards}");
+                assert_eq!(m.net.sessions_evicted, 0);
+                assert!(m.net.blocks >= 4, "latency recorded per block");
+                assert!(m.net.bytes_in > 0 && m.net.bytes_out > 0);
+                server.shutdown().unwrap();
+            }
+        }
+    }
+}
+
+/// Concurrent sessions with interleaved pushes stay isolated: each
+/// stream decodes to exactly its own oracle bits.
+#[test]
+fn interleaved_concurrent_sessions_stay_isolated() {
+    let b = builder("simd", "flushed", 2);
+    let mut oracle = b.clone().shards(1).build().unwrap();
+    let server = start(b.clone(), NetConfig::default());
+    let addr = server.tcp_addr().unwrap();
+    let code = registry::lookup(b.code_name()).unwrap();
+    let chunk = b.tile_config().payload * code.beta();
+
+    let blocks: Vec<Vec<f32>> = (0..3).map(|i| block(&b, 64, 900 + i)).collect();
+    let wants: Vec<Vec<u8>> =
+        blocks.iter().map(|llr| oracle.decode_stream(llr).unwrap()).collect();
+    let mut clients: Vec<TcpClient> =
+        (0..3).map(|_| TcpClient::connect(addr, &b).unwrap()).collect();
+    // round-robin the chunks so all three sessions are in flight at once
+    let n_chunks = blocks[0].len() / chunk;
+    for j in 0..n_chunks {
+        for (c, llr) in clients.iter_mut().zip(&blocks) {
+            c.push(&llr[j * chunk..(j + 1) * chunk]).unwrap();
+        }
+    }
+    for (c, want) in clients.into_iter().zip(&wants) {
+        assert_eq!(&c.finish().unwrap(), want);
+    }
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_accepted, 3);
+    assert_eq!(m.net.sessions_evicted, 0);
+    assert_eq!(m.net.sessions_shed, 0);
+    server.shutdown().unwrap();
+}
+
+/// The hard session cap sheds the third concurrent session with a
+/// typed reject — and exactly one `sessions_shed` count.
+#[test]
+fn session_cap_sheds_the_third_session() {
+    let b = builder("scalar", "flushed", 1);
+    let net = NetConfig { max_sessions: 2, ..NetConfig::default() };
+    let server = start(b.clone(), net);
+    let addr = server.tcp_addr().unwrap();
+
+    let a = TcpClient::connect(addr, &b).unwrap();
+    let c2 = TcpClient::connect(addr, &b).unwrap();
+    let e = TcpClient::connect(addr, &b).unwrap_err().to_string();
+    assert!(e.contains("session-cap"), "{e}");
+    assert!(e.contains("session cap 2 reached"), "{e}");
+
+    // the held sessions are unharmed: both still decode cleanly
+    let llr = block(&b, 32, 5);
+    let mut oracle = b.clone().shards(1).build().unwrap();
+    let want = oracle.decode_stream(&llr).unwrap();
+    for mut c in [a, c2] {
+        c.push(&llr).unwrap();
+        assert_eq!(c.finish().unwrap(), want);
+    }
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_accepted, 2);
+    assert_eq!(m.net.sessions_shed, 1);
+    assert_eq!(m.net.sessions_evicted, 0);
+    server.shutdown().unwrap();
+}
+
+/// `shed_queue_depth = 0` makes the saturation signal always fire:
+/// TCP admissions shed sessions, UDP sheds individual blocks while the
+/// flow stays admitted.
+#[test]
+fn queue_saturation_sheds_tcp_sessions_and_udp_blocks() {
+    let b = builder("scalar", "flushed", 1);
+    let net = NetConfig { shed_queue_depth: Some(0), ..NetConfig::default() };
+    let server = start(b.clone(), net);
+
+    let e = TcpClient::connect(server.tcp_addr().unwrap(), &b).unwrap_err().to_string();
+    assert!(e.contains("queue-saturated"), "{e}");
+
+    let mut u = UdpClient::connect(server.udp_addr().unwrap(), 1).unwrap();
+    let llr = block(&b, 32, 9);
+    let e = u.decode_block(&llr).unwrap_err().to_string();
+    assert!(e.contains("block shed"), "{e}");
+
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_shed, 1, "the TCP admission");
+    assert_eq!(m.net.blocks_shed, 1, "the UDP block");
+    assert_eq!(m.net.sessions_accepted, 1, "the UDP flow itself was admitted");
+    assert_eq!(m.net.handshake_rejects, 0);
+    server.shutdown().unwrap();
+}
+
+/// A handshake asking for a different pipeline is a `config` reject,
+/// counted separately from load shedding.
+#[test]
+fn handshake_mismatch_is_a_config_reject() {
+    let b = builder("scalar", "flushed", 1);
+    let server = start(b.clone(), NetConfig::default());
+    let addr = server.tcp_addr().unwrap();
+
+    let other_backend = builder("simd", "flushed", 1);
+    let e = TcpClient::connect(addr, &other_backend).unwrap_err().to_string();
+    assert!(e.contains("(config)"), "{e}");
+    assert!(e.contains("backend mismatch"), "{e}");
+
+    let other_tile = builder("scalar", "flushed", 1).tile_dims(32, 8, 8);
+    let e = TcpClient::connect(addr, &other_tile).unwrap_err().to_string();
+    assert!(e.contains("tile mismatch"), "{e}");
+
+    let m = server.metrics();
+    assert_eq!(m.net.handshake_rejects, 2);
+    assert_eq!(m.net.sessions_accepted, 0);
+    assert_eq!(m.net.sessions_shed, 0);
+    server.shutdown().unwrap();
+}
+
+/// A TCP session that goes silent is evicted after the idle timeout
+/// (exactly one `sessions_evicted`), and the client sees the typed
+/// eviction error instead of a hang.
+#[test]
+fn idle_tcp_session_is_evicted() {
+    let b = builder("scalar", "flushed", 1);
+    let net = NetConfig { idle_timeout: Duration::from_millis(80), ..NetConfig::default() };
+    let server = start(b.clone(), net);
+
+    let mut c = TcpClient::connect(server.tcp_addr().unwrap(), &b).unwrap();
+    c.push(&block(&b, 32, 3)).unwrap();
+    // ... and never finish
+    assert!(
+        wait_for(5000, || server.metrics().net.sessions_evicted == 1),
+        "eviction counter: {:?}",
+        server.metrics().net
+    );
+    let e = c.finish().unwrap_err().to_string();
+    assert!(e.contains("idle"), "{e}");
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_accepted, 1);
+    assert_eq!(m.net.sessions_evicted, 1);
+    server.shutdown().unwrap();
+}
+
+/// Killing a TCP connection mid-block (a buffered tail-biting stream,
+/// so the pipeline holds un-finished state) evicts the session and
+/// leaves the pipeline healthy for the next clean session.
+#[test]
+fn dirty_tcp_disconnect_mid_block_then_clean_session() {
+    let b = builder("scalar", "tail-biting", 2);
+    let server = start(b.clone(), NetConfig::default());
+    let addr = server.tcp_addr().unwrap();
+
+    {
+        let mut c = TcpClient::connect(addr, &b).unwrap();
+        // half a payload tile: the stream can never complete
+        c.push(&block(&b, 32, 4)[..16]).unwrap();
+        // drop: the socket closes mid-block
+    }
+    assert!(
+        wait_for(5000, || server.metrics().net.sessions_evicted == 1),
+        "dirty disconnect must evict: {:?}",
+        server.metrics().net
+    );
+
+    // the reassembler did not leak the dead session: a clean session
+    // decodes to the oracle bits
+    let llr = block(&b, 32, 6);
+    let want = b.clone().shards(1).build().unwrap().decode_stream(&llr).unwrap();
+    assert_eq!(tcp_decode(addr, &b, &llr), want);
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_accepted, 2);
+    assert_eq!(m.net.sessions_evicted, 1);
+    server.shutdown().unwrap();
+}
+
+/// A UDP block the pipeline rejects poisons its flow: the flow is
+/// evicted (mirroring a dirty TCP disconnect) and the next block
+/// re-admits it from scratch.
+#[test]
+fn udp_flow_poison_evicts_then_readmits() {
+    let b = builder("scalar", "flushed", 1);
+    let server = start(b.clone(), NetConfig::default());
+    let mut u = UdpClient::connect(server.udp_addr().unwrap(), 77).unwrap();
+
+    // 3 LLRs: not a multiple of beta, the session push rejects it
+    let e = u.decode_block(&[0.5, -0.5, 0.5]).unwrap_err().to_string();
+    assert!(e.contains("server error"), "{e}");
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_accepted, 1, "the flow was admitted first");
+    assert_eq!(m.net.sessions_evicted, 1, "then evicted by the poison block");
+
+    let llr = block(&b, 32, 8);
+    let want = b.clone().shards(1).build().unwrap().decode_stream(&llr).unwrap();
+    assert_eq!(u.decode_block(&llr).unwrap(), want);
+    let m = server.metrics();
+    assert_eq!(m.net.sessions_accepted, 2, "the same flow id re-admits");
+    assert_eq!(m.net.sessions_evicted, 1);
+    server.shutdown().unwrap();
+}
+
+/// An idle UDP flow is swept after the idle timeout.
+#[test]
+fn idle_udp_flow_is_swept() {
+    let b = builder("scalar", "flushed", 1);
+    let net = NetConfig { idle_timeout: Duration::from_millis(60), ..NetConfig::default() };
+    let server = start(b.clone(), net);
+    let mut u = UdpClient::connect(server.udp_addr().unwrap(), 5).unwrap();
+    u.decode_block(&block(&b, 32, 2)).unwrap();
+    assert!(
+        wait_for(5000, || server.metrics().net.sessions_evicted == 1),
+        "flow sweep: {:?}",
+        server.metrics().net
+    );
+    assert_eq!(server.metrics().net.sessions_accepted, 1);
+    server.shutdown().unwrap();
+}
+
+/// The metrics endpoint serves JSON with the net counters, both via
+/// the one-shot fetch and mid-session.
+#[test]
+fn metrics_endpoint_serves_net_counters() {
+    let b = builder("simd", "flushed", 2);
+    let server = start(b.clone(), NetConfig::default());
+    let addr = server.tcp_addr().unwrap();
+
+    let llr = block(&b, 64, 11);
+    tcp_decode(addr, &b, &llr);
+
+    let snap = Json::parse(&fetch_metrics(addr).unwrap()).unwrap();
+    let net = snap.get("net").unwrap();
+    assert_eq!(net.get("sessions_accepted").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(net.get("sessions_evicted").unwrap().as_f64().unwrap(), 0.0);
+    assert!(net.get("bytes_in").unwrap().as_f64().unwrap() > 0.0);
+    assert!(net.get("blocks").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(net.get("block_p99_us").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(snap.get("frames_in").unwrap().as_f64().unwrap() > 0.0);
+
+    // mid-session snapshot over an open client connection
+    let mut c = TcpClient::connect(addr, &b).unwrap();
+    let snap = Json::parse(&c.metrics_json().unwrap()).unwrap();
+    assert_eq!(snap.get("net").unwrap().get("sessions_accepted").unwrap().as_f64().unwrap(), 2.0);
+    server.shutdown().unwrap();
+}
+
+/// The loadgen harness soaks both transports on loopback: every block
+/// bit-identical to the oracle, nothing abandoned.
+#[test]
+fn loadgen_soaks_both_transports() {
+    let b = builder("simd", "flushed", 2);
+    let server = start(b.clone(), NetConfig::default());
+    let tcp = server.tcp_addr().unwrap().to_string();
+    let udp = server.udp_addr().unwrap().to_string();
+    for (addr, transport) in [(tcp, Transport::Tcp), (udp, Transport::Udp)] {
+        let opts = LoadgenOptions {
+            sessions: 4,
+            blocks_per_session: 3,
+            block_stages: 32,
+            transport,
+            ..LoadgenOptions::default()
+        };
+        let report = loadgen::run(&addr, &b, &opts).unwrap();
+        assert_eq!(report.blocks, 12, "{transport:?}: {report:?}");
+        assert_eq!(report.mismatches, 0);
+        assert_eq!(report.failures, 0);
+        report.check(None, None).unwrap();
+    }
+    let m = server.metrics();
+    assert!(m.net.sessions_accepted >= 16, "churned sessions: {m:?}");
+    server.shutdown().unwrap();
+}

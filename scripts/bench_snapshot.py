@@ -2,9 +2,10 @@
 """Run the throughput sweeps and snapshot Mb/s per backend/shard count.
 
 Runs `cargo bench --bench table1_throughput` and `--bench batching`
-(which write `bench_results/*.json`), then aggregates the CPU-backend
-rows into one trajectory document, `BENCH_PR5.json`, so successive PRs
-can compare like-for-like numbers:
+(which write `bench_results/*.json`), plus a loopback `tcvd serve` +
+`loadgen` sweep over session counts (docs/NETWORKING.md), then
+aggregates the CPU-backend rows into one trajectory document,
+`BENCH_PR6.json`, so successive PRs can compare like-for-like numbers:
 
   {
     "mode": "smoke" | "default" | "full",
@@ -17,6 +18,9 @@ can compare like-for-like numbers:
         {"mode": "flushed" | "tail-biting", "block_stages": ...,
          "data_bits_per_block": ..., "info_mbps": ...,
          "rate_efficiency": ...}, ...]},
+    "net": {"transport": "tcp", "backend": "simd", "rows": [
+        {"sessions": 1, "aggregate_mbps": ..., "p50_ms": ...,
+         "p99_ms": ..., "blocks": ..., "shed_retries": ...}, ...]},
     "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...,
                 "tail_biting_vs_flushed_info": ...}
   }
@@ -32,12 +36,21 @@ TCVD_BENCH_SMOKE=1) on every push to keep the sweeps from rotting;
 numbers meant for reading (docs/PERFORMANCE.md) come from a default or
 `--full` run on a quiet machine.
 
+The `net` rows come from real loopback sockets: the script builds the
+`tcvd` and `loadgen` binaries, starts `tcvd serve --listen 127.0.0.1:0`
+on the simd backend, parses the announced address, and runs the
+bit-verifying loadgen soak at each session count. Read the rows as a
+scaling curve — aggregate Mb/s should grow with sessions until the
+shards saturate while p99 stays bounded.
+
 Usage:
   python3 scripts/bench_snapshot.py [--smoke | --full] [--out PATH]
-      [--skip-run] [--min-simd-ratio R]
+      [--skip-run] [--no-net] [--min-simd-ratio R]
 
 `--skip-run` aggregates existing bench_results/ JSON without invoking
-cargo. `--min-simd-ratio R` exits 1 if simd/scalar single-shard
+cargo (it also skips the net sweep, which needs live binaries);
+`--no-net` skips only the net sweep.
+`--min-simd-ratio R` exits 1 if simd/scalar single-shard
 throughput on the table-1 workload is below R (the PR-4 acceptance
 floor is 3.0; leave it off in CI smoke runs, where container noise
 makes absolute ratios unreliable).
@@ -70,6 +83,62 @@ def run_benches(mode):
                      f"(rc={proc.returncode})")
 
 
+NET_SESSIONS = [1, 8, 32]
+# Must match the loadgen binary's pipeline defaults (simd backend on the
+# 64+32/32 CPU tile) so the HELLO handshake and the oracle line up.
+NET_SERVE_FLAGS = ["--backend", "simd", "--payload", "64",
+                   "--head", "32", "--tail", "32"]
+
+
+def net_sweep(mode):
+    """Loopback serving sweep: tcvd serve + loadgen at each session count."""
+    cmd = ["cargo", "build", "--release", "--bin", "tcvd", "--bin", "loadgen"]
+    print(f"bench_snapshot: running {' '.join(cmd)}", flush=True)
+    if subprocess.run(cmd, cwd=REPO).returncode != 0:
+        sys.exit("bench_snapshot: cargo build failed")
+    release = os.path.join(REPO, "target", "release")
+
+    serve = subprocess.Popen(
+        [os.path.join(release, "tcvd"), "serve", "--listen", "127.0.0.1:0"]
+        + NET_SERVE_FLAGS,
+        cwd=REPO, stdout=subprocess.PIPE, text=True)
+    try:
+        addr = None
+        for line in serve.stdout:
+            if "listening tcp=" in line:
+                addr = line.rsplit("tcp=", 1)[1].strip()
+                break
+        if not addr:
+            sys.exit("bench_snapshot: tcvd serve never announced its address")
+
+        rows = []
+        for sessions in NET_SESSIONS:
+            lg = [os.path.join(release, "loadgen"),
+                  "--connect", addr, "--sessions", str(sessions), "--json"]
+            if mode == "smoke":
+                lg.append("--smoke")
+            elif mode == "full":
+                lg += ["--blocks", "8", "--block-stages", "512"]
+            print(f"bench_snapshot: running {' '.join(lg[1:])}", flush=True)
+            proc = subprocess.run(lg, cwd=REPO, stdout=subprocess.PIPE,
+                                  text=True)
+            out = proc.stdout
+            if proc.returncode != 0:
+                sys.exit(f"bench_snapshot: loadgen soak failed "
+                         f"(rc={proc.returncode}):\n{out}")
+            brace = out.find("{")
+            if brace < 0:
+                sys.exit(f"bench_snapshot: loadgen emitted no JSON:\n{out}")
+            report = json.loads(out[brace:])
+            rows.append({k: report[k] for k in
+                         ("sessions", "aggregate_mbps", "p50_ms", "p99_ms",
+                          "blocks", "shed_retries")})
+    finally:
+        serve.terminate()
+        serve.wait()
+    return {"transport": "tcp", "backend": "simd", "rows": rows}
+
+
 def load(name):
     path = os.path.join(RESULTS, name)
     try:
@@ -85,9 +154,11 @@ def main():
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--smoke", action="store_true", help="tiny CI budgets")
     ap.add_argument("--full", action="store_true", help="full-rigor budgets")
-    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR5.json"))
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR6.json"))
     ap.add_argument("--skip-run", action="store_true",
                     help="aggregate existing bench_results/ without cargo")
+    ap.add_argument("--no-net", action="store_true",
+                    help="skip the loopback serve + loadgen sweep")
     ap.add_argument("--min-simd-ratio", type=float, default=None,
                     help="fail below this simd/scalar table-1 ratio")
     args = ap.parse_args()
@@ -133,6 +204,8 @@ def main():
     if not doc["termination"]["rows"]:
         sys.exit("bench_snapshot: batching.json has no termination_rows — "
                  "re-run the bench (old results file?)")
+    if not (args.skip_run or args.no_net):
+        doc["net"] = net_sweep(mode)
     scalar = backends.get("scalar", {}).get("mbps")
     simd = backends.get("simd", {}).get("mbps")
     if scalar and simd:
@@ -154,6 +227,11 @@ def main():
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"bench_snapshot: wrote {args.out}")
+    if "net" in doc and doc["net"]["rows"]:
+        top = doc["net"]["rows"][-1]
+        print(f"bench_snapshot: net {top['sessions']} sessions -> "
+              f"{top['aggregate_mbps']:.2f} Mb/s aggregate, "
+              f"p99 {top['p99_ms']:.2f} ms")
     if "summary" in doc:
         s = doc["summary"]
         print(f"bench_snapshot: scalar {s['scalar_mbps']:.2f} Mb/s, "
