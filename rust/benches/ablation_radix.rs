@@ -1,37 +1,45 @@
 //! E4 — radix/packing ablation: scalar baseline vs radix-2 (Fig 5,
 //! Q=2 ops/stage) vs radix-4 without permutation (Fig 14, Q=2) vs
-//! radix-4 + dragonfly-group permutation (Fig 15, Q=0.5).
+//! radix-4 + dragonfly-group permutation (Fig 15, Q=0.5), plus the
+//! quantized SIMD fast path at radix-2^rho (rho 1 vs 2).
 //!
 //! Reports the paper's Q metric (tensor ops per stage — the hardware-
-//! independent claim), CPU wall time per decoded bit for the emulation
-//! backends, and PJRT throughput for the AOT variants where present.
+//! independent claim) and **info-bit Mb/s** for every row, measured the
+//! same way `table1_throughput.rs` measures its rows: `llr.len() / 2`
+//! info bits over wall time, `Truncated` termination (the mid-stream
+//! workload has no flushed end), one shard / one engine so rows compare
+//! per-executable work, not fleet size.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use std::sync::Arc;
 
-use tcvd::api::{DecoderBuilder, TerminationMode};
+use tcvd::api::{Decoder, DecoderBuilder, TerminationMode};
 use tcvd::coding::packing::build_packing;
 use tcvd::coding::{registry, trellis::Trellis};
 use tcvd::defaults;
 use tcvd::util::json::{self, Json};
-use tcvd::viterbi::types::FrameDecoder;
 
 fn main() -> tcvd::Result<()> {
     let trellis = Arc::new(Trellis::new(registry::paper_code()));
-    let info_bits = if common::full_rigor() { 262_144 } else { 65_536 };
-    let (_, llr) = common::workload(99, info_bits, 5.0);
+    let requested = if common::full_rigor() { 262_144 } else { 65_536 };
+    let (_, llr) = common::workload(99, requested, 5.0);
+    // info-bit accounting identical to table1_throughput.rs: the stream
+    // carries one info bit per trellis stage (rate-1/2, beta = 2)
+    let info_bits = llr.len() / 2;
     let tile = defaults::CPU_TILE;
 
     println!("E4 — packing ablation on (2,1,7) 171/133\n");
-    println!("{:>16} | {:>12} | {:>12} | {:>14}", "decoder", "Q ops/stage", "matmul ops", "cpu Mb/s");
+    println!(
+        "{:>16} | {:>12} | {:>12} | {:>14}",
+        "decoder", "Q ops/stage", "matmul ops", "info Mb/s"
+    );
 
     let mut rows = Vec::new();
-    let mut bench_cpu = |name: &str, dec: &mut dyn FrameDecoder, q: f64| {
+    let mut bench_cpu = |name: &str, dec: &mut Decoder, q: f64| {
         let d = common::time_median(3, || {
-            tcvd::viterbi::tiled::decode_stream(dec, &llr, 2, &tile, TerminationMode::Flushed)
-                .unwrap();
+            dec.decode_stream(&llr).unwrap();
         });
         let mbps = common::mbps(info_bits, d);
         let total_ops = q * (info_bits as f64);
@@ -43,8 +51,17 @@ fn main() -> tcvd::Result<()> {
         ]));
     };
 
-    let mut scalar = DecoderBuilder::new().backend_name("scalar")?.tile(tile).build()?;
-    bench_cpu("scalar", scalar.as_frame_decoder(), f64::NAN);
+    // one-shot CPU rows: Truncated + single shard, matching the table-1
+    // CPU methodology (same workload family, same accounting)
+    let cpu_builder = |backend: &str| -> tcvd::Result<DecoderBuilder> {
+        Ok(DecoderBuilder::new()
+            .backend_name(backend)?
+            .tile(tile)
+            .termination(TerminationMode::Truncated)
+            .shards(1))
+    };
+    let mut scalar = cpu_builder("scalar")?.build()?;
+    bench_cpu("scalar", &mut scalar, f64::NAN);
     for (backend, scheme) in [
         ("cpu-radix2", "radix2"),
         ("cpu-radix4-noperm", "radix4_noperm"),
@@ -52,8 +69,15 @@ fn main() -> tcvd::Result<()> {
     ] {
         let pk = build_packing(&trellis, scheme).expect("known scheme");
         let q = pk.ops_per_stage();
-        let mut dec = DecoderBuilder::new().backend_name(backend)?.tile(tile).build()?;
-        bench_cpu(scheme, dec.as_frame_decoder(), q);
+        let mut dec = cpu_builder(backend)?.build()?;
+        bench_cpu(scheme, &mut dec, q);
+    }
+    // the quantized SIMD fast path at both radixes: rho = 2 folds stage
+    // pairs into radix-4 super-branch tournaments (no tensor ops, so no
+    // Q — the comparison axis is the serial trip count)
+    for (name, rho) in [("simd-r1", 1usize), ("simd-r2", 2)] {
+        let mut dec = cpu_builder("simd")?.radix(rho).build()?;
+        bench_cpu(name, &mut dec, f64::NAN);
     }
 
     // PJRT artifacts: radix2 (b64_s96) vs radix4+perm (b64_s48)
@@ -96,6 +120,7 @@ fn main() -> tcvd::Result<()> {
 
     common::write_json("ablation_radix", &json::obj(vec![
         ("experiment", json::s("E4/radix-ablation")),
+        ("info_bits", json::num(info_bits as f64)),
         ("cpu", Json::Arr(rows)),
         ("pjrt", Json::Arr(pjrt_rows)),
     ]));

@@ -57,11 +57,12 @@ fn run(sessions: usize, max_batch: usize, deadline_us: u64, info_bits: usize)
 /// transmitted payloads, so the sweep also witnesses the
 /// shard-invariance guarantee — for the quantized `simd` backend this
 /// additionally witnesses that quantization is transparent at 6 dB.
-fn run_sharded(backend: &str, shards: usize, sessions: usize, info_bits: usize)
+fn run_sharded(backend: &str, radix: usize, shards: usize, sessions: usize, info_bits: usize)
                -> tcvd::Result<(f64, f64, u64)> {
     let coord = Arc::new(
         DecoderBuilder::new()
             .backend_name(backend)?
+            .radix(radix)
             .tile(defaults::CPU_TILE)
             .shards(shards)
             .workers(2)
@@ -208,19 +209,23 @@ fn main() -> tcvd::Result<()> {
         }
     }
     // shard scaling: aggregate serve() throughput vs engine shard count
-    // per CPU backend (BENCH_PR5.json's Mb/s-per-backend/shard matrix;
-    // no artifacts needed)
+    // per CPU backend (the snapshot's Mb/s-per-backend/shard matrix; no
+    // artifacts needed). The simd backend runs at both radixes — the
+    // per-rho rows feed `summary.radix2_vs_radix1` in bench_snapshot.py,
+    // which CI holds against the committed bench_floors.json.
     let shard_bits = common::budget(131_072, 262_144, 1_048_576);
     let mut shard_rows = Vec::new();
-    for backend in ["cpu-radix4", "simd"] {
-        println!("\nshard scaling — 8 sessions, {backend} backend, {shard_bits} info bits");
+    for (label, backend, radix) in
+        [("cpu-radix4", "cpu-radix4", 1usize), ("simd", "simd", 1), ("simd-r2", "simd", 2)]
+    {
+        println!("\nshard scaling — 8 sessions, {label} backend, {shard_bits} info bits");
         println!(
             "{:>7} | {:>10} {:>11} {:>8} {:>9}",
             "shards", "Mb/s", "mean_batch", "steals", "speedup"
         );
         let mut base_mbps = None;
         for shards in [1usize, 2, 4, 8] {
-            match run_sharded(backend, shards, 8, shard_bits) {
+            match run_sharded(backend, radix, shards, 8, shard_bits) {
                 Ok((mbps, mean_batch, steals)) => {
                     let base = *base_mbps.get_or_insert(mbps);
                     println!(
@@ -228,7 +233,8 @@ fn main() -> tcvd::Result<()> {
                         mbps / base
                     );
                     shard_rows.push(json::obj(vec![
-                        ("backend", json::s(backend)),
+                        ("backend", json::s(label)),
+                        ("radix", json::num(radix as f64)),
                         ("shards", json::num(shards as f64)),
                         ("mbps", json::num(mbps)),
                         ("mean_batch", json::num(mean_batch)),
@@ -283,7 +289,7 @@ fn main() -> tcvd::Result<()> {
         }
     }
     // termination-mode sweep: flushed vs tail-biting info throughput on
-    // short blocks (BENCH_PR5.json's per-mode rows; docs/DECODING-MODES.md)
+    // short blocks (the snapshot's per-mode rows; docs/DECODING-MODES.md)
     let n_blocks = common::budget(48, 256, 1024);
     println!("\ntermination modes — simd backend, one-shot short blocks, {n_blocks} blocks");
     println!(

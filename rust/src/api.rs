@@ -172,6 +172,7 @@ pub struct DecoderBuilder {
     acc: AccPrecision,
     chan: ChannelPrecision,
     renorm_every: usize,
+    radix: usize,
     max_batch: usize,
     batch_deadline: Duration,
     workers: usize,
@@ -191,6 +192,7 @@ impl Default for DecoderBuilder {
             acc: AccPrecision::Single,
             chan: ChannelPrecision::Single,
             renorm_every: defaults::RENORM_EVERY,
+            radix: defaults::RADIX,
             max_batch: defaults::MAX_BATCH,
             batch_deadline: Duration::from_micros(defaults::BATCH_DEADLINE_US),
             workers: defaults::WORKERS,
@@ -295,6 +297,18 @@ impl DecoderBuilder {
         self
     }
 
+    /// Trellis stages folded per ACS pass on the `simd` backend
+    /// (radix-2^rho super-branches, rho in {1, 2}; default 1). rho = 2
+    /// halves the serial stage-loop trip count and stays bit-identical
+    /// to the scalar oracle; it requires an even frame stage count and
+    /// `rho < k` ([`validate`](Self::validate) enforces both). Other
+    /// backends ignore the knob (`cpu-radix*` carry their radix in the
+    /// scheme name).
+    pub fn radix(mut self, rho: usize) -> Self {
+        self.radix = rho;
+        self
+    }
+
     /// Dynamic batcher: max frames per execution.
     pub fn max_batch(mut self, frames: usize) -> Self {
         self.max_batch = frames;
@@ -370,6 +384,7 @@ impl DecoderBuilder {
             workers: cfg.workers,
             queue_depth: cfg.queue_depth,
             shards: cfg.shards,
+            radix: cfg.radix,
             ..DecoderBuilder::new()
         };
         b.backend_name(&cfg.backend)?.termination_name(&cfg.termination)
@@ -412,6 +427,7 @@ impl DecoderBuilder {
         self.queue_depth = args.get_usize("queue-depth", self.queue_depth)?;
         self.shards = args.get_usize("shards", self.shards)?;
         self.renorm_every = args.get_usize("renorm-every", self.renorm_every)?;
+        self.radix = args.get_usize("radix", self.radix)?;
         if let Some(v) = args.get("termination") {
             let name = v.to_string();
             self = self.termination_name(&name)?;
@@ -447,7 +463,34 @@ impl DecoderBuilder {
     /// Validate the full parameter set (also called by
     /// [`build`](Self::build)/[`serve`](Self::serve)).
     pub fn validate(&self) -> Result<()> {
-        registry::lookup(&self.code).map_err(|e| Error::config(e))?;
+        let code = registry::lookup(&self.code).map_err(|e| Error::config(e))?;
+        if self.radix != 1 && self.radix != 2 {
+            return Err(Error::config(format!(
+                "radix must be 1 or 2, got {}",
+                self.radix
+            )));
+        }
+        if self.backend == BackendKind::Simd && self.radix == 2 {
+            // the radix-4 super-stage kernel folds stage pairs, so the
+            // frame must split into whole super-stages and the code
+            // must have dragonflies at rho = 2 (Thm 3: rho < k)
+            if self.tile.frame_stages() % 2 != 0 {
+                return Err(Error::config(format!(
+                    "radix 2 needs an even frame stage count, got {} \
+                     (payload {} + head {} + tail {})",
+                    self.tile.frame_stages(),
+                    self.tile.payload,
+                    self.tile.head,
+                    self.tile.tail
+                )));
+            }
+            if code.k() <= 2 {
+                return Err(Error::config(format!(
+                    "radix 2 invalid for constraint length k={}",
+                    code.k()
+                )));
+            }
+        }
         if self.tile.payload == 0 {
             return Err(Error::config("tile payload must be positive"));
         }
@@ -505,6 +548,7 @@ impl DecoderBuilder {
                 code: self.code.clone(),
                 stages: self.tile.frame_stages(),
                 renorm_every: self.renorm_every,
+                radix: self.radix,
             },
             BackendKind::Cpu { scheme } => BackendSpec::CpuPacked {
                 code: self.code.clone(),
@@ -658,6 +702,14 @@ pub fn builder_flags() -> Vec<FlagSpec> {
                 "engine shards, one backend instance each (default: available \
                  parallelism, {} here)",
                 defaults::default_shards()
+            ),
+        ),
+        FlagSpec::new(
+            "radix",
+            "RHO",
+            format!(
+                "trellis stages folded per simd ACS pass, 1 or 2 (default {})",
+                defaults::RADIX
             ),
         ),
         FlagSpec::new(
@@ -983,6 +1035,34 @@ mod tests {
             BackendSpec::Simd { renorm_every, .. } => assert_eq!(renorm_every, 4),
             other => panic!("expected Simd spec, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn radix_flows_into_simd_spec_and_validates() {
+        let b = DecoderBuilder::new().backend(BackendKind::Simd).radix(2);
+        assert!(b.validate().is_ok(), "default geometry is radix-2 clean");
+        match b.to_backend_spec() {
+            BackendSpec::Simd { radix, .. } => assert_eq!(radix, 2),
+            other => panic!("expected Simd spec, got {other:?}"),
+        }
+        // rho outside {1, 2} is a config error on any backend
+        let err = DecoderBuilder::new().radix(3).validate().unwrap_err();
+        assert!(err.to_string().contains("radix"), "{err}");
+        // an odd frame stage count cannot split into super-stages
+        let err = DecoderBuilder::new()
+            .backend(BackendKind::Simd)
+            .radix(2)
+            .tile_dims(33, 0, 0)
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("even frame stage count"), "{err}");
+        // non-simd backends ignore the knob entirely
+        assert!(DecoderBuilder::new()
+            .backend(BackendKind::Scalar)
+            .radix(2)
+            .tile_dims(33, 0, 0)
+            .validate()
+            .is_ok());
     }
 
     #[test]

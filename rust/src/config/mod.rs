@@ -37,6 +37,10 @@ pub struct Config {
     pub queue_depth: usize,
     /// Engine shards (backend instances); default: available parallelism.
     pub shards: usize,
+    /// Trellis stages folded per `simd` ACS pass (radix-2^rho, 1 or
+    /// 2); validated against the code/tile geometry when the builder
+    /// consumes this config.
+    pub radix: usize,
     /// Stream termination mode name (see
     /// `coding::TerminationMode::NAMES`); validated when the builder
     /// consumes this config.
@@ -68,6 +72,7 @@ impl Default for Config {
             workers: defaults::WORKERS,
             queue_depth: defaults::QUEUE_DEPTH,
             shards: defaults::default_shards(),
+            radix: defaults::RADIX,
             termination: defaults::TERMINATION.as_str().to_string(),
             net_listen: None,
             net_udp: None,
@@ -129,6 +134,9 @@ impl Config {
         }
         if let Some(v) = doc.get("coordinator", "shards") {
             cfg.shards = v.as_usize().or_config("coordinator.shards")?;
+        }
+        if let Some(v) = doc.get("", "radix") {
+            cfg.radix = v.as_usize().or_config("radix")?;
         }
         if let Some(v) = doc.get("", "termination") {
             cfg.termination = v.as_str().or_config("termination")?.to_string();
@@ -212,6 +220,19 @@ mod tests {
         let cfg = Config::from_toml("backend = \"simd\"\n").unwrap();
         assert_eq!(cfg.backend, "simd");
         crate::api::DecoderBuilder::from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn parses_radix() {
+        assert_eq!(Config::default().radix, defaults::RADIX);
+        let cfg = Config::from_toml("backend = \"simd\"\nradix = 2\n").unwrap();
+        assert_eq!(cfg.radix, 2);
+        let b = crate::api::DecoderBuilder::from_config(&cfg).unwrap();
+        b.validate().unwrap();
+        // an out-of-range radix is rejected when the builder validates
+        let bad = Config::from_toml("backend = \"simd\"\nradix = 3\n").unwrap();
+        let b = crate::api::DecoderBuilder::from_config(&bad).unwrap();
+        assert!(b.validate().is_err());
     }
 
     #[test]

@@ -50,9 +50,12 @@ pub enum BackendSpec {
     /// saturating adds and periodic renormalization, per-symbol
     /// branch-metric dedup, structure-of-arrays butterfly update
     /// (autovectorized, AVX2 kernel behind a runtime check), decisions
-    /// bit-packed into the `Compact` ring. Decodes bit-identically to
-    /// `Scalar` on grid LLRs; model in `docs/PERFORMANCE.md`.
-    Simd { code: String, stages: usize, renorm_every: usize },
+    /// bit-packed into the `Compact` ring. `radix` (1 or 2) sets the
+    /// trellis stages folded per pass: 2 runs radix-4 super-branch
+    /// tournaments over precomputed `(y_left, y_right)` metric planes
+    /// and stores 2-bit winners. Decodes bit-identically to `Scalar`
+    /// on grid LLRs at either radix; model in `docs/PERFORMANCE.md`.
+    Simd { code: String, stages: usize, renorm_every: usize, radix: usize },
 }
 
 impl BackendSpec {
@@ -94,10 +97,11 @@ impl BackendSpec {
                 let trellis = Arc::new(Trellis::new(code));
                 Ok(Box::new(CompactDecoder::new(trellis, *stages)))
             }
-            BackendSpec::Simd { code, stages, renorm_every } => {
+            BackendSpec::Simd { code, stages, renorm_every, radix } => {
                 let code = registry::lookup(code).or_backend("simd backend")?;
                 let trellis = Arc::new(Trellis::new(code));
-                Ok(Box::new(SimdDecoder::new(trellis, *stages, *renorm_every)))
+                Ok(Box::new(SimdDecoder::with_radix(trellis, *stages, *renorm_every,
+                                                    *radix)))
             }
         }
     }
@@ -128,11 +132,27 @@ mod tests {
         assert_eq!(dec3.frame_stages(), 32);
         assert_eq!(dec3.label(), "compact");
 
-        let dec4 = BackendSpec::Simd { code: "ccsds".into(), stages: 32, renorm_every: 16 }
-            .build()
-            .unwrap();
+        let dec4 = BackendSpec::Simd {
+            code: "ccsds".into(),
+            stages: 32,
+            renorm_every: 16,
+            radix: 1,
+        }
+        .build()
+        .unwrap();
         assert_eq!(dec4.frame_stages(), 32);
         assert_eq!(dec4.label(), "simd");
+
+        let dec5 = BackendSpec::Simd {
+            code: "ccsds".into(),
+            stages: 32,
+            renorm_every: 16,
+            radix: 2,
+        }
+        .build()
+        .unwrap();
+        assert_eq!(dec5.frame_stages(), 32);
+        assert_eq!(dec5.label(), "simd");
     }
 
     #[test]

@@ -97,6 +97,13 @@ pub const TERMINATION: TerminationMode = TerminationMode::Flushed;
 /// quantized SIMD backends.
 pub const RENORM_EVERY: usize = 16;
 
+/// Quantized SIMD backend: trellis stages folded per ACS pass
+/// (radix-2^RADIX super-branches). 1 keeps the classic butterfly
+/// kernel; 2 halves the serial stage-loop trip count
+/// (`DecoderBuilder::radix`, `--radix`, bit-identical either way —
+/// see `docs/PERFORMANCE.md`).
+pub const RADIX: usize = 1;
+
 /// Quantized SIMD backend: LLRs land on a grid with step
 /// `1 / SIMD_LLR_SCALE` (i.e. `q = round(llr * SIMD_LLR_SCALE)`); the
 /// quantization/renormalization model is documented in

@@ -256,6 +256,10 @@ fn cmd_selftest(args: &Args) -> Result<()> {
             ("scalar", DecoderBuilder::new().backend_name("scalar")?.tile(defaults::CPU_TILE)),
             ("compact", DecoderBuilder::new().backend_name("compact")?.tile(defaults::CPU_TILE)),
             ("simd", DecoderBuilder::new().backend_name("simd")?.tile(defaults::CPU_TILE)),
+            (
+                "simd-r2",
+                DecoderBuilder::new().backend_name("simd")?.radix(2).tile(defaults::CPU_TILE),
+            ),
         ];
         if mode == TerminationMode::Flushed {
             builders.push((

@@ -27,6 +27,17 @@
 //!   AVX2 (checked at runtime) an explicit `core::arch` kernel runs
 //!   the same update 16 butterflies per instruction, with the portable
 //!   loop as fallback everywhere else. Both produce identical bits.
+//! * **Radix-2^rho super-stages.** With `radix = 2` (the paper's Thm
+//!   3–7 trick, [`SimdDecoder::with_radix`]) the stage loop collapses
+//!   pairs of trellis stages into one pass over 2^rho-way
+//!   super-branches: 16 precomputed `(y_left, y_right)` sign planes
+//!   turn two stages of branch metrics into one plane sweep, a
+//!   four-candidate tournament replaces two dependent butterfly
+//!   updates, and the 2-bit winners go straight into
+//!   [`CompactSurvivors::from_radix`](super::compact::CompactSurvivors::from_radix)
+//!   so traceback walks the exact Thm-4 path the packed backends use.
+//!   The trip count of the serial stage recursion — the part no lane
+//!   width can hide — halves.
 //! * **Zero-alloc steady state.** All scratch (quantized LLRs, metric
 //!   split, branch-metric planes, decision lanes) and the bit-packed
 //!   [`DecisionRing`] are allocated once at construction and reused
@@ -45,9 +56,24 @@
 //! compare during the first `k - 1` stages (after which every state
 //! has a real path). Saturation at `i16::MIN` can reorder metrics only
 //! among hopeless states that the surviving path never visits.
-//! `rust/tests/simd_equivalence.rs` pins this across random codes,
-//! geometries, renorm intervals, shard counts and saturation-stress
-//! LLRs; `docs/PERFORMANCE.md` documents the model.
+//!
+//! At `radix = 2` the same theorem holds because the tournament is the
+//! scalar recursion, reassociated: within a predecessor pair both
+//! candidates share the second-stage branch metric (the mid state to
+//! right state hop is common), so the pair compare equals the scalar
+//! stage-`t+1` compare, the cross-pair compare equals the scalar
+//! stage-`t+2` compare, and strict-greater-wins at both levels
+//! composes to the scalar `l0 >= l1` tie-break exactly. The headroom
+//! spread widens by one stage (`2(k-1) + rho`) and the NEG-Q
+//! separation horizon by `rho - 1` stages
+//! (`|NEG_Q| > 2 (k-2+rho) beta qmax`), both enforced by
+//! [`Quantizer::for_code_radix`]; renormalization lands on super-stage
+//! boundaries, which is still a uniform shift. `docs/PERFORMANCE.md`
+//! spells the argument out.
+//!
+//! `rust/tests/simd_equivalence.rs` pins all of this across random
+//! codes, geometries, renorm intervals, shard counts, termination
+//! modes, radixes and saturation-stress LLRs.
 //!
 //! ```
 //! use std::sync::Arc;
@@ -73,7 +99,7 @@ use std::sync::Arc;
 use crate::coding::trellis::Trellis;
 use crate::defaults;
 
-use super::compact::DecisionRing;
+use super::compact::{CompactSurvivors, DecisionRing};
 use super::types::{FrameDecoder, FrameJob, RawFrame, Survivors};
 
 /// Finite "minus infinity" for quantized path metrics: low enough that
@@ -98,16 +124,31 @@ pub struct Quantizer {
 }
 
 impl Quantizer {
-    /// The quantizer for a code geometry.
+    /// The quantizer for a code geometry (single-stage passes).
     pub fn for_code(k: u32, beta: usize) -> Quantizer {
-        // separation: NEG_Q + 2 (k-1) * bm_max < 0 with bm_max = beta*qmax
-        let sep = (-(NEG_Q as i64) - 1) / (2 * (k as i64 - 1) * beta as i64);
+        Quantizer::for_code_radix(k, beta, 1)
+    }
+
+    /// The quantizer for a code geometry decoded in radix-2^rho
+    /// super-stages. At `rho = 1` this is exactly [`for_code`]; at
+    /// `rho > 1` both invariants below widen by the extra stages a
+    /// single super-branch add spans.
+    ///
+    /// [`for_code`]: Quantizer::for_code
+    pub fn for_code_radix(k: u32, beta: usize, rho: usize) -> Quantizer {
+        let (k, beta, rho) = (k as i64, beta as i64, rho as i64);
+        // separation: a NEG-descendant can survive into a compare up to
+        // rho - 1 stages past the k - 1 warm-up horizon, so require
+        // NEG_Q + 2 (k-2+rho) * bm_max < 0 with bm_max = beta*qmax
+        // (reduces to 2 (k-1) at rho = 1)
+        let sep = (-(NEG_Q as i64) - 1) / (2 * (k - 2 + rho) * beta);
         // headroom: even at the narrowest renormalization period (one
-        // stage), every real-path value — floor `-(1 + 2(k-1)) * bm_max`
-        // below the running maximum, plus one more add — stays above
-        // i16::MIN, so exactness never depends on the generator
-        // polynomials keeping the metric maximum monotone
-        let headroom = i16::MAX as i64 / ((2 * (k as i64 - 1) + 2) * beta as i64);
+        // super-stage), every real-path value — floor
+        // `-(rho + 2(k-1)) * bm_max` below the running maximum, plus
+        // one more rho-stage super-branch add — stays above i16::MIN,
+        // so exactness never depends on the generator polynomials
+        // keeping the metric maximum monotone
+        let headroom = i16::MAX as i64 / ((2 * (k - 1) + 2 * rho) * beta);
         Quantizer { qmax: defaults::SIMD_QMAX.min(sep.min(headroom).max(1) as i16) }
     }
 
@@ -133,6 +174,12 @@ impl Quantizer {
     pub fn branch_metric_max(&self, beta: usize) -> i32 {
         self.qmax as i32 * beta as i32
     }
+
+    /// Largest per-super-stage branch-metric magnitude on the grid —
+    /// `rho` stages land in one saturating add at radix 2^rho.
+    pub fn superbranch_metric_max(&self, beta: usize, rho: usize) -> i32 {
+        self.branch_metric_max(beta) * rho as i32
+    }
 }
 
 /// `FrameDecoder` for the quantized SIMD fast path — the
@@ -144,26 +191,52 @@ impl Quantizer {
 pub struct SimdDecoder {
     trellis: Arc<Trellis>,
     stages: usize,
-    /// Effective renormalization period in stages (>= 1; user value
-    /// clamped to the i16 headroom cap, 0 selects the cap).
+    /// Effective renormalization period in stages (>= rho, a multiple
+    /// of rho; user value clamped to the i16 headroom cap, 0 selects
+    /// the cap).
     renorm_every: usize,
     quant: Quantizer,
     beta: usize,
+    /// Trellis stages folded per pass (1 = butterfly ACS, 2 =
+    /// radix-4 super-branch tournament).
+    rho: usize,
     /// Butterfly count `S / 2`.
     h: usize,
+    /// Dragonfly count `S / 2^rho` (== `h` at rho 1).
+    ndf: usize,
     /// `±1` sign planes, `[class][bit][butterfly]` flattened: class 0/1
     /// feed states `f` (low half, input 0) from predecessors `2f` /
     /// `2f+1`, class 2/3 feed states `h + f` (high half, input 1).
+    /// Empty at rho 2.
     sgn: Vec<i16>,
+    /// rho = 2 super-branch sign planes,
+    /// `[class][bit][dragonfly]` flattened with
+    /// `class = (y_right << 2) | y_left` and `rho * beta` bits per
+    /// class. Empty at rho 1.
+    sgn2: Vec<i16>,
     // --- scratch, allocated once, reused for every frame ---
     q: Vec<i16>,
     lam: Vec<i16>,
     ev: Vec<i16>,
     od: Vec<i16>,
+    /// Left-metric quarter gather at rho 2: `g[y*ndf + f] = lam[4f+y]`
+    /// (Thm 4 left states of dragonfly `f`). Empty at rho 1.
+    g: Vec<i16>,
     /// Per-stage branch metrics, `[class][butterfly]` flattened.
     bm: Vec<i16>,
-    /// Decision lanes (nonzero = the high predecessor won).
+    /// Per-super-stage branch metrics at rho 2, `[class][dragonfly]`
+    /// flattened (16 classes). Empty at rho 1.
+    bm2: Vec<i16>,
+    /// Decision lanes (nonzero = the high predecessor won; at rho 2,
+    /// bit 0 of the tournament winner).
     dec: Vec<i16>,
+    /// Second decision lane at rho 2 (bit 1 of the winner). Empty at
+    /// rho 1.
+    dec_hi: Vec<i16>,
+    /// rho-bit winner staging for a whole frame at rho 2, step-major
+    /// (`[step][state]`), fed to `CompactSurvivors::from_radix`. Empty
+    /// at rho 1.
+    phi: Vec<u8>,
     ring: DecisionRing,
     use_avx2: bool,
 }
@@ -173,32 +246,75 @@ impl SimdDecoder {
     /// renormalization period in stages (0 = the widest period the i16
     /// headroom allows; larger requests are clamped to it).
     pub fn new(trellis: Arc<Trellis>, stages: usize, renorm_every: usize) -> Self {
+        SimdDecoder::with_radix(trellis, stages, renorm_every, 1)
+    }
+
+    /// A decoder folding `rho in {1, 2}` trellis stages per pass
+    /// (radix-2^rho super-branches, the paper's Thm 3–7). `rho = 1` is
+    /// exactly [`new`](SimdDecoder::new); `rho = 2` requires an even
+    /// `stages` and `rho < k` (validated by
+    /// [`DecoderBuilder::radix`](crate::api::DecoderBuilder::radix)
+    /// before construction — this constructor panics on misuse).
+    pub fn with_radix(trellis: Arc<Trellis>, stages: usize, renorm_every: usize,
+                      rho: usize) -> Self {
         let code = trellis.code();
+        assert!(rho == 1 || rho == 2, "simd radix must be 1 or 2, got {rho}");
+        assert!((rho as u32) < code.k(), "radix-2^{rho} invalid for k={}", code.k());
+        assert_eq!(stages % rho, 0,
+                   "frame stages {stages} not divisible by radix rho={rho}");
         let s_count = code.n_states();
         let beta = code.beta();
         let h = s_count / 2;
-        let quant = Quantizer::for_code(code.k(), beta);
+        let ndf = trellis.n_dragonflies(rho as u32);
+        let quant = Quantizer::for_code_radix(code.k(), beta, rho);
         // headroom cap on the renormalization period R: real-path
         // metrics live in [-(R + 2(k-1)) * bm_max, R * bm_max] around
         // the running maximum (which may drift down bm_max per stage
         // for codes whose branch outputs are not complementary), so
-        // (R + 2(k-1) + 1) * bm_max <= i16::MAX keeps every compared
-        // value exact — no saturation on any surviving path
+        // (R + 2(k-1) + rho) * bm_max <= i16::MAX keeps every compared
+        // value exact — no saturation on any surviving path (the
+        // `+ rho` is the one super-branch add past the window). The
+        // period is floored to a multiple of rho so renormalization
+        // always lands on a super-stage boundary.
         let bm_max = quant.branch_metric_max(beta);
-        let spread = 2 * (code.k() as i32 - 1) + 1;
-        let cap = (i16::MAX as i32 / bm_max - spread).max(1) as usize;
+        let spread = 2 * (code.k() as i32 - 1) + rho as i32;
+        let cap = (i16::MAX as i32 / bm_max - spread).max(rho as i32) as usize;
         let renorm = if renorm_every == 0 { cap } else { renorm_every.min(cap) };
+        let renorm = (renorm / rho * rho).max(rho);
 
-        let mut sgn = vec![0i16; 4 * beta * h];
-        for f in 0..h {
-            // branch classes: (class, predecessor, input bit u); states
-            // f and h + f share predecessors {2f, 2f+1} (Thm 1) and
-            // consume u = 0 / u = 1 respectively (u is the MSB of j)
-            for (cls, src, u) in [(0usize, 2 * f, 0usize), (1, 2 * f + 1, 0),
-                                  (2, 2 * f, 1), (3, 2 * f + 1, 1)] {
-                let sym = trellis.out[src][u];
-                for b in 0..beta {
-                    sgn[(cls * beta + b) * h + f] = if (sym >> b) & 1 == 0 { 1 } else { -1 };
+        let mut sgn = Vec::new();
+        let mut sgn2 = Vec::new();
+        if rho == 1 {
+            sgn = vec![0i16; 4 * beta * h];
+            for f in 0..h {
+                // branch classes: (class, predecessor, input bit u); states
+                // f and h + f share predecessors {2f, 2f+1} (Thm 1) and
+                // consume u = 0 / u = 1 respectively (u is the MSB of j)
+                for (cls, src, u) in [(0usize, 2 * f, 0usize), (1, 2 * f + 1, 0),
+                                      (2, 2 * f, 1), (3, 2 * f + 1, 1)] {
+                    let sym = trellis.out[src][u];
+                    for b in 0..beta {
+                        sgn[(cls * beta + b) * h + f] =
+                            if (sym >> b) & 1 == 0 { 1 } else { -1 };
+                    }
+                }
+            }
+        } else {
+            // 16 super-branch classes (y_left, y_right), each rho*beta
+            // output bits per dragonfly (Thm 6: the path, hence the
+            // output, is unique given the endpoints)
+            let rb = rho * beta;
+            sgn2 = vec![0i16; 16 * rb * ndf];
+            for yr in 0..4u32 {
+                for yl in 0..4u32 {
+                    let cls = ((yr << 2) | yl) as usize;
+                    for f in 0..ndf {
+                        let o = trellis.superbranch_output(2, f as u32, yl, yr);
+                        for b in 0..rb {
+                            sgn2[(cls * rb + b) * ndf + f] =
+                                if (o >> b) & 1 == 0 { 1 } else { -1 };
+                        }
+                    }
                 }
             }
         }
@@ -213,14 +329,21 @@ impl SimdDecoder {
             renorm_every: renorm,
             quant,
             beta,
+            rho,
             h,
+            ndf,
             sgn,
+            sgn2,
             q: Vec::with_capacity(stages * beta),
             lam: vec![0i16; s_count],
             ev: vec![0i16; h],
             od: vec![0i16; h],
+            g: if rho == 2 { vec![0i16; s_count] } else { Vec::new() },
             bm: vec![0i16; 4 * h],
+            bm2: if rho == 2 { vec![0i16; 16 * ndf] } else { Vec::new() },
             dec: vec![0i16; s_count],
+            dec_hi: if rho == 2 { vec![0i16; s_count] } else { Vec::new() },
+            phi: if rho == 2 { vec![0u8; stages / 2 * s_count] } else { Vec::new() },
             ring: DecisionRing::new(stages, s_count),
             trellis,
             use_avx2,
@@ -238,10 +361,22 @@ impl SimdDecoder {
         self.renorm_every
     }
 
+    /// Trellis stages folded per pass (the rho of radix-2^rho).
+    pub fn radix(&self) -> usize {
+        self.rho
+    }
+
     /// Survivor bytes a full frame occupies — identical to the
-    /// `compact` layout (`frame_stages * ceil(n_states / 64) * 8`).
+    /// `compact` layout (`frame_stages * ceil(n_states / 64) * 8` at
+    /// radix 1; rho-bit selectors over `stages / rho` steps pack to
+    /// the same total at radix 2).
     pub fn survivor_bytes_per_frame(&self) -> usize {
-        self.ring.bytes()
+        if self.rho == 2 {
+            let wps = CompactSurvivors::words_per_step(self.lam.len(), 2);
+            self.stages / 2 * wps * std::mem::size_of::<u64>()
+        } else {
+            self.ring.bytes()
+        }
     }
 
     /// Force the portable (non-AVX2) kernel; the lanes produce
@@ -324,6 +459,99 @@ impl SimdDecoder {
             "steady-state stage loop must not reallocate scratch"
         );
     }
+
+    /// Radix-4 (rho = 2) forward pass for one frame already loaded
+    /// into `self.q`: 2-bit tournament winners land in `self.phi`
+    /// (step-major), metrics in `self.lam`. Returns the super-step
+    /// count.
+    fn forward_quantized_radix2(&mut self, start_state: Option<u32>) -> usize {
+        let ndf = self.ndf;
+        let beta = self.beta;
+        let rb = 2 * beta;
+        let s_count = self.lam.len();
+        assert_eq!(self.q.len() % rb, 0,
+                   "llr length must cover whole super-stages (rho * beta)");
+        let steps = self.q.len() / rb;
+        assert!(steps * s_count <= self.phi.len(),
+                "frame exceeds phi staging capacity of {} stages", self.stages);
+
+        match start_state {
+            Some(s) => {
+                self.lam.fill(NEG_Q);
+                self.lam[s as usize] = 0;
+            }
+            None => self.lam.fill(0),
+        }
+
+        #[cfg(debug_assertions)]
+        let scratch_ptrs = (self.q.as_ptr(), self.lam.as_ptr(), self.g.as_ptr(),
+                            self.bm2.as_ptr(), self.dec.as_ptr(),
+                            self.dec_hi.as_ptr(), self.phi.as_ptr());
+
+        for tau in 0..steps {
+            let stage = 2 * tau;
+            if stage > 0 && stage % self.renorm_every == 0 {
+                let m = self.lam.iter().copied().max().unwrap_or(0);
+                for v in self.lam.iter_mut() {
+                    *v = v.saturating_sub(m);
+                }
+            }
+            // quarter gather: g[y*ndf + f] = lam[4f + y] — the four
+            // left local states of dragonfly f (Thm 4 / Eq 28)
+            for f in 0..ndf {
+                let base = f << 2;
+                self.g[f] = self.lam[base];
+                self.g[ndf + f] = self.lam[base + 1];
+                self.g[2 * ndf + f] = self.lam[base + 2];
+                self.g[3 * ndf + f] = self.lam[base + 3];
+            }
+            // super-branch metrics for all 16 (y_left, y_right)
+            // classes: one sign-plane pass per quantized LLR of the
+            // stage pair (the rho-stage form of the per-symbol dedup)
+            self.bm2.fill(0);
+            for b in 0..rb {
+                let lb = self.q[stage * beta + b];
+                for cls in 0..16usize {
+                    let plane = &self.sgn2[(cls * rb + b) * ndf..(cls * rb + b) * ndf + ndf];
+                    let out = &mut self.bm2[cls * ndf..cls * ndf + ndf];
+                    for f in 0..ndf {
+                        out[f] += plane[f] * lb;
+                    }
+                }
+            }
+            // four-candidate tournament per right local state; the
+            // quarters of lam/dec are the ndf right states at each y
+            for yr in 0..4usize {
+                let cb = (yr << 2) * ndf;
+                acs_super4(
+                    [&self.g[..ndf], &self.g[ndf..2 * ndf],
+                     &self.g[2 * ndf..3 * ndf], &self.g[3 * ndf..4 * ndf]],
+                    [&self.bm2[cb..cb + ndf], &self.bm2[cb + ndf..cb + 2 * ndf],
+                     &self.bm2[cb + 2 * ndf..cb + 3 * ndf],
+                     &self.bm2[cb + 3 * ndf..cb + 4 * ndf]],
+                    &mut self.lam[yr * ndf..(yr + 1) * ndf],
+                    &mut self.dec[yr * ndf..(yr + 1) * ndf],
+                    &mut self.dec_hi[yr * ndf..(yr + 1) * ndf],
+                    self.use_avx2,
+                );
+            }
+            // pack the two decision lanes into 2-bit winners
+            let pw = &mut self.phi[tau * s_count..(tau + 1) * s_count];
+            for j in 0..s_count {
+                pw[j] = (((self.dec_hi[j] != 0) as u8) << 1) | (self.dec[j] != 0) as u8;
+            }
+        }
+
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            scratch_ptrs,
+            (self.q.as_ptr(), self.lam.as_ptr(), self.g.as_ptr(),
+             self.bm2.as_ptr(), self.dec.as_ptr(), self.dec_hi.as_ptr(),
+             self.phi.as_ptr()),
+            "steady-state super-stage loop must not reallocate scratch"
+        );
+        steps
+    }
 }
 
 /// One half of the butterfly ACS update over `h` butterflies:
@@ -339,6 +567,32 @@ fn acs_half(ev: &[i16], od: &[i16], bm0: &[i16], bm1: &[i16],
         let m1 = od[f].saturating_add(bm1[f]);
         lam[f] = m0.max(m1);
         dec[f] = (m1 > m0) as i16;
+    }
+}
+
+/// One radix-4 super-stage tournament over `lam.len()` dragonflies:
+/// candidate `T[y] = g[y] + bm[y]` (saturating) per left local state,
+/// two strict-greater pair compares pick within-pair winners, one
+/// strict-greater cross compare picks the pair — exactly the scalar
+/// oracle's two dependent `l0 >= l1` stages, reassociated (within a
+/// pair both candidates share the second-stage branch metric, so the
+/// pair compare *is* the first-stage compare). `dec0`/`dec1` get bits
+/// 0/1 of the winning left local state.
+fn acs_super4(g: [&[i16]; 4], bm: [&[i16]; 4], lam: &mut [i16],
+              dec0: &mut [i16], dec1: &mut [i16], use_avx2: bool) {
+    let n = lam.len();
+    let f0 = acs_super4_vector(g, bm, lam, dec0, dec1, use_avx2);
+    for f in f0..n {
+        let t0 = g[0][f].saturating_add(bm[0][f]);
+        let t1 = g[1][f].saturating_add(bm[1][f]);
+        let t2 = g[2][f].saturating_add(bm[2][f]);
+        let t3 = g[3][f].saturating_add(bm[3][f]);
+        let m0 = t0.max(t1);
+        let m1 = t2.max(t3);
+        let hi = m1 > m0;
+        lam[f] = m0.max(m1);
+        dec0[f] = if hi { (t3 > t2) as i16 } else { (t1 > t0) as i16 };
+        dec1[f] = hi as i16;
     }
 }
 
@@ -362,6 +616,27 @@ fn acs_half_vector(ev: &[i16], od: &[i16], bm0: &[i16], bm1: &[i16],
 #[cfg(not(target_arch = "x86_64"))]
 fn acs_half_vector(_ev: &[i16], _od: &[i16], _bm0: &[i16], _bm1: &[i16],
                    _lam: &mut [i16], _dec: &mut [i16], _use_avx2: bool) -> usize {
+    0
+}
+
+/// Vector prefix of the radix-4 tournament, mirroring
+/// [`acs_half_vector`]'s dispatch contract.
+#[cfg(target_arch = "x86_64")]
+fn acs_super4_vector(g: [&[i16]; 4], bm: [&[i16]; 4], lam: &mut [i16],
+                     dec0: &mut [i16], dec1: &mut [i16], use_avx2: bool) -> usize {
+    if use_avx2 && lam.len() >= 16 {
+        // SAFETY: AVX2 presence was checked at decoder construction
+        // and all eleven slices have length lam.len().
+        unsafe { avx2::acs_super4_16(g, bm, lam, dec0, dec1) };
+        lam.len() & !15
+    } else {
+        0
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn acs_super4_vector(_g: [&[i16]; 4], _bm: [&[i16]; 4], _lam: &mut [i16],
+                     _dec0: &mut [i16], _dec1: &mut [i16], _use_avx2: bool) -> usize {
     0
 }
 
@@ -397,6 +672,49 @@ mod avx2 {
             f += 16;
         }
     }
+
+    /// The radix-4 tournament, 16 dragonflies per iteration, over the
+    /// largest multiple-of-16 prefix (the caller finishes the tail).
+    /// Pair selects come from `_mm256_cmpgt_epi16` (strict, so ties
+    /// keep the low candidate), the winning pair's select is routed to
+    /// `dec0` with `_mm256_blendv_epi8` — the `hi` mask is a full
+    /// 0/0xFFFF i16 lane, so its per-byte blend picks whole lanes —
+    /// lane for lane the portable loop.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and all slices have length
+    /// >= `lam.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn acs_super4_16(g: [&[i16]; 4], bm: [&[i16]; 4], lam: &mut [i16],
+                                dec0: &mut [i16], dec1: &mut [i16]) {
+        let n = lam.len() & !15;
+        let mut f = 0usize;
+        while f < n {
+            let g0 = _mm256_loadu_si256(g[0].as_ptr().add(f) as *const __m256i);
+            let g1 = _mm256_loadu_si256(g[1].as_ptr().add(f) as *const __m256i);
+            let g2 = _mm256_loadu_si256(g[2].as_ptr().add(f) as *const __m256i);
+            let g3 = _mm256_loadu_si256(g[3].as_ptr().add(f) as *const __m256i);
+            let b0 = _mm256_loadu_si256(bm[0].as_ptr().add(f) as *const __m256i);
+            let b1 = _mm256_loadu_si256(bm[1].as_ptr().add(f) as *const __m256i);
+            let b2 = _mm256_loadu_si256(bm[2].as_ptr().add(f) as *const __m256i);
+            let b3 = _mm256_loadu_si256(bm[3].as_ptr().add(f) as *const __m256i);
+            let t0 = _mm256_adds_epi16(g0, b0);
+            let t1 = _mm256_adds_epi16(g1, b1);
+            let t2 = _mm256_adds_epi16(g2, b2);
+            let t3 = _mm256_adds_epi16(g3, b3);
+            let s0 = _mm256_cmpgt_epi16(t1, t0);
+            let s1 = _mm256_cmpgt_epi16(t3, t2);
+            let m0 = _mm256_max_epi16(t0, t1);
+            let m1 = _mm256_max_epi16(t2, t3);
+            let hi = _mm256_cmpgt_epi16(m1, m0);
+            _mm256_storeu_si256(lam.as_mut_ptr().add(f) as *mut __m256i,
+                                _mm256_max_epi16(m0, m1));
+            _mm256_storeu_si256(dec0.as_mut_ptr().add(f) as *mut __m256i,
+                                _mm256_blendv_epi8(s0, s1, hi));
+            _mm256_storeu_si256(dec1.as_mut_ptr().add(f) as *mut __m256i, hi);
+            f += 16;
+        }
+    }
 }
 
 impl FrameDecoder for SimdDecoder {
@@ -420,9 +738,16 @@ impl FrameDecoder for SimdDecoder {
             self.q.clear();
             let quant = self.quant;
             self.q.extend(job.llr.iter().map(|&x| quant.quantize(x)));
-            self.forward_quantized(job.start_state);
+            let surv = if self.rho == 2 {
+                let steps = self.forward_quantized_radix2(job.start_state);
+                let n_states = self.lam.len();
+                CompactSurvivors::from_radix(2, &self.phi[..steps * n_states], n_states)
+            } else {
+                self.forward_quantized(job.start_state);
+                self.ring.snapshot()
+            };
             let lam = self.lam.iter().map(|&v| v as f32).collect();
-            out.push(RawFrame { surv: Survivors::Compact(self.ring.snapshot()), lam });
+            out.push(RawFrame { surv: Survivors::Compact(surv), lam });
         }
         out
     }
@@ -594,6 +919,123 @@ mod tests {
         // ... then the same ring again on a later call (wrap-around)
         let got2 = dec.decode_batch(&jobs[..2]);
         assert_eq!(got2[..], want[..2], "ring reuse across calls diverged");
+    }
+
+    #[test]
+    fn radix_quantizer_keeps_the_paper_grid() {
+        let q = Quantizer::for_code_radix(7, 2, 2);
+        assert_eq!(q.qmax(), defaults::SIMD_QMAX);
+        // rho = 2 separation: a NEG-descendant can reach a compare one
+        // super-stage past the k-1 warm-up horizon
+        assert!(2 * (7 - 2 + 2) * q.branch_metric_max(2) < -(NEG_Q as i32));
+        assert_eq!(q.superbranch_metric_max(2, 2), 2 * q.branch_metric_max(2));
+        // rho = 1 delegates: identical grid to for_code
+        assert_eq!(Quantizer::for_code_radix(7, 2, 1), Quantizer::for_code(7, 2));
+        assert_eq!(Quantizer::for_code_radix(16, 4, 1), Quantizer::for_code(16, 4));
+    }
+
+    #[test]
+    fn radix2_matches_scalar_on_noisy_frames() {
+        let t = trellis();
+        let mut dec = SimdDecoder::with_radix(t.clone(), 128, 0, 2);
+        assert_eq!(dec.radix(), 2);
+        for seed in 0..8u64 {
+            let (bits, llr) = noisy_llrs(seed + 40, 128, 4.0);
+            let want = oracle_on_grid(&t, dec.quantizer(), &llr, Some(0), Some(0));
+            let job = FrameJob {
+                llr,
+                start_state: Some(0),
+                end_state: Some(0),
+                emit_from: 0,
+                emit_len: 128,
+            };
+            let got = dec.decode_batch(std::slice::from_ref(&job));
+            assert_eq!(got[0], want, "seed {seed}");
+            assert_eq!(got[0], bits, "seed {seed}: 4 dB n=128 decodes clean");
+        }
+    }
+
+    #[test]
+    fn radix2_renorm_periods_do_not_change_bits() {
+        let t = trellis();
+        let (_, llr) = noisy_llrs(77, 96, 3.0);
+        let job = FrameJob {
+            llr: llr.clone(),
+            start_state: Some(0),
+            end_state: None,
+            emit_from: 0,
+            emit_len: 96,
+        };
+        let base = SimdDecoder::with_radix(t.clone(), 96, 0, 2);
+        let want = oracle_on_grid(&t, base.quantizer(), &llr, Some(0), None);
+        for renorm in [1usize, 2, 4, 16, 0] {
+            let mut dec = SimdDecoder::with_radix(t.clone(), 96, renorm, 2);
+            let got = dec.decode_batch(std::slice::from_ref(&job));
+            assert_eq!(got[0], want, "renorm {renorm}");
+        }
+        // 32767/1024 - (2*6 + 2) = 31 - 14 = 17 stages, floored to the
+        // super-stage boundary
+        assert_eq!(base.effective_renorm(), 16, "auto period at rho 2");
+        // a one-stage request rounds up to one whole super-stage
+        assert_eq!(SimdDecoder::with_radix(t, 96, 1, 2).effective_renorm(), 2);
+    }
+
+    #[test]
+    fn radix2_avx2_and_portable_kernels_agree() {
+        let t = trellis();
+        let (_, llr) = noisy_llrs(123, 256, 3.5);
+        let job = FrameJob {
+            llr,
+            start_state: Some(0),
+            end_state: None,
+            emit_from: 0,
+            emit_len: 256,
+        };
+        let mut fast = SimdDecoder::with_radix(t.clone(), 256, 8, 2);
+        let mut slow = SimdDecoder::with_radix(t, 256, 8, 2);
+        slow.force_portable();
+        let a = fast.decode_batch(std::slice::from_ref(&job));
+        let b = slow.decode_batch(std::slice::from_ref(&job));
+        assert_eq!(a, b, "explicit and portable radix-4 kernels must be lane-identical");
+    }
+
+    #[test]
+    fn radix2_survivor_bytes_match_radix1() {
+        // 2-bit winners over stages/2 steps pack to the same bits per
+        // state per stage as the 1-bit ring
+        let t = trellis();
+        assert_eq!(SimdDecoder::new(t.clone(), 32, 0).survivor_bytes_per_frame(), 32 * 8);
+        assert_eq!(SimdDecoder::with_radix(t, 32, 0, 2).survivor_bytes_per_frame(), 32 * 8);
+    }
+
+    #[test]
+    fn radix2_small_code_uses_the_scalar_tail() {
+        // k = 3 at rho = 2 -> a single dragonfly per super-stage, far
+        // below one AVX2 vector: the portable tail is the whole kernel
+        let t = Arc::new(Trellis::new(Code::from_octal(3, &["7", "5"]).unwrap()));
+        let mut enc = Encoder::new(t.code().clone());
+        let mut bits = crate::util::rng::Rng::new(9).bits(30);
+        bits.extend_from_slice(&[0; 2]);
+        let coded = enc.encode(&bits);
+        let llr: Vec<f32> = bpsk::modulate(&coded).iter().map(|&x| x as f32).collect();
+        let mut dec = SimdDecoder::with_radix(t.clone(), 32, 0, 2);
+        let want = oracle_on_grid(&t, dec.quantizer(), &llr, Some(0), Some(0));
+        let job = FrameJob {
+            llr,
+            start_state: Some(0),
+            end_state: Some(0),
+            emit_from: 0,
+            emit_len: 32,
+        };
+        let got = dec.decode_batch(std::slice::from_ref(&job));
+        assert_eq!(got[0], want);
+        assert_eq!(got[0], bits);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by radix")]
+    fn radix2_rejects_odd_stage_counts() {
+        let _ = SimdDecoder::with_radix(trellis(), 33, 0, 2);
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Shared test corpus for the backend-equivalence suites
+//! (`simd_equivalence`, `compact_equivalence`,
+//! `termination_equivalence`): seeded code/geometry samplers, encoded
+//! noisy-stream generators, grid snapping and the scalar f64 oracle.
+//!
+//! Each suite includes this file with
+//! `#[path = "common/corpus.rs"] mod corpus;` — it is **not** a test
+//! target of its own. Samplers draw from the caller's `Rng` in a fixed
+//! order, so the suites keep their historical pre-validated seed
+//! streams.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use tcvd::channel::{awgn::AwgnChannel, bpsk};
+use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder, TerminationMode};
+use tcvd::util::rng::Rng;
+use tcvd::viterbi::scalar;
+use tcvd::viterbi::simd::Quantizer;
+use tcvd::viterbi::tiled::TileConfig;
+
+/// Sample a random valid code: constraint length k in 4..8 (8..128
+/// states), 2..3 polynomials with the MSB and LSB taps forced on (so
+/// every poly spans the full constraint length — the class the
+/// samplers always drew). Draw order: k, beta, then each poly.
+pub fn sample_code(r: &mut Rng) -> (u32, Vec<u32>) {
+    let k = 4 + r.next_below(5) as u32;
+    let beta = 2 + r.next_below(2) as usize;
+    let polys: Vec<u32> = (0..beta)
+        .map(|_| {
+            let msb = 1u32 << (k - 1);
+            (r.next_u64() as u32 & (msb - 1)) | msb | 1
+        })
+        .collect();
+    (k, polys)
+}
+
+/// [`sample_code`] materialized into a `Code` (the sampler's taps are
+/// always valid, so this cannot fail).
+pub fn sample_code_built(r: &mut Rng) -> Code {
+    let (k, polys) = sample_code(r);
+    Code::new(k, polys).expect("sampled taps are valid")
+}
+
+/// Sample a tile geometry: payload {16, 32, 64}, head/tail
+/// {0, 8, 17, 32} (zero-overlap and overlap > payload both included).
+/// Draw order: payload, head, tail.
+pub fn sample_tile(r: &mut Rng) -> TileConfig {
+    let payload = [16usize, 32, 64][r.next_below(3) as usize];
+    let head = [0usize, 8, 17, 32][r.next_below(4) as usize];
+    let tail = [0usize, 8, 17, 32][r.next_below(4) as usize];
+    TileConfig { payload, head, tail }
+}
+
+/// Encode `payload_bits` of the paper code (last 6 forced to the zero
+/// flush) and push through BPSK + AWGN at `ebn0`. `seed_xor`
+/// decorrelates the channel noise from the payload draw — each suite
+/// keeps its historical constant so pre-validated seeds stay valid.
+pub fn noisy_stream(
+    seed: u64,
+    payload_bits: usize,
+    ebn0: f64,
+    seed_xor: u64,
+) -> (Vec<u8>, Vec<f32>) {
+    let code = registry::paper_code();
+    let mut enc = Encoder::new(code.clone());
+    let mut bits = Rng::new(seed).bits(payload_bits - 6);
+    bits.extend_from_slice(&[0; 6]);
+    let coded = enc.encode(&bits);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ seed_xor);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+/// Encode `data_bits` info bits under `mode` and return (payload,
+/// noisy LLR stream) spanning exactly `data_bits + flush` trellis
+/// stages.
+pub fn mode_stream(
+    code: &Code,
+    mode: TerminationMode,
+    data_bits: usize,
+    ebn0: f64,
+    seed: u64,
+    seed_xor: u64,
+) -> (Vec<u8>, Vec<f32>) {
+    let bits = Rng::new(seed).bits(data_bits);
+    let mut enc = Encoder::new(code.clone());
+    let (coded, _) = enc.encode_terminated(&bits, mode);
+    let tx = bpsk::modulate(&coded);
+    let mut ch = AwgnChannel::new(ebn0, code.rate(), seed ^ seed_xor);
+    let rx = ch.transmit(&tx);
+    (bits, rx.iter().map(|&x| x as f32).collect())
+}
+
+/// Snap LLRs onto the quantization grid, so the scalar f64 oracle sees
+/// exactly the channel values the i16 path accumulates (the simd
+/// bit-identity contract; see `docs/PERFORMANCE.md`).
+pub fn snap(q: Quantizer, llr: &[f32]) -> Vec<f32> {
+    llr.iter().map(|&x| q.dequantize(q.quantize(x))).collect()
+}
+
+/// Run the scalar f64 oracle over one frame: initial metrics per
+/// `start` (None = uniform), full forward + traceback ending at `end`
+/// (None = argmax). This is the reference every backend must match
+/// bit-for-bit.
+pub fn oracle_decode(
+    t: &Trellis,
+    llr: &[f32],
+    start: Option<u32>,
+    end: Option<u32>,
+) -> Vec<u8> {
+    let lam0 = scalar::initial_metrics(t.code().n_states(), start);
+    scalar::decode(t, llr, &lam0, end)
+}
+
+/// A trellis over the paper's (2,1,7) code, shared-pointer form.
+pub fn paper_trellis() -> Arc<Trellis> {
+    Arc::new(Trellis::new(registry::paper_code()))
+}

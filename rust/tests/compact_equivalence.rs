@@ -2,31 +2,30 @@
 //! backend must decode **bit-identically** to the scalar reference for
 //! every code, tile geometry and shard count, while its metrics
 //! snapshot reports the 32x-smaller resident survivor memory that
-//! `docs/MEMORY.md` budgets.
+//! `docs/MEMORY.md` budgets. Shared samplers/oracle live in
+//! `common/corpus.rs`.
 
 use std::sync::Arc;
 
 use tcvd::api::{BackendKind, DecoderBuilder};
-use tcvd::channel::{awgn::AwgnChannel, bpsk};
-use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder};
+use tcvd::coding::poly::Code;
 use tcvd::util::check::{forall, gen};
 use tcvd::util::rng::Rng;
 use tcvd::viterbi::compact::{forward_compact, CompactDecoder, CompactSurvivors};
 use tcvd::viterbi::scalar::{self, ScalarDecoder};
 use tcvd::coding::TerminationMode;
-use tcvd::viterbi::tiled::{decode_stream, TileConfig};
+use tcvd::viterbi::tiled::decode_stream;
 use tcvd::viterbi::traceback::traceback_compact;
 
+#[path = "common/corpus.rs"]
+mod corpus;
+
+/// The channel-noise decorrelation constant this suite has always used
+/// (pre-validated noisy-decode seeds depend on it).
+const SEED_XOR: u64 = 0xC0DE;
+
 fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
-    let code = registry::paper_code();
-    let mut enc = Encoder::new(code.clone());
-    let mut bits = Rng::new(seed).bits(payload_bits - 6);
-    bits.extend_from_slice(&[0; 6]);
-    let coded = enc.encode(&bits);
-    let tx = bpsk::modulate(&coded);
-    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0xC0DE);
-    let rx = ch.transmit(&tx);
-    (bits, rx.iter().map(|&x| x as f32).collect())
+    corpus::noisy_stream(seed, payload_bits, ebn0, SEED_XOR)
 }
 
 /// The packed forward + traceback equals the scalar oracle on random
@@ -38,23 +37,16 @@ fn prop_compact_matches_scalar_for_random_codes() {
         0xC0117AC7,
         24,
         |r: &mut Rng| {
-            let k = 4 + r.next_below(5) as u32; // 4..8 -> 8..128 states
-            let beta = 2 + r.next_below(2) as usize;
-            let polys: Vec<u32> = (0..beta)
-                .map(|_| {
-                    let msb = 1u32 << (k - 1);
-                    (r.next_u64() as u32 & (msb - 1)) | msb | 1
-                })
-                .collect();
-            let llr = gen::llrs(r, 48 * beta, 1.4);
+            let (k, polys) = corpus::sample_code(r);
+            let llr = gen::llrs(r, 48 * polys.len(), 1.4);
             (k, polys, llr)
         },
         |(k, polys, llr)| {
             let code = Code::new(*k, polys.clone()).map_err(|e| e.to_string())?;
             let s_count = code.n_states();
-            let t = Trellis::new(code);
+            let t = tcvd::coding::trellis::Trellis::new(code);
+            let oracle = corpus::oracle_decode(&t, llr, None, None);
             let lam0 = scalar::initial_metrics(s_count, None);
-            let oracle = scalar::decode(&t, llr, &lam0, None);
             let (surv, lam) = forward_compact(&t, llr, &lam0);
             let out = traceback_compact(&t, &surv, &lam, None);
             if out != oracle {
@@ -83,14 +75,12 @@ fn prop_compact_matches_scalar_across_tile_geometries() {
         0x7115,
         12,
         |r: &mut Rng| {
-            let payload = [16usize, 32, 64][r.next_below(3) as usize];
-            let head = [0usize, 8, 17, 32][r.next_below(4) as usize];
-            let tail = [0usize, 8, 17, 32][r.next_below(4) as usize];
+            let cfg = corpus::sample_tile(r);
             let frames = 2 + r.next_below(3) as usize;
-            (TileConfig { payload, head, tail }, frames, r.next_u64())
+            (cfg, frames, r.next_u64())
         },
         |&(cfg, frames, seed)| {
-            let t = Arc::new(Trellis::new(registry::paper_code()));
+            let t = corpus::paper_trellis();
             let (_, llr) = noisy_stream(seed % 100_000, cfg.payload * frames, 2.5);
             let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
             let want = decode_stream(&mut sdec, &llr, 2, &cfg, TerminationMode::Flushed)

@@ -10,8 +10,10 @@ use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder};
 use tcvd::util::check::{forall, gen};
 use tcvd::util::half::HalfKind;
 use tcvd::util::rng::Rng;
+use tcvd::viterbi::compact::CompactSurvivors;
 use tcvd::viterbi::packed::presets;
 use tcvd::viterbi::scalar;
+use tcvd::viterbi::traceback::{traceback_compact, traceback_radix};
 use tcvd::coding::TerminationMode;
 use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 use tcvd::viterbi::types::{FrameDecoder, FrameJob};
@@ -147,6 +149,74 @@ fn prop_packings_valid_for_random_codes() {
             for scheme in ["radix2", "radix4", "radix4_noperm"] {
                 let pk = build_packing(&t, scheme).map_err(|e| e.to_string())?;
                 pk.validate(1 << (k - 1)).map_err(|e| format!("{scheme}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `CompactSurvivors::from_radix` round-trips: packed selectors read
+/// back exactly, the byte accounting matches the `words_per_step`
+/// layout, and traceback over the packed store walks the same Thm-4
+/// path as traceback over the raw radix selections — for random codes
+/// and every selector width the simd backend can emit (rho in
+/// {1, 2, 3}, the butterfly case included).
+#[test]
+fn prop_from_radix_roundtrips() {
+    forall(
+        0x5E1EC7,
+        24,
+        |r: &mut Rng| {
+            let k = 4 + r.next_below(5) as u32; // 4..8, so rho < k holds
+            let rho = 1 + r.next_below(3) as u32; // 1..3
+            let steps = 3 + r.next_below(10) as usize;
+            (k, rho, steps, r.next_u64())
+        },
+        |&(k, rho, steps, seed)| {
+            let mut r = Rng::new(seed);
+            let msb = 1u32 << (k - 1);
+            let polys: Vec<u32> =
+                (0..2).map(|_| (r.next_u64() as u32 & (msb - 1)) | msb | 1).collect();
+            let code = Code::new(k, polys).map_err(|e| e.to_string())?;
+            let t = Trellis::new(code);
+            let s_count = t.code().n_states();
+            // arbitrary rho-bit selections, one per (step, state): the
+            // packing is pure layout, so any selector pattern is legal
+            let phi: Vec<u8> = (0..steps * s_count)
+                .map(|_| (r.next_u64() & ((1 << rho) - 1)) as u8)
+                .collect();
+            let surv = CompactSurvivors::from_radix(rho, &phi, s_count);
+            if (surv.sel_bits(), surv.steps(), surv.n_states()) != (rho, steps, s_count) {
+                return Err(format!(
+                    "shape drifted: ({}, {}, {})",
+                    surv.sel_bits(),
+                    surv.steps(),
+                    surv.n_states()
+                ));
+            }
+            for tau in 0..steps {
+                for s in 0..s_count {
+                    if surv.get(tau, s) != phi[tau * s_count + s] as u32 {
+                        return Err(format!(
+                            "selector (step {tau}, state {s}) did not round-trip at rho {rho}"
+                        ));
+                    }
+                }
+            }
+            let want = steps * CompactSurvivors::words_per_step(s_count, rho) * 8;
+            if surv.bytes() != want {
+                return Err(format!("{} packed bytes, expected {want}", surv.bytes()));
+            }
+            // packed and raw tracebacks walk the identical path from
+            // pinned and argmax end states
+            let lam: Vec<f32> =
+                (0..s_count).map(|_| (r.next_u64() % 1000) as f32 - 500.0).collect();
+            for end in [None, Some(0u32), Some(s_count as u32 - 1)] {
+                let a = traceback_compact(&t, &surv, &lam, end);
+                let b = traceback_radix(&t, rho, &phi, &lam, end);
+                if a != b {
+                    return Err(format!("traceback diverged (rho {rho}, end {end:?})"));
+                }
             }
             Ok(())
         },

@@ -1,40 +1,34 @@
 //! `BackendKind::Simd` equivalence suite: the quantized (i16)
 //! lane-parallel fast path must decode **bit-identically** to the
 //! scalar f64 oracle on grid LLRs — for random codes, frame lengths,
-//! renormalization intervals, tile geometries and shard counts, and
-//! under saturation-stress LLRs at the quantization clamp. The
+//! renormalization intervals, tile geometries, shard counts,
+//! termination modes and radixes (rho in {1, 2}), and under
+//! saturation-stress LLRs at the quantization clamp. The
 //! quantization/renormalization model is documented in
-//! `docs/PERFORMANCE.md`.
+//! `docs/PERFORMANCE.md`; shared samplers/oracle live in
+//! `common/corpus.rs`.
 
 use std::sync::Arc;
 
 use tcvd::api::{BackendKind, DecoderBuilder};
-use tcvd::channel::{awgn::AwgnChannel, bpsk};
-use tcvd::coding::{poly::Code, registry, trellis::Trellis, Encoder};
+use tcvd::coding::{poly::Code, registry, trellis::Trellis};
 use tcvd::util::check::{forall, gen};
 use tcvd::util::rng::Rng;
-use tcvd::viterbi::scalar::{self, ScalarDecoder};
-use tcvd::viterbi::simd::{Quantizer, SimdDecoder};
+use tcvd::viterbi::scalar::ScalarDecoder;
+use tcvd::viterbi::simd::{Quantizer, SimdDecoder, NEG_Q};
 use tcvd::coding::TerminationMode;
 use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 use tcvd::viterbi::types::{FrameDecoder, FrameJob};
 
-fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
-    let code = registry::paper_code();
-    let mut enc = Encoder::new(code.clone());
-    let mut bits = Rng::new(seed).bits(payload_bits - 6);
-    bits.extend_from_slice(&[0; 6]);
-    let coded = enc.encode(&bits);
-    let tx = bpsk::modulate(&coded);
-    let mut ch = AwgnChannel::new(ebn0, 0.5, seed ^ 0x51AD);
-    let rx = ch.transmit(&tx);
-    (bits, rx.iter().map(|&x| x as f32).collect())
-}
+#[path = "common/corpus.rs"]
+mod corpus;
 
-/// Snap LLRs onto the decoder's quantization grid, so the scalar
-/// oracle sees exactly the channel values the i16 path accumulates.
-fn snap(q: Quantizer, llr: &[f32]) -> Vec<f32> {
-    llr.iter().map(|&x| q.dequantize(q.quantize(x))).collect()
+/// The channel-noise decorrelation constant this suite has always used
+/// (pre-validated noisy-decode seeds depend on it).
+const SEED_XOR: u64 = 0x51AD;
+
+fn noisy_stream(seed: u64, payload_bits: usize, ebn0: f64) -> (Vec<u8>, Vec<f32>) {
+    corpus::noisy_stream(seed, payload_bits, ebn0, SEED_XOR)
 }
 
 /// SIMD forward + traceback equals the scalar oracle on random valid
@@ -46,18 +40,11 @@ fn prop_simd_matches_scalar_for_random_codes() {
         0x51D0_C0DE,
         24,
         |r: &mut Rng| {
-            let k = 4 + r.next_below(5) as u32; // 4..8 -> 8..128 states
-            let beta = 2 + r.next_below(2) as usize;
-            let polys: Vec<u32> = (0..beta)
-                .map(|_| {
-                    let msb = 1u32 << (k - 1);
-                    (r.next_u64() as u32 & (msb - 1)) | msb | 1
-                })
-                .collect();
+            let (k, polys) = corpus::sample_code(r);
             let stages = 24 + r.next_below(41) as usize; // 24..64
             let renorm = [1usize, 4, 16, 0][r.next_below(4) as usize];
             let known_ends = r.next_bit() == 1;
-            let llr = gen::llrs(r, stages * beta, 1.4);
+            let llr = gen::llrs(r, stages * polys.len(), 1.4);
             (k, polys, stages, renorm, known_ends, llr)
         },
         |(k, polys, stages, renorm, known_ends, llr)| {
@@ -69,9 +56,8 @@ fn prop_simd_matches_scalar_for_random_codes() {
             // argmax pick over the quantized final metrics
             let (start, end) = if *known_ends { (Some(0), Some(0)) } else { (None, None) };
             let mut dec = SimdDecoder::new(t.clone(), *stages, *renorm);
-            let deq = snap(dec.quantizer(), llr);
-            let lam0 = scalar::initial_metrics(s_count, start);
-            let oracle = scalar::decode(&t, &deq, &lam0, end);
+            let deq = corpus::snap(dec.quantizer(), llr);
+            let oracle = corpus::oracle_decode(&t, &deq, start, end);
             let job = FrameJob {
                 llr: llr.clone(),
                 start_state: start,
@@ -90,38 +76,91 @@ fn prop_simd_matches_scalar_for_random_codes() {
     );
 }
 
+/// The radix-2 super-branch kernel equals the scalar oracle on random
+/// valid codes (k 4..8, beta 2..3), random even frame lengths and
+/// renormalization intervals — including one-stage requests, which
+/// round up to a whole super-stage — for known and unknown ends.
+#[test]
+fn prop_radix2_matches_scalar_for_random_codes() {
+    forall(
+        0x2AD1_62,
+        24,
+        |r: &mut Rng| {
+            let (k, polys) = corpus::sample_code(r);
+            let stages = 2 * (12 + r.next_below(21) as usize); // even, 24..64
+            let renorm = [1usize, 2, 4, 16, 0][r.next_below(5) as usize];
+            let known_ends = r.next_bit() == 1;
+            let llr = gen::llrs(r, stages * polys.len(), 1.4);
+            (k, polys, stages, renorm, known_ends, llr)
+        },
+        |(k, polys, stages, renorm, known_ends, llr)| {
+            let code = Code::new(*k, polys.clone()).map_err(|e| e.to_string())?;
+            let s_count = code.n_states();
+            let t = Arc::new(Trellis::new(code));
+            let (start, end) = if *known_ends { (Some(0), Some(0)) } else { (None, None) };
+            let mut dec = SimdDecoder::with_radix(t.clone(), *stages, *renorm, 2);
+            let deq = corpus::snap(dec.quantizer(), llr);
+            let oracle = corpus::oracle_decode(&t, &deq, start, end);
+            let job = FrameJob {
+                llr: llr.clone(),
+                start_state: start,
+                end_state: end,
+                emit_from: 0,
+                emit_len: *stages,
+            };
+            let out = dec.decode_batch(std::slice::from_ref(&job));
+            if out[0] != oracle {
+                return Err(format!(
+                    "radix-2 decode diverged (k={k}, S={s_count}, renorm={renorm})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Streamed decoding through the reference tiler on grid LLRs: simd
 /// equals scalar for random tile geometries (head/tail 0 included) and
-/// renormalization intervals on noisy streams.
+/// renormalization intervals on noisy streams — at both radixes when
+/// the frame splits into super-stages.
 #[test]
 fn prop_simd_matches_scalar_across_tile_geometries() {
     forall(
         0x71D5,
         12,
         |r: &mut Rng| {
-            let payload = [16usize, 32, 64][r.next_below(3) as usize];
-            let head = [0usize, 8, 17, 32][r.next_below(4) as usize];
-            let tail = [0usize, 8, 17, 32][r.next_below(4) as usize];
+            let cfg = corpus::sample_tile(r);
             let frames = 2 + r.next_below(3) as usize;
             let renorm = [1usize, 7, 16, 0][r.next_below(4) as usize];
-            (TileConfig { payload, head, tail }, frames, renorm, r.next_u64())
+            (cfg, frames, renorm, r.next_u64())
         },
         |&(cfg, frames, renorm, seed)| {
-            let t = Arc::new(Trellis::new(registry::paper_code()));
+            let t = corpus::paper_trellis();
             let quant = Quantizer::for_code(7, 2);
             let (_, raw) = noisy_stream(seed % 100_000, cfg.payload * frames, 2.5);
-            let llr = snap(quant, &raw);
+            let llr = corpus::snap(quant, &raw);
             let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
             let want = decode_stream(&mut sdec, &llr, 2, &cfg, TerminationMode::Flushed)
                 .map_err(|e| e.to_string())?;
-            let mut qdec = SimdDecoder::new(t, cfg.frame_stages(), renorm);
+            let mut qdec = SimdDecoder::new(t.clone(), cfg.frame_stages(), renorm);
             let got = decode_stream(&mut qdec, &llr, 2, &cfg, TerminationMode::Flushed)
                 .map_err(|e| e.to_string())?;
-            if got == want {
-                Ok(())
-            } else {
-                Err(format!("tile {cfg:?} renorm {renorm}: simd stream decode diverged"))
+            if got != want {
+                return Err(format!("tile {cfg:?} renorm {renorm}: simd stream decode diverged"));
             }
+            if cfg.frame_stages() % 2 == 0 {
+                // the rho = 2 quantizer is identical for the paper code,
+                // so the same grid stream must decode identically too
+                let mut rdec = SimdDecoder::with_radix(t, cfg.frame_stages(), renorm, 2);
+                let got2 = decode_stream(&mut rdec, &llr, 2, &cfg, TerminationMode::Flushed)
+                    .map_err(|e| e.to_string())?;
+                if got2 != want {
+                    return Err(format!(
+                        "tile {cfg:?} renorm {renorm}: radix-2 stream decode diverged"
+                    ));
+                }
+            }
+            Ok(())
         },
     );
 }
@@ -146,16 +185,15 @@ fn prop_simd_matches_scalar_under_saturation_stress() {
             (stages, renorm, llr)
         },
         |(stages, renorm, llr)| {
-            let t = Arc::new(Trellis::new(registry::paper_code()));
+            let t = corpus::paper_trellis();
             let mut dec = SimdDecoder::new(t.clone(), *stages, *renorm);
             let q = dec.quantizer();
-            let deq = snap(q, llr);
+            let deq = corpus::snap(q, llr);
             // the clamp must actually engage for this to stress anything
             if !deq.iter().any(|&x| x.abs() >= q.dequantize(q.qmax()).abs()) {
                 return Err("stress case never reached the clamp".into());
             }
-            let lam0 = scalar::initial_metrics(64, Some(0));
-            let oracle = scalar::decode(&t, &deq, &lam0, None);
+            let oracle = corpus::oracle_decode(&t, &deq, Some(0), None);
             let job = FrameJob {
                 llr: llr.clone(),
                 start_state: Some(0),
@@ -172,11 +210,108 @@ fn prop_simd_matches_scalar_under_saturation_stress() {
     );
 }
 
-fn run_backend_sessions(backend: BackendKind, shards: usize, n_sessions: usize)
-                        -> (Vec<Vec<u8>>, u64) {
+/// Radix-2 saturation stress: every LLR of a super-stage pinned at the
+/// clamp, decoded at the *widest* and the *narrowest* renormalization
+/// periods. The headroom pin below is the regression guard for the
+/// `for_code_radix` / renorm-cap arithmetic: a worst-case super-branch
+/// sum (`rho * beta * qmax` on top of a metric that drifted a full
+/// period plus the warm-up spread below the running maximum) must stay
+/// representable, so no surviving path ever saturates.
+#[test]
+fn radix2_saturation_respects_i16_headroom() {
+    let code = registry::paper_code();
+    let t = Arc::new(Trellis::new(code.clone()));
+    // headroom pin: (cap + 2(k-1) + rho) * bm_max <= i16::MAX, with the
+    // cap floored to a super-stage boundary (16 for the paper code)
+    let dec = SimdDecoder::with_radix(t.clone(), 64, 0, 2);
+    let q = dec.quantizer();
+    let bm_max = q.branch_metric_max(code.beta());
+    let spread = 2 * (code.k() as i32 - 1) + 2;
+    assert_eq!(dec.effective_renorm(), 16, "auto period at rho 2 for the paper code");
+    assert!(
+        (dec.effective_renorm() as i32 + spread) * bm_max <= i16::MAX as i32,
+        "renorm cap must leave a full super-branch of i16 headroom"
+    );
+    assert_eq!(q.superbranch_metric_max(code.beta(), 2), 2 * bm_max);
+    // the quantized minus-infinity still separates past the wider
+    // rho = 2 horizon
+    assert!(2 * (code.k() as i32 - 2 + 2) * bm_max < -(NEG_Q as i32));
+
+    // worst-case amplitudes: every grid point at +/- qmax
+    for (seed, renorm) in [(1u64, 0usize), (2, 0), (3, 2), (4, 2), (5, 16)] {
+        let (_, mut llr) = noisy_stream(seed + 4200, 64, 2.0);
+        for v in llr.iter_mut() {
+            *v = v.signum() * 1e6;
+        }
+        let mut rdec = SimdDecoder::with_radix(t.clone(), 64, renorm, 2);
+        let deq = corpus::snap(rdec.quantizer(), &llr);
+        assert!(
+            deq.iter().all(|&x| x.abs() == rdec.quantizer().dequantize(q.qmax()).abs()),
+            "stress stream must sit exactly at the clamp"
+        );
+        let want = corpus::oracle_decode(&t, &deq, Some(0), None);
+        let job = FrameJob {
+            llr,
+            start_state: Some(0),
+            end_state: None,
+            emit_from: 0,
+            emit_len: 64,
+        };
+        let got = rdec.decode_batch(std::slice::from_ref(&job));
+        assert_eq!(got[0], want, "seed {seed} renorm {renorm}: clamp stress diverged");
+    }
+}
+
+/// The serving pipeline decodes radix 2 bit-identically to the scalar
+/// reference for every termination mode across shards {1, 2, 8} — the
+/// acceptance pin for `tcvd --backend simd --radix 2`.
+#[test]
+fn radix2_pipeline_matrix_matches_scalar() {
+    let code = registry::paper_code();
+    let t = Arc::new(Trellis::new(code.clone()));
+    let cfg = TileConfig { payload: 32, head: 16, tail: 16 }; // 64-stage frames (even)
+    let quant = Quantizer::for_code_radix(code.k(), code.beta(), 2);
+    let modes =
+        [TerminationMode::Flushed, TerminationMode::TailBiting, TerminationMode::Truncated];
+    for mode in modes {
+        let flush = mode.flush_stages(code.k());
+        let (_, raw) = corpus::mode_stream(&code, mode, 256 - flush, 5.0, 77, 0xC0DE);
+        let llr = corpus::snap(quant, &raw);
+        let mut sdec = ScalarDecoder::new(t.clone(), cfg.frame_stages());
+        let want = decode_stream(&mut sdec, &llr, 2, &cfg, mode).unwrap();
+        for shards in [1usize, 2, 8] {
+            for renorm in [2usize, 0] {
+                let coord = DecoderBuilder::new()
+                    .backend_name("simd")
+                    .unwrap()
+                    .radix(2)
+                    .renorm_every(renorm)
+                    .tile(cfg)
+                    .termination(mode)
+                    .shards(shards)
+                    .workers(2)
+                    .max_batch(4)
+                    .batch_deadline_us(100)
+                    .queue_depth(64)
+                    .serve()
+                    .unwrap();
+                let got = coord.decode_stream_blocking(&llr).unwrap();
+                assert_eq!(
+                    got, want,
+                    "mode={mode} shards={shards} renorm={renorm}: radix-2 pipeline diverged"
+                );
+                coord.shutdown().unwrap();
+            }
+        }
+    }
+}
+
+fn run_backend_sessions(backend: BackendKind, radix: usize, shards: usize,
+                        n_sessions: usize) -> (Vec<Vec<u8>>, u64) {
     let coord = Arc::new(
         DecoderBuilder::new()
             .backend(backend)
+            .radix(radix)
             .tile_dims(32, 16, 16)
             .shards(shards)
             .workers(2)
@@ -206,31 +341,42 @@ fn run_backend_sessions(backend: BackendKind, shards: usize, n_sessions: usize)
 }
 
 /// The coordinator serving path: simd output is invariant across shard
-/// counts and — at an Eb/N0 where quantization is transparent —
-/// identical to the scalar backend's, while the survivor gauge shows
-/// the compact bit-packed layout (whole frames of 64 stages x 64
-/// states / 8 bits, batched).
+/// counts and radixes and — at an Eb/N0 where quantization is
+/// transparent — identical to the scalar backend's, while the survivor
+/// gauge shows the compact bit-packed layout (whole frames of 64
+/// stages x 64 states / 8 bits, batched; rho-bit selectors pack to the
+/// same footprint at radix 2).
 #[test]
 fn simd_shard_invariance_against_scalar() {
     let n_sessions = 4;
-    let (scalar_outs, _) = run_backend_sessions(BackendKind::Scalar, 1, n_sessions);
+    let (scalar_outs, _) = run_backend_sessions(BackendKind::Scalar, 1, 1, n_sessions);
     let frame_bytes = 64 * 64 / 8;
-    for shards in [1usize, 2, 8] {
-        let (outs, peak) = run_backend_sessions(BackendKind::Simd, shards, n_sessions);
-        assert_eq!(
-            outs, scalar_outs,
-            "{shards}-shard simd output differs from the scalar reference"
-        );
-        // simd batches frames over one shared ring; every batched
-        // execution materializes whole bit-packed frames
-        assert!(peak >= frame_bytes, "shards={shards}: gauge below one frame ({peak})");
-        assert_eq!(peak % frame_bytes, 0, "shards={shards}: gauge not whole frames ({peak})");
+    for radix in [1usize, 2] {
+        for shards in [1usize, 2, 8] {
+            let (outs, peak) =
+                run_backend_sessions(BackendKind::Simd, radix, shards, n_sessions);
+            assert_eq!(
+                outs, scalar_outs,
+                "{shards}-shard radix-{radix} simd output differs from the scalar reference"
+            );
+            // simd batches frames over one shared ring; every batched
+            // execution materializes whole bit-packed frames
+            assert!(
+                peak >= frame_bytes,
+                "radix={radix} shards={shards}: gauge below one frame ({peak})"
+            );
+            assert_eq!(
+                peak % frame_bytes,
+                0,
+                "radix={radix} shards={shards}: gauge not whole frames ({peak})"
+            );
+        }
     }
 }
 
 /// The one-shot fan-out path builds simd lanes from the spec: output
-/// is invariant across lane counts and equal to the single-lane
-/// reference.
+/// is invariant across lane counts and radixes and equal to the
+/// single-lane radix-1 reference.
 #[test]
 fn simd_one_shot_lanes_agree() {
     let (bits, llr) = noisy_stream(555, 2048, 5.5);
@@ -238,9 +384,17 @@ fn simd_one_shot_lanes_agree() {
     let reference =
         builder.clone().shards(1).build().unwrap().decode_stream(&llr).unwrap();
     assert_eq!(reference, bits, "5.5 dB decodes clean through the quantized path");
-    for lanes in [2usize, 8] {
-        let got =
-            builder.clone().shards(lanes).build().unwrap().decode_stream(&llr).unwrap();
-        assert_eq!(got, reference, "{lanes}-lane simd one-shot decode diverged");
+    for radix in [1usize, 2] {
+        for lanes in [2usize, 8] {
+            let got = builder
+                .clone()
+                .radix(radix)
+                .shards(lanes)
+                .build()
+                .unwrap()
+                .decode_stream(&llr)
+                .unwrap();
+            assert_eq!(got, reference, "{lanes}-lane radix-{radix} one-shot decode diverged");
+        }
     }
 }

@@ -11,41 +11,31 @@
 //!   blocks (the rate-free protection of the wrapped tail).
 //!
 //! Noisy-decode assertions use seeds pre-validated against an exact
-//! reference simulation of the Rng/AWGN/tiler chain.
+//! reference simulation of the Rng/AWGN/tiler chain. Shared
+//! samplers/stream generators live in `common/corpus.rs`.
 
 use std::sync::Arc;
 
 use tcvd::api::{DecoderBuilder, TerminationMode};
-use tcvd::channel::{awgn::AwgnChannel, bpsk};
-use tcvd::coding::{poly::Code, trellis::Trellis, Encoder};
-use tcvd::util::rng::Rng;
+use tcvd::coding::{poly::Code, trellis::Trellis};
 use tcvd::viterbi::compact::CompactDecoder;
 use tcvd::viterbi::scalar::ScalarDecoder;
 use tcvd::viterbi::simd::{Quantizer, SimdDecoder};
 use tcvd::viterbi::tiled::{decode_stream, TileConfig};
 
+#[path = "common/corpus.rs"]
+mod corpus;
+
+use corpus::mode_stream;
+
 const MODES: [TerminationMode; 3] =
     [TerminationMode::Flushed, TerminationMode::TailBiting, TerminationMode::Truncated];
-
-/// Encode `data_bits` info bits under `mode` and return (payload,
-/// noisy LLR stream) spanning exactly `data_bits + flush` trellis
-/// stages.
-fn mode_stream(code: &Code, mode: TerminationMode, data_bits: usize, ebn0: f64, seed: u64,
-               seed_xor: u64) -> (Vec<u8>, Vec<f32>) {
-    let bits = Rng::new(seed).bits(data_bits);
-    let mut enc = Encoder::new(code.clone());
-    let (coded, _) = enc.encode_terminated(&bits, mode);
-    let tx = bpsk::modulate(&coded);
-    let mut ch = AwgnChannel::new(ebn0, code.rate(), seed ^ seed_xor);
-    let rx = ch.transmit(&tx);
-    (bits, rx.iter().map(|&x| x as f32).collect())
-}
 
 /// Snap LLRs onto the simd quantization grid, so the integer fast path
 /// and the f64 oracle see identical inputs (the simd bit-identity
 /// contract; see `docs/PERFORMANCE.md`).
 fn to_grid(llr: &[f32], q: Quantizer) -> Vec<f32> {
-    llr.iter().map(|&x| q.dequantize(q.quantize(x))).collect()
+    corpus::snap(q, llr)
 }
 
 /// All three survivor-storage backends decode every mode identically
@@ -90,6 +80,19 @@ fn backends_bit_identical_for_every_mode() {
                     assert_eq!(
                         got_q, want,
                         "k={k} mode={mode} payload={} seed={seed}: simd != scalar",
+                        cfg.payload
+                    );
+
+                    // the radix-2 super-branch kernel shares the same
+                    // grid for these codes, so it must match the same
+                    // scalar reference under every mode too
+                    let mut qdec2 =
+                        SimdDecoder::with_radix(t.clone(), cfg.frame_stages(), 0, 2);
+                    assert_eq!(qdec2.quantizer(), quant, "k={k}: rho=2 grid drifted");
+                    let got_q2 = decode_stream(&mut qdec2, &llr, 2, cfg, mode).unwrap();
+                    assert_eq!(
+                        got_q2, want,
+                        "k={k} mode={mode} payload={} seed={seed}: simd radix-2 != scalar",
                         cfg.payload
                     );
                 }

@@ -5,14 +5,15 @@ Runs `cargo bench --bench table1_throughput` and `--bench batching`
 (which write `bench_results/*.json`), plus a loopback `tcvd serve` +
 `loadgen` sweep over session counts (docs/NETWORKING.md), then
 aggregates the CPU-backend rows into one trajectory document,
-`BENCH_PR6.json`, so successive PRs can compare like-for-like numbers:
+`BENCH_PR7.json`, so successive PRs can compare like-for-like numbers:
 
   {
     "mode": "smoke" | "default" | "full",
     "table1_workload": {"info_bits": ..., "backends": {
         "scalar": {"mbps": ..., "speedup_vs_scalar": 1.0}, ...}},
     "shard_scaling": {"info_bits": ..., "rows": [
-        {"backend": "simd", "shards": 2, "mbps": ...}, ...]},
+        {"backend": "simd" | "simd-r2" | ..., "radix": 1 | 2,
+         "shards": 2, "mbps": ...}, ...]},
     "survivor": {"rows": [...]},
     "termination": {"blocks": ..., "rows": [
         {"mode": "flushed" | "tail-biting", "block_stages": ...,
@@ -22,8 +23,16 @@ aggregates the CPU-backend rows into one trajectory document,
         {"sessions": 1, "aggregate_mbps": ..., "p50_ms": ...,
          "p99_ms": ..., "blocks": ..., "shed_retries": ...}, ...]},
     "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...,
+                "radix2_vs_radix1": ...,
                 "tail_biting_vs_flushed_info": ...}
   }
+
+`summary.radix2_vs_radix1` compares the simd backend's per-rho shard
+rows (`simd-r2` vs `simd`): at every shard count measured for both, it
+takes mbps(rho=2) / mbps(rho=1), and reports the best ratio. Taking the
+max over shard counts keeps one noisy point from failing a floor check
+while a genuine regression (rho=2 slower at *every* shard count) still
+trips it.
 
 The `termination` rows come from the batching bench's flushed vs
 tail-biting short-block sweep (info Mb/s counts *data* bits, so the
@@ -46,6 +55,7 @@ shards saturate while p99 stays bounded.
 Usage:
   python3 scripts/bench_snapshot.py [--smoke | --full] [--out PATH]
       [--skip-run] [--no-net] [--min-simd-ratio R]
+      [--enforce-floors FLOORS.json]
 
 `--skip-run` aggregates existing bench_results/ JSON without invoking
 cargo (it also skips the net sweep, which needs live binaries);
@@ -54,6 +64,15 @@ cargo (it also skips the net sweep, which needs live binaries);
 throughput on the table-1 workload is below R (the PR-4 acceptance
 floor is 3.0; leave it off in CI smoke runs, where container noise
 makes absolute ratios unreliable).
+`--enforce-floors FLOORS.json` exits 1 if any summary ratio named in
+the floors file (committed as `bench_floors.json`; keys are summary
+ratio names, values are minimum acceptable ratios) regresses below its
+floor, or is missing from the run. CI runs this in smoke mode, so the
+committed floors are deliberately *loose* lower bounds — tripwires for
+"the fast path stopped being fast" (a silently-disabled AVX2 dispatch,
+a fallback to scalar, a radix-2 kernel slower than radix-1 everywhere),
+not headline performance claims. Quotable numbers still come from a
+default or --full run on a quiet machine.
 """
 
 import argparse
@@ -154,13 +173,16 @@ def main():
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--smoke", action="store_true", help="tiny CI budgets")
     ap.add_argument("--full", action="store_true", help="full-rigor budgets")
-    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR6.json"))
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_PR7.json"))
     ap.add_argument("--skip-run", action="store_true",
                     help="aggregate existing bench_results/ without cargo")
     ap.add_argument("--no-net", action="store_true",
                     help="skip the loopback serve + loadgen sweep")
     ap.add_argument("--min-simd-ratio", type=float, default=None,
                     help="fail below this simd/scalar table-1 ratio")
+    ap.add_argument("--enforce-floors", metavar="FLOORS.json", default=None,
+                    help="fail if any summary ratio named in this file "
+                         "regresses below its committed floor")
     args = ap.parse_args()
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
@@ -214,6 +236,15 @@ def main():
             "simd_mbps": simd,
             "simd_vs_scalar": simd / scalar,
         }
+        # radix-2 vs radix-1 simd: best per-shard-count ratio from the
+        # shard-scaling sweep (see the module docstring for why max)
+        r1 = {r["shards"]: r["mbps"] for r in doc["shard_scaling"]["rows"]
+              if r["backend"] == "simd"}
+        r2 = {r["shards"]: r["mbps"] for r in doc["shard_scaling"]["rows"]
+              if r["backend"] == "simd-r2"}
+        ratios = [r2[s] / r1[s] for s in sorted(r1) if s in r2 and r1[s]]
+        if ratios:
+            doc["summary"]["radix2_vs_radix1"] = max(ratios)
         # tail-biting vs flushed info throughput at the shortest block
         term = doc["termination"]["rows"]
         shortest = min((r["block_stages"] for r in term), default=None)
@@ -237,12 +268,36 @@ def main():
         print(f"bench_snapshot: scalar {s['scalar_mbps']:.2f} Mb/s, "
               f"simd {s['simd_mbps']:.2f} Mb/s "
               f"({s['simd_vs_scalar']:.2f}x)")
+        if "radix2_vs_radix1" in s:
+            print(f"bench_snapshot: simd radix-2 vs radix-1 "
+                  f"{s['radix2_vs_radix1']:.2f}x (best shard point)")
         if args.min_simd_ratio is not None and s["simd_vs_scalar"] < args.min_simd_ratio:
             sys.exit(f"bench_snapshot: simd/scalar ratio "
                      f"{s['simd_vs_scalar']:.2f} below floor {args.min_simd_ratio}")
     elif args.min_simd_ratio is not None:
         sys.exit("bench_snapshot: --min-simd-ratio given but scalar/simd "
                  "rows are missing from the bench output")
+
+    if args.enforce_floors is not None:
+        with open(args.enforce_floors, encoding="utf-8") as f:
+            floors = json.load(f)
+        summary = doc.get("summary", {})
+        failures = []
+        for name, floor in sorted(floors.items()):
+            if name.startswith("_"):
+                continue  # schema/comment keys
+            got = summary.get(name)
+            if got is None:
+                failures.append(f"{name}: missing from summary "
+                                f"(floor {floor})")
+            elif got < floor:
+                failures.append(f"{name}: {got:.3f} below floor {floor}")
+            else:
+                print(f"bench_snapshot: floor ok — {name} "
+                      f"{got:.3f} >= {floor}")
+        if failures:
+            sys.exit("bench_snapshot: performance floor regression:\n  "
+                     + "\n  ".join(failures))
 
 
 if __name__ == "__main__":
