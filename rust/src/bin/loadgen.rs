@@ -1,10 +1,11 @@
 //! `loadgen` — loopback load/soak harness for a running `tcvd serve`
 //! instance.
 //!
-//! Drives N concurrent worker threads, each churning sessions (one
-//! fresh TCP connection or UDP flow per block) against the server, and
-//! verifies every decoded block **bit-identical** against an
-//! in-process one-shot decoder oracle built from the same parameters.
+//! Drives N concurrent worker threads against the server — one fresh
+//! TCP connection per block (session churn), or one pipelined
+//! ack-windowed UDP flow per worker — and verifies every decoded block
+//! **bit-identical** against an in-process one-shot decoder oracle
+//! built from the same parameters.
 //! The builder flags must therefore describe the same pipeline the
 //! server runs — a mismatch is rejected at the HELLO handshake.
 //!
@@ -43,6 +44,12 @@ fn spec() -> CommandSpec {
     f.push(FlagSpec::new("udp", "", "drive the UDP transport (one datagram = one block)"));
     f.push(FlagSpec::new("sessions", "N", "concurrent worker sessions (default 8)"));
     f.push(FlagSpec::new("blocks", "N", "blocks per session (default 4)"));
+    f.push(FlagSpec::new("crc", "", "TCP: offer a CRC32 on every DATA frame"));
+    f.push(FlagSpec::new(
+        "window",
+        "N",
+        format!("UDP: pipelined ack-window size (default {})", defaults::NET_UDP_WINDOW),
+    ));
     f.push(FlagSpec::new(
         "block-stages",
         "N",
@@ -96,6 +103,8 @@ fn run_cli(argv: &[String]) -> Result<()> {
         seed: args.get_u64("seed", 1)?,
         transport: if args.get_bool("udp") { Transport::Udp } else { Transport::Tcp },
         max_retries: args.get_usize("max-retries", 200)?,
+        crc: args.get_bool("crc"),
+        udp_window: args.get_usize("window", defaults::NET_UDP_WINDOW)?,
     };
     if args.get_bool("smoke") {
         // small + fast, still churning every session through the

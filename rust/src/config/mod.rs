@@ -57,6 +57,12 @@ pub struct Config {
     /// `[net] shed_queue_depth`: shed admissions once the summed shard
     /// queue depth reaches this (absent = the pipeline `queue_depth`).
     pub net_shed_queue_depth: Option<usize>,
+    /// `[net] write_high_water`: per-connection outbound buffer
+    /// high-water mark in bytes (slow-reader backpressure bound).
+    pub net_write_high_water: usize,
+    /// `[net] crc`: require a CRC32 on every DATA frame, even from
+    /// clients that did not offer one in their HELLO.
+    pub net_crc: bool,
 }
 
 impl Default for Config {
@@ -79,6 +85,8 @@ impl Default for Config {
             net_max_sessions: defaults::NET_MAX_SESSIONS,
             net_idle_timeout_ms: defaults::NET_IDLE_TIMEOUT_MS,
             net_shed_queue_depth: None,
+            net_write_high_water: defaults::NET_WRITE_HIGH_WATER,
+            net_crc: false,
         }
     }
 }
@@ -156,6 +164,12 @@ impl Config {
         if let Some(v) = doc.get("net", "shed_queue_depth") {
             cfg.net_shed_queue_depth = Some(v.as_usize().or_config("net.shed_queue_depth")?);
         }
+        if let Some(v) = doc.get("net", "write_high_water") {
+            cfg.net_write_high_water = v.as_usize().or_config("net.write_high_water")?;
+        }
+        if let Some(v) = doc.get("net", "crc") {
+            cfg.net_crc = v.as_bool().or_config("net.crc")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -186,6 +200,9 @@ impl Config {
         }
         if self.net_idle_timeout_ms == 0 {
             return Err(Error::config("net.idle_timeout_ms must be positive"));
+        }
+        if self.net_write_high_water == 0 {
+            return Err(Error::config("net.write_high_water must be positive"));
         }
         Ok(())
     }
@@ -284,7 +301,8 @@ shards = 6
     fn parses_net_section() {
         let cfg = Config::from_toml(
             "[net]\nlisten = \"127.0.0.1:7000\"\nudp = \"127.0.0.1:7001\"\n\
-             max_sessions = 64\nidle_timeout_ms = 5000\nshed_queue_depth = 48\n",
+             max_sessions = 64\nidle_timeout_ms = 5000\nshed_queue_depth = 48\n\
+             write_high_water = 65536\ncrc = true\n",
         )
         .unwrap();
         assert_eq!(cfg.net_listen.as_deref(), Some("127.0.0.1:7000"));
@@ -292,14 +310,20 @@ shards = 6
         assert_eq!(cfg.net_max_sessions, 64);
         assert_eq!(cfg.net_idle_timeout_ms, 5000);
         assert_eq!(cfg.net_shed_queue_depth, Some(48));
+        assert_eq!(cfg.net_write_high_water, 65536);
+        assert!(cfg.net_crc);
         // defaults: no listen addresses, defaults-module cap/timeout
         let d = Config::default();
         assert_eq!(d.net_listen, None);
         assert_eq!(d.net_max_sessions, defaults::NET_MAX_SESSIONS);
         assert_eq!(d.net_shed_queue_depth, None);
+        assert_eq!(d.net_write_high_water, defaults::NET_WRITE_HIGH_WATER);
+        assert!(!d.net_crc);
         // net bounds are validated structurally
         assert!(Config::from_toml("[net]\nmax_sessions = 0\n").is_err());
         assert!(Config::from_toml("[net]\nidle_timeout_ms = 0\n").is_err());
+        assert!(Config::from_toml("[net]\nwrite_high_water = 0\n").is_err());
+        assert!(Config::from_toml("[net]\ncrc = 7\n").is_err());
     }
 
     #[test]

@@ -67,6 +67,14 @@ pub struct NetStats {
     pub bytes_in: AtomicU64,
     /// Wire bytes sent.
     pub bytes_out: AtomicU64,
+    /// Fds the TCP reactor registered on its last poll tick (gauge:
+    /// listener + live connections).
+    pub reactor_fds: AtomicU64,
+    /// Poll wakeups of the TCP reactor (readiness or tick timeout).
+    pub reactor_wakeups: AtomicU64,
+    /// High-water mark of one connection's buffered outbound bytes
+    /// (gauge; bounded by `net.write_high_water` plus one frame).
+    pub write_buf_hwm: AtomicU64,
 }
 
 /// Shared metrics hub (updated by every pipeline stage).
@@ -204,6 +212,9 @@ impl Metrics {
                 handshake_rejects: self.net.handshake_rejects.load(Ordering::Relaxed),
                 bytes_in: self.net.bytes_in.load(Ordering::Relaxed),
                 bytes_out: self.net.bytes_out.load(Ordering::Relaxed),
+                reactor_fds: self.net.reactor_fds.load(Ordering::Relaxed),
+                reactor_wakeups: self.net.reactor_wakeups.load(Ordering::Relaxed),
+                write_buf_hwm: self.net.write_buf_hwm.load(Ordering::Relaxed),
                 blocks: net_lat.count(),
                 block_p50_us: net_lat.percentile(50.0) as f64 / 1e3,
                 block_p99_us: net_lat.percentile(99.0) as f64 / 1e3,
@@ -269,6 +280,12 @@ pub struct NetSnapshot {
     pub bytes_in: u64,
     /// Wire bytes sent.
     pub bytes_out: u64,
+    /// Fds registered on the TCP reactor's last poll tick.
+    pub reactor_fds: u64,
+    /// TCP reactor poll wakeups.
+    pub reactor_wakeups: u64,
+    /// Peak buffered outbound bytes of any one connection.
+    pub write_buf_hwm: u64,
     /// Completed network block/stream decodes measured for latency.
     pub blocks: u64,
     /// p50 of end-of-stream -> last-byte-delivered latency (us).
@@ -287,6 +304,9 @@ impl NetSnapshot {
             ("handshake_rejects", json::num(self.handshake_rejects as f64)),
             ("bytes_in", json::num(self.bytes_in as f64)),
             ("bytes_out", json::num(self.bytes_out as f64)),
+            ("reactor_fds", json::num(self.reactor_fds as f64)),
+            ("reactor_wakeups", json::num(self.reactor_wakeups as f64)),
+            ("write_buf_hwm", json::num(self.write_buf_hwm as f64)),
             ("blocks", json::num(self.blocks as f64)),
             ("block_p50_us", json::num(self.block_p50_us)),
             ("block_p99_us", json::num(self.block_p99_us)),
@@ -432,17 +452,26 @@ mod tests {
         m.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
         m.net.sessions_shed.fetch_add(2, Ordering::Relaxed);
         m.net.bytes_in.fetch_add(100, Ordering::Relaxed);
+        m.net.reactor_fds.store(5, Ordering::Relaxed);
+        m.net.reactor_wakeups.fetch_add(12, Ordering::Relaxed);
+        m.net.write_buf_hwm.fetch_max(4096, Ordering::Relaxed);
+        m.net.write_buf_hwm.fetch_max(1024, Ordering::Relaxed); // hwm never lowers
         m.record_net_block(std::time::Duration::from_micros(500));
         m.record_net_block(std::time::Duration::from_micros(700));
         let s = m.snapshot();
         assert_eq!(s.net.sessions_accepted, 3);
         assert_eq!(s.net.sessions_evicted, 1);
         assert_eq!(s.net.sessions_shed, 2);
+        assert_eq!(s.net.reactor_fds, 5);
+        assert_eq!(s.net.reactor_wakeups, 12);
+        assert_eq!(s.net.write_buf_hwm, 4096);
         assert_eq!(s.net.blocks, 2);
         assert!(s.net.block_p50_us >= 400.0 && s.net.block_p99_us <= 800.0,
                 "p50={} p99={}", s.net.block_p50_us, s.net.block_p99_us);
         let j = s.to_json().to_string_pretty();
         assert!(j.contains("sessions_accepted"));
+        assert!(j.contains("reactor_wakeups"));
+        assert!(j.contains("write_buf_hwm"));
         assert!(j.contains("block_p99_us"));
     }
 

@@ -11,8 +11,9 @@
 //! order. Per-session delivery is strictly in sequence regardless of
 //! which shard decoded each frame.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -201,6 +202,9 @@ impl Coordinator {
             input: Some(self.input.clone()),
             ctrl: Some(self.ctrl.clone()),
             metrics: self.metrics.clone(),
+            pending: VecDeque::new(),
+            dispatched: 0,
+            framing_done: false,
         };
         Ok(Session { handle, out: out_rx })
     }
@@ -253,6 +257,15 @@ pub struct SessionHandle {
     input: Option<SyncSender<FrameTask>>,
     ctrl: Option<Sender<Msg>>,
     metrics: Arc<Metrics>,
+    /// Frames emitted by the framer but not yet handed to the pipeline
+    /// (non-blocking driving only; the blocking `push` dispatches
+    /// immediately and never populates this queue).
+    pending: VecDeque<crate::viterbi::types::FrameJob>,
+    /// Frames actually dispatched to the pipeline via `try_dispatch` —
+    /// doubles as the next sequence number, since dispatch order is the
+    /// framer's emission order.
+    dispatched: u64,
+    framing_done: bool,
 }
 
 impl SessionHandle {
@@ -334,6 +347,114 @@ impl SessionHandle {
         ctrl.send(Msg::Finish { session: self.id, total_frames: total })
             .map_err(|_| Error::pipeline("pipeline is shut down"))?;
         Ok(())
+    }
+
+    // ---- non-blocking driving (the `tcvd::net` reactor) -------------
+    //
+    // The blocking `push`/`finish` pair above parks the calling thread
+    // when the pipeline queue is full — fine with one thread per
+    // session, fatal for a reactor multiplexing every socket on one
+    // thread. The methods below split framing from dispatch: the framer
+    // runs eagerly (it only buffers memory), dispatch goes through
+    // `try_send`, and the session closes at the frames actually
+    // dispatched. Sequence numbers are assigned in dispatch order,
+    // which is the framer's emission order, so the dispatched frames
+    // are always a gapless prefix and a dirty close at any point leaves
+    // the reassembler consistent. Drive a handle through one API or the
+    // other, never both.
+
+    /// Frame an LLR chunk (length must be a multiple of beta) without
+    /// dispatching. Never blocks.
+    pub fn frame_chunk(&mut self, llr: &[f32]) -> Result<()> {
+        if self.input.is_none() || self.framing_done {
+            return Err(Error::pipeline("session already finished"));
+        }
+        if llr.len() % self.framer_beta() != 0 {
+            return Err(Error::pipeline(format!(
+                "chunk length {} is not a multiple of beta {}",
+                llr.len(),
+                self.framer_beta()
+            )));
+        }
+        let jobs = self.framer.push(llr);
+        self.pending.extend(jobs);
+        Ok(())
+    }
+
+    /// End the stream on the framing side: flushes the framer into the
+    /// pending queue (for tail-biting, this emits the whole block). The
+    /// session stays open until the pending frames are dispatched and
+    /// [`close_dispatched`](Self::close_dispatched) runs. On a framer
+    /// error (e.g. a misaligned tail-biting block) the session is
+    /// closed at the dispatched prefix and the typed error returned.
+    pub fn frame_finish(&mut self) -> Result<()> {
+        if self.input.is_none() || self.framing_done {
+            return Err(Error::pipeline("session already finished"));
+        }
+        self.framing_done = true;
+        match self.framer.finish() {
+            Ok(jobs) => {
+                self.pending.extend(jobs);
+                Ok(())
+            }
+            Err(e) => {
+                self.close_dispatched();
+                Err(e)
+            }
+        }
+    }
+
+    /// Hand pending frames to the pipeline without blocking; stops at
+    /// the first `try_send` refusal (shard queues full). Returns the
+    /// number of frames still pending.
+    pub fn try_dispatch(&mut self) -> Result<usize> {
+        let Some(input) = self.input.as_ref() else { return Ok(0) };
+        while let Some(job) = self.pending.pop_front() {
+            match input.try_send(FrameTask {
+                session: self.id,
+                seq: self.dispatched,
+                job,
+                t_enq: Instant::now(),
+            }) {
+                Ok(()) => {
+                    self.dispatched += 1;
+                    self.metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Full(task)) => {
+                    self.pending.push_front(task.job);
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(Error::pipeline("pipeline is shut down"));
+                }
+            }
+        }
+        Ok(self.pending.len())
+    }
+
+    /// Frames framed but not yet accepted by the pipeline. Non-zero
+    /// means the pipeline is backpressuring — stop reading more input.
+    pub fn pending_frames(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether [`frame_finish`](Self::frame_finish) has run.
+    pub fn framing_done(&self) -> bool {
+        self.framing_done
+    }
+
+    /// Close the session at the frames dispatched so far: undispatched
+    /// pending frames are dropped and the reassembler is told the final
+    /// frame count, so the output stream completes (or, on a dirty
+    /// close, the receiver can simply be dropped). Idempotent; used for
+    /// both the clean path (after the pending queue drains) and every
+    /// dirty-disconnect path.
+    pub fn close_dispatched(&mut self) {
+        self.pending.clear();
+        self.input = None;
+        if let Some(ctrl) = self.ctrl.take() {
+            let _ = ctrl.send(Msg::Finish { session: self.id, total_frames: self.dispatched });
+        }
     }
 }
 
@@ -596,6 +717,57 @@ mod tests {
         let e2 = session.finish().unwrap_err();
         assert!(matches!(e2, Error::Pipeline(_)), "{e2}");
         for _ in session {}
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn nonblocking_drive_matches_blocking_push() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let coord = Coordinator::start(cpu_config(tile)).unwrap();
+        let (bits, llr) = noisy_stream(11, 256, 5.0);
+        let (mut handle, rx) = coord.open_session().unwrap().split();
+        for chunk in llr.chunks(64) {
+            handle.frame_chunk(chunk).unwrap();
+        }
+        handle.frame_finish().unwrap();
+        // reactor-style loop: try_dispatch + non-blocking output drain
+        let mut out = Vec::new();
+        let mut closed = false;
+        loop {
+            if !closed {
+                let left = handle.try_dispatch().unwrap();
+                if left == 0 && handle.framing_done() {
+                    handle.close_dispatched();
+                    handle.close_dispatched(); // idempotent
+                    closed = true;
+                }
+            }
+            match rx.try_recv() {
+                Ok(c) => out.extend_from_slice(&c),
+                Err(TryRecvError::Empty) => std::thread::sleep(Duration::from_millis(1)),
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        assert_eq!(out, bits);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn nonblocking_misaligned_tail_biting_closes_session() {
+        let tile = TileConfig { payload: 32, head: 8, tail: 8 };
+        let mut cfg = cpu_config(tile);
+        cfg.termination = TerminationMode::TailBiting;
+        let coord = Coordinator::start(cfg).unwrap();
+        let (mut handle, rx) = coord.open_session().unwrap().split();
+        handle.frame_chunk(&vec![0.0f32; 10 * 2]).unwrap(); // partial tile
+        let e = handle.frame_finish().unwrap_err();
+        assert!(matches!(e, Error::Pipeline(_)), "{e}");
+        // the session closed at the dispatched prefix: the output stream
+        // terminates, further framing is a typed error, shutdown joins
+        let e2 = handle.frame_chunk(&[0.0; 2]).unwrap_err();
+        assert!(matches!(e2, Error::Pipeline(_)), "{e2}");
+        assert_eq!(handle.try_dispatch().unwrap(), 0);
+        for _ in rx {}
         coord.shutdown().unwrap();
     }
 

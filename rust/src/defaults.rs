@@ -87,6 +87,17 @@ pub const NET_IDLE_TIMEOUT_MS: u64 = 30_000;
 /// malformed or hostile length prefix.
 pub const NET_MAX_FRAME_BYTES: usize = 1 << 22;
 
+/// Per-connection outbound buffer high-water mark (bytes). Once a slow
+/// reader lets this many undelivered bytes pile up, the reactor stops
+/// draining that session's decoded output; the bounded session channel
+/// then backpressures the pipeline instead of the server buffering
+/// without limit. One connection buffers at most this plus one frame.
+pub const NET_WRITE_HIGH_WATER: usize = 1 << 20;
+
+/// UDP client pipelining: blocks in flight (sent, not yet acked) per
+/// flow in `UdpClient::decode_blocks`.
+pub const NET_UDP_WINDOW: usize = 4;
+
 /// Default stream termination mode: zero-flushed blocks (both trellis
 /// ends pinned to state 0 — the classic deep-space convention). SDR /
 /// cellular block traffic (LTE PBCH/PDCCH style) switches to

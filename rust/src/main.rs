@@ -139,6 +139,19 @@ fn command_specs() -> Vec<CommandSpec> {
                 "shed admissions at this summed shard queue depth (default: queue-depth)",
             ));
             f.push(FlagSpec::new(
+                "write-high-water",
+                "BYTES",
+                format!(
+                    "per-connection outbound buffer bound (default {})",
+                    defaults::NET_WRITE_HIGH_WATER
+                ),
+            ));
+            f.push(FlagSpec::new(
+                "crc",
+                "",
+                "require a CRC32 on every DATA frame (clients may also offer one per session)",
+            ));
+            f.push(FlagSpec::new(
                 "duration-s",
                 "S",
                 "serve for S seconds then print metrics and exit (default: run until killed)",
@@ -465,11 +478,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             net.shed_queue_depth =
                 Some(v.parse().or_config(format!("--shed-queue-depth {v:?}"))?);
         }
+        net.write_high_water = args.get_usize("write-high-water", net.write_high_water)?;
+        net.crc = net.crc || args.get_bool("crc");
         if net.max_sessions == 0 {
             return Err(Error::config("--max-sessions must be positive"));
         }
         if net.idle_timeout.is_zero() {
             return Err(Error::config("--idle-timeout-ms must be positive"));
+        }
+        if net.write_high_water == 0 {
+            return Err(Error::config("--write-high-water must be positive"));
         }
         return cmd_serve_sockets(args, builder, tcp.as_deref(), udp.as_deref(), net);
     }

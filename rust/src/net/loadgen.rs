@@ -1,16 +1,20 @@
 //! Loopback load/soak harness for the socket front-end: N worker
 //! threads churn concurrent sessions against a running server — a
-//! fresh TCP connection (or UDP flow) per block, so the session
-//! lifecycle (admit / evict / shed) is exercised continuously, not
-//! just the steady state — and every decoded block is checked
-//! **bit-identical** against a one-shot [`Decoder`](crate::Decoder)
-//! oracle decoding the same LLRs in-process.
+//! fresh TCP connection per block (so the session lifecycle — admit /
+//! evict / shed — is exercised continuously, not just the steady
+//! state), or one pipelined ack-windowed UDP flow per worker — and
+//! every decoded block is checked **bit-identical** against a one-shot
+//! [`Decoder`](crate::Decoder) oracle decoding the same LLRs
+//! in-process.
 //!
 //! Shed rejections are retried (and counted), so a run against an
 //! undersized server converges instead of failing; mismatches and
-//! hard failures never retry. The aggregate throughput / latency
-//! numbers feed `scripts/bench_snapshot.py`'s `net` section; the
-//! `loadgen` binary wraps this with CLI flags and JSON output.
+//! hard failures never retry. Latency samples are the successful
+//! attempt's own end-to-end measurement (TCP: FINISH to the last
+//! decoded byte; UDP: first send of a block to its OK reply) — shed
+//! attempts never contribute a sample. The aggregate throughput /
+//! latency numbers feed `scripts/bench_snapshot.py`'s `net` section;
+//! the `loadgen` binary wraps this with CLI flags and JSON output.
 
 use std::time::{Duration, Instant};
 
@@ -18,12 +22,13 @@ use crate::api::{DecoderBuilder, TerminationMode};
 use crate::channel::awgn::AwgnChannel;
 use crate::channel::bpsk;
 use crate::coding::{registry, Code, Encoder};
+use crate::defaults;
 use crate::error::{Error, Result};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
 use super::tcp::TcpClient;
-use super::udp::UdpClient;
+use super::udp::{UdpClient, UdpPipelineOptions};
 
 /// Which transport the harness drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +65,10 @@ pub struct LoadgenOptions {
     pub transport: Transport,
     /// Give up on one block after this many shed-retries.
     pub max_retries: usize,
+    /// TCP: offer a CRC32 on every DATA frame in the HELLO.
+    pub crc: bool,
+    /// UDP: ack-window size of the pipelined per-worker flow.
+    pub udp_window: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -72,6 +81,8 @@ impl Default for LoadgenOptions {
             seed: 1,
             transport: Transport::Tcp,
             max_retries: 200,
+            crc: false,
+            udp_window: defaults::NET_UDP_WINDOW,
         }
     }
 }
@@ -178,6 +189,7 @@ fn is_shed(e: &Error) -> bool {
     matches!(e, Error::Net(m) if m.contains("rejected") || m.contains("shed"))
 }
 
+#[derive(Default)]
 struct WorkerTally {
     blocks: u64,
     shed_retries: u64,
@@ -185,6 +197,43 @@ struct WorkerTally {
     mismatches: u64,
     payload_bits: u64,
     latencies_ms: Vec<f64>,
+}
+
+/// Run `attempt` until it returns bits or a non-shed error (or the
+/// retry budget runs out). Exactly one latency sample — the successful
+/// attempt's own measurement — lands in `tally` per decoded block;
+/// shed attempts bump `shed_retries` and contribute nothing to the
+/// percentiles.
+fn decode_with_retries<F>(
+    max_retries: usize,
+    tally: &mut WorkerTally,
+    mut attempt: F,
+) -> Option<Vec<u8>>
+where
+    F: FnMut() -> Result<(Vec<u8>, Duration)>,
+{
+    let mut retries = 0;
+    loop {
+        match attempt() {
+            Ok((bits, latency)) => {
+                tally.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                return Some(bits);
+            }
+            Err(e) if is_shed(&e) && retries < max_retries => {
+                retries += 1;
+                tally.shed_retries += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+fn block_seed(opts: &LoadgenOptions, worker: usize, block: usize) -> u64 {
+    opts.seed
+        .wrapping_mul(1_000_003)
+        .wrapping_add((worker as u64) << 20)
+        .wrapping_add(block as u64)
 }
 
 fn run_worker(
@@ -200,58 +249,64 @@ fn run_worker(
     let mode = builder.termination_mode();
     let beta = code.beta();
     let chunk_llrs = (builder.tile_config().payload * beta).max(beta);
-    let mut tally = WorkerTally {
-        blocks: 0,
-        shed_retries: 0,
-        failures: 0,
-        mismatches: 0,
-        payload_bits: 0,
-        latencies_ms: Vec::with_capacity(opts.blocks_per_session),
-    };
-    for block in 0..opts.blocks_per_session {
-        let seed = opts
-            .seed
-            .wrapping_mul(1_000_003)
-            .wrapping_add((worker as u64) << 20)
-            .wrapping_add(block as u64);
-        let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
-        let want = oracle.decode_stream(&llr)?;
-        // fresh session per block: connect, decode, disconnect
-        let mut retries = 0;
-        let got = loop {
-            let t0 = Instant::now();
-            let attempt: Result<Vec<u8>> = match opts.transport {
-                Transport::Tcp => TcpClient::connect(addr, builder).and_then(|mut c| {
+    let mut tally = WorkerTally::default();
+    match opts.transport {
+        // TCP: fresh session per block — connect, decode, disconnect —
+        // so admission/eviction churns on every block
+        Transport::Tcp => {
+            for block in 0..opts.blocks_per_session {
+                let seed = block_seed(opts, worker, block);
+                let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
+                let want = oracle.decode_stream(&llr)?;
+                let got = decode_with_retries(opts.max_retries, &mut tally, || {
+                    let mut c = TcpClient::connect_opts(addr, builder, opts.crc)?;
                     for chunk in llr.chunks(chunk_llrs) {
                         c.push(chunk)?;
                     }
-                    c.finish()
-                }),
-                Transport::Udp => {
-                    let flow = (worker as u64) << 32 | block as u64;
-                    UdpClient::connect(addr, flow).and_then(|mut c| c.decode_block(&llr))
+                    c.finish_timed()
+                });
+                match got {
+                    Some(bits) if bits == want => {
+                        tally.blocks += 1;
+                        tally.payload_bits += bits.len() as u64;
+                    }
+                    Some(_) => tally.mismatches += 1,
+                    None => tally.failures += 1,
                 }
-            };
-            match attempt {
-                Ok(bits) => {
-                    tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-                    break Some(bits);
-                }
-                Err(e) if is_shed(&e) && retries < opts.max_retries => {
-                    retries += 1;
-                    tally.shed_retries += 1;
-                    std::thread::sleep(Duration::from_millis(2));
-                }
-                Err(_) => break None,
             }
-        };
-        match got {
-            Some(bits) if bits == want => {
-                tally.blocks += 1;
-                tally.payload_bits += bits.len() as u64;
+        }
+        // UDP: one flow per worker, all blocks pipelined behind the
+        // ack window (shed replies retry inside the window)
+        Transport::Udp => {
+            let mut llrs = Vec::with_capacity(opts.blocks_per_session);
+            let mut wants = Vec::with_capacity(opts.blocks_per_session);
+            for block in 0..opts.blocks_per_session {
+                let seed = block_seed(opts, worker, block);
+                let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
+                wants.push(oracle.decode_stream(&llr)?);
+                llrs.push(llr);
             }
-            Some(_) => tally.mismatches += 1,
-            None => tally.failures += 1,
+            let popts =
+                UdpPipelineOptions { window: opts.udp_window, ..UdpPipelineOptions::default() };
+            let run = UdpClient::connect(addr, worker as u64)
+                .and_then(|mut c| c.decode_blocks(&llrs, &popts));
+            match run {
+                Ok(run) => {
+                    tally.shed_retries += run.stats.shed_retries;
+                    for ((bits, want), lat) in
+                        run.blocks.iter().zip(&wants).zip(&run.latencies)
+                    {
+                        if bits == want {
+                            tally.blocks += 1;
+                            tally.payload_bits += bits.len() as u64;
+                            tally.latencies_ms.push(lat.as_secs_f64() * 1e3);
+                        } else {
+                            tally.mismatches += 1;
+                        }
+                    }
+                }
+                Err(_) => tally.failures += opts.blocks_per_session as u64,
+            }
         }
     }
     Ok(tally)
@@ -361,6 +416,40 @@ mod tests {
         assert!(r.check(None, None).is_err(), "mismatches fail the soak");
         let j = r.to_json().to_string_pretty();
         assert!(j.contains("aggregate_mbps"));
+    }
+
+    #[test]
+    fn retries_record_one_latency_sample_per_success() {
+        // two sheds then success: one sample (the successful attempt's
+        // own latency), two counted retries
+        let mut tally = WorkerTally::default();
+        let mut calls = 0;
+        let got = decode_with_retries(10, &mut tally, || {
+            calls += 1;
+            if calls <= 2 {
+                Err(Error::net("block shed: shard queues at depth 9"))
+            } else {
+                Ok((vec![1, 0, 1], Duration::from_millis(3)))
+            }
+        });
+        assert_eq!(got, Some(vec![1, 0, 1]));
+        assert_eq!(tally.latencies_ms.len(), 1, "only the successful attempt is sampled");
+        assert!((tally.latencies_ms[0] - 3.0).abs() < 1e-9);
+        assert_eq!(tally.shed_retries, 2);
+
+        // retry budget exhausted: no block, no samples
+        let mut tally = WorkerTally::default();
+        let got = decode_with_retries(1, &mut tally, || Err(Error::net("block shed: cap")));
+        assert_eq!(got, None);
+        assert!(tally.latencies_ms.is_empty());
+        assert_eq!(tally.shed_retries, 1);
+
+        // hard errors never retry and never sample
+        let mut tally = WorkerTally::default();
+        let got = decode_with_retries(10, &mut tally, || Err(Error::net("connection reset")));
+        assert_eq!(got, None);
+        assert!(tally.latencies_ms.is_empty());
+        assert_eq!(tally.shed_retries, 0);
     }
 
     #[test]

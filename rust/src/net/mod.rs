@@ -1,14 +1,19 @@
 //! `tcvd::net` — the socket serving front-end: the sharded
 //! [`Coordinator`] exposed over TCP and UDP with session lifecycle,
 //! admission control and load-shedding. `std::net` only (the repo is
-//! offline): thread-per-connection TCP with the pipeline's bounded
-//! channels providing backpressure, and a single-threaded UDP datagram
-//! loop for block traffic.
+//! offline): a readiness-driven reactor multiplexes every TCP
+//! connection on one thread ([`reactor`] wraps `poll(2)` without
+//! dependencies), and a single-threaded UDP datagram loop serves block
+//! traffic — the server's thread count is fixed no matter how many
+//! connections are live.
 //!
-//! * **TCP** ([`tcp`]): one connection = one streaming [`Session`].
-//!   The length-prefixed framing and the HELLO handshake (code /
+//! * **TCP** ([`tcp`]): one connection = one streaming [`Session`],
+//!   driven as a nonblocking state machine with per-connection
+//!   outbound buffering and a write high-water mark for slow readers.
+//!   The length-prefixed framing, the HELLO handshake (code /
 //!   backend / termination / tile, lowered through
-//!   [`DecoderBuilder`]'s own name parsers) live in [`protocol`].
+//!   [`DecoderBuilder`]'s own name parsers) and the optional DATA
+//!   CRC32 (negotiated in HELLO/ACK) live in [`protocol`].
 //! * **UDP** ([`udp`]): one datagram = one self-contained block; a
 //!   flow (peer address + flow id) is the session-lifetime unit, built
 //!   for tail-biting block traffic.
@@ -26,15 +31,16 @@
 
 pub mod loadgen;
 pub mod protocol;
+pub mod reactor;
 pub mod session_table;
 pub mod tcp;
 pub mod udp;
 
-use std::net::{SocketAddr, TcpListener, TcpStream, UdpSocket};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::net::{SocketAddr, TcpListener, UdpSocket};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::api::{BackendKind, DecoderBuilder, TerminationMode};
 use crate::config::Config;
@@ -45,7 +51,7 @@ use crate::error::{Error, Result, ResultExt};
 pub use protocol::{Ack, Hello, PROTO_VERSION};
 pub use session_table::{FlowTouch, SessionTable};
 pub use tcp::{fetch_metrics, TcpClient};
-pub use udp::UdpClient;
+pub use udp::{DatagramSocket, UdpClient, UdpPipelineOptions, UdpRun, UdpRunStats};
 
 /// Tunables of the socket front-end (the `[net]` TOML section /
 /// `tcvd serve` flags; defaults from [`crate::defaults`]).
@@ -60,6 +66,14 @@ pub struct NetConfig {
     pub shed_queue_depth: Option<usize>,
     /// Upper bound on one TCP wire frame's payload, bytes.
     pub max_frame_bytes: usize,
+    /// Per-connection outbound buffer high-water mark, bytes: once a
+    /// slow reader lets this many bytes pile up, the reactor stops
+    /// draining that session's decoded output (the bounded session
+    /// channel then backpressures the pipeline).
+    pub write_high_water: usize,
+    /// Require a CRC32 on every DATA frame, even from clients that did
+    /// not offer one in their HELLO (the ACK tells them).
+    pub crc: bool,
 }
 
 impl Default for NetConfig {
@@ -69,6 +83,8 @@ impl Default for NetConfig {
             idle_timeout: Duration::from_millis(defaults::NET_IDLE_TIMEOUT_MS),
             shed_queue_depth: None,
             max_frame_bytes: defaults::NET_MAX_FRAME_BYTES,
+            write_high_water: defaults::NET_WRITE_HIGH_WATER,
+            crc: false,
         }
     }
 }
@@ -81,6 +97,8 @@ impl NetConfig {
             idle_timeout: Duration::from_millis(cfg.net_idle_timeout_ms),
             shed_queue_depth: cfg.net_shed_queue_depth,
             max_frame_bytes: defaults::NET_MAX_FRAME_BYTES,
+            write_high_water: cfg.net_write_high_water,
+            crc: cfg.net_crc,
         }
     }
 }
@@ -113,10 +131,12 @@ impl Contract {
         }
     }
 
-    /// The HELLO a client of this contract sends.
+    /// The HELLO a client of this contract sends (no feature flags —
+    /// callers set e.g. [`protocol::flags::DATA_CRC`] before encoding).
     pub fn hello(&self) -> Hello {
         Hello {
             version: PROTO_VERSION,
+            flags: 0,
             code: self.code.clone(),
             backend: self.backend.name(),
             termination: self.termination.as_str().to_string(),
@@ -172,8 +192,8 @@ impl Contract {
     }
 }
 
-/// Shared state of one running server (transport loops + connection
-/// threads hold an `Arc` each).
+/// Shared state of one running server (the reactor and UDP loops hold
+/// an `Arc` each).
 pub(crate) struct ServerCtx {
     pub coord: Coordinator,
     pub metrics: Arc<Metrics>,
@@ -184,8 +204,6 @@ pub(crate) struct ServerCtx {
     /// [`NetConfig::shed_queue_depth`]).
     pub shed_queue_depth: usize,
     pub shutdown: AtomicBool,
-    /// Live TCP connection threads (shutdown drains this).
-    pub conns: AtomicUsize,
 }
 
 impl ServerCtx {
@@ -253,16 +271,15 @@ impl Server {
             table,
             shed_queue_depth,
             shutdown: AtomicBool::new(false),
-            conns: AtomicUsize::new(0),
         });
         let mut threads = Vec::new();
         if let Some(listener) = listener {
             let ctx2 = ctx.clone();
             threads.push(
                 std::thread::Builder::new()
-                    .name("tcvd-net-accept".into())
-                    .spawn(move || tcp::run_acceptor(listener, ctx2))
-                    .or_net("spawning tcp acceptor")?,
+                    .name("tcvd-net-reactor".into())
+                    .spawn(move || tcp::run_reactor(listener, ctx2))
+                    .or_net("spawning tcp reactor")?,
             );
         }
         if let Some(socket) = socket {
@@ -292,28 +309,19 @@ impl Server {
         self.ctx.metrics.snapshot()
     }
 
-    /// Stop accepting, drain connection threads (bounded wait), then
-    /// shut the pipeline down.
+    /// Stop the transport loops (the reactor notices the flag within
+    /// one poll tick, abandons live connections and exits), then shut
+    /// the pipeline down.
     pub fn shutdown(self) -> Result<()> {
-        let Server { ctx, tcp_addr, udp_addr: _, threads } = self;
+        let Server { ctx, threads, .. } = self;
         ctx.shutdown.store(true, Ordering::SeqCst);
-        // unblock the accept loop with a no-op connection
-        if let Some(addr) = tcp_addr {
-            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
-        }
         for t in threads {
             t.join().map_err(|_| Error::net("transport thread panicked"))?;
         }
-        // bounded wait for straggling connection threads; live clients
-        // see their sockets close when the threads exit
-        let deadline = Instant::now() + Duration::from_secs(10);
-        while ctx.conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
         match Arc::try_unwrap(ctx) {
             Ok(ctx) => ctx.coord.shutdown(),
-            // a straggler still holds the context: dropping our Arc
-            // lets the pipeline unwind when the last thread exits
+            // should be unreachable once both loops joined; dropping
+            // our Arc still lets the pipeline unwind
             Err(_) => Ok(()),
         }
     }

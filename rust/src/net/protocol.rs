@@ -14,11 +14,22 @@
 //! UDP reply: `[ flow: u64 ][ seq: u32 ][ status: u8 ][ bits... ]`.
 
 use std::io::{Read, Write};
+use std::sync::OnceLock;
 
 use crate::error::{Error, Result};
 
-/// Protocol version carried in the HELLO frame.
-pub const PROTO_VERSION: u16 = 1;
+/// Protocol version carried in the HELLO frame. Version 2 added the
+/// `flags` field to HELLO and ACK (optional per-frame DATA CRC).
+pub const PROTO_VERSION: u16 = 2;
+
+/// HELLO/ACK feature flag bits. A client *offers* flags in its HELLO;
+/// the server echoes the flags *in effect* in the ACK (it may switch a
+/// flag on that the client did not offer, e.g. when `net.crc` makes
+/// checksums mandatory server-side), and both ends honor the ACK.
+pub mod flags {
+    /// Every DATA payload is prefixed with a CRC32 of the LLR bytes.
+    pub const DATA_CRC: u16 = 1 << 0;
+}
 
 /// TCP frame kinds. Client-to-server kinds have the high bit clear,
 /// server-to-client kinds have it set.
@@ -54,6 +65,10 @@ pub mod reject {
     pub const QUEUE_SATURATED: u8 = 2;
     /// Handshake parameters do not match the served pipeline.
     pub const CONFIG: u8 = 3;
+    /// A DATA frame's CRC32 did not match its payload (negotiated via
+    /// [`flags::DATA_CRC`](super::flags::DATA_CRC)); the session is
+    /// evicted after this reject.
+    pub const CRC_MISMATCH: u8 = 4;
 }
 
 /// Human-readable token for a reject reason byte (stable strings —
@@ -63,7 +78,18 @@ pub fn reject_reason_name(reason: u8) -> &'static str {
         reject::SESSION_CAP => "session-cap",
         reject::QUEUE_SATURATED => "queue-saturated",
         reject::CONFIG => "config",
+        reject::CRC_MISMATCH => "crc-mismatch",
         _ => "unknown",
+    }
+}
+
+/// Is `k` a frame kind this protocol version defines (either
+/// direction)?
+pub fn check_kind(k: u8) -> Result<()> {
+    match k {
+        kind::HELLO | kind::DATA | kind::FINISH | kind::METRICS_REQ | kind::ACK | kind::BITS
+        | kind::END | kind::REJECT | kind::ERROR | kind::METRICS => Ok(()),
+        other => Err(Error::net(format!("unknown frame kind {other:#04x}"))),
     }
 }
 
@@ -193,6 +219,8 @@ fn take_u64(b: &mut &[u8]) -> Result<u64> {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Hello {
     pub version: u16,
+    /// Feature flags the client offers ([`flags`]).
+    pub flags: u16,
     pub code: String,
     pub backend: String,
     pub termination: String,
@@ -205,6 +233,7 @@ impl Hello {
     pub fn encode(&self) -> Result<Vec<u8>> {
         let mut buf = Vec::new();
         buf.extend_from_slice(&self.version.to_le_bytes());
+        buf.extend_from_slice(&self.flags.to_le_bytes());
         push_str8(&mut buf, &self.code)?;
         push_str8(&mut buf, &self.backend)?;
         push_str8(&mut buf, &self.termination)?;
@@ -215,11 +244,12 @@ impl Hello {
     }
 
     pub fn decode(mut b: &[u8]) -> Result<Hello> {
-        if b.len() < 2 {
+        if b.len() < 4 {
             return Err(Error::net("truncated HELLO"));
         }
         let version = u16::from_le_bytes([b[0], b[1]]);
-        b = &b[2..];
+        let flags = u16::from_le_bytes([b[2], b[3]]);
+        b = &b[4..];
         let code = take_str8(&mut b)?.to_string();
         let backend = take_str8(&mut b)?.to_string();
         let termination = take_str8(&mut b)?.to_string();
@@ -229,7 +259,16 @@ impl Hello {
         if !b.is_empty() {
             return Err(Error::net("trailing bytes in HELLO"));
         }
-        Ok(Hello { version, code, backend, termination, payload_stages, head_stages, tail_stages })
+        Ok(Hello {
+            version,
+            flags,
+            code,
+            backend,
+            termination,
+            payload_stages,
+            head_stages,
+            tail_stages,
+        })
     }
 }
 
@@ -240,14 +279,18 @@ pub struct Ack {
     pub session: u64,
     pub frame_stages: u32,
     pub beta: u32,
+    /// Feature flags in effect for the session ([`flags`]) — the
+    /// server's decision, which both ends honor from here on.
+    pub flags: u16,
 }
 
 impl Ack {
     pub fn encode(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(16);
+        let mut buf = Vec::with_capacity(18);
         buf.extend_from_slice(&self.session.to_le_bytes());
         buf.extend_from_slice(&self.frame_stages.to_le_bytes());
         buf.extend_from_slice(&self.beta.to_le_bytes());
+        buf.extend_from_slice(&self.flags.to_le_bytes());
         buf
     }
 
@@ -255,10 +298,15 @@ impl Ack {
         let session = take_u64(&mut b)?;
         let frame_stages = take_u32(&mut b)?;
         let beta = take_u32(&mut b)?;
+        if b.len() < 2 {
+            return Err(Error::net("truncated ACK"));
+        }
+        let flags = u16::from_le_bytes([b[0], b[1]]);
+        b = &b[2..];
         if !b.is_empty() {
             return Err(Error::net("trailing bytes in ACK"));
         }
-        Ok(Ack { session, frame_stages, beta })
+        Ok(Ack { session, frame_stages, beta, flags })
     }
 }
 
@@ -291,6 +339,126 @@ pub fn decode_llrs(b: &[u8]) -> Result<Vec<f32>> {
         return Err(Error::net(format!("LLR payload of {} bytes is not f32-aligned", b.len())));
     }
     Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// IEEE CRC32 (the zlib/PNG/Ethernet polynomial, reflected). Table is
+/// built once; check value: `crc32(b"123456789") == 0xCBF43926`.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Encode a DATA payload: raw LLR bytes, prefixed with their CRC32 when
+/// the session negotiated [`flags::DATA_CRC`].
+pub fn encode_data_payload(llr: &[f32], crc: bool) -> Vec<u8> {
+    let body = encode_llrs(llr);
+    if !crc {
+        return body;
+    }
+    let mut buf = Vec::with_capacity(4 + body.len());
+    buf.extend_from_slice(&crc32(&body).to_le_bytes());
+    buf.extend_from_slice(&body);
+    buf
+}
+
+/// Decode a DATA payload, verifying the CRC32 prefix when the session
+/// negotiated one. A checksum failure is a typed error whose message
+/// carries the stable `crc-mismatch` token (see
+/// [`is_crc_mismatch`]) — the server answers it with
+/// `REJECT crc-mismatch` and evicts the session.
+pub fn decode_data_payload(b: &[u8], crc: bool) -> Result<Vec<f32>> {
+    if !crc {
+        return decode_llrs(b);
+    }
+    if b.len() < 4 {
+        return Err(Error::net(format!("DATA frame of {} bytes is too short for its crc32", b.len())));
+    }
+    let (head, body) = b.split_at(4);
+    let want = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    let got = crc32(body);
+    if got != want {
+        return Err(Error::net(format!(
+            "crc-mismatch on DATA frame: header {want:#010x}, payload {got:#010x}"
+        )));
+    }
+    decode_llrs(body)
+}
+
+/// Whether a decode error is a DATA CRC failure (vs. e.g. a framing or
+/// alignment error) — decides REJECT `crc-mismatch` over a plain ERROR.
+pub fn is_crc_mismatch(e: &Error) -> bool {
+    matches!(e, Error::Net(m) if m.contains("crc-mismatch"))
+}
+
+/// Incremental frame parser for the nonblocking read path: feed it
+/// whatever bytes `read` produced, take complete frames out. Length
+/// prefixes are bounded and kinds validated before the payload is
+/// materialized, so a malformed peer is rejected with a typed error no
+/// matter how its bytes are sliced across reads.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn new() -> FrameBuf {
+        FrameBuf::default()
+    }
+
+    /// Append raw wire bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no partial frame is buffered — an EOF here is an
+    /// orderly close, an EOF elsewhere is a truncated frame.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Take the next complete frame, if one is buffered. `Ok(None)`
+    /// means "need more bytes"; errors (unknown kind, oversize length
+    /// prefix) poison the connection and are typed.
+    pub fn next_frame(&mut self, max_len: usize) -> Result<Option<(u8, Vec<u8>)>> {
+        if self.buf.len() < FRAME_HEADER {
+            return Ok(None);
+        }
+        let kind = self.buf[0];
+        check_kind(kind)?;
+        let len =
+            u32::from_le_bytes([self.buf[1], self.buf[2], self.buf[3], self.buf[4]]) as usize;
+        if len > max_len {
+            return Err(Error::net(format!(
+                "frame of {len} bytes exceeds the {max_len}-byte limit"
+            )));
+        }
+        if self.buf.len() < FRAME_HEADER + len {
+            return Ok(None);
+        }
+        let payload = self.buf[FRAME_HEADER..FRAME_HEADER + len].to_vec();
+        self.buf.drain(..FRAME_HEADER + len);
+        Ok(Some((kind, payload)))
+    }
 }
 
 /// One UDP request datagram: a whole block of LLRs for flow `flow`.
@@ -397,6 +565,7 @@ mod tests {
     fn hello_roundtrip() {
         let h = Hello {
             version: PROTO_VERSION,
+            flags: flags::DATA_CRC,
             code: "ccsds".into(),
             backend: "simd".into(),
             termination: "tail-biting".into(),
@@ -413,7 +582,7 @@ mod tests {
 
     #[test]
     fn ack_and_reject_roundtrip() {
-        let a = Ack { session: 7, frame_stages: 96, beta: 2 };
+        let a = Ack { session: 7, frame_stages: 96, beta: 2, flags: flags::DATA_CRC };
         assert_eq!(Ack::decode(&a.encode()).unwrap(), a);
         let (reason, detail) =
             decode_reject(&encode_reject(reject::SESSION_CAP, "cap 2 reached")).unwrap();
@@ -427,6 +596,61 @@ mod tests {
         let llr = vec![1.5f32, -0.25, 3.0];
         assert_eq!(decode_llrs(&encode_llrs(&llr)).unwrap(), llr);
         assert!(decode_llrs(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn crc32_check_vector() {
+        // the standard CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn data_payload_crc_roundtrip_and_mismatch() {
+        let llr = vec![0.5f32, -2.0, 1.25];
+        // without crc: plain LLR bytes
+        assert_eq!(decode_data_payload(&encode_data_payload(&llr, false), false).unwrap(), llr);
+        // with crc: prefixed, verified
+        let mut wire = encode_data_payload(&llr, true);
+        assert_eq!(wire.len(), 4 + llr.len() * 4);
+        assert_eq!(decode_data_payload(&wire, true).unwrap(), llr);
+        // flip a payload bit: typed crc-mismatch, not a panic
+        wire[6] ^= 0x01;
+        let e = decode_data_payload(&wire, true).unwrap_err();
+        assert!(is_crc_mismatch(&e), "{e}");
+        assert!(!is_crc_mismatch(&Error::net("LLR payload of 3 bytes is not f32-aligned")));
+    }
+
+    #[test]
+    fn frame_buf_reassembles_dribbled_bytes() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, kind::DATA, &[1, 2, 3, 4]).unwrap();
+        write_frame(&mut wire, kind::FINISH, &[]).unwrap();
+        let mut fb = FrameBuf::new();
+        let mut frames = Vec::new();
+        for &b in &wire {
+            fb.extend(&[b]); // one byte at a time
+            while let Some(f) = fb.next_frame(1024).unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames, vec![(kind::DATA, vec![1, 2, 3, 4]), (kind::FINISH, vec![])]);
+        assert!(fb.is_empty());
+    }
+
+    #[test]
+    fn frame_buf_rejects_unknown_kind_and_oversize() {
+        let mut fb = FrameBuf::new();
+        fb.extend(&[0x7F, 0, 0, 0, 0]);
+        let e = fb.next_frame(1024).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "{e}");
+        assert!(e.to_string().contains("unknown frame kind"), "{e}");
+
+        let mut fb = FrameBuf::new();
+        fb.extend(&[kind::DATA]);
+        fb.extend(&u32::MAX.to_le_bytes());
+        let e = fb.next_frame(1 << 20).unwrap_err();
+        assert!(e.to_string().contains("exceeds"), "{e}");
     }
 
     #[test]

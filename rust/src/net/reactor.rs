@@ -1,0 +1,262 @@
+//! A minimal readiness facility for the net front-end: a dependency-free
+//! wrapper over `poll(2)` (std + a single raw libc binding, no crates).
+//!
+//! The serving loop in `tcp.rs` registers every socket it owns each
+//! tick, polls with a bounded timeout, and reads readiness back by
+//! token. The API is deliberately level-triggered and rebuilt per tick
+//! — with one reactor thread owning every connection there is nothing
+//! to synchronise, and the poll set for a few thousand fds rebuilds in
+//! microseconds.
+//!
+//! On non-unix targets (no `poll`) the set degrades to "everything is
+//! ready" after a short sleep: all sockets the reactor drives are
+//! nonblocking, so spurious readiness costs a `WouldBlock` syscall, not
+//! correctness. That keeps the state machines portable and testable
+//! while the fast path stays a real kernel wait on unix.
+
+use std::time::Duration;
+
+/// Readiness/interest bit: the fd can be read (or has an error/hangup
+/// condition to collect via `read`).
+pub const READ: u8 = 0b01;
+/// Readiness/interest bit: the fd can accept writes.
+pub const WRITE: u8 = 0b10;
+
+/// Raw fd type the poll set registers. On non-unix targets the value is
+/// carried but never handed to the kernel.
+#[cfg(unix)]
+pub type Fd = std::os::unix::io::RawFd;
+#[cfg(not(unix))]
+pub type Fd = i32;
+
+/// The registered fd of a TCP stream.
+pub fn stream_fd(s: &std::net::TcpStream) -> Fd {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        s.as_raw_fd()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = s;
+        0
+    }
+}
+
+/// The registered fd of a TCP listener.
+pub fn listener_fd(l: &std::net::TcpListener) -> Fd {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        l.as_raw_fd()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = l;
+        0
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_short};
+
+    // nfds_t is `unsigned long` on Linux/glibc and `unsigned int` on
+    // the BSDs/macOS; cover both without pulling in libc.
+    #[cfg(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd"))]
+    pub type NfdsT = std::os::raw::c_uint;
+    #[cfg(not(any(target_os = "macos", target_os = "freebsd", target_os = "openbsd")))]
+    pub type NfdsT = std::os::raw::c_ulong;
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    /// `struct pollfd` — identical layout on every unix.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+}
+
+/// One tick's worth of fds to wait on. `clear` + `register` each tick,
+/// `poll` once, then query `readiness` by the token `register` returned.
+#[derive(Default)]
+pub struct PollSet {
+    #[cfg(unix)]
+    fds: Vec<sys::PollFd>,
+    #[cfg(not(unix))]
+    interests: Vec<u8>,
+}
+
+impl PollSet {
+    pub fn new() -> PollSet {
+        PollSet::default()
+    }
+
+    /// Drop every registration (keeps the allocation).
+    pub fn clear(&mut self) {
+        #[cfg(unix)]
+        self.fds.clear();
+        #[cfg(not(unix))]
+        self.interests.clear();
+    }
+
+    /// Register `fd` with an interest mask (`READ | WRITE` bits; an
+    /// empty mask still registers the fd for error conditions). Returns
+    /// the token to pass to [`readiness`](Self::readiness) after the
+    /// poll.
+    pub fn register(&mut self, fd: Fd, interest: u8) -> usize {
+        #[cfg(unix)]
+        {
+            let mut events = 0;
+            if interest & READ != 0 {
+                events |= sys::POLLIN;
+            }
+            if interest & WRITE != 0 {
+                events |= sys::POLLOUT;
+            }
+            self.fds.push(sys::PollFd { fd, events, revents: 0 });
+            self.fds.len() - 1
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = fd;
+            self.interests.push(interest);
+            self.interests.len() - 1
+        }
+    }
+
+    /// Number of registered fds this tick.
+    pub fn len(&self) -> usize {
+        #[cfg(unix)]
+        {
+            self.fds.len()
+        }
+        #[cfg(not(unix))]
+        {
+            self.interests.len()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wait until at least one registered fd is ready or the timeout
+    /// elapses. Returns the number of ready fds (0 on timeout). EINTR
+    /// is treated as a timeout: the caller's loop re-polls anyway.
+    pub fn poll(&mut self, timeout: Duration) -> usize {
+        #[cfg(unix)]
+        {
+            let ms: i32 = timeout.as_millis().min(i32::MAX as u128) as i32;
+            if self.fds.is_empty() {
+                std::thread::sleep(timeout);
+                return 0;
+            }
+            let n = unsafe {
+                sys::poll(self.fds.as_mut_ptr(), self.fds.len() as sys::NfdsT, ms)
+            };
+            n.max(0) as usize
+        }
+        #[cfg(not(unix))]
+        {
+            // fallback: a short sleep, then report everything ready for
+            // its interest; nonblocking sockets make that safe
+            std::thread::sleep(timeout.min(Duration::from_millis(1)));
+            self.interests.len()
+        }
+    }
+
+    /// Readiness of a registered fd after [`poll`](Self::poll), as
+    /// `READ | WRITE` bits. Error/hangup conditions are folded into
+    /// both bits so the owner discovers them on its next `read`/`write`.
+    pub fn readiness(&self, token: usize) -> u8 {
+        #[cfg(unix)]
+        {
+            let r = self.fds[token].revents;
+            let fatal = r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0;
+            let mut out = 0;
+            if fatal || r & sys::POLLIN != 0 {
+                out |= READ;
+            }
+            if fatal || r & sys::POLLOUT != 0 {
+                out |= WRITE;
+            }
+            out
+        }
+        #[cfg(not(unix))]
+        {
+            self.interests[token]
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn listener_becomes_readable_on_connect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut set = PollSet::new();
+        set.register(listener_fd(&listener), READ);
+        assert_eq!(set.poll(Duration::from_millis(10)), 0, "no pending connect yet");
+
+        let _client = TcpStream::connect(addr).unwrap();
+        set.clear();
+        let tok = set.register(listener_fd(&listener), READ);
+        assert!(set.poll(Duration::from_millis(2000)) >= 1);
+        assert_eq!(set.readiness(tok) & READ, READ);
+    }
+
+    #[test]
+    fn stream_readiness_tracks_data_and_writability() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        // a fresh socket: writable, nothing to read
+        let mut set = PollSet::new();
+        let tok = set.register(stream_fd(&server), READ | WRITE);
+        assert!(set.poll(Duration::from_millis(2000)) >= 1);
+        assert_eq!(set.readiness(tok) & WRITE, WRITE);
+        assert_eq!(set.readiness(tok) & READ, 0);
+
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        set.clear();
+        let tok = set.register(stream_fd(&server), READ);
+        assert!(set.poll(Duration::from_millis(2000)) >= 1);
+        assert_eq!(set.readiness(tok) & READ, READ);
+    }
+
+    #[test]
+    fn hangup_reads_as_readable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        drop(client);
+        // peer closed: POLLIN/POLLHUP — either way the READ bit is set
+        // so the owner reads the EOF
+        let mut set = PollSet::new();
+        let tok = set.register(stream_fd(&server), READ);
+        assert!(set.poll(Duration::from_millis(2000)) >= 1);
+        assert_eq!(set.readiness(tok) & READ, READ);
+    }
+}

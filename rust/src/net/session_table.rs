@@ -1,8 +1,9 @@
 //! Session lifecycle bookkeeping for the socket front-end: one table
 //! owns the concurrent-session cap (TCP connections + live UDP flows
 //! count against the same cap) and the idle-eviction clock for UDP
-//! flows. TCP idle eviction rides the per-connection socket read
-//! timeout instead (see `net::tcp`), so the table only tracks TCP
+//! flows. TCP idle eviction is the reactor's per-connection liveness
+//! clock instead (each tick compares the last read's timestamp against
+//! the same timeout — see `net::tcp`), so the table only tracks TCP
 //! connections as a count.
 //!
 //! The table is pure bookkeeping: metrics counters are incremented by

@@ -1,24 +1,32 @@
 //! TCP transport of the socket front-end: one connection is one
 //! streaming [`Session`](crate::coordinator::Session).
 //!
-//! Server side: an accept-loop thread spawns one thread per connection
-//! (`std::net` blocking I/O — the pipeline's bounded channels provide
-//! the backpressure). The connection thread reads frames; a small
-//! writer thread drains the session's in-order decoded output to BITS
-//! frames, so decoding overlaps with the client still pushing DATA.
-//! Idle eviction rides the socket read timeout: a connection that
-//! stays silent for the configured idle timeout is evicted (counted in
-//! `net.sessions_evicted`) and closed.
+//! Server side: a single readiness-driven reactor thread
+//! (`tcvd-net-reactor`) owns the listener and every connection —
+//! nonblocking sockets multiplexed over the dependency-free `poll(2)`
+//! wrapper in [`super::reactor`]. Each connection is a small state
+//! machine (handshake → streaming → draining → closing) built on the
+//! incremental [`FrameBuf`] parser, so partial reads and 1-byte writes
+//! from a peer are business as usual. Decoded BITS frames are written
+//! back through a per-connection outbound buffer with a backpressure
+//! high-water mark (`net.write_high_water`): when a slow reader lets
+//! the buffer fill, the reactor stops draining that session's pipeline
+//! output (the bounded session channel then backpressures the shards)
+//! instead of buffering without bound — no writer thread per session,
+//! no unbounded memory. The thread count is fixed no matter how many
+//! connections are live.
 //!
 //! Every connection path — clean END, dirty disconnect, protocol
-//! error, idle eviction — closes the pipeline session exactly once
-//! (`SessionHandle::finish`), so the reassembler never leaks session
-//! state and `Coordinator::shutdown` never hangs on an abandoned
-//! session.
+//! error, CRC mismatch, idle eviction — closes the pipeline session
+//! exactly once (`SessionHandle::close_dispatched` is idempotent), so
+//! the reassembler never leaks state and `Coordinator::shutdown` never
+//! hangs on an abandoned session.
 
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::DecoderBuilder;
@@ -27,251 +35,600 @@ use crate::defaults;
 use crate::error::{Error, Result, ResultExt};
 
 use super::protocol::{
-    decode_llrs, decode_reject, encode_llrs, encode_reject, frame_wire_bytes, kind, read_frame,
-    reject, reject_reason_name, write_frame, Ack, Hello, ReadOutcome,
+    decode_data_payload, decode_reject, encode_data_payload, encode_reject, flags,
+    frame_wire_bytes, is_crc_mismatch, kind, read_frame, reject, reject_reason_name, write_frame,
+    Ack, FrameBuf, Hello, ReadOutcome,
 };
+use super::reactor::{listener_fd, stream_fd, PollSet, READ, WRITE};
 use super::{Contract, ServerCtx};
 
 /// How long a client waits for a server frame before giving up.
 const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// Write one frame under the shared writer lock and count its wire
-/// bytes.
-fn send(ctx: &ServerCtx, w: &Mutex<TcpStream>, frame_kind: u8, payload: &[u8]) -> Result<()> {
-    let mut g = w.lock().unwrap();
-    write_frame(&mut *g, frame_kind, payload)?;
-    ctx.metrics.net.bytes_out.fetch_add(frame_wire_bytes(payload.len()), Ordering::Relaxed);
-    Ok(())
+/// Stop consuming DATA frames from a connection once this many framed
+/// jobs are waiting on the pipeline (read interest resumes when the
+/// shard queues accept them).
+const PENDING_FRAMES_MAX: usize = 64;
+
+/// Per-connection outbound buffer: bytes are appended frame-at-a-time
+/// and flushed as far as the socket accepts, tolerating partial writes.
+#[derive(Default)]
+struct OutBuf {
+    buf: Vec<u8>,
+    pos: usize,
 }
 
-fn send_error(ctx: &ServerCtx, w: &Mutex<TcpStream>, e: &Error) {
-    let _ = send(ctx, w, kind::ERROR, e.to_string().as_bytes());
-}
+impl OutBuf {
+    fn len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
 
-fn send_metrics(ctx: &ServerCtx, w: &Mutex<TcpStream>) {
-    let snap = ctx.metrics.snapshot().to_json().to_string_pretty();
-    let _ = send(ctx, w, kind::METRICS, snap.as_bytes());
-}
+    fn push_frame(&mut self, frame_kind: u8, payload: &[u8]) {
+        self.buf.push(frame_kind);
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(payload);
+    }
 
-/// Accept loop (one per server). Exits when the shutdown flag is set;
-/// `Server::shutdown` unblocks it with a dummy self-connection.
-pub(crate) fn run_acceptor(listener: TcpListener, ctx: Arc<ServerCtx>) {
-    loop {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                if ctx.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                ctx.conns.fetch_add(1, Ordering::SeqCst);
-                let ctx2 = ctx.clone();
-                let spawned = std::thread::Builder::new().name("tcvd-net-conn".into()).spawn(
-                    move || {
-                        handle_conn(stream, &ctx2);
-                        ctx2.conns.fetch_sub(1, Ordering::SeqCst);
-                    },
-                );
-                if spawned.is_err() {
-                    ctx.conns.fetch_sub(1, Ordering::SeqCst);
-                }
-            }
-            Err(_) => {
-                if ctx.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                // transient accept failure: keep serving
-            }
+    fn pending(&self) -> &[u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 1 << 16 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
         }
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
     }
 }
 
-/// Outcome of the post-handshake session loop.
-enum Outcome {
-    /// FINISH processed; the instant it was received (latency clock).
-    Clean(Instant),
-    /// Dirty disconnect, idle timeout, or protocol/pipeline error.
-    Dirty,
+/// Connection lifecycle. Counter discipline matches the blocking
+/// implementation this replaced: `sessions_evicted` increments exactly
+/// once per dirty close of an *admitted* session, never for handshake
+/// failures or clean ENDs.
+enum Phase {
+    /// Pre-session: waiting for HELLO (METRICS_REQ answered inline).
+    Handshake,
+    /// Session open: DATA/FINISH/METRICS_REQ frames drive the pipeline.
+    Streaming,
+    /// FINISH accepted: dispatch the tail, drain the decoded output,
+    /// then END.
+    Draining,
+    /// Flush the outbound buffer, then close the socket.
+    Closing,
 }
 
-fn handle_conn(stream: TcpStream, ctx: &Arc<ServerCtx>) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(ctx.table.idle_timeout()));
-    let writer = match stream.try_clone() {
-        Ok(c) => Arc::new(Mutex::new(c)),
-        Err(_) => return,
-    };
-    let mut reader = stream;
+/// The pipeline half of an admitted connection.
+struct SessionIo {
+    handle: SessionHandle,
+    rx: Option<Receiver<Vec<u8>>>,
+    t_finish: Option<Instant>,
+}
 
-    // ---- handshake: METRICS_REQ is answered sessionless; a HELLO
-    // opens the session ----
-    let hello = loop {
-        match read_frame(&mut reader, ctx.net.max_frame_bytes) {
-            Ok(ReadOutcome::Frame(k, p)) => {
-                ctx.metrics.net.bytes_in.fetch_add(frame_wire_bytes(p.len()), Ordering::Relaxed);
-                match k {
-                    kind::METRICS_REQ => send_metrics(ctx, &writer),
-                    kind::HELLO => match Hello::decode(&p) {
-                        Ok(h) => break h,
-                        Err(e) => {
-                            send_error(ctx, &writer, &e);
-                            return;
-                        }
-                    },
-                    other => {
-                        send_error(
-                            ctx,
-                            &writer,
-                            &Error::net(format!("expected HELLO, got frame kind {other:#04x}")),
-                        );
+struct Conn {
+    sock: TcpStream,
+    inbuf: FrameBuf,
+    outbuf: OutBuf,
+    phase: Phase,
+    session: Option<SessionIo>,
+    /// DATA frames carry a CRC32 prefix (decided at ACK time).
+    crc: bool,
+    /// Whether this connection holds a session-table slot.
+    admitted: bool,
+    eof: bool,
+    write_dead: bool,
+    last_read: Instant,
+    last_write: Instant,
+    done: bool,
+}
+
+impl Conn {
+    fn new(sock: TcpStream) -> Conn {
+        let now = Instant::now();
+        Conn {
+            sock,
+            inbuf: FrameBuf::new(),
+            outbuf: OutBuf::default(),
+            phase: Phase::Handshake,
+            session: None,
+            crc: false,
+            admitted: false,
+            eof: false,
+            write_dead: false,
+            last_read: now,
+            last_write: now,
+            done: false,
+        }
+    }
+
+    /// Poll interest this tick: read while the state machine consumes
+    /// input (and the pipeline is keeping up), write while bytes wait.
+    fn interest(&self) -> u8 {
+        let mut i = 0;
+        if self.wants_read() {
+            i |= READ;
+        }
+        if self.outbuf.len() > 0 && !self.write_dead {
+            i |= WRITE;
+        }
+        i
+    }
+
+    fn wants_read(&self) -> bool {
+        match self.phase {
+            Phase::Handshake => true,
+            Phase::Streaming => self
+                .session
+                .as_ref()
+                .map_or(true, |s| s.handle.pending_frames() < PENDING_FRAMES_MAX),
+            Phase::Draining | Phase::Closing => false,
+        }
+    }
+
+    /// Progress is gated on the pipeline rather than the socket — poll
+    /// with a short timeout so completion is not tick-quantized.
+    fn wants_fast_tick(&self) -> bool {
+        match self.phase {
+            Phase::Streaming | Phase::Draining => self.session.as_ref().is_some_and(|s| {
+                s.handle.pending_frames() > 0 || (s.handle.framing_done() && s.rx.is_some())
+            }),
+            _ => false,
+        }
+    }
+
+    fn queue_frame(&mut self, ctx: &ServerCtx, frame_kind: u8, payload: &[u8]) {
+        if self.write_dead {
+            return;
+        }
+        self.outbuf.push_frame(frame_kind, payload);
+        ctx.metrics.net.write_buf_hwm.fetch_max(self.outbuf.len() as u64, Ordering::Relaxed);
+    }
+
+    fn queue_error(&mut self, ctx: &ServerCtx, e: &Error) {
+        let text = e.to_string();
+        self.queue_frame(ctx, kind::ERROR, text.as_bytes());
+    }
+
+    fn queue_metrics(&mut self, ctx: &ServerCtx) {
+        let snap = ctx.metrics.snapshot().to_json().to_string_pretty();
+        self.queue_frame(ctx, kind::METRICS, snap.as_bytes());
+    }
+
+    /// Dirty close of an admitted session: close the pipeline session
+    /// at its dispatched prefix (idempotent), drop the output receiver
+    /// (the reassembler ignores sends to a dropped receiver), count the
+    /// eviction exactly once, optionally queue a final frame, and move
+    /// to Closing.
+    fn dirty_close(&mut self, ctx: &ServerCtx, last_frame: Option<(u8, Vec<u8>)>) {
+        if let Some(mut s) = self.session.take() {
+            s.handle.close_dispatched();
+            ctx.metrics.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some((k, p)) = last_frame {
+            self.queue_frame(ctx, k, &p);
+        }
+        self.phase = Phase::Closing;
+    }
+
+    /// Read whatever the socket has, without blocking.
+    fn read_some(&mut self, ctx: &ServerCtx, scratch: &mut [u8]) {
+        loop {
+            match self.sock.read(scratch) {
+                Ok(0) => {
+                    self.eof = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.inbuf.extend(&scratch[..n]);
+                    self.last_read = Instant::now();
+                    // bound per-tick intake: one oversize frame's worth
+                    if self.inbuf.buffered() > ctx.net.max_frame_bytes + scratch.len() {
                         return;
                     }
                 }
-            }
-            // silence or disconnect before a session existed: nothing
-            // to evict, nothing to count
-            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::TimedOut) | Err(_) => return,
-        }
-    };
-
-    if let Err(e) = ctx.contract.check_hello(&hello) {
-        ctx.metrics.net.handshake_rejects.fetch_add(1, Ordering::Relaxed);
-        let _ = send(ctx, &writer, kind::REJECT, &encode_reject(reject::CONFIG, e.message()));
-        return;
-    }
-    // admission: the saturation signal is checked before the cap so a
-    // saturated server sheds deterministically even with free slots
-    if ctx.queues_saturated() {
-        ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
-        let detail = format!("shard queues at depth {}", ctx.metrics.queue_depth_total());
-        let _ = send(ctx, &writer, kind::REJECT, &encode_reject(reject::QUEUE_SATURATED, &detail));
-        return;
-    }
-    if !ctx.table.admit_tcp() {
-        ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
-        let detail = format!("session cap {} reached", ctx.net.max_sessions);
-        let _ = send(ctx, &writer, kind::REJECT, &encode_reject(reject::SESSION_CAP, &detail));
-        return;
-    }
-
-    let session = match ctx.coord.open_session() {
-        Ok(s) => s,
-        Err(e) => {
-            ctx.table.release_tcp();
-            send_error(ctx, &writer, &e);
-            return;
-        }
-    };
-    ctx.metrics.net.sessions_accepted.fetch_add(1, Ordering::Relaxed);
-    let ack = Ack {
-        session: session.id(),
-        frame_stages: ctx.coord.tile().frame_stages() as u32,
-        beta: ctx.coord.trellis().code().beta() as u32,
-    };
-    let (mut handle, rx) = session.split();
-
-    // writer thread: drain the in-order decoded output to BITS frames.
-    // It always drains rx to exhaustion — even when the peer is gone —
-    // so the reassembler is never blocked on a dead connection.
-    let wctx = ctx.clone();
-    let wsock = writer.clone();
-    let writer_thread = std::thread::spawn(move || {
-        for chunk in rx {
-            let n = chunk.len();
-            let ok = {
-                let mut g = wsock.lock().unwrap();
-                write_frame(&mut *g, kind::BITS, &chunk).is_ok()
-            };
-            if ok {
-                wctx.metrics.net.bytes_out.fetch_add(frame_wire_bytes(n), Ordering::Relaxed);
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // hard read error: same terminal treatment as EOF
+                    self.eof = true;
+                    return;
+                }
             }
         }
-    });
-
-    let outcome = if send(ctx, &writer, kind::ACK, &ack.encode()).is_ok() {
-        run_session(&mut reader, ctx, &writer, &mut handle)
-    } else {
-        Outcome::Dirty
-    };
-    // the dirty paths have not closed the session yet: do it now (a
-    // second finish on an already-closed handle is a harmless typed
-    // error) so rx disconnects and the writer thread can exit
-    if matches!(outcome, Outcome::Dirty) {
-        let _ = handle.finish();
     }
-    let _ = writer_thread.join();
-    match outcome {
-        Outcome::Clean(t_finish) => {
-            ctx.metrics.record_net_block(t_finish.elapsed());
-            let _ = send(ctx, &writer, kind::END, &[]);
-        }
-        Outcome::Dirty => {
-            ctx.metrics.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
-        }
-    }
-    ctx.table.release_tcp();
-}
 
-/// Post-ACK frame loop: DATA pushes, FINISH completes, METRICS_REQ
-/// snapshots. Never calls `finish` on a dirty exit — the caller owns
-/// the close-exactly-once discipline.
-fn run_session(
-    reader: &mut TcpStream,
-    ctx: &ServerCtx,
-    writer: &Mutex<TcpStream>,
-    handle: &mut SessionHandle,
-) -> Outcome {
-    loop {
-        match read_frame(reader, ctx.net.max_frame_bytes) {
-            Ok(ReadOutcome::Frame(k, p)) => {
-                ctx.metrics.net.bytes_in.fetch_add(frame_wire_bytes(p.len()), Ordering::Relaxed);
-                match k {
-                    kind::DATA => {
-                        if let Err(e) = decode_llrs(&p).and_then(|llr| handle.push(&llr)) {
-                            send_error(ctx, writer, &e);
-                            return Outcome::Dirty;
+    /// Consume complete frames from the input buffer, per phase.
+    fn process_frames(&mut self, ctx: &Arc<ServerCtx>) {
+        loop {
+            if !matches!(self.phase, Phase::Handshake | Phase::Streaming) {
+                return;
+            }
+            if matches!(self.phase, Phase::Streaming)
+                && self.session.as_ref().is_some_and(|s| {
+                    s.handle.pending_frames() >= PENDING_FRAMES_MAX
+                })
+            {
+                return; // pipeline backpressure: leave frames buffered
+            }
+            let (k, p) = match self.inbuf.next_frame(ctx.net.max_frame_bytes) {
+                Ok(Some(frame)) => frame,
+                Ok(None) => return,
+                Err(e) => {
+                    // unframable input: typed error, then close (a
+                    // pre-session connection closes without counters,
+                    // an admitted one is a dirty disconnect)
+                    match self.phase {
+                        Phase::Handshake => {
+                            self.queue_error(ctx, &e);
+                            self.phase = Phase::Closing;
                         }
-                    }
-                    kind::FINISH => {
-                        let t_finish = Instant::now();
-                        match handle.finish() {
-                            Ok(()) => return Outcome::Clean(t_finish),
-                            Err(e) => {
-                                // the framer rejected the stream shape
-                                // (e.g. a partial tail-biting tile);
-                                // finish() already closed the session
-                                send_error(ctx, writer, &e);
-                                return Outcome::Dirty;
-                            }
-                        }
-                    }
-                    kind::METRICS_REQ => send_metrics(ctx, writer),
-                    other => {
-                        send_error(
+                        _ => self.dirty_close(
                             ctx,
-                            writer,
-                            &Error::net(format!("unexpected frame kind {other:#04x} in session")),
-                        );
-                        return Outcome::Dirty;
+                            Some((kind::ERROR, e.to_string().into_bytes())),
+                        ),
+                    }
+                    return;
+                }
+            };
+            ctx.metrics.net.bytes_in.fetch_add(frame_wire_bytes(p.len()), Ordering::Relaxed);
+            match self.phase {
+                Phase::Handshake => self.handshake_frame(ctx, k, &p),
+                Phase::Streaming => self.session_frame(ctx, k, &p),
+                _ => unreachable!("checked above"),
+            }
+        }
+    }
+
+    /// One pre-session frame: METRICS_REQ is answered sessionless, a
+    /// HELLO runs contract + admission checks in the same order as the
+    /// blocking server (config mismatch, then queue saturation, then
+    /// the session cap).
+    fn handshake_frame(&mut self, ctx: &Arc<ServerCtx>, k: u8, p: &[u8]) {
+        match k {
+            kind::METRICS_REQ => self.queue_metrics(ctx),
+            kind::HELLO => {
+                let hello = match Hello::decode(p) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        self.queue_error(ctx, &e);
+                        self.phase = Phase::Closing;
+                        return;
+                    }
+                };
+                if let Err(e) = ctx.contract.check_hello(&hello) {
+                    ctx.metrics.net.handshake_rejects.fetch_add(1, Ordering::Relaxed);
+                    let rej = encode_reject(reject::CONFIG, e.message());
+                    self.queue_frame(ctx, kind::REJECT, &rej);
+                    self.phase = Phase::Closing;
+                    return;
+                }
+                // admission: saturation before the cap, so a saturated
+                // server sheds deterministically even with free slots
+                if ctx.queues_saturated() {
+                    ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
+                    let detail =
+                        format!("shard queues at depth {}", ctx.metrics.queue_depth_total());
+                    let rej = encode_reject(reject::QUEUE_SATURATED, &detail);
+                    self.queue_frame(ctx, kind::REJECT, &rej);
+                    self.phase = Phase::Closing;
+                    return;
+                }
+                if !ctx.table.admit_tcp() {
+                    ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
+                    let detail = format!("session cap {} reached", ctx.net.max_sessions);
+                    let rej = encode_reject(reject::SESSION_CAP, &detail);
+                    self.queue_frame(ctx, kind::REJECT, &rej);
+                    self.phase = Phase::Closing;
+                    return;
+                }
+                self.admitted = true;
+                let session = match ctx.coord.open_session() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        ctx.table.release_tcp();
+                        self.admitted = false;
+                        self.queue_error(ctx, &e);
+                        self.phase = Phase::Closing;
+                        return;
+                    }
+                };
+                ctx.metrics.net.sessions_accepted.fetch_add(1, Ordering::Relaxed);
+                // CRC is in effect when the client offers it or the
+                // server demands it; the ACK records the decision
+                self.crc = hello.flags & flags::DATA_CRC != 0 || ctx.net.crc;
+                let ack = Ack {
+                    session: session.id(),
+                    frame_stages: ctx.coord.tile().frame_stages() as u32,
+                    beta: ctx.coord.trellis().code().beta() as u32,
+                    flags: if self.crc { flags::DATA_CRC } else { 0 },
+                };
+                let (handle, rx) = session.split();
+                self.session = Some(SessionIo { handle, rx: Some(rx), t_finish: None });
+                self.queue_frame(ctx, kind::ACK, &ack.encode());
+                self.phase = Phase::Streaming;
+            }
+            other => {
+                self.queue_error(
+                    ctx,
+                    &Error::net(format!("expected HELLO, got frame kind {other:#04x}")),
+                );
+                self.phase = Phase::Closing;
+            }
+        }
+    }
+
+    /// One in-session frame.
+    fn session_frame(&mut self, ctx: &ServerCtx, k: u8, p: &[u8]) {
+        match k {
+            kind::DATA => {
+                let llr = match decode_data_payload(p, self.crc) {
+                    Ok(llr) => llr,
+                    Err(e) => {
+                        let frame = if is_crc_mismatch(&e) {
+                            (kind::REJECT, encode_reject(reject::CRC_MISMATCH, e.message()))
+                        } else {
+                            (kind::ERROR, e.to_string().into_bytes())
+                        };
+                        self.dirty_close(ctx, Some(frame));
+                        return;
+                    }
+                };
+                let s = self.session.as_mut().expect("streaming implies session");
+                if let Err(e) = s.handle.frame_chunk(&llr) {
+                    self.dirty_close(ctx, Some((kind::ERROR, e.to_string().into_bytes())));
+                }
+            }
+            kind::FINISH => {
+                let s = self.session.as_mut().expect("streaming implies session");
+                s.t_finish = Some(Instant::now());
+                match s.handle.frame_finish() {
+                    Ok(()) => self.phase = Phase::Draining,
+                    Err(e) => {
+                        // the framer rejected the stream shape (e.g. a
+                        // partial tail-biting tile); frame_finish
+                        // already closed the pipeline session
+                        self.dirty_close(ctx, Some((kind::ERROR, e.to_string().into_bytes())));
                     }
                 }
             }
-            Ok(ReadOutcome::Eof) => return Outcome::Dirty,
-            Ok(ReadOutcome::TimedOut) => {
-                send_error(
-                    ctx,
-                    writer,
-                    &Error::net(format!(
-                        "session evicted: idle for {:?}",
-                        ctx.table.idle_timeout()
-                    )),
-                );
-                return Outcome::Dirty;
-            }
-            Err(e) => {
-                send_error(ctx, writer, &e);
-                return Outcome::Dirty;
+            kind::METRICS_REQ => self.queue_metrics(ctx),
+            other => {
+                let e = Error::net(format!("unexpected frame kind {other:#04x} in session"));
+                self.dirty_close(ctx, Some((kind::ERROR, e.to_string().into_bytes())));
             }
         }
     }
+
+    /// Drive the pipeline half: dispatch framed jobs, close the session
+    /// once the tail is dispatched, move decoded output into the
+    /// outbound buffer up to the high-water mark, send END when the
+    /// output stream completes.
+    fn pump_session(&mut self, ctx: &ServerCtx) {
+        let Some(mut s) = self.session.take() else { return };
+        if let Err(e) = s.handle.try_dispatch() {
+            // pipeline shut down under the session
+            s.handle.close_dispatched();
+            ctx.metrics.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+            self.queue_error(ctx, &e);
+            self.phase = Phase::Closing;
+            return;
+        }
+        if matches!(self.phase, Phase::Draining)
+            && s.handle.framing_done()
+            && s.handle.pending_frames() == 0
+        {
+            s.handle.close_dispatched(); // idempotent
+        }
+        let mut completed = false;
+        loop {
+            if self.outbuf.len() >= ctx.net.write_high_water {
+                // backpressure: a slow reader stops the drain here; the
+                // bounded session channel then holds the pipeline
+                // instead of this buffer growing
+                break;
+            }
+            let polled = match s.rx.as_ref() {
+                Some(rx) => rx.try_recv(),
+                None => break,
+            };
+            match polled {
+                Ok(chunk) => {
+                    self.outbuf.push_frame(kind::BITS, &chunk);
+                    ctx.metrics
+                        .net
+                        .write_buf_hwm
+                        .fetch_max(self.outbuf.len() as u64, Ordering::Relaxed);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    s.rx = None;
+                    completed = true;
+                    break;
+                }
+            }
+        }
+        if completed && matches!(self.phase, Phase::Draining) {
+            // all decoded bits are at least in the outbound buffer:
+            // record the FINISH → last-byte latency and close cleanly
+            if let Some(t) = s.t_finish {
+                ctx.metrics.record_net_block(t.elapsed());
+            }
+            self.session = None; // close_dispatched already ran
+            self.queue_frame(ctx, kind::END, &[]);
+            self.phase = Phase::Closing;
+            return;
+        }
+        self.session = Some(s);
+    }
+
+    /// Write as much of the outbound buffer as the socket accepts.
+    fn flush(&mut self, ctx: &ServerCtx) {
+        if self.write_dead {
+            self.outbuf.clear();
+            return;
+        }
+        while self.outbuf.len() > 0 {
+            match self.sock.write(self.outbuf.pending()) {
+                Ok(0) => {
+                    self.write_dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.outbuf.consume(n);
+                    ctx.metrics.net.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                    self.last_write = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.write_dead = true;
+                    break;
+                }
+            }
+        }
+        if self.write_dead {
+            self.outbuf.clear();
+        }
+    }
+
+    /// End-of-tick transitions: EOF handling, idle eviction, close
+    /// completion.
+    fn finalize(&mut self, ctx: &ServerCtx) {
+        let idle = ctx.table.idle_timeout();
+        match self.phase {
+            Phase::Handshake => {
+                // silence or disconnect before a session existed:
+                // nothing to evict, nothing to count
+                if self.eof || self.write_dead || self.last_read.elapsed() > idle {
+                    self.phase = Phase::Closing;
+                }
+            }
+            Phase::Streaming => {
+                if self.eof || self.write_dead {
+                    self.dirty_close(ctx, None);
+                } else if self.last_read.elapsed() > idle {
+                    let e = Error::net(format!("session evicted: idle for {idle:?}"));
+                    self.dirty_close(ctx, Some((kind::ERROR, e.to_string().into_bytes())));
+                }
+            }
+            Phase::Draining => {
+                // reads are ignored while draining (matching the old
+                // writer-drain behavior), but a reader that stops
+                // accepting bytes for a whole idle timeout is evicted
+                // rather than wedging the session
+                if self.write_dead {
+                    self.dirty_close(ctx, None);
+                } else if self.outbuf.len() > 0 && self.last_write.elapsed() > idle {
+                    self.dirty_close(ctx, None);
+                }
+            }
+            Phase::Closing => {
+                // a peer that never drains the final frames does not
+                // pin the slot forever
+                if self.outbuf.len() == 0 || self.write_dead || self.last_write.elapsed() > idle {
+                    self.done = true;
+                }
+            }
+        }
+    }
+
+    fn drive(&mut self, ctx: &Arc<ServerCtx>, ready: u8, scratch: &mut [u8]) {
+        if ready & READ != 0 && self.wants_read() {
+            self.read_some(ctx, scratch);
+        }
+        self.process_frames(ctx);
+        self.pump_session(ctx);
+        self.flush(ctx);
+        self.finalize(ctx);
+    }
+
+    /// Server shutdown: close the pipeline session (no eviction
+    /// counter — the server is going away, the session did nothing
+    /// wrong) and release resources.
+    fn abandon(&mut self) {
+        if let Some(mut s) = self.session.take() {
+            s.handle.close_dispatched();
+        }
+    }
+}
+
+/// The reactor loop (one thread per server, regardless of connection
+/// count). Exits when the shutdown flag is set — the poll timeout
+/// doubles as the shutdown check interval.
+pub(crate) fn run_reactor(listener: TcpListener, ctx: Arc<ServerCtx>) {
+    let _ = listener.set_nonblocking(true);
+    let idle = ctx.table.idle_timeout();
+    let tick = (idle / 4).clamp(Duration::from_millis(5), Duration::from_millis(50));
+    let fast = Duration::from_millis(1);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut tokens: Vec<usize> = Vec::new();
+    let mut set = PollSet::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        set.clear();
+        let ltok = set.register(listener_fd(&listener), READ);
+        tokens.clear();
+        for c in &conns {
+            tokens.push(set.register(stream_fd(&c.sock), c.interest()));
+        }
+        ctx.metrics.net.reactor_fds.store(set.len() as u64, Ordering::Relaxed);
+        let timeout = if conns.iter().any(Conn::wants_fast_tick) { fast } else { tick };
+        set.poll(timeout);
+        ctx.metrics.net.reactor_wakeups.fetch_add(1, Ordering::Relaxed);
+
+        if set.readiness(ltok) & READ != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nodelay(true);
+                        if stream.set_nonblocking(true).is_ok() {
+                            conns.push(Conn::new(stream));
+                            tokens.push(usize::MAX); // not polled this tick
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => break, // transient accept failure: retry next tick
+                }
+            }
+        }
+        for (i, c) in conns.iter_mut().enumerate() {
+            let ready = match tokens.get(i) {
+                Some(&t) if t != usize::MAX => set.readiness(t),
+                _ => 0,
+            };
+            c.drive(&ctx, ready, &mut scratch);
+        }
+        conns.retain_mut(|c| {
+            if c.done {
+                if c.admitted {
+                    ctx.table.release_tcp();
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+    // shutdown: close every live session so the coordinator can join
+    for c in &mut conns {
+        c.abandon();
+        if c.admitted {
+            ctx.table.release_tcp();
+        }
+    }
+    ctx.metrics.net.reactor_fds.store(0, Ordering::Relaxed);
 }
 
 /// A connected TCP decode session. `connect` performs the HELLO/ACK
@@ -281,6 +638,7 @@ fn run_session(
 pub struct TcpClient {
     stream: TcpStream,
     ack: Ack,
+    crc: bool,
 }
 
 impl TcpClient {
@@ -289,14 +647,31 @@ impl TcpClient {
     /// rejects the session (the reject reason and detail land in the
     /// returned [`Error::Net`]).
     pub fn connect(addr: impl ToSocketAddrs, builder: &DecoderBuilder) -> Result<TcpClient> {
+        Self::connect_opts(addr, builder, false)
+    }
+
+    /// [`connect`](Self::connect), optionally offering a CRC32 on every
+    /// DATA frame. The server's ACK decides whether checksums are in
+    /// effect (it may switch them on even when not offered, when run
+    /// with `net.crc = true`); the client honors the ACK either way.
+    pub fn connect_opts(
+        addr: impl ToSocketAddrs,
+        builder: &DecoderBuilder,
+        crc: bool,
+    ) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr).or_net("connecting to tcvd server")?;
         let _ = stream.set_nodelay(true);
         stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT)).or_net("setting read timeout")?;
-        let hello = Contract::of_builder(builder).hello().encode()?;
-        write_frame(&mut (&stream), kind::HELLO, &hello)?;
+        let mut hello = Contract::of_builder(builder).hello();
+        if crc {
+            hello.flags |= flags::DATA_CRC;
+        }
+        write_frame(&mut (&stream), kind::HELLO, &hello.encode()?)?;
         match read_frame(&mut (&stream), defaults::NET_MAX_FRAME_BYTES)? {
             ReadOutcome::Frame(kind::ACK, p) => {
-                Ok(TcpClient { ack: Ack::decode(&p)?, stream })
+                let ack = Ack::decode(&p)?;
+                let crc = ack.flags & flags::DATA_CRC != 0;
+                Ok(TcpClient { stream, ack, crc })
             }
             ReadOutcome::Frame(kind::REJECT, p) => {
                 let (reason, detail) = decode_reject(&p)?;
@@ -316,32 +691,55 @@ impl TcpClient {
         }
     }
 
-    /// The server's ACK: session id + frame geometry.
+    /// The server's ACK: session id + frame geometry + feature flags.
     pub fn ack(&self) -> Ack {
         self.ack
+    }
+
+    /// Whether DATA frames on this session carry a CRC32 (the server's
+    /// ACK decision).
+    pub fn crc(&self) -> bool {
+        self.crc
     }
 
     /// Stream one LLR chunk (length must be a multiple of beta, like
     /// [`Session::push`](crate::coordinator::Session::push)).
     pub fn push(&mut self, llr: &[f32]) -> Result<()> {
-        write_frame(&mut (&self.stream), kind::DATA, &encode_llrs(llr))
+        write_frame(&mut (&self.stream), kind::DATA, &encode_data_payload(llr, self.crc))
     }
 
     /// End the stream and collect every decoded payload bit (one byte
     /// per bit, in order). Consumes the client; the server closes the
     /// connection after its END frame.
     pub fn finish(self) -> Result<Vec<u8>> {
+        self.finish_timed().map(|(bits, _)| bits)
+    }
+
+    /// [`finish`](Self::finish), also reporting the FINISH → last-byte
+    /// latency: the wall time from the FINISH frame hitting the wire to
+    /// the END frame (i.e. the server-side decode + drain, excluding
+    /// this client's connect and push cadence). This is the per-block
+    /// latency quantity the loadgen harness samples.
+    pub fn finish_timed(self) -> Result<(Vec<u8>, Duration)> {
         write_frame(&mut (&self.stream), kind::FINISH, &[])?;
+        let t0 = Instant::now();
         let mut bits = Vec::new();
         loop {
             match read_frame(&mut (&self.stream), defaults::NET_MAX_FRAME_BYTES)? {
                 ReadOutcome::Frame(kind::BITS, p) => bits.extend_from_slice(&p),
-                ReadOutcome::Frame(kind::END, _) => return Ok(bits),
+                ReadOutcome::Frame(kind::END, _) => return Ok((bits, t0.elapsed())),
                 ReadOutcome::Frame(kind::ERROR, p) => {
                     return Err(Error::net(format!(
                         "server error: {}",
                         String::from_utf8_lossy(&p)
                     )))
+                }
+                ReadOutcome::Frame(kind::REJECT, p) => {
+                    let (reason, detail) = decode_reject(&p)?;
+                    return Err(Error::net(format!(
+                        "session rejected ({}): {detail}",
+                        reject_reason_name(reason)
+                    )));
                 }
                 ReadOutcome::Frame(k, _) => {
                     return Err(Error::net(format!("unexpected frame kind {k:#04x} in stream")))

@@ -20,6 +20,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::defaults;
 use crate::error::{Error, Result, ResultExt};
 
 use super::protocol::{udp_status, UdpBlock, UdpReply};
@@ -134,24 +135,123 @@ fn handle_datagram(
     }
 }
 
-/// A UDP decode flow. Each [`decode_block`](UdpClient::decode_block)
-/// sends one block datagram and blocks for its reply; stale replies
-/// (earlier sequence numbers) are discarded.
-pub struct UdpClient {
-    socket: UdpSocket,
+/// Datagram transport a [`UdpClient`] drives. The real implementation
+/// is [`UdpSocket`]; tests substitute lossy/reordering shims to
+/// exercise the ack-window retransmission path deterministically.
+pub trait DatagramSocket {
+    /// Send one datagram to the connected peer.
+    fn send(&self, buf: &[u8]) -> Result<()>;
+    /// Receive one datagram, or `None` once `timeout` elapses.
+    fn recv_timeout(&self, buf: &mut [u8], timeout: Duration) -> Result<Option<usize>>;
+}
+
+impl DatagramSocket for UdpSocket {
+    fn send(&self, buf: &[u8]) -> Result<()> {
+        UdpSocket::send(self, buf).or_net("sending block datagram")?;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, buf: &mut [u8], timeout: Duration) -> Result<Option<usize>> {
+        self.set_read_timeout(Some(timeout)).or_net("setting read timeout")?;
+        match UdpSocket::recv(self, buf) {
+            Ok(n) => Ok(Some(n)),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(Error::net(format!("receiving block reply: {e}"))),
+        }
+    }
+}
+
+/// Tunables of [`UdpClient::decode_blocks`] pipelining.
+#[derive(Clone, Debug)]
+pub struct UdpPipelineOptions {
+    /// Blocks in flight (sent, not yet acked) at once.
+    pub window: usize,
+    /// Silence on the socket for this long retransmits the oldest
+    /// un-acked block.
+    pub ack_timeout: Duration,
+    /// Give up on the whole run after this long.
+    pub overall_timeout: Duration,
+}
+
+impl Default for UdpPipelineOptions {
+    fn default() -> Self {
+        UdpPipelineOptions {
+            window: defaults::NET_UDP_WINDOW,
+            ack_timeout: Duration::from_millis(250),
+            overall_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Counters one [`UdpClient::decode_blocks`] run accumulates.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct UdpRunStats {
+    /// Blocks submitted.
+    pub blocks: u64,
+    /// First OK reply per block (equals `blocks` on success).
+    pub acks: u64,
+    /// Timeout-driven resends of un-acked blocks.
+    pub retransmits: u64,
+    /// Replies for blocks that were already acked (duplicated or very
+    /// late datagrams).
+    pub duplicate_replies: u64,
+    /// SHED replies answered with an immediate resend.
+    pub shed_retries: u64,
+}
+
+/// The result of a pipelined [`UdpClient::decode_blocks`] run.
+#[derive(Clone, Debug)]
+pub struct UdpRun {
+    /// Decoded payload bits, in submission order.
+    pub blocks: Vec<Vec<u8>>,
+    pub stats: UdpRunStats,
+    /// Per block: first send of the block to its OK reply.
+    pub latencies: Vec<Duration>,
+}
+
+/// A UDP decode flow over any [`DatagramSocket`].
+/// [`decode_block`](UdpClient::decode_block) is the stop-and-wait
+/// path (one datagram out, block for its reply);
+/// [`decode_blocks`](UdpClient::decode_blocks) pipelines many blocks
+/// behind a small ack window with retransmission, which is what makes
+/// high-session-count UDP soaks runnable over lossy paths.
+pub struct UdpClient<S: DatagramSocket = UdpSocket> {
+    socket: S,
     flow: u64,
     seq: u32,
 }
 
-impl UdpClient {
+impl UdpClient<UdpSocket> {
     /// Bind an ephemeral local socket and direct it at `server` as flow
     /// `flow`. No handshake happens — the flow is admitted (or shed)
     /// when its first block arrives.
     pub fn connect(server: impl ToSocketAddrs, flow: u64) -> Result<UdpClient> {
         let socket = UdpSocket::bind(("0.0.0.0", 0)).or_net("binding udp client socket")?;
         socket.connect(server).or_net("directing udp client at server")?;
-        socket.set_read_timeout(Some(CLIENT_RECV_TIMEOUT)).or_net("setting read timeout")?;
         Ok(UdpClient { socket, flow, seq: 0 })
+    }
+}
+
+/// Per-block send state of one pipelined run.
+struct InFlight {
+    wire: Vec<u8>,
+    first_sent: Option<Instant>,
+    last_sent: Option<Instant>,
+    done: bool,
+}
+
+impl<S: DatagramSocket> UdpClient<S> {
+    /// Drive flow `flow` over a caller-supplied transport (tests inject
+    /// lossy shims here).
+    pub fn with_socket(socket: S, flow: u64) -> UdpClient<S> {
+        UdpClient { socket, flow, seq: 0 }
     }
 
     /// The flow id this client sends under.
@@ -171,19 +271,13 @@ impl UdpClient {
                 llr.len()
             )));
         }
-        self.socket.send(&wire).or_net("sending block datagram")?;
+        self.socket.send(&wire)?;
         let mut buf = vec![0u8; MAX_DATAGRAM];
         loop {
-            let n = self.socket.recv(&mut buf).map_err(|e| {
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) {
-                    Error::net("timed out waiting for the block reply")
-                } else {
-                    Error::net(format!("receiving block reply: {e}"))
-                }
-            })?;
+            let n = match self.socket.recv_timeout(&mut buf, CLIENT_RECV_TIMEOUT)? {
+                Some(n) => n,
+                None => return Err(Error::net("timed out waiting for the block reply")),
+            };
             let r = UdpReply::decode(&buf[..n])?;
             if r.flow != self.flow || r.seq != seq {
                 continue; // stale reply from an earlier block
@@ -200,5 +294,111 @@ impl UdpClient {
                 ))),
             };
         }
+    }
+
+    /// Decode many blocks pipelined behind an ack window: up to
+    /// `opts.window` blocks are in flight at once; an un-acked block is
+    /// retransmitted after `opts.ack_timeout` of socket silence, a SHED
+    /// reply is resent immediately (the shed is per block — the flow
+    /// stays admitted), and a reply for an already-acked block only
+    /// bumps `duplicate_replies`. The server stays stateless: every
+    /// datagram is a self-contained block, so loss, duplication and
+    /// reordering are all safe to absorb client-side.
+    ///
+    /// Fails on an ERR reply (the server evicted the flow) or once
+    /// `opts.overall_timeout` elapses.
+    pub fn decode_blocks(&mut self, blocks: &[Vec<f32>], opts: &UdpPipelineOptions) -> Result<UdpRun> {
+        let window = opts.window.max(1);
+        let base = self.seq;
+        self.seq = self.seq.wrapping_add(blocks.len() as u32);
+        let mut pend = Vec::with_capacity(blocks.len());
+        for (i, llr) in blocks.iter().enumerate() {
+            let seq = base.wrapping_add(i as u32);
+            let wire = UdpBlock { flow: self.flow, seq, llr: llr.clone() }.encode();
+            if wire.len() > MAX_DATAGRAM {
+                return Err(Error::net(format!(
+                    "block of {} LLRs does not fit one datagram (use the TCP transport)",
+                    llr.len()
+                )));
+            }
+            pend.push(InFlight { wire, first_sent: None, last_sent: None, done: false });
+        }
+        let mut out: Vec<Option<Vec<u8>>> = vec![None; pend.len()];
+        let mut latencies = vec![Duration::ZERO; pend.len()];
+        let mut stats = UdpRunStats { blocks: pend.len() as u64, ..UdpRunStats::default() };
+        let mut next_unsent = 0usize;
+        let mut done = 0usize;
+        let t_start = Instant::now();
+        let mut buf = vec![0u8; MAX_DATAGRAM];
+        while done < pend.len() {
+            if t_start.elapsed() > opts.overall_timeout {
+                return Err(Error::net(format!(
+                    "timed out with {} of {} blocks un-acked",
+                    pend.len() - done,
+                    pend.len()
+                )));
+            }
+            // keep the window full
+            let mut in_flight = pend.iter().filter(|p| p.first_sent.is_some() && !p.done).count();
+            while next_unsent < pend.len() && in_flight < window {
+                self.socket.send(&pend[next_unsent].wire)?;
+                let now = Instant::now();
+                pend[next_unsent].first_sent = Some(now);
+                pend[next_unsent].last_sent = Some(now);
+                next_unsent += 1;
+                in_flight += 1;
+            }
+            match self.socket.recv_timeout(&mut buf, opts.ack_timeout)? {
+                Some(n) => {
+                    let r = UdpReply::decode(&buf[..n])?;
+                    if r.flow != self.flow {
+                        continue;
+                    }
+                    let idx = r.seq.wrapping_sub(base) as usize;
+                    if idx >= pend.len() || pend[idx].first_sent.is_none() {
+                        continue; // stale reply from an earlier run
+                    }
+                    if pend[idx].done {
+                        stats.duplicate_replies += 1;
+                        continue;
+                    }
+                    match r.status {
+                        udp_status::OK => {
+                            pend[idx].done = true;
+                            done += 1;
+                            stats.acks += 1;
+                            latencies[idx] = pend[idx].first_sent.unwrap().elapsed();
+                            out[idx] = Some(r.body);
+                        }
+                        udp_status::SHED => {
+                            stats.shed_retries += 1;
+                            self.socket.send(&pend[idx].wire)?;
+                            pend[idx].last_sent = Some(Instant::now());
+                        }
+                        _ => {
+                            return Err(Error::net(format!(
+                                "server error: {}",
+                                String::from_utf8_lossy(&r.body)
+                            )))
+                        }
+                    }
+                }
+                None => {
+                    // socket silence: the oldest un-acked block (or its
+                    // reply) was probably lost — resend just that one
+                    if let Some(p) = pend
+                        .iter_mut()
+                        .filter(|p| p.first_sent.is_some() && !p.done)
+                        .min_by_key(|p| p.last_sent.unwrap())
+                    {
+                        self.socket.send(&p.wire)?;
+                        p.last_sent = Some(Instant::now());
+                        stats.retransmits += 1;
+                    }
+                }
+            }
+        }
+        let blocks = out.into_iter().map(|b| b.expect("acked block has bits")).collect();
+        Ok(UdpRun { blocks, stats, latencies })
     }
 }

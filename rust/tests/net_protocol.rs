@@ -1,0 +1,256 @@
+//! Wire-protocol conformance tests: every frame type round-trips
+//! through the incremental parser (random payloads, including
+//! zero-size and max-size), and every malformed input class — truncated
+//! headers, oversize length prefixes, unknown frame tags, CRC-mismatch
+//! DATA frames — is rejected with a typed `Error::Net`, never a panic.
+
+use tcvd::defaults::NET_MAX_FRAME_BYTES;
+use tcvd::error::Error;
+use tcvd::net::protocol::{
+    crc32, decode_data_payload, decode_llrs, decode_reject, encode_data_payload, encode_llrs,
+    encode_reject, is_crc_mismatch, kind, reject, reject_reason_name, write_frame, Ack, FrameBuf,
+    Hello, UdpBlock, UdpReply, FRAME_HEADER, PROTO_VERSION,
+};
+use tcvd::net::protocol::{flags, udp_status};
+use tcvd::util::rng::Rng;
+
+const ALL_KINDS: [u8; 10] = [
+    kind::HELLO,
+    kind::DATA,
+    kind::FINISH,
+    kind::METRICS_REQ,
+    kind::ACK,
+    kind::BITS,
+    kind::END,
+    kind::REJECT,
+    kind::ERROR,
+    kind::METRICS,
+];
+
+fn random_bytes(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// A raw `[kind][len:u32le]` frame header (no payload behind it).
+fn raw_header(tag: u8, len: u32) -> Vec<u8> {
+    let mut h = vec![tag];
+    h.extend_from_slice(&len.to_le_bytes());
+    h
+}
+
+#[test]
+fn every_frame_kind_roundtrips_through_the_parser() {
+    let mut rng = Rng::new(0xF4A3);
+    for (i, &k) in ALL_KINDS.iter().enumerate() {
+        // sizes spread from empty to a few KiB, one random draw each
+        let len = [0, 1, 5, 256, 4096][i % 5] + rng.next_below(7) as usize;
+        let payload = random_bytes(&mut rng, len);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, k, &payload).unwrap();
+        assert_eq!(wire.len(), FRAME_HEADER + payload.len());
+
+        // dribble the wire bytes in at random split points
+        let mut fb = FrameBuf::new();
+        let mut rest = &wire[..];
+        let mut got = None;
+        while !rest.is_empty() {
+            let take = (1 + rng.next_below(3) as usize).min(rest.len());
+            fb.extend(&rest[..take]);
+            rest = &rest[take..];
+            if let Some(f) = fb.next_frame(NET_MAX_FRAME_BYTES).unwrap() {
+                got = Some(f);
+            }
+        }
+        assert_eq!(got, Some((k, payload)), "kind {k:#04x}");
+        assert!(fb.is_empty());
+    }
+}
+
+#[test]
+fn zero_size_and_max_size_payloads_roundtrip() {
+    // zero-size: a bare header is a complete frame
+    let mut fb = FrameBuf::new();
+    let mut wire = Vec::new();
+    write_frame(&mut wire, kind::FINISH, &[]).unwrap();
+    fb.extend(&wire);
+    assert_eq!(fb.next_frame(16).unwrap(), Some((kind::FINISH, vec![])));
+
+    // max-size: a payload exactly at the limit parses ...
+    let max = 4096;
+    let payload = random_bytes(&mut Rng::new(7), max);
+    let mut wire = Vec::new();
+    write_frame(&mut wire, kind::DATA, &payload).unwrap();
+    let mut fb = FrameBuf::new();
+    fb.extend(&wire);
+    assert_eq!(fb.next_frame(max).unwrap(), Some((kind::DATA, payload)));
+
+    // ... and one byte over is a typed error, before any payload lands
+    let mut fb = FrameBuf::new();
+    fb.extend(&raw_header(kind::DATA, max as u32 + 1));
+    let e = fb.next_frame(max).unwrap_err();
+    assert!(matches!(e, Error::Net(_)), "{e}");
+    assert!(e.to_string().contains("exceeds"), "{e}");
+}
+
+#[test]
+fn truncated_headers_are_never_frames() {
+    // any strict prefix of a frame header yields "need more bytes",
+    // not a frame and not a panic
+    let mut wire = Vec::new();
+    write_frame(&mut wire, kind::BITS, &[1, 2, 3]).unwrap();
+    for cut in 0..FRAME_HEADER {
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire[..cut]);
+        assert_eq!(fb.next_frame(1024).unwrap(), None, "cut at {cut}");
+        assert_eq!(fb.buffered(), cut);
+    }
+}
+
+#[test]
+fn oversize_length_prefix_is_a_typed_error() {
+    for len in [NET_MAX_FRAME_BYTES as u32 + 1, u32::MAX] {
+        let mut fb = FrameBuf::new();
+        fb.extend(&raw_header(kind::DATA, len));
+        let e = fb.next_frame(NET_MAX_FRAME_BYTES).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "{e}");
+        assert!(e.to_string().contains("exceeds"), "{e}");
+    }
+}
+
+#[test]
+fn unknown_frame_tags_are_typed_errors() {
+    for tag in [0x00u8, 0x05, 0x7F, 0x80, 0x87, 0xFF] {
+        let mut fb = FrameBuf::new();
+        fb.extend(&raw_header(tag, 0));
+        let e = fb.next_frame(1024).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "{e}");
+        assert!(e.to_string().contains("unknown frame kind"), "tag {tag:#04x}: {e}");
+    }
+}
+
+#[test]
+fn hello_roundtrips_and_rejects_every_truncation() {
+    let h = Hello {
+        version: PROTO_VERSION,
+        flags: flags::DATA_CRC,
+        code: "ccsds".into(),
+        backend: "simd".into(),
+        termination: "flushed".into(),
+        payload_stages: 64,
+        head_stages: 32,
+        tail_stages: 32,
+    };
+    let wire = h.encode().unwrap();
+    assert_eq!(Hello::decode(&wire).unwrap(), h);
+    // every strict prefix is a typed error (some field is cut short)
+    for cut in 0..wire.len() {
+        let e = Hello::decode(&wire[..cut]).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "cut at {cut}: {e}");
+    }
+    // trailing garbage is rejected too
+    let mut long = wire.clone();
+    long.push(0);
+    assert!(Hello::decode(&long).is_err());
+}
+
+#[test]
+fn ack_roundtrips_and_rejects_every_truncation() {
+    let a = Ack { session: 0xDEAD_BEEF, frame_stages: 96, beta: 2, flags: 0 };
+    let wire = a.encode();
+    assert_eq!(Ack::decode(&wire).unwrap(), a);
+    for cut in 0..wire.len() {
+        let e = Ack::decode(&wire[..cut]).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "cut at {cut}: {e}");
+    }
+    let mut long = wire.clone();
+    long.push(9);
+    assert!(Ack::decode(&long).is_err());
+}
+
+#[test]
+fn reject_roundtrips_every_reason() {
+    for (reason, name) in [
+        (reject::SESSION_CAP, "session-cap"),
+        (reject::QUEUE_SATURATED, "queue-saturated"),
+        (reject::CONFIG, "config"),
+        (reject::CRC_MISMATCH, "crc-mismatch"),
+    ] {
+        let (r, detail) = decode_reject(&encode_reject(reason, "why")).unwrap();
+        assert_eq!(r, reason);
+        assert_eq!(reject_reason_name(r), name);
+        assert_eq!(detail, "why");
+    }
+    assert!(decode_reject(&[]).is_err(), "empty REJECT is typed");
+}
+
+#[test]
+fn data_payloads_roundtrip_with_and_without_crc() {
+    let mut rng = Rng::new(0x11);
+    for n in [0usize, 1, 64, 1000] {
+        let llr: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        assert_eq!(decode_data_payload(&encode_data_payload(&llr, false), false).unwrap(), llr);
+        let wire = encode_data_payload(&llr, true);
+        assert_eq!(wire.len(), 4 + llr.len() * 4);
+        assert_eq!(decode_data_payload(&wire, true).unwrap(), llr);
+    }
+}
+
+#[test]
+fn crc_mismatch_data_frames_are_typed_errors() {
+    let llr = vec![1.0f32, -1.0, 0.5, 2.5];
+    let good = encode_data_payload(&llr, true);
+    // flip one bit anywhere (header or payload): typed crc error
+    for byte in [0usize, 3, 4, good.len() - 1] {
+        let mut bad = good.clone();
+        bad[byte] ^= 0x40;
+        let e = decode_data_payload(&bad, true).unwrap_err();
+        assert!(matches!(e, Error::Net(_)), "{e}");
+        assert!(is_crc_mismatch(&e), "byte {byte}: {e}");
+    }
+    // too short to even carry the checksum
+    let e = decode_data_payload(&[1, 2], true).unwrap_err();
+    assert!(e.to_string().contains("too short for its crc32"), "{e}");
+    // alignment errors are not crc mismatches
+    let e = decode_data_payload(&[0, 1, 2], false).unwrap_err();
+    assert!(!is_crc_mismatch(&e), "{e}");
+    // a stale-version peer sending un-prefixed LLRs on a crc session
+    // fails the checksum (or alignment) check, never panics
+    assert!(decode_data_payload(&encode_llrs(&llr), true).is_err());
+}
+
+#[test]
+fn crc32_reference_vectors() {
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    assert_eq!(crc32(b""), 0);
+    assert_eq!(crc32(b"\x00"), 0xD202_EF8D);
+}
+
+#[test]
+fn udp_datagrams_roundtrip_and_reject_truncation() {
+    let mut rng = Rng::new(0x22);
+    for n in [0usize, 1, 512] {
+        let b = UdpBlock {
+            flow: rng.next_u64(),
+            seq: rng.next_u64() as u32,
+            llr: (0..n).map(|_| rng.next_gaussian() as f32).collect(),
+        };
+        assert_eq!(UdpBlock::decode(&b.encode()).unwrap(), b);
+    }
+    for status in [udp_status::OK, udp_status::SHED, udp_status::ERR] {
+        let r = UdpReply { flow: 9, seq: 1, status, body: vec![1, 0, 1, 1] };
+        assert_eq!(UdpReply::decode(&r.encode()).unwrap(), r);
+    }
+    // truncated fixed headers are typed errors
+    for cut in 0..tcvd::net::protocol::UDP_HEADER {
+        let wire = UdpBlock { flow: 1, seq: 2, llr: vec![] }.encode();
+        assert!(matches!(UdpBlock::decode(&wire[..cut]), Err(Error::Net(_))), "cut {cut}");
+    }
+    // a reply needs at least header + status
+    let wire = UdpReply { flow: 1, seq: 2, status: 0, body: vec![] }.encode();
+    assert!(UdpReply::decode(&wire[..wire.len() - 1]).is_err());
+    // misaligned LLR bytes in a block are typed errors
+    let mut wire = UdpBlock { flow: 1, seq: 2, llr: vec![1.0] }.encode();
+    wire.pop();
+    assert!(matches!(UdpBlock::decode(&wire), Err(Error::Net(_))));
+    assert!(decode_llrs(&[1, 2, 3]).is_err());
+}

@@ -24,7 +24,8 @@ aggregates the CPU-backend rows into one trajectory document,
          "p99_ms": ..., "blocks": ..., "shed_retries": ...}, ...]},
     "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...,
                 "radix2_vs_radix1": ...,
-                "tail_biting_vs_flushed_info": ...}
+                "tail_biting_vs_flushed_info": ...,
+                "net_sessions_256_vs_1": ...}
   }
 
 `summary.radix2_vs_radix1` compares the simd backend's per-rho shard
@@ -48,9 +49,13 @@ numbers meant for reading (docs/PERFORMANCE.md) come from a default or
 The `net` rows come from real loopback sockets: the script builds the
 `tcvd` and `loadgen` binaries, starts `tcvd serve --listen 127.0.0.1:0`
 on the simd backend, parses the announced address, and runs the
-bit-verifying loadgen soak at each session count. Read the rows as a
-scaling curve — aggregate Mb/s should grow with sessions until the
-shards saturate while p99 stays bounded.
+bit-verifying loadgen soak at each session count (1 to 256 concurrent
+sessions on the readiness-driven reactor). Read the rows as a scaling
+curve — aggregate Mb/s should grow with sessions until the shards
+saturate while p99 stays bounded. `summary.net_sessions_256_vs_1` is
+the 256-session / 1-session aggregate-throughput ratio; its committed
+floor of 1.0 (bench_floors.json) is the "high session counts must not
+collapse the reactor" tripwire.
 
 Usage:
   python3 scripts/bench_snapshot.py [--smoke | --full] [--out PATH]
@@ -102,7 +107,7 @@ def run_benches(mode):
                      f"(rc={proc.returncode})")
 
 
-NET_SESSIONS = [1, 8, 32]
+NET_SESSIONS = [1, 8, 32, 256]
 # Must match the loadgen binary's pipeline defaults (simd backend on the
 # 64+32/32 CPU tile) so the HELLO handshake and the oracle line up.
 NET_SERVE_FLAGS = ["--backend", "simd", "--payload", "64",
@@ -253,6 +258,14 @@ def main():
         if by_mode.get("flushed") and by_mode.get("tail-biting"):
             doc["summary"]["tail_biting_vs_flushed_info"] = (
                 by_mode["tail-biting"] / by_mode["flushed"])
+    if "net" in doc:
+        # reactor scaling tripwire: 256 concurrent sessions must not be
+        # slower in aggregate than a single session
+        by_sessions = {r["sessions"]: r["aggregate_mbps"]
+                       for r in doc["net"]["rows"]}
+        lo, hi = by_sessions.get(1), by_sessions.get(max(NET_SESSIONS))
+        if lo and hi:
+            doc.setdefault("summary", {})["net_sessions_256_vs_1"] = hi / lo
 
     with open(args.out, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -263,7 +276,7 @@ def main():
         print(f"bench_snapshot: net {top['sessions']} sessions -> "
               f"{top['aggregate_mbps']:.2f} Mb/s aggregate, "
               f"p99 {top['p99_ms']:.2f} ms")
-    if "summary" in doc:
+    if "summary" in doc and "simd_vs_scalar" in doc["summary"]:
         s = doc["summary"]
         print(f"bench_snapshot: scalar {s['scalar_mbps']:.2f} Mb/s, "
               f"simd {s['simd_mbps']:.2f} Mb/s "
@@ -271,6 +284,9 @@ def main():
         if "radix2_vs_radix1" in s:
             print(f"bench_snapshot: simd radix-2 vs radix-1 "
                   f"{s['radix2_vs_radix1']:.2f}x (best shard point)")
+        if "net_sessions_256_vs_1" in s:
+            print(f"bench_snapshot: net 256-session vs 1-session aggregate "
+                  f"{s['net_sessions_256_vs_1']:.2f}x")
         if args.min_simd_ratio is not None and s["simd_vs_scalar"] < args.min_simd_ratio:
             sys.exit(f"bench_snapshot: simd/scalar ratio "
                      f"{s['simd_vs_scalar']:.2f} below floor {args.min_simd_ratio}")
