@@ -127,10 +127,11 @@ fn in_process_sample(sessions: usize, bits_per_session: usize, snr: f64) -> tcvd
             let (payload, llr) = session_workload(&code, bits_per_session, snr, s);
             let (mut handle, out) = coord.open_session()?.split();
             // consumer drains in-order decoded chunks as they arrive
+            // (an Err chunk = the session was poisoned by a shard fault)
             let consumer = std::thread::spawn(move || {
                 let mut bits = Vec::new();
                 for c in out {
-                    bits.extend_from_slice(&c);
+                    bits.extend_from_slice(&c.expect("session poisoned"));
                 }
                 bits
             });

@@ -179,6 +179,8 @@ pub struct DecoderBuilder {
     queue_depth: usize,
     shards: usize,
     termination: TerminationMode,
+    failpoints: Option<String>,
+    max_restarts: usize,
 }
 
 impl Default for DecoderBuilder {
@@ -199,6 +201,8 @@ impl Default for DecoderBuilder {
             queue_depth: defaults::QUEUE_DEPTH,
             shards: defaults::default_shards(),
             termination: defaults::TERMINATION,
+            failpoints: None,
+            max_restarts: defaults::MAX_SHARD_RESTARTS,
         }
     }
 }
@@ -372,6 +376,28 @@ impl DecoderBuilder {
         Ok(self.termination(TerminationMode::parse_named(name)?))
     }
 
+    /// Arm deterministic failpoints for fault-injection testing: a
+    /// comma-separated `site=trigger` spec (see
+    /// [`fault`](crate::fault) and `docs/RELIABILITY.md`). The spec is
+    /// validated at [`serve`](Self::serve); it is **rejected** unless
+    /// the crate was compiled with `--features failpoints`, so a spec
+    /// can never silently no-op in a production binary. The
+    /// `TCVD_FAILPOINTS` environment variable takes precedence over
+    /// this value.
+    pub fn failpoints(mut self, spec: impl Into<String>) -> Self {
+        self.failpoints = Some(spec.into());
+        self
+    }
+
+    /// Restart budget per engine shard: after this many supervised
+    /// restarts a shard is declared dead and its queued work is failed
+    /// with typed errors (default
+    /// [`defaults::MAX_SHARD_RESTARTS`]). See `docs/RELIABILITY.md`.
+    pub fn max_restarts(mut self, max_restarts: usize) -> Self {
+        self.max_restarts = max_restarts;
+        self
+    }
+
     /// Build a builder from a parsed [`Config`] (the TOML view).
     pub fn from_config(cfg: &Config) -> Result<DecoderBuilder> {
         let b = DecoderBuilder {
@@ -385,6 +411,8 @@ impl DecoderBuilder {
             queue_depth: cfg.queue_depth,
             shards: cfg.shards,
             radix: cfg.radix,
+            failpoints: cfg.fault_points.clone(),
+            max_restarts: cfg.max_restarts,
             ..DecoderBuilder::new()
         };
         b.backend_name(&cfg.backend)?.termination_name(&cfg.termination)
@@ -432,6 +460,10 @@ impl DecoderBuilder {
             let name = v.to_string();
             self = self.termination_name(&name)?;
         }
+        if let Some(v) = args.get("failpoints") {
+            self.failpoints = Some(v.to_string());
+        }
+        self.max_restarts = args.get_usize("max-restarts", self.max_restarts)?;
         Ok(self)
     }
 
@@ -572,6 +604,11 @@ impl DecoderBuilder {
             queue_depth: self.queue_depth,
             shards: self.shards,
             termination: self.termination,
+            fault_spec: std::env::var("TCVD_FAILPOINTS")
+                .ok()
+                .filter(|s| !s.is_empty())
+                .or_else(|| self.failpoints.clone()),
+            max_restarts: self.max_restarts,
         }
     }
 
@@ -727,6 +764,21 @@ pub fn builder_flags() -> Vec<FlagSpec> {
                 "stream termination, one of: {} (default {:?}; see docs/DECODING-MODES.md)",
                 TerminationMode::NAMES.join(" "),
                 defaults::TERMINATION.as_str()
+            ),
+        ),
+        FlagSpec::new(
+            "failpoints",
+            "SPEC",
+            "arm deterministic failpoints, comma-separated site=trigger \
+             (needs --features failpoints; see docs/RELIABILITY.md)",
+        ),
+        FlagSpec::new(
+            "max-restarts",
+            "N",
+            format!(
+                "restart budget per engine shard before it is declared dead \
+                 (default {})",
+                defaults::MAX_SHARD_RESTARTS
             ),
         ),
     ]
@@ -920,6 +972,42 @@ mod tests {
             .apply_flags(&crate::cli::Args::parse(&argv).unwrap())
             .unwrap();
         assert_eq!(b.to_coordinator_config().shards, 3);
+    }
+
+    #[test]
+    fn fault_knobs_flow_into_coordinator_config() {
+        // builder setters
+        let cfg = DecoderBuilder::new()
+            .failpoints("engine.exec=hit:3")
+            .max_restarts(2)
+            .to_coordinator_config();
+        // env may override fault_spec in CI, so only assert when unset
+        if std::env::var("TCVD_FAILPOINTS").is_err() {
+            assert_eq!(cfg.fault_spec.as_deref(), Some("engine.exec=hit:3"));
+        }
+        assert_eq!(cfg.max_restarts, 2);
+
+        // CLI flags
+        let argv: Vec<String> =
+            ["serve", "--failpoints", "framer.push=every:4", "--max-restarts", "7"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let b = DecoderBuilder::new()
+            .apply_flags(&crate::cli::Args::parse(&argv).unwrap())
+            .unwrap();
+        let cfg = b.to_coordinator_config();
+        if std::env::var("TCVD_FAILPOINTS").is_err() {
+            assert_eq!(cfg.fault_spec.as_deref(), Some("framer.push=every:4"));
+        }
+        assert_eq!(cfg.max_restarts, 7);
+
+        // defaults: no spec armed, stock restart budget
+        let cfg = DecoderBuilder::new().to_coordinator_config();
+        if std::env::var("TCVD_FAILPOINTS").is_err() {
+            assert!(cfg.fault_spec.is_none());
+        }
+        assert_eq!(cfg.max_restarts, defaults::MAX_SHARD_RESTARTS);
     }
 
     #[test]

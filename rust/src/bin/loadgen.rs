@@ -131,8 +131,10 @@ fn run_cli(argv: &[String]) -> Result<()> {
     );
     let report = run(addr, &builder, &opts)?;
     println!(
-        "loadgen: {} blocks verified, {} shed-retries, {} failures, {} mismatches",
-        report.blocks, report.shed_retries, report.failures, report.mismatches
+        "loadgen: {} blocks verified, {} shed-retries, {} failures, {} mismatches, \
+         {} worker panics",
+        report.blocks, report.shed_retries, report.failures, report.mismatches,
+        report.worker_panics
     );
     println!(
         "loadgen: {:.3} Mb/s aggregate over {:.3} s; latency p50 {:.3} ms, p99 {:.3} ms",

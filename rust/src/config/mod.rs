@@ -63,6 +63,14 @@ pub struct Config {
     /// `[net] crc`: require a CRC32 on every DATA frame, even from
     /// clients that did not offer one in their HELLO.
     pub net_crc: bool,
+    /// `[fault] points`: deterministic failpoint spec
+    /// (`site=trigger,...`; see `docs/RELIABILITY.md`). Rejected at
+    /// pipeline start unless the crate was compiled with
+    /// `--features failpoints`.
+    pub fault_points: Option<String>,
+    /// `[coordinator] max_restarts`: supervised restart budget per
+    /// engine shard before the shard is declared dead.
+    pub max_restarts: usize,
 }
 
 impl Default for Config {
@@ -87,6 +95,8 @@ impl Default for Config {
             net_shed_queue_depth: None,
             net_write_high_water: defaults::NET_WRITE_HIGH_WATER,
             net_crc: false,
+            fault_points: None,
+            max_restarts: defaults::MAX_SHARD_RESTARTS,
         }
     }
 }
@@ -142,6 +152,12 @@ impl Config {
         }
         if let Some(v) = doc.get("coordinator", "shards") {
             cfg.shards = v.as_usize().or_config("coordinator.shards")?;
+        }
+        if let Some(v) = doc.get("coordinator", "max_restarts") {
+            cfg.max_restarts = v.as_usize().or_config("coordinator.max_restarts")?;
+        }
+        if let Some(v) = doc.get("fault", "points") {
+            cfg.fault_points = Some(v.as_str().or_config("fault.points")?.to_string());
         }
         if let Some(v) = doc.get("", "radix") {
             cfg.radix = v.as_usize().or_config("radix")?;
@@ -324,6 +340,23 @@ shards = 6
         assert!(Config::from_toml("[net]\nidle_timeout_ms = 0\n").is_err());
         assert!(Config::from_toml("[net]\nwrite_high_water = 0\n").is_err());
         assert!(Config::from_toml("[net]\ncrc = 7\n").is_err());
+    }
+
+    #[test]
+    fn parses_fault_section() {
+        let cfg = Config::from_toml(
+            "[coordinator]\nmax_restarts = 3\n\n[fault]\npoints = \"engine.exec=hit:2\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_points.as_deref(), Some("engine.exec=hit:2"));
+        assert_eq!(cfg.max_restarts, 3);
+        // defaults: no failpoints armed, defaults-module restart budget
+        let d = Config::default();
+        assert_eq!(d.fault_points, None);
+        assert_eq!(d.max_restarts, defaults::MAX_SHARD_RESTARTS);
+        // and the builder carries both through
+        let b = crate::api::DecoderBuilder::from_config(&cfg).unwrap();
+        assert_eq!(b.to_coordinator_config().max_restarts, 3);
     }
 
     #[test]

@@ -64,6 +64,55 @@ impl BackendSpec {
         BackendSpec::Artifact { dir: dir.into(), variant: variant.into() }
     }
 
+    /// A short name for logs and the supervisor's degradation records.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Artifact { .. } => "artifact",
+            BackendSpec::CpuPacked { .. } => "cpu",
+            BackendSpec::Scalar { .. } => "scalar",
+            BackendSpec::Compact { .. } => "compact",
+            BackendSpec::Simd { radix, .. } => {
+                if *radix > 1 { "simd-r2" } else { "simd" }
+            }
+        }
+    }
+
+    /// One step down the graceful-degradation chain the shard
+    /// supervisor walks when a backend keeps faulting:
+    ///
+    /// ```text
+    /// simd radix-2 → simd radix-1 → compact → scalar → (dead)
+    /// cpu / artifact ──────────────→ compact → scalar → (dead)
+    /// ```
+    ///
+    /// Every step preserves the frame geometry and decodes
+    /// bit-identically (the repo's equivalence corpora pin this), so a
+    /// degraded shard serves the same traffic, just slower. `None`
+    /// means the chain is exhausted: the scalar oracle is the last
+    /// resort, and an `Artifact` spec with an unknown code geometry
+    /// also cannot be rebuilt (its stages live in the artifact, not the
+    /// spec — the supervisor declares such a shard dead instead).
+    pub fn degraded(&self) -> Option<BackendSpec> {
+        match self {
+            BackendSpec::Simd { code, stages, renorm_every, radix } if *radix > 1 => {
+                Some(BackendSpec::Simd {
+                    code: code.clone(),
+                    stages: *stages,
+                    renorm_every: *renorm_every,
+                    radix: 1,
+                })
+            }
+            BackendSpec::Simd { code, stages, .. }
+            | BackendSpec::CpuPacked { code, stages, .. } => {
+                Some(BackendSpec::Compact { code: code.clone(), stages: *stages })
+            }
+            BackendSpec::Compact { code, stages } => {
+                Some(BackendSpec::Scalar { code: code.clone(), stages: *stages })
+            }
+            BackendSpec::Scalar { .. } | BackendSpec::Artifact { .. } => None,
+        }
+    }
+
     /// Build the decoder (call on the owning thread).
     pub fn build(&self) -> Result<Box<dyn FrameDecoder>> {
         match self {
@@ -153,6 +202,35 @@ mod tests {
         .unwrap();
         assert_eq!(dec5.frame_stages(), 32);
         assert_eq!(dec5.label(), "simd");
+    }
+
+    #[test]
+    fn degradation_chain_walks_to_scalar_and_stops() {
+        let mut spec = BackendSpec::Simd {
+            code: "ccsds".into(),
+            stages: 32,
+            renorm_every: 16,
+            radix: 2,
+        };
+        let mut walk = vec![spec.name()];
+        while let Some(next) = spec.degraded() {
+            // every step keeps the frame geometry and stays buildable
+            assert_eq!(next.build().unwrap().frame_stages(), 32);
+            walk.push(next.name());
+            spec = next;
+        }
+        assert_eq!(walk, vec!["simd-r2", "simd", "compact", "scalar"]);
+
+        let cpu = BackendSpec::CpuPacked {
+            code: "ccsds".into(),
+            scheme: "radix4".into(),
+            stages: 64,
+            acc: AccPrecision::Single,
+            chan: ChannelPrecision::Single,
+            renorm_every: 16,
+        };
+        assert_eq!(cpu.degraded().unwrap().name(), "compact");
+        assert!(BackendSpec::artifact("artifacts", "radix4").degraded().is_none());
     }
 
     #[test]

@@ -3,19 +3,33 @@
 //! serializing launches exactly like a CUDA stream — pulls frames from
 //! its own work queue (stealing from siblings when idle), and ships raw
 //! survivors to the shared traceback worker pool.
+//!
+//! Shard threads are *supervised* (`docs/RELIABILITY.md`): the exec
+//! loop runs under `catch_unwind`, so a panic in one backend poisons
+//! only the sessions whose frames were in the panicking batch (each
+//! gets its gapless prefix plus one typed, retryable error through
+//! reassembly) and the shard restarts with exponential backoff. After
+//! [`Supervision::degrade_after`] consecutive no-progress faults the
+//! shard's backend is rebuilt one step down the degradation chain
+//! ([`BackendSpec::degraded`]); after [`Supervision::max_restarts`]
+//! restarts the shard is declared dead and keeps draining its queue
+//! with typed errors so the dispatcher and its sessions never wedge.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coding::trellis::Trellis;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::fault::{self, FaultMap};
 use crate::util::queue::Queue;
-use crate::viterbi::types::RawFrame;
+use crate::viterbi::types::{FrameDecoder, RawFrame};
 
 use super::backend::BackendSpec;
 use super::metrics::Metrics;
+use super::reassembly::Msg;
 use super::shard::{self, Pop, ShardQueue};
 use super::{DecodedFrame, FrameTask};
 
@@ -32,10 +46,52 @@ pub struct BatchPolicy {
     pub deadline: Duration,
 }
 
+/// Shard supervision policy (see `docs/RELIABILITY.md` for the state
+/// machine and the backoff/budget math).
+#[derive(Clone, Copy, Debug)]
+pub struct Supervision {
+    /// Panic-and-restart cycles allowed per shard before it is
+    /// declared dead.
+    pub max_restarts: usize,
+    /// Consecutive no-progress faults before the backend degrades one
+    /// chain step.
+    pub degrade_after: usize,
+    /// First restart backoff; doubles per consecutive restart.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+}
+
+impl Default for Supervision {
+    fn default() -> Self {
+        Supervision {
+            max_restarts: crate::defaults::MAX_SHARD_RESTARTS,
+            degrade_after: crate::defaults::DEGRADE_AFTER_FAULTS,
+            backoff_base: Duration::from_millis(crate::defaults::RESTART_BACKOFF_BASE_MS),
+            backoff_max: Duration::from_millis(crate::defaults::RESTART_BACKOFF_MAX_MS),
+        }
+    }
+}
+
+/// Backoff before restart number `restarts` (1-based):
+/// `base * 2^(restarts-1)`, capped at `backoff_max`.
+fn backoff_for(restarts: usize, sup: &Supervision) -> Duration {
+    let doublings = (restarts.saturating_sub(1)).min(20) as u32;
+    sup.backoff_base
+        .saturating_mul(1u32 << doublings)
+        .min(sup.backoff_max)
+}
+
 /// A forwarded frame awaiting traceback.
 pub struct RawTask {
     pub task: FrameTask,
     pub raw: RawFrame,
+}
+
+/// Why one supervised serve pass returned (vs. unwinding).
+enum ServeExit {
+    /// Queues closed or downstream gone: orderly pipeline shutdown.
+    Shutdown,
 }
 
 /// Run one engine shard loop (call from a dedicated thread).
@@ -47,6 +103,12 @@ pub struct RawTask {
 /// oldest frame from the deepest sibling queue rather than sleeping.
 /// The last shard to exit closes the raw-survivor queue so the shared
 /// traceback pool winds down; `live` counts the shards still running.
+///
+/// A *startup* build failure is strict (reported through `ready`, so
+/// `Coordinator::start` fails fast); once serving, panics are absorbed
+/// by the supervisor as described in the module docs, with poisons
+/// reported to reassembly through `ctrl`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_engine_shard(
     shard_idx: usize,
     spec: BackendSpec,
@@ -56,7 +118,11 @@ pub fn run_engine_shard(
     live: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
     ready: SyncSender<Result<(usize, Arc<Trellis>)>>, // (frame_stages, trellis)
+    ctrl: Sender<Msg>,
+    sup: Supervision,
+    faults: Arc<FaultMap>,
 ) {
+    let mut spec = spec;
     let mut dec = match spec.build() {
         Ok(d) => {
             let _ = ready.send(Ok((d.frame_stages(), d.trellis().clone())));
@@ -70,20 +136,116 @@ pub fn run_engine_shard(
             return;
         }
     };
+    let frame_stages = dec.frame_stages();
+    let own = &queues[shard_idx];
+    let stats = metrics.shard(shard_idx);
+    // the batch lives outside the unwind boundary so a panicking
+    // forward pass leaves its in-flight tasks here for poisoning
+    let mut batch: Vec<FrameTask> = Vec::with_capacity(policy.max_batch.max(1));
+    let mut restarts = 0usize;
+    let mut consecutive = 0usize;
+    let mut execs_at_fault = stats.execs.load(Ordering::Relaxed);
+
+    'supervise: loop {
+        let pass = catch_unwind(AssertUnwindSafe(|| {
+            serve_batches(shard_idx, dec.as_mut(), policy, &queues, &out, &metrics, &faults,
+                          &mut batch)
+        }));
+        match pass {
+            Ok(ServeExit::Shutdown) => break 'supervise,
+            Err(_) => {
+                stats.panics.fetch_add(1, Ordering::Relaxed);
+                metrics.shard_panics.fetch_add(1, Ordering::Relaxed);
+                // poison only the sessions whose frames were in flight
+                // in the panicking batch: gapless prefix + one typed,
+                // retryable error each (reassembly enforces both)
+                poison_batch(&mut batch, &ctrl, || {
+                    Error::pipeline(format!(
+                        "shard-restart: engine shard {shard_idx} panicked with this session's \
+                         frames in flight; the shard restarts — retry the session"
+                    ))
+                });
+                // progress tracking: did any execution complete since
+                // the last fault?
+                let execs_now = stats.execs.load(Ordering::Relaxed);
+                consecutive = if execs_now > execs_at_fault { 1 } else { consecutive + 1 };
+                execs_at_fault = execs_now;
+                if restarts >= sup.max_restarts {
+                    drain_dead(own, &ctrl, || {
+                        Error::pipeline(format!(
+                            "engine shard {shard_idx} is dead (restart budget of {} exhausted); \
+                             session aborted",
+                            sup.max_restarts
+                        ))
+                    });
+                    break 'supervise;
+                }
+                restarts += 1;
+                stats.restarts.fetch_add(1, Ordering::Relaxed);
+                metrics.shard_restarts.fetch_add(1, Ordering::Relaxed);
+                // repeated faults with no progress: walk the
+                // degradation chain before rebuilding
+                if consecutive >= sup.degrade_after {
+                    if let Some(next) = spec.degraded() {
+                        spec = next;
+                        consecutive = 0;
+                        stats.degraded.fetch_add(1, Ordering::Relaxed);
+                        metrics.degradations.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let backoff = backoff_for(restarts, &sup);
+                stats.backoff_ms.store(backoff.as_millis() as u64, Ordering::Relaxed);
+                std::thread::sleep(backoff);
+                stats.backoff_ms.store(0, Ordering::Relaxed);
+                // rebuild the backend; a failing rebuild keeps walking
+                // the degradation chain until something builds
+                match rebuild(&mut spec, frame_stages, shard_idx, stats, &metrics, &faults) {
+                    Some(d) => dec = d,
+                    None => {
+                        drain_dead(own, &ctrl, || {
+                            Error::pipeline(format!(
+                                "engine shard {shard_idx} is dead (no backend left on the \
+                                 degradation chain); session aborted"
+                            ))
+                        });
+                        break 'supervise;
+                    }
+                }
+            }
+        }
+    }
+    if live.fetch_sub(1, Ordering::AcqRel) == 1 {
+        out.close(); // every shard drained: let the traceback pool wind down
+    }
+}
+
+/// The actual exec loop of one shard: batches frames into forward
+/// passes until shutdown. Runs inside the supervisor's unwind boundary;
+/// `batch` is owned by the caller so in-flight tasks survive a panic.
+#[allow(clippy::too_many_arguments)]
+fn serve_batches(
+    shard_idx: usize,
+    dec: &mut dyn FrameDecoder,
+    policy: BatchPolicy,
+    queues: &[ShardQueue],
+    out: &Queue<RawTask>,
+    metrics: &Metrics,
+    faults: &FaultMap,
+    batch: &mut Vec<FrameTask>,
+) -> ServeExit {
     let own = &queues[shard_idx];
     let stats = metrics.shard(shard_idx);
     let max_batch = policy.max_batch.min(dec.max_batch()).max(1);
-    let mut batch: Vec<FrameTask> = Vec::with_capacity(max_batch);
-
-    'serve: loop {
+    batch.clear(); // tasks from a previous fault were already poisoned
+    loop {
         // acquire the first frame of the batch: own queue first, else
         // steal from the deepest sibling (work-stealing for idle shards)
         let first = loop {
             match own.pop_timeout(STEAL_POLL) {
                 Pop::Item(t) => break t,
-                Pop::Closed => break 'serve, // shutdown: all queues drain
+                Pop::Closed => return ServeExit::Shutdown, // shutdown: all queues drain
                 Pop::Timeout => {
-                    if let Some(t) = shard::steal(&queues, shard_idx) {
+                    if let Some(t) = shard::steal(queues, shard_idx) {
                         stats.steals.fetch_add(1, Ordering::Relaxed);
                         break t;
                     }
@@ -102,6 +264,11 @@ pub fn run_engine_shard(
                 },
             }
         }
+        // injected fault: panic with the batch in flight, before any
+        // execution is recorded (so degradation sees "no progress")
+        if faults.fire(fault::site::ENGINE_EXEC) {
+            panic!("failpoint engine.exec fired on shard {shard_idx}");
+        }
         // execute the forward pass
         let jobs: Vec<_> = batch.iter().map(|t| t.job.clone()).collect();
         let bits: usize = jobs.iter().map(|j| j.emit_len).sum();
@@ -113,12 +280,73 @@ pub fn run_engine_shard(
         stats.queue_depth.store(own.len() as u64, Ordering::Relaxed);
         for (task, raw) in batch.drain(..).zip(raws) {
             if !out.push(RawTask { task, raw }) {
-                break 'serve; // downstream gone
+                return ServeExit::Shutdown; // downstream gone
             }
         }
     }
-    if live.fetch_sub(1, Ordering::AcqRel) == 1 {
-        out.close(); // every shard drained: let the traceback pool wind down
+}
+
+/// Poison every session with a frame in `batch` (once per distinct
+/// session) and clear the batch.
+fn poison_batch(batch: &mut Vec<FrameTask>, ctrl: &Sender<Msg>, error: impl Fn() -> Error) {
+    let mut seen: Vec<u64> = Vec::new();
+    for task in batch.drain(..) {
+        if !seen.contains(&task.session) {
+            seen.push(task.session);
+            let _ = ctrl.send(Msg::Poison { session: task.session, error: error() });
+        }
+    }
+}
+
+/// A dead shard's duty loop: keep draining the own queue (so the
+/// blocking dispatcher never wedges on a full queue) and poison every
+/// session routed here, until the dispatcher closes the queue. Sibling
+/// shards may still steal from this queue; frames they win decode
+/// normally — either way no frame is silently dropped.
+fn drain_dead(own: &ShardQueue, ctrl: &Sender<Msg>, error: impl Fn() -> Error) {
+    loop {
+        match own.pop_timeout(Duration::from_millis(50)) {
+            Pop::Item(t) => {
+                let _ = ctrl.send(Msg::Poison { session: t.session, error: error() });
+            }
+            Pop::Timeout => continue,
+            Pop::Closed => return,
+        }
+    }
+}
+
+/// Rebuild a shard's backend after a restart, walking the degradation
+/// chain past any spec that fails to build (or that the `engine.build`
+/// failpoint fails for it). `None` means nothing on the chain builds:
+/// the shard is dead.
+fn rebuild(
+    spec: &mut BackendSpec,
+    frame_stages: usize,
+    shard_idx: usize,
+    stats: &super::metrics::ShardStats,
+    metrics: &Metrics,
+    faults: &FaultMap,
+) -> Option<Box<dyn FrameDecoder>> {
+    loop {
+        let built = if faults.fire(fault::site::ENGINE_BUILD) {
+            Err(Error::backend(format!("failpoint engine.build fired on shard {shard_idx}")))
+        } else {
+            spec.build()
+        };
+        match built {
+            // the degradation chain preserves frame geometry; a
+            // mismatch would corrupt framing, so treat it like a
+            // failed build and keep walking
+            Ok(d) if d.frame_stages() == frame_stages => return Some(d),
+            Ok(_) | Err(_) => match spec.degraded() {
+                Some(next) => {
+                    *spec = next;
+                    stats.degraded.fetch_add(1, Ordering::Relaxed);
+                    metrics.degradations.fetch_add(1, Ordering::Relaxed);
+                }
+                None => return None,
+            },
+        }
     }
 }
 
@@ -144,5 +372,37 @@ pub fn run_traceback_worker(
         if out.send(super::reassembly::Msg::Decoded(df)).is_err() {
             return;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_from_base_and_caps() {
+        let sup = Supervision {
+            max_restarts: 8,
+            degrade_after: 2,
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(2000),
+        };
+        assert_eq!(backoff_for(1, &sup), Duration::from_millis(10));
+        assert_eq!(backoff_for(2, &sup), Duration::from_millis(20));
+        assert_eq!(backoff_for(3, &sup), Duration::from_millis(40));
+        assert_eq!(backoff_for(8, &sup), Duration::from_millis(1280));
+        assert_eq!(backoff_for(9, &sup), Duration::from_millis(2000), "capped");
+        assert_eq!(backoff_for(1000, &sup), Duration::from_millis(2000), "no overflow");
+    }
+
+    #[test]
+    fn default_supervision_mirrors_defaults() {
+        let sup = Supervision::default();
+        assert_eq!(sup.max_restarts, crate::defaults::MAX_SHARD_RESTARTS);
+        assert_eq!(sup.degrade_after, crate::defaults::DEGRADE_AFTER_FAULTS);
+        assert_eq!(sup.backoff_base.as_millis() as u64,
+                   crate::defaults::RESTART_BACKOFF_BASE_MS);
+        assert_eq!(sup.backoff_max.as_millis() as u64,
+                   crate::defaults::RESTART_BACKOFF_MAX_MS);
     }
 }

@@ -38,6 +38,18 @@ pub struct ShardStats {
     /// thread via [`Metrics::record_exec`], so the read-modify-write
     /// needs no CAS loop.
     pub throughput_mbps: AtomicU64,
+    /// Panics this shard's exec loop was caught and recovered from
+    /// (see `docs/RELIABILITY.md`).
+    pub panics: AtomicU64,
+    /// Supervisor restarts of this shard (each panic within the
+    /// restart budget costs one).
+    pub restarts: AtomicU64,
+    /// Degradation steps this shard's backend has taken down the
+    /// fallback chain (simd radix-2 → simd → compact → scalar).
+    pub degraded: AtomicU64,
+    /// Restart backoff this shard is currently sleeping, in
+    /// milliseconds (gauge; 0 while serving).
+    pub backoff_ms: AtomicU64,
 }
 
 /// Smoothing factor of the per-shard `throughput_mbps` EWMA gauge: the
@@ -75,6 +87,10 @@ pub struct NetStats {
     /// High-water mark of one connection's buffered outbound bytes
     /// (gauge; bounded by `net.write_high_water` plus one frame).
     pub write_buf_hwm: AtomicU64,
+    /// Transient `accept()` failures on the TCP listener (EMFILE,
+    /// ECONNABORTED, ...). The reactor retries on its next tick; this
+    /// counter is how operators see it happening.
+    pub accept_errors: AtomicU64,
 }
 
 /// Shared metrics hub (updated by every pipeline stage).
@@ -88,6 +104,15 @@ pub struct Metrics {
     pub forward_ns: AtomicU64,
     pub traceback_ns: AtomicU64,
     shards: Vec<ShardStats>,
+    /// Engine shard panics caught by the supervisor, across all shards.
+    pub shard_panics: AtomicU64,
+    /// Supervisor shard restarts, across all shards.
+    pub shard_restarts: AtomicU64,
+    /// Backend degradation steps taken, across all shards.
+    pub degradations: AtomicU64,
+    /// Sessions poisoned by a shard fault: each received its gapless
+    /// decoded prefix followed by exactly one typed error.
+    pub sessions_poisoned: AtomicU64,
     /// Socket front-end counters (see [`NetStats`]).
     pub net: NetStats,
     latency: Mutex<LogHistogram>,
@@ -114,6 +139,10 @@ impl Metrics {
             forward_ns: AtomicU64::new(0),
             traceback_ns: AtomicU64::new(0),
             shards: (0..n_shards.max(1)).map(|_| ShardStats::default()).collect(),
+            shard_panics: AtomicU64::new(0),
+            shard_restarts: AtomicU64::new(0),
+            degradations: AtomicU64::new(0),
+            sessions_poisoned: AtomicU64::new(0),
             net: NetStats::default(),
             latency: Mutex::new(LogHistogram::new()),
             occupancy: Mutex::new(LogHistogram::new()),
@@ -202,8 +231,16 @@ impl Metrics {
                     queue_depth: s.queue_depth.load(Ordering::Relaxed),
                     survivor_bytes: s.survivor_bytes.load(Ordering::Relaxed),
                     throughput_mbps: f64::from_bits(s.throughput_mbps.load(Ordering::Relaxed)),
+                    panics: s.panics.load(Ordering::Relaxed),
+                    restarts: s.restarts.load(Ordering::Relaxed),
+                    degraded: s.degraded.load(Ordering::Relaxed),
+                    backoff_ms: s.backoff_ms.load(Ordering::Relaxed),
                 })
                 .collect(),
+            shard_panics: self.shard_panics.load(Ordering::Relaxed),
+            shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
+            degradations: self.degradations.load(Ordering::Relaxed),
+            sessions_poisoned: self.sessions_poisoned.load(Ordering::Relaxed),
             net: NetSnapshot {
                 sessions_accepted: self.net.sessions_accepted.load(Ordering::Relaxed),
                 sessions_evicted: self.net.sessions_evicted.load(Ordering::Relaxed),
@@ -215,6 +252,7 @@ impl Metrics {
                 reactor_fds: self.net.reactor_fds.load(Ordering::Relaxed),
                 reactor_wakeups: self.net.reactor_wakeups.load(Ordering::Relaxed),
                 write_buf_hwm: self.net.write_buf_hwm.load(Ordering::Relaxed),
+                accept_errors: self.net.accept_errors.load(Ordering::Relaxed),
                 blocks: net_lat.count(),
                 block_p50_us: net_lat.percentile(50.0) as f64 / 1e3,
                 block_p99_us: net_lat.percentile(99.0) as f64 / 1e3,
@@ -241,6 +279,14 @@ pub struct ShardSnapshot {
     /// bits (0 until the shard has executed; see
     /// [`THROUGHPUT_EWMA_ALPHA`]).
     pub throughput_mbps: f64,
+    /// Panics this shard's exec loop recovered from.
+    pub panics: u64,
+    /// Supervisor restarts of this shard.
+    pub restarts: u64,
+    /// Degradation steps this shard's backend has taken.
+    pub degraded: u64,
+    /// Restart backoff currently being slept (ms; 0 while serving).
+    pub backoff_ms: u64,
 }
 
 /// A point-in-time view of the metrics.
@@ -259,6 +305,15 @@ pub struct MetricsSnapshot {
     pub latency_p99_us: f64,
     /// Per-shard counters, indexed by shard id.
     pub shards: Vec<ShardSnapshot>,
+    /// Engine shard panics caught by the supervisor (all shards).
+    pub shard_panics: u64,
+    /// Supervisor shard restarts (all shards).
+    pub shard_restarts: u64,
+    /// Backend degradation steps taken (all shards).
+    pub degradations: u64,
+    /// Sessions poisoned by shard faults (gapless prefix + one typed
+    /// error each).
+    pub sessions_poisoned: u64,
     /// Socket front-end counters (all zero without a network server).
     pub net: NetSnapshot,
 }
@@ -286,6 +341,8 @@ pub struct NetSnapshot {
     pub reactor_wakeups: u64,
     /// Peak buffered outbound bytes of any one connection.
     pub write_buf_hwm: u64,
+    /// Transient TCP `accept()` failures (retried next tick).
+    pub accept_errors: u64,
     /// Completed network block/stream decodes measured for latency.
     pub blocks: u64,
     /// p50 of end-of-stream -> last-byte-delivered latency (us).
@@ -307,6 +364,7 @@ impl NetSnapshot {
             ("reactor_fds", json::num(self.reactor_fds as f64)),
             ("reactor_wakeups", json::num(self.reactor_wakeups as f64)),
             ("write_buf_hwm", json::num(self.write_buf_hwm as f64)),
+            ("accept_errors", json::num(self.accept_errors as f64)),
             ("blocks", json::num(self.blocks as f64)),
             ("block_p50_us", json::num(self.block_p50_us)),
             ("block_p99_us", json::num(self.block_p99_us)),
@@ -352,11 +410,19 @@ impl MetricsSnapshot {
                                 ("queue_depth", json::num(s.queue_depth as f64)),
                                 ("survivor_bytes", json::num(s.survivor_bytes as f64)),
                                 ("throughput_mbps", json::num(s.throughput_mbps)),
+                                ("panics", json::num(s.panics as f64)),
+                                ("restarts", json::num(s.restarts as f64)),
+                                ("degraded", json::num(s.degraded as f64)),
+                                ("backoff_ms", json::num(s.backoff_ms as f64)),
                             ])
                         })
                         .collect(),
                 ),
             ),
+            ("shard_panics", json::num(self.shard_panics as f64)),
+            ("shard_restarts", json::num(self.shard_restarts as f64)),
+            ("degradations", json::num(self.degradations as f64)),
+            ("sessions_poisoned", json::num(self.sessions_poisoned as f64)),
             ("net", self.net.to_json()),
         ])
     }
@@ -473,6 +539,36 @@ mod tests {
         assert!(j.contains("reactor_wakeups"));
         assert!(j.contains("write_buf_hwm"));
         assert!(j.contains("block_p99_us"));
+    }
+
+    #[test]
+    fn supervision_counters_snapshot_and_serialize() {
+        let m = Metrics::new(2);
+        m.shard_panics.fetch_add(3, Ordering::Relaxed);
+        m.shard_restarts.fetch_add(2, Ordering::Relaxed);
+        m.degradations.fetch_add(1, Ordering::Relaxed);
+        m.sessions_poisoned.fetch_add(4, Ordering::Relaxed);
+        m.shard(1).panics.fetch_add(3, Ordering::Relaxed);
+        m.shard(1).restarts.fetch_add(2, Ordering::Relaxed);
+        m.shard(1).degraded.fetch_add(1, Ordering::Relaxed);
+        m.shard(1).backoff_ms.store(40, Ordering::Relaxed);
+        m.net.accept_errors.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shard_panics, 3);
+        assert_eq!(s.shard_restarts, 2);
+        assert_eq!(s.degradations, 1);
+        assert_eq!(s.sessions_poisoned, 4);
+        assert_eq!(s.shards[0].panics, 0);
+        assert_eq!(s.shards[1].panics, 3);
+        assert_eq!(s.shards[1].restarts, 2);
+        assert_eq!(s.shards[1].degraded, 1);
+        assert_eq!(s.shards[1].backoff_ms, 40);
+        assert_eq!(s.net.accept_errors, 5);
+        let j = s.to_json().to_string_pretty();
+        for key in ["shard_panics", "shard_restarts", "degradations", "sessions_poisoned",
+                    "backoff_ms", "accept_errors"] {
+            assert!(j.contains(key), "snapshot JSON is missing {key}");
+        }
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //!   scheduling never change the output.
 //! * **Backpressure** — `Session::push` blocks once the input channel
 //!   plus the shard queues are full; frames are never dropped.
+//! * **Fault isolation** — a panicking engine shard is caught by its
+//!   supervisor and restarted (degrading its backend down the chain in
+//!   `BackendSpec::degraded` if it keeps faulting); only sessions with
+//!   frames in flight on that shard see an error — exactly one, typed
+//!   and retryable, after their gapless decoded prefix. See
+//!   `docs/RELIABILITY.md`.
 //!
 //! Construction goes through [`crate::api::DecoderBuilder::serve`]; the
 //! shard count comes from [`crate::api::DecoderBuilder::shards`]

@@ -11,22 +11,37 @@
 //! output channel closes once `total_frames` (announced by
 //! `Session::finish`) have been delivered, which terminates the
 //! consumer-side iterator.
+//!
+//! Reassembly is also where shard faults become visible to consumers:
+//! when the supervisor catches a shard panic it [`Msg::Poison`]s every
+//! session whose frames were in flight on that shard. Poisoning first
+//! delivers whatever contiguous prefix is already buffered (the gapless
+//! invariant: a consumer never sees bits with a hole before them), then
+//! sends exactly one `Err` and closes the session's channel. Later
+//! frames of a poisoned session are ignored like any unknown session's.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
 
-use super::DecodedFrame;
+use crate::error::{Error, Result};
+use crate::fault::{self, FaultMap};
+
+use super::{DecodedFrame, Metrics};
 
 /// Control + data messages for the reassembly thread.
 pub enum Msg {
-    Open { session: u64, out: SyncSender<Vec<u8>> },
+    Open { session: u64, out: SyncSender<Result<Vec<u8>>> },
     /// Total frames the session will produce (sent at session finish).
     Finish { session: u64, total_frames: u64 },
     Decoded(DecodedFrame),
+    /// A fault took out this session's in-flight frames: deliver the
+    /// contiguous prefix, then exactly one typed error, and close.
+    Poison { session: u64, error: Error },
 }
 
 struct SessionState {
-    out: SyncSender<Vec<u8>>,
+    out: SyncSender<Result<Vec<u8>>>,
     next_seq: u64,
     pending: BTreeMap<u64, Vec<u8>>,
     total_frames: Option<u64>,
@@ -37,7 +52,7 @@ impl SessionState {
     fn drain(&mut self) -> bool {
         while let Some(bits) = self.pending.remove(&self.next_seq) {
             // a closed consumer just discards remaining output
-            let _ = self.out.send(bits);
+            let _ = self.out.send(Ok(bits));
             self.next_seq += 1;
         }
         self.total_frames == Some(self.next_seq)
@@ -46,9 +61,17 @@ impl SessionState {
 
 /// Run the reassembly loop (one thread). Sessions close (dropping their
 /// output sender, which ends the consumer's iterator) once all frames
-/// are delivered.
-pub fn run_reassembly(rx: Receiver<Msg>) {
+/// are delivered — or once poisoned, after the gapless prefix plus one
+/// typed error.
+pub fn run_reassembly(rx: Receiver<Msg>, metrics: Arc<Metrics>, faults: Arc<FaultMap>) {
     let mut sessions: HashMap<u64, SessionState> = HashMap::new();
+    let poison = |sessions: &mut HashMap<u64, SessionState>, session: u64, error: Error| {
+        if let Some(mut st) = sessions.remove(&session) {
+            st.drain(); // gapless prefix first, then the one error
+            let _ = st.out.send(Err(error));
+            metrics.sessions_poisoned.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    };
     for msg in rx {
         match msg {
             Msg::Open { session, out } => {
@@ -66,6 +89,14 @@ pub fn run_reassembly(rx: Receiver<Msg>) {
                 }
             }
             Msg::Decoded(df) => {
+                if faults.fire(fault::site::REASSEMBLY_DELIVER) {
+                    poison(
+                        &mut sessions,
+                        df.session,
+                        Error::pipeline("failpoint reassembly.deliver fired: delivery dropped"),
+                    );
+                    continue;
+                }
                 if let Some(st) = sessions.get_mut(&df.session) {
                     st.pending.insert(df.seq, df.bits);
                     if st.drain() {
@@ -73,6 +104,7 @@ pub fn run_reassembly(rx: Receiver<Msg>) {
                     }
                 }
             }
+            Msg::Poison { session, error } => poison(&mut sessions, session, error),
         }
     }
 }
@@ -87,17 +119,27 @@ mod tests {
         Msg::Decoded(DecodedFrame { session, seq, bits: vec![tag], t_enq: Instant::now() })
     }
 
+    fn spawn_reassembly(
+        rx: Receiver<Msg>,
+    ) -> (Arc<Metrics>, std::thread::JoinHandle<()>) {
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let h = std::thread::spawn(move || run_reassembly(rx, m, Arc::new(FaultMap::default())));
+        (metrics, h)
+    }
+
     #[test]
     fn reorders_and_closes() {
         let (tx, rx) = mpsc::channel();
         let (out_tx, out_rx) = mpsc::sync_channel(16);
-        let h = std::thread::spawn(move || run_reassembly(rx));
+        let (_m, h) = spawn_reassembly(rx);
         tx.send(Msg::Open { session: 1, out: out_tx }).unwrap();
         tx.send(decoded(1, 2, 2)).unwrap();
         tx.send(decoded(1, 0, 0)).unwrap();
         tx.send(decoded(1, 1, 1)).unwrap();
         tx.send(Msg::Finish { session: 1, total_frames: 3 }).unwrap();
-        let got: Vec<Vec<u8>> = out_rx.iter().collect(); // ends when sender drops
+        // ends when the sender drops; no errors on the clean path
+        let got: Vec<Vec<u8>> = out_rx.iter().map(|c| c.unwrap()).collect();
         assert_eq!(got, vec![vec![0], vec![1], vec![2]]);
         drop(tx);
         h.join().unwrap();
@@ -108,7 +150,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let (o1_tx, o1_rx) = mpsc::sync_channel(16);
         let (o2_tx, o2_rx) = mpsc::sync_channel(16);
-        let h = std::thread::spawn(move || run_reassembly(rx));
+        let (_m, h) = spawn_reassembly(rx);
         tx.send(Msg::Open { session: 1, out: o1_tx }).unwrap();
         tx.send(Msg::Open { session: 2, out: o2_tx }).unwrap();
         tx.send(decoded(2, 0, 20)).unwrap();
@@ -117,8 +159,11 @@ mod tests {
         tx.send(decoded(2, 1, 21)).unwrap();
         tx.send(Msg::Finish { session: 1, total_frames: 2 }).unwrap();
         tx.send(Msg::Finish { session: 2, total_frames: 2 }).unwrap();
-        assert_eq!(o1_rx.iter().collect::<Vec<_>>(), vec![vec![10], vec![11]]);
-        assert_eq!(o2_rx.iter().collect::<Vec<_>>(), vec![vec![20], vec![21]]);
+        let drain = |rx: Receiver<Result<Vec<u8>>>| -> Vec<Vec<u8>> {
+            rx.iter().map(|c| c.unwrap()).collect()
+        };
+        assert_eq!(drain(o1_rx), vec![vec![10], vec![11]]);
+        assert_eq!(drain(o2_rx), vec![vec![20], vec![21]]);
         drop(tx);
         h.join().unwrap();
     }
@@ -127,12 +172,59 @@ mod tests {
     fn dropped_consumer_does_not_wedge() {
         let (tx, rx) = mpsc::channel();
         let (out_tx, out_rx) = mpsc::sync_channel(1);
-        let h = std::thread::spawn(move || run_reassembly(rx));
+        let (_m, h) = spawn_reassembly(rx);
         tx.send(Msg::Open { session: 1, out: out_tx }).unwrap();
         drop(out_rx); // consumer went away
         tx.send(decoded(1, 0, 0)).unwrap();
         tx.send(Msg::Finish { session: 1, total_frames: 1 }).unwrap();
         drop(tx);
         h.join().unwrap(); // must terminate
+    }
+
+    #[test]
+    fn poison_delivers_gapless_prefix_then_one_error() {
+        let (tx, rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let (metrics, h) = spawn_reassembly(rx);
+        tx.send(Msg::Open { session: 1, out: out_tx }).unwrap();
+        tx.send(decoded(1, 0, 0)).unwrap();
+        tx.send(decoded(1, 2, 2)).unwrap(); // seq 1 missing: must never surface
+        tx.send(Msg::Poison {
+            session: 1,
+            error: Error::pipeline("shard-restart: shard 0 panicked"),
+        })
+        .unwrap();
+        // a frame arriving after the poison is ignored, not delivered
+        tx.send(decoded(1, 1, 1)).unwrap();
+        drop(tx);
+        h.join().unwrap();
+        let got: Vec<Result<Vec<u8>>> = out_rx.iter().collect();
+        assert_eq!(got.len(), 2, "prefix then exactly one error: {got:?}");
+        assert_eq!(got[0], Ok(vec![0]));
+        let e = got[1].clone().unwrap_err();
+        assert!(e.is_retryable(), "{e}");
+        assert_eq!(
+            metrics.sessions_poisoned.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn poison_of_unknown_or_closed_session_is_ignored() {
+        let (tx, rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(16);
+        let (metrics, h) = spawn_reassembly(rx);
+        tx.send(Msg::Open { session: 1, out: out_tx }).unwrap();
+        tx.send(decoded(1, 0, 0)).unwrap();
+        tx.send(Msg::Finish { session: 1, total_frames: 1 }).unwrap();
+        // session 1 completed above; poisons for it and for a session
+        // that never existed must both be no-ops
+        tx.send(Msg::Poison { session: 1, error: Error::pipeline("late") }).unwrap();
+        tx.send(Msg::Poison { session: 99, error: Error::pipeline("ghost") }).unwrap();
+        drop(tx);
+        h.join().unwrap();
+        let got: Vec<Result<Vec<u8>>> = out_rx.iter().collect();
+        assert_eq!(got, vec![Ok(vec![0])]);
+        assert_eq!(metrics.sessions_poisoned.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 }

@@ -21,11 +21,12 @@ use std::time::{Duration, Instant};
 use crate::coding::trellis::Trellis;
 use crate::coding::TerminationMode;
 use crate::error::{Error, Result, ResultExt};
+use crate::fault::{self, FaultMap};
 use crate::util::queue::Queue;
 use crate::viterbi::tiled::TileConfig;
 
 use super::backend::BackendSpec;
-use super::engine::{run_engine_shard, run_traceback_worker, BatchPolicy, RawTask};
+use super::engine::{run_engine_shard, run_traceback_worker, BatchPolicy, RawTask, Supervision};
 use super::framer::Framer;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::reassembly::{run_reassembly, Msg};
@@ -51,6 +52,16 @@ pub struct CoordinatorConfig {
     /// (flushed/truncated) or circular (tail-biting); see
     /// `docs/DECODING-MODES.md`.
     pub termination: TerminationMode,
+    /// Deterministic failpoint spec (`site=trigger,...`, see
+    /// [`crate::fault`]). `None`/empty arms nothing. A non-empty spec is
+    /// a typed [`Error::Config`] unless the crate was built with the
+    /// `failpoints` feature — production binaries cannot silently carry
+    /// armed faults.
+    pub fault_spec: Option<String>,
+    /// Restart budget per engine shard: after this many supervised
+    /// restarts a shard is declared dead and its queue drained with
+    /// typed errors (see `docs/RELIABILITY.md`).
+    pub max_restarts: usize,
 }
 
 /// A running decode pipeline.
@@ -64,6 +75,7 @@ pub struct Coordinator {
     termination: TerminationMode,
     trellis: Arc<Trellis>,
     next_session: AtomicU64,
+    faults: Arc<FaultMap>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -73,6 +85,18 @@ impl Coordinator {
     /// workers and the reassembler. Blocks until every shard's backend
     /// is ready.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let faults = match cfg.fault_spec.as_deref() {
+            Some(spec) if !spec.is_empty() => {
+                if !fault::enabled() {
+                    return Err(Error::config(format!(
+                        "failpoint spec {spec:?} given but failpoints are not compiled in; \
+                         rebuild with `--features failpoints`"
+                    )));
+                }
+                Arc::new(FaultMap::parse(spec)?)
+            }
+            _ => Arc::new(FaultMap::default()),
+        };
         let n_shards = cfg.shards.max(1);
         let metrics = Arc::new(Metrics::new(n_shards));
         let (input_tx, input_rx) = mpsc::sync_channel::<FrameTask>(cfg.queue_depth);
@@ -88,6 +112,7 @@ impl Coordinator {
 
         let mut threads = Vec::new();
         let policy = BatchPolicy { max_batch: cfg.max_batch, deadline: cfg.batch_deadline };
+        let sup = Supervision { max_restarts: cfg.max_restarts, ..Supervision::default() };
         for i in 0..n_shards {
             let spec = cfg.backend.clone();
             let queues = shard_qs.clone();
@@ -95,10 +120,14 @@ impl Coordinator {
             let live = live.clone();
             let m = metrics.clone();
             let ready = ready_tx.clone();
+            let ctrl = msg_tx.clone();
+            let f = faults.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("tcvd-engine-{i}"))
-                    .spawn(move || run_engine_shard(i, spec, policy, queues, out, live, m, ready))
+                    .spawn(move || {
+                        run_engine_shard(i, spec, policy, queues, out, live, m, ready, ctrl, sup, f)
+                    })
                     .or_pipeline("spawning engine shard")?,
             );
         }
@@ -147,12 +176,16 @@ impl Coordinator {
             );
         }
         let ctrl = msg_tx; // remaining clone for session control
-        threads.push(
-            std::thread::Builder::new()
-                .name("tcvd-reassembly".into())
-                .spawn(move || run_reassembly(msg_rx))
-                .or_pipeline("spawning reassembler")?,
-        );
+        {
+            let m = metrics.clone();
+            let f = faults.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tcvd-reassembly".into())
+                    .spawn(move || run_reassembly(msg_rx, m, f))
+                    .or_pipeline("spawning reassembler")?,
+            );
+        }
 
         let beta = trellis.code().beta();
         Ok(Coordinator {
@@ -165,6 +198,7 @@ impl Coordinator {
             termination: cfg.termination,
             trellis,
             next_session: AtomicU64::new(0),
+            faults,
             threads,
         })
     }
@@ -192,7 +226,8 @@ impl Coordinator {
     /// decoded payload chunks out.
     pub fn open_session(&self) -> Result<Session> {
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        let (out_tx, out_rx) = mpsc::sync_channel(crate::defaults::SESSION_OUTPUT_DEPTH);
+        let (out_tx, out_rx) =
+            mpsc::sync_channel::<Result<Vec<u8>>>(crate::defaults::SESSION_OUTPUT_DEPTH);
         self.ctrl
             .send(Msg::Open { session: id, out: out_tx })
             .map_err(|_| Error::pipeline("pipeline is shut down"))?;
@@ -202,6 +237,7 @@ impl Coordinator {
             input: Some(self.input.clone()),
             ctrl: Some(self.ctrl.clone()),
             metrics: self.metrics.clone(),
+            faults: self.faults.clone(),
             pending: VecDeque::new(),
             dispatched: 0,
             framing_done: false,
@@ -218,7 +254,7 @@ impl Coordinator {
         session.finish()?;
         let mut out = Vec::new();
         for chunk in session {
-            out.extend_from_slice(&chunk);
+            out.extend_from_slice(&chunk?);
         }
         Ok(out)
     }
@@ -232,6 +268,14 @@ impl Coordinator {
     /// and reads for queue-saturation admission control.
     pub fn metrics_hub(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// The pipeline's armed failpoint map (empty unless a spec was
+    /// given and the `failpoints` feature is on). The net front-end
+    /// shares it so `net.shed` / `net.admit` sites and the pipeline
+    /// sites fire from one deterministic arming.
+    pub fn faults(&self) -> Arc<FaultMap> {
+        self.faults.clone()
     }
 
     /// Shut down: all sessions must be finished/dropped first. Joins
@@ -257,6 +301,7 @@ pub struct SessionHandle {
     input: Option<SyncSender<FrameTask>>,
     ctrl: Option<Sender<Msg>>,
     metrics: Arc<Metrics>,
+    faults: Arc<FaultMap>,
     /// Frames emitted by the framer but not yet handed to the pipeline
     /// (non-blocking driving only; the blocking `push` dispatches
     /// immediately and never populates this queue).
@@ -298,6 +343,9 @@ impl SessionHandle {
     pub fn push(&mut self, llr: &[f32]) -> Result<()> {
         if self.input.is_none() {
             return Err(Error::pipeline("session already finished"));
+        }
+        if self.faults.fire(fault::site::FRAMER_PUSH) {
+            return Err(Error::pipeline("failpoint framer.push fired: chunk dropped"));
         }
         if llr.len() % self.framer_beta() != 0 {
             return Err(Error::pipeline(format!(
@@ -368,6 +416,9 @@ impl SessionHandle {
     pub fn frame_chunk(&mut self, llr: &[f32]) -> Result<()> {
         if self.input.is_none() || self.framing_done {
             return Err(Error::pipeline("session already finished"));
+        }
+        if self.faults.fire(fault::site::FRAMER_PUSH) {
+            return Err(Error::pipeline("failpoint framer.push fired: chunk dropped"));
         }
         if llr.len() % self.framer_beta() != 0 {
             return Err(Error::pipeline(format!(
@@ -467,9 +518,16 @@ impl SessionHandle {
 /// until the session's output is complete. Producer/consumer splits
 /// (push from one thread, drain from another) use
 /// [`split`](Session::split).
+///
+/// Each yielded item is a `Result`: `Ok` chunks are the in-order
+/// payload bits; an `Err` means the session was poisoned by a pipeline
+/// fault (e.g. its home shard panicked mid-decode) — the error arrives
+/// at most once, after the gapless prefix, and closes the stream. A
+/// retryable error ([`Error::is_retryable`]) means a fresh session
+/// against the same pipeline is expected to succeed.
 pub struct Session {
     handle: SessionHandle,
-    out: Receiver<Vec<u8>>,
+    out: Receiver<Result<Vec<u8>>>,
 }
 
 impl Session {
@@ -492,7 +550,7 @@ impl Session {
     /// Non-blocking poll for the next in-order decoded chunk.
     /// `None` means "nothing ready yet *or* stream complete" — use the
     /// iterator / [`next_chunk`](Session::next_chunk) to distinguish.
-    pub fn poll(&mut self) -> Option<Vec<u8>> {
+    pub fn poll(&mut self) -> Option<Result<Vec<u8>>> {
         match self.out.try_recv() {
             Ok(chunk) => Some(chunk),
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
@@ -501,7 +559,7 @@ impl Session {
 
     /// Blocking receive of the next in-order decoded chunk; `None` once
     /// the session output is complete.
-    pub fn next_chunk(&mut self) -> Option<Vec<u8>> {
+    pub fn next_chunk(&mut self) -> Option<Result<Vec<u8>>> {
         self.out.recv().ok()
     }
 
@@ -512,27 +570,27 @@ impl Session {
 
     /// Split into the push handle and the raw output receiver, for
     /// producer/consumer thread pairs.
-    pub fn split(self) -> (SessionHandle, Receiver<Vec<u8>>) {
+    pub fn split(self) -> (SessionHandle, Receiver<Result<Vec<u8>>>) {
         (self.handle, self.out)
     }
 
     /// Finish the stream and block until every decoded payload bit has
-    /// arrived.
+    /// arrived. A poisoned session surfaces its typed error here.
     pub fn finish_and_collect(mut self) -> Result<Vec<u8>> {
         self.finish()?;
         let mut out = Vec::new();
         for chunk in self {
-            out.extend_from_slice(&chunk);
+            out.extend_from_slice(&chunk?);
         }
         Ok(out)
     }
 }
 
 impl Iterator for Session {
-    type Item = Vec<u8>;
+    type Item = Result<Vec<u8>, Error>;
 
     /// Blocking, in-order iteration over decoded payload chunks.
-    fn next(&mut self) -> Option<Vec<u8>> {
+    fn next(&mut self) -> Option<Result<Vec<u8>, Error>> {
         self.next_chunk()
     }
 }
@@ -563,6 +621,8 @@ mod tests {
             queue_depth: 64,
             shards: 2,
             termination: TerminationMode::Flushed,
+            fault_spec: None,
+            max_restarts: crate::defaults::MAX_SHARD_RESTARTS,
         }
     }
 
@@ -652,9 +712,9 @@ mod tests {
         // drain via poll (non-blocking) + blocking fallback
         loop {
             match session.poll() {
-                Some(c) => out.extend_from_slice(&c),
+                Some(c) => out.extend_from_slice(&c.unwrap()),
                 None => match session.next_chunk() {
-                    Some(c) => out.extend_from_slice(&c),
+                    Some(c) => out.extend_from_slice(&c.unwrap()),
                     None => break,
                 },
             }
@@ -674,7 +734,7 @@ mod tests {
         let consumer = std::thread::spawn(move || {
             let mut out = Vec::new();
             for c in rx {
-                out.extend_from_slice(&c);
+                out.extend_from_slice(&c.unwrap());
             }
             out
         });
@@ -743,7 +803,7 @@ mod tests {
                 }
             }
             match rx.try_recv() {
-                Ok(c) => out.extend_from_slice(&c),
+                Ok(c) => out.extend_from_slice(&c.unwrap()),
                 Err(TryRecvError::Empty) => std::thread::sleep(Duration::from_millis(1)),
                 Err(TryRecvError::Disconnected) => break,
             }
@@ -769,6 +829,30 @@ mod tests {
         assert_eq!(handle.try_dispatch().unwrap(), 0);
         for _ in rx {}
         coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn fault_spec_is_gated_on_the_failpoints_feature() {
+        let tile = TileConfig { payload: 32, head: 16, tail: 16 };
+        let mut cfg = cpu_config(tile);
+        // a spec that can parse but will never fire
+        cfg.fault_spec = Some("engine.exec=hit:1000000".into());
+        match Coordinator::start(cfg) {
+            Ok(coord) => {
+                assert!(crate::fault::enabled(), "start must reject specs without the feature");
+                coord.shutdown().unwrap();
+            }
+            Err(e) => {
+                assert!(!crate::fault::enabled(), "{e}");
+                assert!(matches!(e, Error::Config(_)), "{e}");
+                assert!(e.to_string().contains("failpoints"), "{e}");
+            }
+        }
+        // an unparseable spec is a typed config error either way
+        let mut bad = cpu_config(tile);
+        bad.fault_spec = Some("no-such-site=hit:1".into());
+        let e = Coordinator::start(bad).map(|_| ()).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
     }
 
     #[test]

@@ -70,6 +70,27 @@ pub const SESSION_AFFINITY_MULTIPLIER: u64 = 0x9E37_79B9_7F4A_7C15;
 /// attempting to steal from siblings (microseconds).
 pub const STEAL_POLL_US: u64 = 200;
 
+// --- shard supervision (`coordinator::engine`, docs/RELIABILITY.md) ----
+
+/// Restart budget per engine shard: how many panic-and-restart cycles
+/// the supervisor allows over a shard's lifetime before declaring it
+/// dead. A dead shard keeps draining its queue but answers every frame
+/// with a typed (non-retryable) pipeline error, so the dispatcher and
+/// its sessions never wedge.
+pub const MAX_SHARD_RESTARTS: usize = 8;
+
+/// After this many *consecutive* faults with no successful execution in
+/// between, the supervisor rebuilds the shard's backend one step down
+/// the degradation chain (simd radix-2 → simd → compact → scalar).
+pub const DEGRADE_AFTER_FAULTS: usize = 2;
+
+/// First restart backoff (milliseconds); doubles per consecutive
+/// restart up to [`RESTART_BACKOFF_MAX_MS`].
+pub const RESTART_BACKOFF_BASE_MS: u64 = 10;
+
+/// Restart backoff ceiling (milliseconds).
+pub const RESTART_BACKOFF_MAX_MS: u64 = 2_000;
+
 // --- net: socket serving front-end (`tcvd::net`) -----------------------
 
 /// Hard cap on concurrent network sessions (TCP connections + live UDP

@@ -77,6 +77,19 @@ impl Error {
         }
     }
 
+    /// Is this failure worth retrying against the same pipeline?
+    ///
+    /// True for sessions poisoned because their home shard panicked and
+    /// was restarted (the error message carries the stable
+    /// `shard-restart` token): by the time the caller retries, the
+    /// supervisor has the shard back up (possibly on a degraded
+    /// backend), so a fresh session is expected to succeed. The net
+    /// layer maps these onto the retryable REJECT/SHED wire path that
+    /// `loadgen`'s shed-aware clients already honor.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Pipeline(m) | Error::Net(m) if m.contains("shard-restart"))
+    }
+
     /// Prepend context, preserving the variant: `context: message`.
     pub fn context(self, ctx: impl fmt::Display) -> Error {
         match self {
@@ -165,6 +178,14 @@ mod tests {
         ));
         let e = r.or_pipeline("reading stream").unwrap_err();
         assert_eq!(e, Error::Pipeline("reading stream: gone".into()));
+    }
+
+    #[test]
+    fn retryable_is_keyed_on_the_shard_restart_token() {
+        assert!(Error::pipeline("shard-restart: shard 3 panicked mid-batch").is_retryable());
+        assert!(Error::net("session rejected (shard-restart): retry").is_retryable());
+        assert!(!Error::pipeline("decoder shut down").is_retryable());
+        assert!(!Error::config("shard-restart").is_retryable(), "config errors never retry");
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Deterministic failpoint injection for the serving pipeline.
+//!
+//! A *failpoint* is a named site in the pipeline (see [`site`]) where a
+//! fault can be provoked on demand: the engine exec loop panicking
+//! mid-batch, a backend rebuild failing, admission control shedding a
+//! healthy request. Production code never trips them — the whole
+//! mechanism compiles to an inlined `false` unless the crate is built
+//! with the `failpoints` feature — but with the feature on, the chaos
+//! suite (`rust/tests/fault_injection.rs`), the CI `failpoints` job and
+//! manual soak runs can script exact failure sequences and assert the
+//! supervisor's recovery behavior (see `docs/RELIABILITY.md`).
+//!
+//! # Arming
+//!
+//! A spec is a comma-separated list of `site=trigger` clauses:
+//!
+//! ```text
+//! engine.exec=hit:3,net.shed=prob:0.05:42
+//! ```
+//!
+//! armed through any of (highest precedence first):
+//!
+//! 1. the `TCVD_FAILPOINTS` environment variable,
+//! 2. `DecoderBuilder::failpoints` / `tcvd serve --failpoints`,
+//! 3. the TOML `[fault] points` key.
+//!
+//! Triggers:
+//!
+//! | trigger        | behavior                                          |
+//! |----------------|---------------------------------------------------|
+//! | `hit:N`        | fires exactly once, on the Nth visit (1-based)    |
+//! | `every:N`      | fires on every Nth visit                          |
+//! | `prob:P[:S]`   | fires with probability `P` per visit, seeded by   |
+//! |                | `S` (default 0) — a pure hash of `(S, visit #)`,  |
+//! |                | so a given spec replays the same fault sequence   |
+//!
+//! # Determinism
+//!
+//! There is no global registry: each [`Coordinator`] owns one
+//! [`FaultMap`] (shared `Arc` across its shards, framer, reassembly and
+//! the net front-end), so concurrently running tests cannot perturb
+//! each other. `prob` triggers derive their decision from a counter
+//! hash, not a clock or thread-local RNG, so a spec replays
+//! identically run over run.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// Failpoint site names. Arming a spec with a name outside this list is
+/// a typed config error — a misspelled site must not silently never
+/// fire.
+pub mod site {
+    /// Engine shard exec loop, fired with a batch in flight: a hit
+    /// panics the shard worker mid-batch (the supervisor catches it,
+    /// poisons the in-flight sessions and restarts the shard).
+    pub const ENGINE_EXEC: &str = "engine.exec";
+    /// Backend rebuild after a shard restart: a hit fails the build,
+    /// forcing the supervisor one step down the degradation chain.
+    pub const ENGINE_BUILD: &str = "engine.build";
+    /// Session framer push: a hit surfaces a typed `Error::Pipeline`
+    /// to the caller instead of accepting the chunk.
+    pub const FRAMER_PUSH: &str = "framer.push";
+    /// Reassembly delivery: a hit poisons the delivering session (its
+    /// consumer sees the gapless prefix, then one typed error).
+    pub const REASSEMBLY_DELIVER: &str = "reassembly.deliver";
+    /// Net load-shed probe: a hit reports the shard queues as
+    /// saturated, shedding the request with the retryable REJECT/SHED
+    /// path.
+    pub const NET_SHED: &str = "net.shed";
+    /// Session-table admission: a hit denies the admission as if the
+    /// session cap were reached.
+    pub const NET_ADMIT: &str = "net.admit";
+
+    /// Every valid site name (the catalog `parse` validates against).
+    pub const ALL: &[&str] = &[
+        ENGINE_EXEC,
+        ENGINE_BUILD,
+        FRAMER_PUSH,
+        REASSEMBLY_DELIVER,
+        NET_SHED,
+        NET_ADMIT,
+    ];
+}
+
+/// When an armed site fires, relative to its visit counter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    /// Fire exactly once, on the `n`th visit (1-based).
+    Hit { n: u64 },
+    /// Fire on every `n`th visit.
+    Every { n: u64 },
+    /// Fire with probability `p` per visit, decided by a pure hash of
+    /// `(seed, visit #)`.
+    Prob { p: f64, seed: u64 },
+}
+
+/// One armed site: its trigger plus visit/fire counters.
+#[derive(Debug)]
+struct Armed {
+    trigger: Trigger,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl Armed {
+    fn new(trigger: Trigger) -> Armed {
+        Armed { trigger, hits: AtomicU64::new(0), fired: AtomicU64::new(0) }
+    }
+
+    fn fire(&self) -> bool {
+        let visit = self.hits.fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = match self.trigger {
+            Trigger::Hit { n } => visit == n,
+            Trigger::Every { n } => visit % n == 0,
+            Trigger::Prob { p, seed } => {
+                // splitmix64 of (seed, visit): deterministic per spec,
+                // independent of wall clock and thread interleaving
+                let mut z = seed ^ visit.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                z ^= z >> 31;
+                (z >> 11) as f64 / (1u64 << 53) as f64 // uniform [0, 1)
+            }
+            .lt(&p),
+        };
+        if hit {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+}
+
+/// The set of armed failpoints of one `Coordinator` (and the net
+/// front-end serving it). `Default` is empty: every site reports "do
+/// not fire". Parsing is always compiled (so specs are validated even
+/// in production builds, which then refuse them with a typed error);
+/// [`fire`](FaultMap::fire) only consults the map when the crate is
+/// built with the `failpoints` feature and is an inlined `false`
+/// otherwise.
+#[derive(Debug, Default)]
+pub struct FaultMap {
+    sites: HashMap<&'static str, Armed>,
+}
+
+/// Whether failpoint injection is compiled into this build. When
+/// `false`, arming a non-empty spec is a typed config error instead of
+/// a silent no-op.
+pub const fn enabled() -> bool {
+    cfg!(feature = "failpoints")
+}
+
+impl FaultMap {
+    /// Parse a spec (`site=trigger,site=trigger,...`) into an armed
+    /// map. Unknown sites, malformed triggers and out-of-range
+    /// parameters are typed config errors.
+    pub fn parse(spec: &str) -> Result<FaultMap> {
+        let mut sites = HashMap::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, trig) = clause.split_once('=').ok_or_else(|| {
+                Error::config(format!("failpoint clause `{clause}` is not of the form site=trigger"))
+            })?;
+            let name = site::ALL.iter().find(|&&s| s == name.trim()).copied().ok_or_else(|| {
+                Error::config(format!(
+                    "unknown failpoint site `{}` (known sites: {})",
+                    name.trim(),
+                    site::ALL.join(", ")
+                ))
+            })?;
+            sites.insert(name, Armed::new(Self::parse_trigger(trig.trim())?));
+        }
+        Ok(FaultMap { sites })
+    }
+
+    fn parse_trigger(t: &str) -> Result<Trigger> {
+        let bad = |why: &str| Error::config(format!("failpoint trigger `{t}`: {why}"));
+        let mut parts = t.split(':');
+        let kind = parts.next().unwrap_or("");
+        match kind {
+            "hit" | "every" => {
+                let n: u64 = parts
+                    .next()
+                    .ok_or_else(|| bad("missing count"))?
+                    .parse()
+                    .map_err(|_| bad("count is not an integer"))?;
+                if n == 0 {
+                    return Err(bad("count must be >= 1"));
+                }
+                if parts.next().is_some() {
+                    return Err(bad("trailing fields"));
+                }
+                Ok(if kind == "hit" { Trigger::Hit { n } } else { Trigger::Every { n } })
+            }
+            "prob" => {
+                let p: f64 = parts
+                    .next()
+                    .ok_or_else(|| bad("missing probability"))?
+                    .parse()
+                    .map_err(|_| bad("probability is not a number"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad("probability must be in [0, 1]"));
+                }
+                let seed: u64 = match parts.next() {
+                    None => 0,
+                    Some(s) => s.parse().map_err(|_| bad("seed is not an integer"))?,
+                };
+                if parts.next().is_some() {
+                    return Err(bad("trailing fields"));
+                }
+                Ok(Trigger::Prob { p, seed })
+            }
+            _ => Err(bad("expected hit:N, every:N or prob:P[:SEED]")),
+        }
+    }
+
+    /// True when no site is armed.
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// Should the fault at `site` fire on this visit? The only call
+    /// that belongs on hot paths: without the `failpoints` feature it
+    /// is an inlined `false` (the map is never consulted and visit
+    /// counters do not advance).
+    #[cfg(feature = "failpoints")]
+    pub fn fire(&self, site: &str) -> bool {
+        self.sites.get(site).is_some_and(Armed::fire)
+    }
+
+    /// No-op stub: injection is not compiled into this build.
+    #[cfg(not(feature = "failpoints"))]
+    #[inline(always)]
+    pub fn fire(&self, site: &str) -> bool {
+        let _ = site;
+        false
+    }
+
+    /// How many times `site` has fired (0 when unarmed or when the
+    /// `failpoints` feature is off).
+    pub fn fired(&self, site: &str) -> u64 {
+        self.sites.get(site).map_or(0, |a| a.fired.load(Ordering::Relaxed))
+    }
+
+    /// How many times `site` has been visited (0 when unarmed or when
+    /// the `failpoints` feature is off).
+    pub fn hits(&self, site: &str) -> u64 {
+        self.sites.get(site).map_or(0, |a| a.hits.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let m = FaultMap::parse("engine.exec=hit:3, net.shed=prob:0.5:42 ,framer.push=every:2")
+            .unwrap();
+        assert!(!m.is_empty());
+        assert!(FaultMap::parse("").unwrap().is_empty());
+        assert!(FaultMap::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_sites_and_bad_triggers() {
+        for bad in [
+            "engine.exce=hit:1",      // typo'd site
+            "engine.exec",            // no trigger
+            "engine.exec=hit",        // no count
+            "engine.exec=hit:0",      // zero count
+            "engine.exec=hit:1:2",    // trailing field
+            "engine.exec=prob:1.5",   // out-of-range probability
+            "engine.exec=prob:x",     // non-numeric
+            "engine.exec=often:3",    // unknown trigger kind
+        ] {
+            let e = FaultMap::parse(bad).unwrap_err();
+            assert!(matches!(e, Error::Config(_)), "{bad}: {e}");
+        }
+        let e = FaultMap::parse("bogus.site=hit:1").unwrap_err();
+        assert!(e.to_string().contains("engine.exec"), "error lists known sites: {e}");
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let m = FaultMap::parse("engine.exec=hit:1").unwrap();
+        assert!(!m.fire(site::NET_SHED));
+        assert_eq!(m.fired(site::NET_SHED), 0);
+    }
+
+    #[cfg(not(feature = "failpoints"))]
+    #[test]
+    fn without_the_feature_armed_sites_are_noops() {
+        let m = FaultMap::parse("engine.exec=hit:1,net.shed=prob:1.0").unwrap();
+        for _ in 0..10 {
+            assert!(!m.fire(site::ENGINE_EXEC));
+            assert!(!m.fire(site::NET_SHED));
+        }
+        assert_eq!(m.fired(site::ENGINE_EXEC), 0);
+        assert_eq!(m.hits(site::ENGINE_EXEC), 0);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn hit_fires_exactly_once_on_the_nth_visit() {
+        let m = FaultMap::parse("engine.exec=hit:3").unwrap();
+        let fires: Vec<bool> = (0..6).map(|_| m.fire(site::ENGINE_EXEC)).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, false]);
+        assert_eq!(m.fired(site::ENGINE_EXEC), 1);
+        assert_eq!(m.hits(site::ENGINE_EXEC), 6);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn every_fires_periodically() {
+        let m = FaultMap::parse("reassembly.deliver=every:2").unwrap();
+        let fires: Vec<bool> = (0..6).map(|_| m.fire(site::REASSEMBLY_DELIVER)).collect();
+        assert_eq!(fires, vec![false, true, false, true, false, true]);
+        assert_eq!(m.fired(site::REASSEMBLY_DELIVER), 3);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn prob_is_deterministic_per_seed_and_roughly_calibrated() {
+        let run = |spec: &str| -> Vec<bool> {
+            let m = FaultMap::parse(spec).unwrap();
+            (0..1000).map(|_| m.fire(site::NET_SHED)).collect()
+        };
+        let a = run("net.shed=prob:0.3:7");
+        assert_eq!(a, run("net.shed=prob:0.3:7"), "same seed replays identically");
+        assert_ne!(a, run("net.shed=prob:0.3:8"), "different seed, different sequence");
+        let rate = a.iter().filter(|&&f| f).count();
+        assert!((200..400).contains(&rate), "~30% of 1000 visits, got {rate}");
+        assert!(run("net.shed=prob:0").iter().all(|&f| !f));
+        assert!(run("net.shed=prob:1").iter().all(|&f| f));
+    }
+}

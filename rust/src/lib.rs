@@ -62,6 +62,7 @@
 
 pub mod util;
 pub mod error;
+pub mod fault;
 pub mod defaults;
 pub mod cli;
 pub mod coding;

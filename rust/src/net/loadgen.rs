@@ -98,6 +98,10 @@ pub struct LoadgenReport {
     pub shed_retries: u64,
     /// Blocks abandoned after `max_retries` sheds or a hard error.
     pub failures: u64,
+    /// Worker threads that panicked. Their blocks are additionally
+    /// counted under `failures`; a nonzero count fails
+    /// [`check`](Self::check) but never aborts the harness process.
+    pub worker_panics: u64,
     /// Blocks whose bits differed from the in-process oracle.
     pub mismatches: u64,
     /// Total decoded payload bits across all verified blocks.
@@ -119,6 +123,7 @@ impl LoadgenReport {
             ("blocks", json::num(self.blocks as f64)),
             ("shed_retries", json::num(self.shed_retries as f64)),
             ("failures", json::num(self.failures as f64)),
+            ("worker_panics", json::num(self.worker_panics as f64)),
             ("mismatches", json::num(self.mismatches as f64)),
             ("payload_bits", json::num(self.payload_bits as f64)),
             ("elapsed_s", json::num(self.elapsed_s)),
@@ -135,6 +140,12 @@ impl LoadgenReport {
             return Err(Error::net(format!(
                 "{} of {} blocks differed from the in-process oracle",
                 self.mismatches, self.blocks
+            )));
+        }
+        if self.worker_panics > 0 {
+            return Err(Error::net(format!(
+                "{} loadgen worker thread(s) panicked",
+                self.worker_panics
             )));
         }
         if self.failures > 0 {
@@ -337,19 +348,25 @@ pub fn run(addr: &str, builder: &DecoderBuilder, opts: &LoadgenOptions) -> Resul
     }
     let t0 = Instant::now();
     let mut tallies: Vec<Result<WorkerTally>> = Vec::with_capacity(opts.sessions);
+    let mut worker_panics = 0u64;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(opts.sessions);
         for w in 0..opts.sessions {
             handles.push(scope.spawn(move || run_worker(addr, builder, opts, w)));
         }
         for h in handles {
-            tallies.push(h.join().expect("loadgen worker panicked"));
+            match h.join() {
+                Ok(t) => tallies.push(t),
+                // a panicked worker is a harness failure, not a process
+                // abort: its blocks count as failures and check() fails
+                Err(_) => worker_panics += 1,
+            }
         }
     });
     let elapsed_s = t0.elapsed().as_secs_f64();
     let mut blocks = 0u64;
     let mut shed_retries = 0u64;
-    let mut failures = 0u64;
+    let mut failures = worker_panics * opts.blocks_per_session as u64;
     let mut mismatches = 0u64;
     let mut payload_bits = 0u64;
     let mut latencies_ms = Vec::new();
@@ -369,6 +386,7 @@ pub fn run(addr: &str, builder: &DecoderBuilder, opts: &LoadgenOptions) -> Resul
         blocks,
         shed_retries,
         failures,
+        worker_panics,
         mismatches,
         payload_bits,
         elapsed_s,
@@ -401,6 +419,7 @@ mod tests {
             blocks: 4,
             shed_retries: 1,
             failures: 0,
+            worker_panics: 0,
             mismatches: 0,
             payload_bits: 1024,
             elapsed_s: 0.5,
@@ -414,8 +433,13 @@ mod tests {
         assert!(r.check(None, Some(100.0)).is_err(), "throughput bound");
         r.mismatches = 1;
         assert!(r.check(None, None).is_err(), "mismatches fail the soak");
+        r.mismatches = 0;
+        r.worker_panics = 1;
+        let e = r.check(None, None).unwrap_err();
+        assert!(e.to_string().contains("panicked"), "{e}");
         let j = r.to_json().to_string_pretty();
         assert!(j.contains("aggregate_mbps"));
+        assert!(j.contains("worker_panics"));
     }
 
     #[test]

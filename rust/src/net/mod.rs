@@ -47,6 +47,7 @@ use crate::config::Config;
 use crate::coordinator::{Coordinator, Metrics, MetricsSnapshot};
 use crate::defaults;
 use crate::error::{Error, Result, ResultExt};
+use crate::fault::{self, FaultMap};
 
 pub use protocol::{Ack, Hello, PROTO_VERSION};
 pub use session_table::{FlowTouch, SessionTable};
@@ -203,13 +204,18 @@ pub(crate) struct ServerCtx {
     /// Resolved queue-saturation threshold (see
     /// [`NetConfig::shed_queue_depth`]).
     pub shed_queue_depth: usize,
+    /// The pipeline's failpoint map, shared so the `net.shed` site can
+    /// force load-shedding deterministically in chaos tests.
+    pub faults: Arc<FaultMap>,
     pub shutdown: AtomicBool,
 }
 
 impl ServerCtx {
-    /// Admission signal: shed when the shard queues are saturated.
+    /// Admission signal: shed when the shard queues are saturated (or
+    /// the `net.shed` failpoint forces it).
     pub fn queues_saturated(&self) -> bool {
-        self.metrics.queue_depth_total() >= self.shed_queue_depth as u64
+        self.faults.fire(fault::site::NET_SHED)
+            || self.metrics.queue_depth_total() >= self.shed_queue_depth as u64
     }
 }
 
@@ -242,7 +248,8 @@ impl Server {
             net.shed_queue_depth.unwrap_or(builder.to_coordinator_config().queue_depth);
         let coord = builder.serve()?;
         let metrics = coord.metrics_hub();
-        let table = SessionTable::new(net.max_sessions, net.idle_timeout);
+        let faults = coord.faults();
+        let table = SessionTable::with_faults(net.max_sessions, net.idle_timeout, faults.clone());
         let listener = match tcp {
             Some(addr) => {
                 Some(TcpListener::bind(addr).or_net(format!("binding tcp listener on {addr}"))?)
@@ -270,6 +277,7 @@ impl Server {
             net,
             table,
             shed_queue_depth,
+            faults,
             shutdown: AtomicBool::new(false),
         });
         let mut threads = Vec::new();

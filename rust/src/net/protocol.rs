@@ -69,6 +69,12 @@ pub mod reject {
     /// [`flags::DATA_CRC`](super::flags::DATA_CRC)); the session is
     /// evicted after this reject.
     pub const CRC_MISMATCH: u8 = 4;
+    /// The session's engine shard panicked mid-decode and is being
+    /// restarted by its supervisor — transient: a retried session is
+    /// expected to succeed. Shed-aware clients treat this like a load
+    /// shed (the reason token contains the crate-wide `shard-restart`
+    /// retryable marker — see `docs/RELIABILITY.md`).
+    pub const SHARD_RESTART: u8 = 5;
 }
 
 /// Human-readable token for a reject reason byte (stable strings —
@@ -79,6 +85,7 @@ pub fn reject_reason_name(reason: u8) -> &'static str {
         reject::QUEUE_SATURATED => "queue-saturated",
         reject::CONFIG => "config",
         reject::CRC_MISMATCH => "crc-mismatch",
+        reject::SHARD_RESTART => "shard-restart",
         _ => "unknown",
     }
 }

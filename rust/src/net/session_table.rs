@@ -11,8 +11,10 @@
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::fault::{self, FaultMap};
 
 /// Key of one UDP flow: peer address + client-chosen flow id.
 pub type FlowKey = (SocketAddr, u64);
@@ -37,14 +39,26 @@ struct Inner {
 pub struct SessionTable {
     max_sessions: usize,
     idle_timeout: Duration,
+    faults: Arc<FaultMap>,
     inner: Mutex<Inner>,
 }
 
 impl SessionTable {
     pub fn new(max_sessions: usize, idle_timeout: Duration) -> SessionTable {
+        SessionTable::with_faults(max_sessions, idle_timeout, Arc::new(FaultMap::default()))
+    }
+
+    /// A table sharing the pipeline's failpoint map: the `net.admit`
+    /// site forces admission refusals (as if at cap) for chaos tests.
+    pub fn with_faults(
+        max_sessions: usize,
+        idle_timeout: Duration,
+        faults: Arc<FaultMap>,
+    ) -> SessionTable {
         SessionTable {
             max_sessions: max_sessions.max(1),
             idle_timeout,
+            faults,
             inner: Mutex::new(Inner { tcp_active: 0, flows: HashMap::new() }),
         }
     }
@@ -60,8 +74,12 @@ impl SessionTable {
         g.tcp_active + g.flows.len()
     }
 
-    /// Try to admit one TCP session; `false` when the cap is reached.
+    /// Try to admit one TCP session; `false` when the cap is reached
+    /// (or the `net.admit` failpoint fires).
     pub fn admit_tcp(&self) -> bool {
+        if self.faults.fire(fault::site::NET_ADMIT) {
+            return false;
+        }
         let mut g = self.inner.lock().unwrap();
         if g.tcp_active + g.flows.len() >= self.max_sessions {
             return false;
@@ -85,7 +103,9 @@ impl SessionTable {
             *last = now;
             return FlowTouch::Known;
         }
-        if g.tcp_active + g.flows.len() >= self.max_sessions {
+        if self.faults.fire(fault::site::NET_ADMIT)
+            || g.tcp_active + g.flows.len() >= self.max_sessions
+        {
             return FlowTouch::AtCap;
         }
         g.flows.insert(key, now);
@@ -156,5 +176,18 @@ mod tests {
         t.touch_flow(key(9000, 7), Instant::now());
         assert!(t.remove_flow(&key(9000, 7)));
         assert!(!t.remove_flow(&key(9000, 7)));
+    }
+
+    #[test]
+    #[cfg(feature = "failpoints")]
+    fn net_admit_failpoint_forces_refusal() {
+        let faults = Arc::new(FaultMap::parse("net.admit=hit:1").unwrap());
+        let t = SessionTable::with_faults(8, Duration::from_secs(1), faults);
+        assert!(!t.admit_tcp(), "first admission is the injected refusal");
+        assert!(t.admit_tcp(), "hit:1 fires exactly once");
+        // known flows are exempt from the admission site
+        let now = Instant::now();
+        assert_eq!(t.touch_flow(key(9000, 1), now), FlowTouch::New);
+        assert_eq!(t.touch_flow(key(9000, 1), now), FlowTouch::Known);
     }
 }

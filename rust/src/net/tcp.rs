@@ -109,7 +109,7 @@ enum Phase {
 /// The pipeline half of an admitted connection.
 struct SessionIo {
     handle: SessionHandle,
-    rx: Option<Receiver<Vec<u8>>>,
+    rx: Option<Receiver<Result<Vec<u8>>>>,
     t_finish: Option<Instant>,
 }
 
@@ -440,12 +440,31 @@ impl Conn {
                 None => break,
             };
             match polled {
-                Ok(chunk) => {
+                Ok(Ok(chunk)) => {
                     self.outbuf.push_frame(kind::BITS, &chunk);
                     ctx.metrics
                         .net
                         .write_buf_hwm
                         .fetch_max(self.outbuf.len() as u64, Ordering::Relaxed);
+                }
+                Ok(Err(e)) => {
+                    // the session was poisoned by a pipeline fault (its
+                    // shard panicked mid-decode). A retryable fault is
+                    // surfaced as a REJECT the shed-aware clients retry
+                    // against the restarted shard; anything else is a
+                    // terminal ERROR. Either way the error is the last
+                    // thing on the wire and the session closes dirty.
+                    s.handle.close_dispatched();
+                    ctx.metrics.net.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+                    if e.is_retryable() {
+                        ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
+                        let rej = encode_reject(reject::SHARD_RESTART, e.message());
+                        self.queue_frame(ctx, kind::REJECT, &rej);
+                    } else {
+                        self.queue_error(ctx, &e);
+                    }
+                    self.phase = Phase::Closing;
+                    return;
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -599,7 +618,12 @@ pub(crate) fn run_reactor(listener: TcpListener, ctx: Arc<ServerCtx>) {
                         }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                    Err(_) => break, // transient accept failure: retry next tick
+                    Err(e) => {
+                        // transient accept failure (ECONNABORTED, EMFILE,
+                        // ...): count it and retry next tick
+                        note_accept_error(&e, &ctx.metrics.net);
+                        break;
+                    }
                 }
             }
         }
@@ -629,6 +653,15 @@ pub(crate) fn run_reactor(listener: TcpListener, ctx: Arc<ServerCtx>) {
         }
     }
     ctx.metrics.net.reactor_fds.store(0, Ordering::Relaxed);
+}
+
+/// Count one failed `accept(2)` in `net.accept_errors`. `WouldBlock`
+/// is the normal "backlog drained" signal of a nonblocking listener,
+/// never an error; everything else is transient but observable.
+fn note_accept_error(e: &std::io::Error, net: &crate::coordinator::NetStats) {
+    if e.kind() != std::io::ErrorKind::WouldBlock {
+        net.accept_errors.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// A connected TCP decode session. `connect` performs the HELLO/ACK
@@ -799,5 +832,21 @@ pub fn fetch_metrics(addr: impl ToSocketAddrs) -> Result<String> {
         }
         ReadOutcome::Eof => Err(Error::net("connection closed awaiting metrics")),
         ReadOutcome::TimedOut => Err(Error::net("timed out awaiting metrics")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NetStats;
+
+    #[test]
+    fn accept_errors_count_real_failures_only() {
+        let net = NetStats::default();
+        note_accept_error(&std::io::Error::from(std::io::ErrorKind::WouldBlock), &net);
+        assert_eq!(net.accept_errors.load(Ordering::Relaxed), 0, "WouldBlock is not an error");
+        note_accept_error(&std::io::Error::from(std::io::ErrorKind::ConnectionAborted), &net);
+        note_accept_error(&std::io::Error::from(std::io::ErrorKind::Other), &net);
+        assert_eq!(net.accept_errors.load(Ordering::Relaxed), 2);
     }
 }

@@ -117,6 +117,15 @@ fn handle_datagram(
             ctx.metrics.record_net_block(t0.elapsed());
             reply(socket, ctx, peer, UdpReply { flow, seq, status: udp_status::OK, body: bits });
         }
+        Err(e) if e.is_retryable() => {
+            // a transient pipeline fault (the block's shard panicked
+            // and is restarting): shed this block only — the flow stays
+            // admitted and the client's SHED handling resends it
+            // against the restarted shard
+            ctx.metrics.net.blocks_shed.fetch_add(1, Ordering::Relaxed);
+            let r = UdpReply { flow, seq, status: udp_status::SHED, body: e.to_string().into_bytes() };
+            reply(socket, ctx, peer, r);
+        }
         Err(e) => {
             // a block the pipeline rejects (bad length, partial
             // tail-biting tile) poisons the flow: evict it so the

@@ -1,0 +1,264 @@
+//! Chaos suite for shard supervision (`docs/RELIABILITY.md`), compiled
+//! only with `--features failpoints` (registered in `Cargo.toml` with
+//! `required-features`).
+//!
+//! Every test arms a deterministic failpoint spec through the builder,
+//! drives real sessions through the pipeline, and pins the recovery
+//! contract:
+//!
+//! * **Blast radius** — only sessions whose frames were in flight on
+//!   the faulting shard see an error; every other session's output is
+//!   bit-identical to the one-shot oracle.
+//! * **Typed, retryable errors** — a poisoned session gets exactly one
+//!   `Error::Pipeline` carrying the `shard-restart` token
+//!   (`Error::is_retryable`), and retrying the block succeeds.
+//! * **Counters** — `shard_panics` / `shard_restarts` / `degradations`
+//!   / `sessions_poisoned` in the metrics snapshot are pinned exactly,
+//!   not just `> 0`, because `hit:N` triggers fire deterministically.
+#![cfg(feature = "failpoints")]
+
+use tcvd::api::DecoderBuilder;
+use tcvd::coding::registry;
+use tcvd::error::Error;
+use tcvd::fault::site;
+use tcvd::net::loadgen::make_block_llrs;
+use tcvd::net::{NetConfig, Server, TcpClient};
+
+const BACKENDS: [&str; 3] = ["scalar", "compact", "simd"];
+const SHARDS: [usize; 3] = [1, 2, 8];
+
+/// Small always-available pipeline: 16+8/8 tile (32-stage frames) on a
+/// CPU backend, modest serving knobs (mirrors `net_serving.rs`).
+fn builder(backend: &str, shards: usize) -> DecoderBuilder {
+    DecoderBuilder::new()
+        .backend_name(backend)
+        .unwrap()
+        .tile_dims(16, 8, 8)
+        .workers(2)
+        .max_batch(8)
+        .queue_depth(64)
+        .shards(shards)
+}
+
+/// One block's LLRs for the pipeline `b` describes.
+fn block(b: &DecoderBuilder, stages: usize, seed: u64) -> Vec<f32> {
+    let code = registry::lookup(b.code_name()).unwrap();
+    make_block_llrs(&code, b.termination_mode(), stages, 6.0, seed)
+}
+
+/// The blast-radius matrix: one injected engine panic per pipeline,
+/// across backends and shard counts. Exactly one of the sequential
+/// sessions is poisoned (the one whose frames were in the panicking
+/// batch); it gets one typed retryable error and its retry succeeds;
+/// every other session is bit-identical to the oracle.
+#[test]
+fn one_engine_panic_poisons_one_session_and_recovers_across_the_matrix() {
+    for backend in BACKENDS {
+        for shards in SHARDS {
+            let mut oracle = builder(backend, 1).build().unwrap();
+            let b = builder(backend, shards).failpoints("engine.exec=hit:3");
+            let coord = b.serve().unwrap();
+            let mut poisoned = 0usize;
+            for seed in 0..6u64 {
+                let llr = block(&builder(backend, shards), 64, 31 * seed + 7);
+                let want = oracle.decode_stream(&llr).unwrap();
+                match coord.decode_stream_blocking(&llr) {
+                    Ok(got) => {
+                        assert_eq!(got, want, "{backend}/shards={shards}/seed={seed}");
+                    }
+                    Err(e) => {
+                        poisoned += 1;
+                        assert!(e.is_retryable(), "poison must be retryable: {e}");
+                        assert!(e.to_string().contains("shard-restart"), "{e}");
+                        assert!(matches!(e, Error::Pipeline(_)), "{e}");
+                        // the shard restarted: the same block decodes clean
+                        let got = coord.decode_stream_blocking(&llr).unwrap();
+                        assert_eq!(got, want, "retry {backend}/shards={shards}/seed={seed}");
+                    }
+                }
+            }
+            assert_eq!(poisoned, 1, "{backend}/shards={shards}: exactly one session poisoned");
+            assert_eq!(coord.faults().fired(site::ENGINE_EXEC), 1);
+            let snap = coord.metrics();
+            assert_eq!(snap.shard_panics, 1, "{backend}/shards={shards}");
+            assert_eq!(snap.shard_restarts, 1);
+            assert_eq!(snap.sessions_poisoned, 1);
+            assert_eq!(snap.degradations, 0, "one fault with progress after: no degradation");
+            assert_eq!(snap.shards.iter().map(|s| s.panics).sum::<u64>(), 1);
+            assert_eq!(snap.shards.iter().map(|s| s.restarts).sum::<u64>(), 1);
+            coord.shutdown().unwrap();
+        }
+    }
+}
+
+/// Every rebuild failing walks the degradation chain (simd -> compact
+/// -> scalar) to exhaustion; the dead shard then fails sessions with a
+/// typed, *non*-retryable abort (there is nothing left to retry
+/// against).
+#[test]
+fn failed_rebuilds_walk_the_degradation_chain_then_kill_the_shard() {
+    let llr = block(&builder("simd", 1), 64, 9);
+    let coord = builder("simd", 1)
+        .failpoints("engine.exec=hit:1,engine.build=every:1")
+        .serve()
+        .unwrap();
+    // first session: in flight during the panic, poisoned retryably
+    let e = coord.decode_stream_blocking(&llr).unwrap_err();
+    assert!(e.is_retryable(), "{e}");
+    // the chain is exhausted (every rebuild fails): the shard is dead
+    // and a fresh session gets the non-retryable abort
+    let e = coord.decode_stream_blocking(&llr).unwrap_err();
+    assert!(!e.is_retryable(), "dead shard must not invite retries: {e}");
+    assert!(e.to_string().contains("degradation chain"), "{e}");
+    let snap = coord.metrics();
+    assert_eq!(snap.shard_panics, 1);
+    assert_eq!(snap.shard_restarts, 1);
+    assert_eq!(snap.degradations, 2, "simd -> compact -> scalar");
+    assert_eq!(snap.sessions_poisoned, 2);
+    coord.shutdown().unwrap();
+}
+
+/// A shard that faults on every batch exhausts its restart budget:
+/// early sessions see retryable poisons, then the budget-exhausted
+/// abort takes over (non-retryable), with the restart/degradation
+/// counters pinned by the supervision arithmetic.
+#[test]
+fn restart_budget_exhaustion_kills_the_shard() {
+    let llr = block(&builder("compact", 1), 64, 13);
+    let coord = builder("compact", 1)
+        .failpoints("engine.exec=every:1")
+        .max_restarts(2)
+        .serve()
+        .unwrap();
+    let mut saw_retryable = false;
+    let mut dead = None;
+    for _attempt in 0..20 {
+        match coord.decode_stream_blocking(&llr) {
+            Ok(_) => panic!("every:1 exec faults can never decode a block"),
+            Err(e) if e.is_retryable() => saw_retryable = true,
+            Err(e) => {
+                dead = Some(e);
+                break;
+            }
+        }
+    }
+    assert!(saw_retryable, "pre-budget faults poison retryably");
+    let dead = dead.expect("the shard must die within the restart budget");
+    assert!(dead.to_string().contains("restart budget"), "{dead}");
+    let snap = coord.metrics();
+    // panic 1: restart 1 (consecutive=1); panic 2: restart 2,
+    // consecutive=2 => degrade compact -> scalar; panic 3: budget
+    // (2 restarts) exhausted => dead. Independent of batch splits,
+    // because *every* batch faults.
+    assert_eq!(snap.shard_panics, 3);
+    assert_eq!(snap.shard_restarts, 2);
+    assert_eq!(snap.degradations, 1, "compact -> scalar");
+    coord.shutdown().unwrap();
+}
+
+/// The framer failpoint surfaces as a typed `Error::Pipeline` on
+/// `push` — the chunk is dropped, the session stays usable, nothing is
+/// poisoned.
+#[test]
+fn framer_push_failpoint_drops_one_chunk_with_a_typed_error() {
+    let bb = builder("scalar", 1);
+    let llr = block(&bb, 64, 17);
+    let mut oracle = builder("scalar", 1).build().unwrap();
+    let want = oracle.decode_stream(&llr).unwrap();
+    let coord = bb.failpoints("framer.push=hit:1").serve().unwrap();
+    let mut s = coord.open_session().unwrap();
+    let e = s.push(&llr).unwrap_err();
+    assert!(matches!(e, Error::Pipeline(_)), "{e}");
+    assert!(e.to_string().contains("framer.push"), "{e}");
+    // the failpoint consumed the chunk, not the session
+    s.push(&llr).unwrap();
+    assert_eq!(s.finish_and_collect().unwrap(), want);
+    let snap = coord.metrics();
+    assert_eq!(snap.shard_panics, 0);
+    assert_eq!(snap.sessions_poisoned, 0);
+    coord.shutdown().unwrap();
+}
+
+/// The reassembly-delivery failpoint poisons exactly the delivering
+/// session; a retry decodes clean and no engine-side counters move.
+#[test]
+fn reassembly_deliver_failpoint_poisons_the_delivering_session() {
+    let bb = builder("compact", 2);
+    let llr = block(&bb, 64, 11);
+    let mut oracle = builder("compact", 1).build().unwrap();
+    let want = oracle.decode_stream(&llr).unwrap();
+    let coord = bb.failpoints("reassembly.deliver=hit:1").serve().unwrap();
+    let e = coord.decode_stream_blocking(&llr).unwrap_err();
+    assert!(e.to_string().contains("reassembly.deliver"), "{e}");
+    assert_eq!(coord.decode_stream_blocking(&llr).unwrap(), want);
+    let snap = coord.metrics();
+    assert_eq!(snap.sessions_poisoned, 1);
+    assert_eq!(snap.shard_panics, 0, "no engine fault involved");
+    assert_eq!(snap.shard_restarts, 0);
+    coord.shutdown().unwrap();
+}
+
+/// End-to-end over loopback TCP: a mid-decode shard panic surfaces to
+/// the wire client as a transient failure (normally the typed
+/// `shard-restart` REJECT), a retry of the same block succeeds, and
+/// every delivered block is bit-identical to the oracle.
+#[test]
+fn tcp_client_retries_through_a_mid_decode_shard_panic() {
+    let b = builder("simd", 2).failpoints("engine.exec=hit:2");
+    let mut oracle = builder("simd", 1).build().unwrap();
+    let server = Server::start(b.clone(), Some("127.0.0.1:0"), None, NetConfig::default())
+        .unwrap();
+    let addr = server.tcp_addr().unwrap();
+    let mut saw_retryable = false;
+    for seed in 0..4u64 {
+        let llr = block(&b, 64, 40 + seed);
+        let want = oracle.decode_stream(&llr).unwrap();
+        let mut got = None;
+        for _attempt in 0..10 {
+            // one push for the whole block, so the fault lands while
+            // the client waits in finish() and arrives as a REJECT
+            let r = (|| -> tcvd::Result<Vec<u8>> {
+                let mut c = TcpClient::connect(addr, &b)?;
+                c.push(&llr)?;
+                c.finish()
+            })();
+            match r {
+                Ok(bits) => {
+                    got = Some(bits);
+                    break;
+                }
+                Err(e) => {
+                    if e.is_retryable() {
+                        saw_retryable = true;
+                    }
+                }
+            }
+        }
+        assert_eq!(got.expect("block decoded within 10 attempts"), want, "seed {seed}");
+    }
+    assert!(saw_retryable, "the injected panic must surface as a retryable reject");
+    let m = server.metrics();
+    assert_eq!(m.shard_panics, 1);
+    assert!(m.shard_restarts >= 1, "snapshot: {}", m.to_json().to_string_pretty());
+    assert!(m.sessions_poisoned >= 1);
+    server.shutdown().unwrap();
+}
+
+/// With the feature compiled in but nothing armed, the pipeline runs
+/// clean: no fault counters move and the fault map is empty.
+#[test]
+fn unarmed_pipelines_run_clean_with_the_feature_compiled_in() {
+    let bb = builder("simd", 2);
+    let llr = block(&bb, 64, 21);
+    let mut oracle = builder("simd", 1).build().unwrap();
+    let want = oracle.decode_stream(&llr).unwrap();
+    let coord = bb.serve().unwrap();
+    assert_eq!(coord.decode_stream_blocking(&llr).unwrap(), want);
+    assert!(coord.faults().is_empty());
+    let snap = coord.metrics();
+    assert_eq!(
+        snap.shard_panics + snap.shard_restarts + snap.degradations + snap.sessions_poisoned,
+        0
+    );
+    coord.shutdown().unwrap();
+}

@@ -10,7 +10,8 @@ aggregates the CPU-backend rows into one trajectory document,
   {
     "mode": "smoke" | "default" | "full",
     "table1_workload": {"info_bits": ..., "backends": {
-        "scalar": {"mbps": ..., "speedup_vs_scalar": 1.0}, ...}},
+        "scalar": {"mbps": ..., "speedup_vs_scalar": 1.0}, ...,
+        "degraded": {...}}},   # scalar fallback = worst-case degraded shard
     "shard_scaling": {"info_bits": ..., "rows": [
         {"backend": "simd" | "simd-r2" | ..., "radix": 1 | 2,
          "shards": 2, "mbps": ...}, ...]},
@@ -23,6 +24,7 @@ aggregates the CPU-backend rows into one trajectory document,
         {"sessions": 1, "aggregate_mbps": ..., "p50_ms": ...,
          "p99_ms": ..., "blocks": ..., "shed_retries": ...}, ...]},
     "summary": {"scalar_mbps": ..., "simd_mbps": ..., "simd_vs_scalar": ...,
+                "degraded_mbps": ...,
                 "radix2_vs_radix1": ...,
                 "tail_biting_vs_flushed_info": ...,
                 "net_sessions_256_vs_1": ...}
@@ -208,6 +210,13 @@ def main():
     if not backends:
         sys.exit("bench_snapshot: table1_throughput.json has no cpu_rows — "
                  "re-run the bench (old results file?)")
+    if "scalar" in backends:
+        # a fully-degraded shard runs the scalar reference backend
+        # (docs/RELIABILITY.md degradation chain), so the scalar row
+        # doubles as the worst-case degraded-pipeline throughput floor;
+        # tracked as its own row so the trajectory stays comparable if
+        # the chain's terminal backend ever changes
+        backends["degraded"] = dict(backends["scalar"])
 
     doc = {
         "mode": mode,
@@ -240,6 +249,9 @@ def main():
             "scalar_mbps": scalar,
             "simd_mbps": simd,
             "simd_vs_scalar": simd / scalar,
+            # Mb/s of a shard degraded all the way down the chain
+            # (scalar fallback; docs/RELIABILITY.md)
+            "degraded_mbps": scalar,
         }
         # radix-2 vs radix-1 simd: best per-shard-count ratio from the
         # shard-scaling sweep (see the module docstring for why max)
