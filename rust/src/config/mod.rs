@@ -63,6 +63,12 @@ pub struct Config {
     /// `[net] crc`: require a CRC32 on every DATA frame, even from
     /// clients that did not offer one in their HELLO.
     pub net_crc: bool,
+    /// `[net] poller`: reactor readiness backend, `"auto"` (epoll on
+    /// Linux, poll elsewhere), `"poll"` or `"epoll"`.
+    pub net_poller: String,
+    /// `[net] udp_batch`: UDP reply batching factor (datagrams per
+    /// batched flush; 1 disables batching).
+    pub net_udp_batch: usize,
     /// `[fault] points`: deterministic failpoint spec
     /// (`site=trigger,...`; see `docs/RELIABILITY.md`). Rejected at
     /// pipeline start unless the crate was compiled with
@@ -95,6 +101,8 @@ impl Default for Config {
             net_shed_queue_depth: None,
             net_write_high_water: defaults::NET_WRITE_HIGH_WATER,
             net_crc: false,
+            net_poller: defaults::NET_POLLER.into(),
+            net_udp_batch: defaults::NET_UDP_BATCH,
             fault_points: None,
             max_restarts: defaults::MAX_SHARD_RESTARTS,
         }
@@ -186,6 +194,12 @@ impl Config {
         if let Some(v) = doc.get("net", "crc") {
             cfg.net_crc = v.as_bool().or_config("net.crc")?;
         }
+        if let Some(v) = doc.get("net", "poller") {
+            cfg.net_poller = v.as_str().or_config("net.poller")?.to_string();
+        }
+        if let Some(v) = doc.get("net", "udp_batch") {
+            cfg.net_udp_batch = v.as_usize().or_config("net.udp_batch")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -219,6 +233,15 @@ impl Config {
         }
         if self.net_write_high_water == 0 {
             return Err(Error::config("net.write_high_water must be positive"));
+        }
+        if crate::net::reactor::PollerKind::parse(&self.net_poller).is_none() {
+            return Err(Error::config(format!(
+                "net.poller must be \"auto\", \"poll\" or \"epoll\" (got {:?})",
+                self.net_poller
+            )));
+        }
+        if self.net_udp_batch == 0 {
+            return Err(Error::config("net.udp_batch must be positive"));
         }
         Ok(())
     }
@@ -318,7 +341,7 @@ shards = 6
         let cfg = Config::from_toml(
             "[net]\nlisten = \"127.0.0.1:7000\"\nudp = \"127.0.0.1:7001\"\n\
              max_sessions = 64\nidle_timeout_ms = 5000\nshed_queue_depth = 48\n\
-             write_high_water = 65536\ncrc = true\n",
+             write_high_water = 65536\ncrc = true\npoller = \"epoll\"\nudp_batch = 16\n",
         )
         .unwrap();
         assert_eq!(cfg.net_listen.as_deref(), Some("127.0.0.1:7000"));
@@ -328,6 +351,8 @@ shards = 6
         assert_eq!(cfg.net_shed_queue_depth, Some(48));
         assert_eq!(cfg.net_write_high_water, 65536);
         assert!(cfg.net_crc);
+        assert_eq!(cfg.net_poller, "epoll");
+        assert_eq!(cfg.net_udp_batch, 16);
         // defaults: no listen addresses, defaults-module cap/timeout
         let d = Config::default();
         assert_eq!(d.net_listen, None);
@@ -335,11 +360,19 @@ shards = 6
         assert_eq!(d.net_shed_queue_depth, None);
         assert_eq!(d.net_write_high_water, defaults::NET_WRITE_HIGH_WATER);
         assert!(!d.net_crc);
+        assert_eq!(d.net_poller, defaults::NET_POLLER);
+        assert_eq!(d.net_udp_batch, defaults::NET_UDP_BATCH);
         // net bounds are validated structurally
         assert!(Config::from_toml("[net]\nmax_sessions = 0\n").is_err());
         assert!(Config::from_toml("[net]\nidle_timeout_ms = 0\n").is_err());
         assert!(Config::from_toml("[net]\nwrite_high_water = 0\n").is_err());
         assert!(Config::from_toml("[net]\ncrc = 7\n").is_err());
+        assert!(Config::from_toml("[net]\npoller = \"kqueue\"\n").is_err());
+        assert!(Config::from_toml("[net]\nudp_batch = 0\n").is_err());
+        // the NetConfig lowering carries the new knobs through
+        let net = crate::net::NetConfig::from_config(&cfg);
+        assert_eq!(net.poller, crate::net::PollerKind::Epoll);
+        assert_eq!(net.udp_batch, 16);
     }
 
     #[test]

@@ -91,6 +91,45 @@ pub struct NetStats {
     /// ECONNABORTED, ...). The reactor retries on its next tick; this
     /// counter is how operators see it happening.
     pub accept_errors: AtomicU64,
+    /// The reactor's live poller backend (gauge; a [`poller_code`]
+    /// value, `NONE` until a reactor attaches).
+    pub poller: AtomicU64,
+    /// Ready fds delivered across all reactor wakeups. On the epoll
+    /// backend a wakeup costs O(ready), so `reactor_ready_events /
+    /// reactor_wakeups` staying far below `reactor_fds` is the
+    /// kernel-event headroom made visible.
+    pub reactor_ready_events: AtomicU64,
+    /// Batched UDP reply flushes (one `sendmmsg`-style syscall each).
+    pub udp_batched_sends: AtomicU64,
+    /// Reply datagrams that left through a batched flush.
+    pub udp_batch_datagrams: AtomicU64,
+    /// Reply datagrams sent one `send_to` at a time because the batched
+    /// syscall is unavailable on this platform/kernel (the runtime
+    /// gate latched off).
+    pub udp_send_fallbacks: AtomicU64,
+}
+
+/// Wire codes of the [`NetStats::poller`] gauge. The metrics JSON
+/// reports the name ([`poller_code::name`]), not the raw code.
+pub mod poller_code {
+    /// No reactor has attached (or the server is UDP-only).
+    pub const NONE: u64 = 0;
+    /// The portable `poll(2)` backend.
+    pub const POLL: u64 = 1;
+    /// The Linux `epoll` backend.
+    pub const EPOLL: u64 = 2;
+    /// The non-unix degraded backend (everything ready every tick).
+    pub const FALLBACK: u64 = 3;
+
+    /// The knob-style name of a poller code.
+    pub fn name(code: u64) -> &'static str {
+        match code {
+            POLL => "poll",
+            EPOLL => "epoll",
+            FALLBACK => "fallback",
+            _ => "none",
+        }
+    }
 }
 
 /// Shared metrics hub (updated by every pipeline stage).
@@ -253,6 +292,11 @@ impl Metrics {
                 reactor_wakeups: self.net.reactor_wakeups.load(Ordering::Relaxed),
                 write_buf_hwm: self.net.write_buf_hwm.load(Ordering::Relaxed),
                 accept_errors: self.net.accept_errors.load(Ordering::Relaxed),
+                poller: poller_code::name(self.net.poller.load(Ordering::Relaxed)),
+                reactor_ready_events: self.net.reactor_ready_events.load(Ordering::Relaxed),
+                udp_batched_sends: self.net.udp_batched_sends.load(Ordering::Relaxed),
+                udp_batch_datagrams: self.net.udp_batch_datagrams.load(Ordering::Relaxed),
+                udp_send_fallbacks: self.net.udp_send_fallbacks.load(Ordering::Relaxed),
                 blocks: net_lat.count(),
                 block_p50_us: net_lat.percentile(50.0) as f64 / 1e3,
                 block_p99_us: net_lat.percentile(99.0) as f64 / 1e3,
@@ -343,6 +387,17 @@ pub struct NetSnapshot {
     pub write_buf_hwm: u64,
     /// Transient TCP `accept()` failures (retried next tick).
     pub accept_errors: u64,
+    /// The reactor's live poller backend name (`"none"` until a
+    /// reactor attaches; see [`poller_code`]).
+    pub poller: &'static str,
+    /// Ready fds delivered across all reactor wakeups.
+    pub reactor_ready_events: u64,
+    /// Batched UDP reply flushes (syscalls).
+    pub udp_batched_sends: u64,
+    /// Reply datagrams sent through batched flushes.
+    pub udp_batch_datagrams: u64,
+    /// Reply datagrams that fell back to one `send_to` each.
+    pub udp_send_fallbacks: u64,
     /// Completed network block/stream decodes measured for latency.
     pub blocks: u64,
     /// p50 of end-of-stream -> last-byte-delivered latency (us).
@@ -365,6 +420,11 @@ impl NetSnapshot {
             ("reactor_wakeups", json::num(self.reactor_wakeups as f64)),
             ("write_buf_hwm", json::num(self.write_buf_hwm as f64)),
             ("accept_errors", json::num(self.accept_errors as f64)),
+            ("poller", Json::Str(self.poller.to_string())),
+            ("reactor_ready_events", json::num(self.reactor_ready_events as f64)),
+            ("udp_batched_sends", json::num(self.udp_batched_sends as f64)),
+            ("udp_batch_datagrams", json::num(self.udp_batch_datagrams as f64)),
+            ("udp_send_fallbacks", json::num(self.udp_send_fallbacks as f64)),
             ("blocks", json::num(self.blocks as f64)),
             ("block_p50_us", json::num(self.block_p50_us)),
             ("block_p99_us", json::num(self.block_p99_us)),
@@ -522,6 +582,11 @@ mod tests {
         m.net.reactor_wakeups.fetch_add(12, Ordering::Relaxed);
         m.net.write_buf_hwm.fetch_max(4096, Ordering::Relaxed);
         m.net.write_buf_hwm.fetch_max(1024, Ordering::Relaxed); // hwm never lowers
+        m.net.poller.store(poller_code::EPOLL, Ordering::Relaxed);
+        m.net.reactor_ready_events.fetch_add(9, Ordering::Relaxed);
+        m.net.udp_batched_sends.fetch_add(4, Ordering::Relaxed);
+        m.net.udp_batch_datagrams.fetch_add(17, Ordering::Relaxed);
+        m.net.udp_send_fallbacks.fetch_add(2, Ordering::Relaxed);
         m.record_net_block(std::time::Duration::from_micros(500));
         m.record_net_block(std::time::Duration::from_micros(700));
         let s = m.snapshot();
@@ -531,6 +596,11 @@ mod tests {
         assert_eq!(s.net.reactor_fds, 5);
         assert_eq!(s.net.reactor_wakeups, 12);
         assert_eq!(s.net.write_buf_hwm, 4096);
+        assert_eq!(s.net.poller, "epoll");
+        assert_eq!(s.net.reactor_ready_events, 9);
+        assert_eq!(s.net.udp_batched_sends, 4);
+        assert_eq!(s.net.udp_batch_datagrams, 17);
+        assert_eq!(s.net.udp_send_fallbacks, 2);
         assert_eq!(s.net.blocks, 2);
         assert!(s.net.block_p50_us >= 400.0 && s.net.block_p99_us <= 800.0,
                 "p50={} p99={}", s.net.block_p50_us, s.net.block_p99_us);
@@ -539,6 +609,20 @@ mod tests {
         assert!(j.contains("reactor_wakeups"));
         assert!(j.contains("write_buf_hwm"));
         assert!(j.contains("block_p99_us"));
+        for key in ["poller", "reactor_ready_events", "udp_batched_sends",
+                    "udp_batch_datagrams", "udp_send_fallbacks"] {
+            assert!(j.contains(key), "snapshot JSON is missing {key}");
+        }
+        assert!(j.contains("\"epoll\""), "poller gauge serializes by name");
+    }
+
+    #[test]
+    fn poller_codes_name_every_backend() {
+        assert_eq!(poller_code::name(poller_code::NONE), "none");
+        assert_eq!(poller_code::name(poller_code::POLL), "poll");
+        assert_eq!(poller_code::name(poller_code::EPOLL), "epoll");
+        assert_eq!(poller_code::name(poller_code::FALLBACK), "fallback");
+        assert_eq!(poller_code::name(99), "none", "unknown codes read as none");
     }
 
     #[test]

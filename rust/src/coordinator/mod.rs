@@ -53,7 +53,7 @@ use std::time::Instant;
 use crate::viterbi::types::FrameJob;
 
 pub use backend::BackendSpec;
-pub use metrics::{Metrics, MetricsSnapshot, NetSnapshot, NetStats, ShardSnapshot};
+pub use metrics::{poller_code, Metrics, MetricsSnapshot, NetSnapshot, NetStats, ShardSnapshot};
 pub use server::{Coordinator, Session, SessionHandle};
 pub use shard::home_shard;
 

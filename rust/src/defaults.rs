@@ -119,6 +119,20 @@ pub const NET_WRITE_HIGH_WATER: usize = 1 << 20;
 /// flow in `UdpClient::decode_blocks`.
 pub const NET_UDP_WINDOW: usize = 4;
 
+/// Reactor poller backend (`net.poller`): `"auto"` picks `epoll` on
+/// Linux and `poll(2)` elsewhere; `"poll"`/`"epoll"` force a backend
+/// (epoll degrades to poll off Linux). Both stay reachable so the
+/// cross-backend conformance suite keeps them semantically identical.
+pub const NET_POLLER: &str = "auto";
+
+/// Server-side UDP reply batching (`net.udp_batch`): replies
+/// accumulate up to this many datagrams before one `sendmmsg`-style
+/// flush (the batch also flushes whenever the socket has no more
+/// pending datagrams, so an isolated reply is never delayed). 1
+/// disables batching; the syscall is runtime-gated and degrades to
+/// per-datagram `send_to` where unavailable.
+pub const NET_UDP_BATCH: usize = 8;
+
 /// Default stream termination mode: zero-flushed blocks (both trellis
 /// ends pinned to state 0 — the classic deep-space convention). SDR /
 /// cellular block traffic (LTE PBCH/PDCCH style) switches to

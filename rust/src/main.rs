@@ -152,6 +152,22 @@ fn command_specs() -> Vec<CommandSpec> {
                 "require a CRC32 on every DATA frame (clients may also offer one per session)",
             ));
             f.push(FlagSpec::new(
+                "poller",
+                "KIND",
+                format!(
+                    "reactor readiness backend: auto | poll | epoll (default {:?})",
+                    defaults::NET_POLLER
+                ),
+            ));
+            f.push(FlagSpec::new(
+                "udp-batch",
+                "N",
+                format!(
+                    "UDP reply datagrams per batched flush, 1 disables (default {})",
+                    defaults::NET_UDP_BATCH
+                ),
+            ));
+            f.push(FlagSpec::new(
                 "duration-s",
                 "S",
                 "serve for S seconds then print metrics and exit (default: run until killed)",
@@ -480,6 +496,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         net.write_high_water = args.get_usize("write-high-water", net.write_high_water)?;
         net.crc = net.crc || args.get_bool("crc");
+        if let Some(v) = args.get("poller") {
+            net.poller = tcvd::net::PollerKind::parse(v).ok_or_else(|| {
+                Error::config(format!("--poller must be \"auto\", \"poll\" or \"epoll\" (got {v:?})"))
+            })?;
+        }
+        net.udp_batch = args.get_usize("udp-batch", net.udp_batch)?;
+        if net.udp_batch == 0 {
+            return Err(Error::config("--udp-batch must be positive"));
+        }
         if net.max_sessions == 0 {
             return Err(Error::config("--max-sessions must be positive"));
         }

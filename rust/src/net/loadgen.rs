@@ -7,6 +7,12 @@
 //! [`Decoder`](crate::Decoder) oracle decoding the same LLRs
 //! in-process.
 //!
+//! The oracle runs **once, up front**: the harness precomputes a pool
+//! of distinct workloads (LLRs + oracle bits) and the workers share it
+//! read-only. Workers are thin socket drivers on small stacks, which is
+//! what makes `--sessions 4096` tractable — the pre-PR-10 harness built
+//! a full oracle pipeline (engine threads and all) inside every worker.
+//!
 //! Shed rejections are retried (and counted), so a run against an
 //! undersized server converges instead of failing; mismatches and
 //! hard failures never retry. Latency samples are the successful
@@ -240,35 +246,43 @@ where
     }
 }
 
-fn block_seed(opts: &LoadgenOptions, worker: usize, block: usize) -> u64 {
-    opts.seed
-        .wrapping_mul(1_000_003)
-        .wrapping_add((worker as u64) << 20)
-        .wrapping_add(block as u64)
+/// One precomputed block: its channel LLRs and the oracle's bits.
+struct Workload {
+    llr: Vec<f32>,
+    want: Vec<u8>,
 }
+
+/// Distinct workloads to precompute. Capped so a 4096-session soak does
+/// not spend its wall-clock in the oracle; workers cycle through the
+/// pool, so every block is still verified against known-good bits.
+const WORKLOAD_POOL_MAX: usize = 64;
+
+/// Worker thread stack: the workers are thin socket drivers (the heavy
+/// encode/decode work is precomputed), so thousands of them fit in a
+/// modest address-space budget.
+const WORKER_STACK: usize = 512 * 1024;
 
 fn run_worker(
     addr: &str,
     builder: &DecoderBuilder,
     opts: &LoadgenOptions,
+    pool: &[Workload],
     worker: usize,
 ) -> Result<WorkerTally> {
-    // the oracle: same parameters, one in-process lane (bit-identical
-    // to any lane count), reused across this worker's blocks
-    let mut oracle = builder.clone().shards(1).build()?;
     let code = registry::lookup(builder.code_name()).map_err(Error::config)?;
-    let mode = builder.termination_mode();
     let beta = code.beta();
     let chunk_llrs = (builder.tile_config().payload * beta).max(beta);
     let mut tally = WorkerTally::default();
+    // this worker's slice of the shared pool, offset so concurrent
+    // workers spread across distinct workloads
+    let workload =
+        |block: usize| &pool[(worker * opts.blocks_per_session + block) % pool.len()];
     match opts.transport {
         // TCP: fresh session per block — connect, decode, disconnect —
         // so admission/eviction churns on every block
         Transport::Tcp => {
             for block in 0..opts.blocks_per_session {
-                let seed = block_seed(opts, worker, block);
-                let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
-                let want = oracle.decode_stream(&llr)?;
+                let Workload { llr, want } = workload(block);
                 let got = decode_with_retries(opts.max_retries, &mut tally, || {
                     let mut c = TcpClient::connect_opts(addr, builder, opts.crc)?;
                     for chunk in llr.chunks(chunk_llrs) {
@@ -277,7 +291,7 @@ fn run_worker(
                     c.finish_timed()
                 });
                 match got {
-                    Some(bits) if bits == want => {
+                    Some(bits) if &bits == want => {
                         tally.blocks += 1;
                         tally.payload_bits += bits.len() as u64;
                     }
@@ -289,14 +303,8 @@ fn run_worker(
         // UDP: one flow per worker, all blocks pipelined behind the
         // ack window (shed replies retry inside the window)
         Transport::Udp => {
-            let mut llrs = Vec::with_capacity(opts.blocks_per_session);
-            let mut wants = Vec::with_capacity(opts.blocks_per_session);
-            for block in 0..opts.blocks_per_session {
-                let seed = block_seed(opts, worker, block);
-                let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
-                wants.push(oracle.decode_stream(&llr)?);
-                llrs.push(llr);
-            }
+            let llrs: Vec<Vec<f32>> =
+                (0..opts.blocks_per_session).map(|b| workload(b).llr.clone()).collect();
             let popts =
                 UdpPipelineOptions { window: opts.udp_window, ..UdpPipelineOptions::default() };
             let run = UdpClient::connect(addr, worker as u64)
@@ -304,10 +312,10 @@ fn run_worker(
             match run {
                 Ok(run) => {
                     tally.shed_retries += run.stats.shed_retries;
-                    for ((bits, want), lat) in
-                        run.blocks.iter().zip(&wants).zip(&run.latencies)
+                    for ((bits, lat), block) in
+                        run.blocks.iter().zip(&run.latencies).zip(0..)
                     {
-                        if bits == want {
+                        if bits == &workload(block).want {
                             tally.blocks += 1;
                             tally.payload_bits += bits.len() as u64;
                             tally.latencies_ms.push(lat.as_secs_f64() * 1e3);
@@ -346,13 +354,37 @@ pub fn run(addr: &str, builder: &DecoderBuilder, opts: &LoadgenOptions) -> Resul
             opts.block_stages, tile.payload
         )));
     }
+    // precompute the shared workload pool with ONE oracle pipeline for
+    // the whole run — the workers only drive sockets and compare bytes
+    let mut oracle = builder.clone().shards(1).build()?;
+    let code = registry::lookup(builder.code_name()).map_err(Error::config)?;
+    let mode = builder.termination_mode();
+    let total_blocks = opts.sessions.saturating_mul(opts.blocks_per_session);
+    let pool_n = total_blocks.min(WORKLOAD_POOL_MAX).max(1);
+    let mut pool = Vec::with_capacity(pool_n);
+    for i in 0..pool_n {
+        let seed = opts.seed.wrapping_mul(1_000_003).wrapping_add(i as u64);
+        let llr = make_block_llrs(&code, mode, opts.block_stages, opts.ebn0_db, seed);
+        let want = oracle.decode_stream(&llr)?;
+        pool.push(Workload { llr, want });
+    }
+    drop(oracle);
     let t0 = Instant::now();
     let mut tallies: Vec<Result<WorkerTally>> = Vec::with_capacity(opts.sessions);
     let mut worker_panics = 0u64;
     std::thread::scope(|scope| {
+        let pool = &pool;
         let mut handles = Vec::with_capacity(opts.sessions);
         for w in 0..opts.sessions {
-            handles.push(scope.spawn(move || run_worker(addr, builder, opts, w)));
+            let spawned = std::thread::Builder::new()
+                .stack_size(WORKER_STACK)
+                .spawn_scoped(scope, move || run_worker(addr, builder, opts, pool, w));
+            match spawned {
+                Ok(h) => handles.push(h),
+                // out of threads: count the worker's blocks as failures
+                // rather than aborting the whole soak
+                Err(_) => worker_panics += 1,
+            }
         }
         for h in handles {
             match h.join() {

@@ -2,10 +2,12 @@
 //! [`Coordinator`] exposed over TCP and UDP with session lifecycle,
 //! admission control and load-shedding. `std::net` only (the repo is
 //! offline): a readiness-driven reactor multiplexes every TCP
-//! connection on one thread ([`reactor`] wraps `poll(2)` without
-//! dependencies), and a single-threaded UDP datagram loop serves block
-//! traffic — the server's thread count is fixed no matter how many
-//! connections are live.
+//! connection on one thread ([`reactor`] wraps `poll(2)` or Linux
+//! `epoll` without dependencies — `net.poller` selects), and a
+//! single-threaded UDP datagram loop serves block traffic with
+//! `sendmmsg`-style reply batching ([`udp_batch`], `net.udp_batch`) —
+//! the server's thread count is fixed no matter how many connections
+//! are live.
 //!
 //! * **TCP** ([`tcp`]): one connection = one streaming [`Session`],
 //!   driven as a nonblocking state machine with per-connection
@@ -35,6 +37,7 @@ pub mod reactor;
 pub mod session_table;
 pub mod tcp;
 pub mod udp;
+pub mod udp_batch;
 
 use std::net::{SocketAddr, TcpListener, UdpSocket};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -50,6 +53,7 @@ use crate::error::{Error, Result, ResultExt};
 use crate::fault::{self, FaultMap};
 
 pub use protocol::{Ack, Hello, PROTO_VERSION};
+pub use reactor::PollerKind;
 pub use session_table::{FlowTouch, SessionTable};
 pub use tcp::{fetch_metrics, TcpClient};
 pub use udp::{DatagramSocket, UdpClient, UdpPipelineOptions, UdpRun, UdpRunStats};
@@ -75,6 +79,14 @@ pub struct NetConfig {
     /// Require a CRC32 on every DATA frame, even from clients that did
     /// not offer one in their HELLO (the ACK tells them).
     pub crc: bool,
+    /// Readiness backend of the TCP reactor (`"auto"` resolves to
+    /// `epoll` on Linux, `poll(2)` elsewhere; see
+    /// [`reactor::PollerKind`]).
+    pub poller: PollerKind,
+    /// UDP reply batching factor: replies accumulate up to this many
+    /// datagrams before one batched flush (1 disables batching; the
+    /// batch always flushes once the socket has no pending datagrams).
+    pub udp_batch: usize,
 }
 
 impl Default for NetConfig {
@@ -86,6 +98,8 @@ impl Default for NetConfig {
             max_frame_bytes: defaults::NET_MAX_FRAME_BYTES,
             write_high_water: defaults::NET_WRITE_HIGH_WATER,
             crc: false,
+            poller: PollerKind::Auto,
+            udp_batch: defaults::NET_UDP_BATCH,
         }
     }
 }
@@ -100,6 +114,8 @@ impl NetConfig {
             max_frame_bytes: defaults::NET_MAX_FRAME_BYTES,
             write_high_water: cfg.net_write_high_water,
             crc: cfg.net_crc,
+            poller: PollerKind::parse(&cfg.net_poller).unwrap_or(PollerKind::Auto),
+            udp_batch: cfg.net_udp_batch,
         }
     }
 }

@@ -1,18 +1,33 @@
-//! A minimal readiness facility for the net front-end: a dependency-free
-//! wrapper over `poll(2)` (std + a single raw libc binding, no crates).
+//! A minimal readiness facility for the net front-end: dependency-free
+//! wrappers over `poll(2)` and Linux `epoll(7)` (std + raw extern-C
+//! bindings, no crates), selected at runtime by [`PollerKind`].
 //!
 //! The serving loop in `tcp.rs` registers every socket it owns each
 //! tick, polls with a bounded timeout, and reads readiness back by
 //! token. The API is deliberately level-triggered and rebuilt per tick
 //! — with one reactor thread owning every connection there is nothing
-//! to synchronise, and the poll set for a few thousand fds rebuilds in
-//! microseconds.
+//! to synchronise. The `poll(2)` backend hands the whole fd list to the
+//! kernel each tick (O(fds) per wakeup); the `epoll` backend keeps a
+//! persistent kernel interest set and only issues `epoll_ctl` for fds
+//! whose interest actually changed, so a wakeup costs O(ready) — the
+//! difference that matters at thousands of mostly-idle sessions.
+//!
+//! Both backends expose identical semantics, pinned by
+//! `tests/reactor_conformance.rs`: the same READ/WRITE interest bits,
+//! error/hangup conditions folded into both readiness bits, and EINTR
+//! treated as a timeout.
+//!
+//! One contract the epoll backend adds (and the tcp reactor satisfies
+//! by construction): a closed fd's *number* must be absent from at
+//! least one tick's registrations before a reused fd is registered
+//! again. The reactor accepts new sockets before it reaps closed ones
+//! within a tick, so a reused fd number always sees an intervening
+//! tick in which the stale registration is dropped from the kernel set.
 //!
 //! On non-unix targets (no `poll`) the set degrades to "everything is
-//! ready" after a short sleep: all sockets the reactor drives are
-//! nonblocking, so spurious readiness costs a `WouldBlock` syscall, not
-//! correctness. That keeps the state machines portable and testable
-//! while the fast path stays a real kernel wait on unix.
+//! ready" after a bounded sleep ([`FallbackSet`]): all sockets the
+//! reactor drives are nonblocking, so spurious readiness costs a
+//! `WouldBlock` syscall, not correctness.
 
 use std::time::Duration;
 
@@ -21,6 +36,61 @@ use std::time::Duration;
 pub const READ: u8 = 0b01;
 /// Readiness/interest bit: the fd can accept writes.
 pub const WRITE: u8 = 0b10;
+
+/// Which kernel readiness backend a [`PollSet`] runs on (the
+/// `net.poller` knob: TOML `[net] poller`, `tcvd serve --poller`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PollerKind {
+    /// Pick the best backend for the platform: `epoll` on Linux,
+    /// `poll(2)` elsewhere.
+    #[default]
+    Auto,
+    /// The portable `poll(2)` backend (O(fds) per wakeup).
+    Poll,
+    /// The Linux `epoll` backend (O(ready) per wakeup). Degrades to
+    /// `poll(2)` on other platforms or if the epoll instance cannot be
+    /// created.
+    Epoll,
+}
+
+impl PollerKind {
+    /// Parse a `net.poller` knob value (`"auto" | "poll" | "epoll"`).
+    pub fn parse(name: &str) -> Option<PollerKind> {
+        match name {
+            "auto" => Some(PollerKind::Auto),
+            "poll" => Some(PollerKind::Poll),
+            "epoll" => Some(PollerKind::Epoll),
+            _ => None,
+        }
+    }
+
+    /// The knob spelling of this kind.
+    pub const fn name(self) -> &'static str {
+        match self {
+            PollerKind::Auto => "auto",
+            PollerKind::Poll => "poll",
+            PollerKind::Epoll => "epoll",
+        }
+    }
+
+    /// The concrete backend this kind selects on the current platform
+    /// (never returns `Auto`; `Epoll` degrades to `Poll` off Linux).
+    pub fn resolve(self) -> PollerKind {
+        match self {
+            PollerKind::Poll => PollerKind::Poll,
+            PollerKind::Auto | PollerKind::Epoll => {
+                #[cfg(target_os = "linux")]
+                {
+                    PollerKind::Epoll
+                }
+                #[cfg(not(target_os = "linux"))]
+                {
+                    PollerKind::Poll
+                }
+            }
+        }
+    }
+}
 
 /// Raw fd type the poll set registers. On non-unix targets the value is
 /// carried but never handed to the kernel.
@@ -88,63 +158,437 @@ mod sys {
     }
 }
 
+#[cfg(target_os = "linux")]
+mod esys {
+    use std::os::raw::c_int;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    pub const ENOENT: i32 = 2;
+    pub const EEXIST: i32 = 17;
+
+    /// `struct epoll_event`. The kernel ABI packs it on x86-64 (to keep
+    /// the 32-bit layout); it is naturally aligned everywhere else.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// The `poll(2)` backend: the fd list is handed to the kernel whole,
+/// every tick.
+#[cfg(unix)]
+#[derive(Default)]
+struct PollVec {
+    fds: Vec<sys::PollFd>,
+}
+
+#[cfg(unix)]
+impl PollVec {
+    fn clear(&mut self) {
+        self.fds.clear();
+    }
+
+    fn register(&mut self, fd: Fd, interest: u8) -> usize {
+        let mut events = 0;
+        if interest & READ != 0 {
+            events |= sys::POLLIN;
+        }
+        if interest & WRITE != 0 {
+            events |= sys::POLLOUT;
+        }
+        self.fds.push(sys::PollFd { fd, events, revents: 0 });
+        self.fds.len() - 1
+    }
+
+    fn len(&self) -> usize {
+        self.fds.len()
+    }
+
+    fn poll(&mut self, timeout: Duration) -> usize {
+        let ms: i32 = timeout.as_millis().min(i32::MAX as u128) as i32;
+        if self.fds.is_empty() {
+            std::thread::sleep(timeout);
+            return 0;
+        }
+        let n =
+            unsafe { sys::poll(self.fds.as_mut_ptr(), self.fds.len() as sys::NfdsT, ms) };
+        n.max(0) as usize
+    }
+
+    fn readiness(&self, token: usize) -> u8 {
+        let r = self.fds[token].revents;
+        let fatal = r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0;
+        let mut out = 0;
+        if fatal || r & sys::POLLIN != 0 {
+            out |= READ;
+        }
+        if fatal || r & sys::POLLOUT != 0 {
+            out |= WRITE;
+        }
+        out
+    }
+}
+
+/// The `epoll` backend: one persistent kernel interest set, reconciled
+/// against this tick's registrations with `epoll_ctl` only where the
+/// interest actually changed (steady state: zero ctl syscalls, one
+/// `epoll_wait` returning only the ready fds).
+#[cfg(target_os = "linux")]
+struct EpollBackend {
+    epfd: std::os::raw::c_int,
+    /// Interest mask the kernel currently holds, per fd.
+    installed: std::collections::HashMap<Fd, u32>,
+    /// This tick's registrations, in token order.
+    entries: Vec<(Fd, u8)>,
+    tok_by_fd: std::collections::HashMap<Fd, usize>,
+    /// Readiness per token, filled by [`poll`](Self::poll).
+    revents: Vec<u8>,
+    events_buf: Vec<esys::EpollEvent>,
+    stale: Vec<Fd>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollBackend {
+    fn new() -> Option<EpollBackend> {
+        let epfd = unsafe { esys::epoll_create1(esys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return None;
+        }
+        Some(EpollBackend {
+            epfd,
+            installed: std::collections::HashMap::new(),
+            entries: Vec::new(),
+            tok_by_fd: std::collections::HashMap::new(),
+            revents: Vec::new(),
+            events_buf: Vec::new(),
+            stale: Vec::new(),
+        })
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.tok_by_fd.clear();
+        self.revents.clear();
+    }
+
+    fn register(&mut self, fd: Fd, interest: u8) -> usize {
+        let token = self.entries.len();
+        self.entries.push((fd, interest));
+        self.tok_by_fd.insert(fd, token);
+        token
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn want_events(interest: u8) -> u32 {
+        let mut want = 0;
+        if interest & READ != 0 {
+            want |= esys::EPOLLIN;
+        }
+        if interest & WRITE != 0 {
+            want |= esys::EPOLLOUT;
+        }
+        want
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: Fd, events: u32) -> std::io::Result<()> {
+        let mut ev = esys::EpollEvent { events, data: fd as u64 };
+        let rc = unsafe { esys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc == 0 {
+            Ok(())
+        } else {
+            Err(std::io::Error::last_os_error())
+        }
+    }
+
+    /// Reconcile the kernel interest set with this tick's entries.
+    fn sync(&mut self) {
+        for i in 0..self.entries.len() {
+            let (fd, interest) = self.entries[i];
+            let want = Self::want_events(interest);
+            match self.installed.get(&fd).copied() {
+                Some(have) if have == want => {}
+                Some(_) => {
+                    // a closed-and-reused fd number was dropped from the
+                    // kernel set automatically: MOD answers ENOENT, and
+                    // the ADD retry re-installs it
+                    let ok = match self.ctl(esys::EPOLL_CTL_MOD, fd, want) {
+                        Ok(()) => true,
+                        Err(e) if e.raw_os_error() == Some(esys::ENOENT) => {
+                            self.ctl(esys::EPOLL_CTL_ADD, fd, want).is_ok()
+                        }
+                        Err(_) => false,
+                    };
+                    if ok {
+                        self.installed.insert(fd, want);
+                    } else {
+                        self.installed.remove(&fd);
+                    }
+                }
+                None => {
+                    let ok = match self.ctl(esys::EPOLL_CTL_ADD, fd, want) {
+                        Ok(()) => true,
+                        Err(e) if e.raw_os_error() == Some(esys::EEXIST) => {
+                            self.ctl(esys::EPOLL_CTL_MOD, fd, want).is_ok()
+                        }
+                        Err(_) => false,
+                    };
+                    if ok {
+                        self.installed.insert(fd, want);
+                    }
+                }
+            }
+        }
+        // deregister fds that vanished from the tick (DEL on an
+        // already-closed fd fails harmlessly: the kernel dropped it)
+        self.stale.clear();
+        for &fd in self.installed.keys() {
+            if !self.tok_by_fd.contains_key(&fd) {
+                self.stale.push(fd);
+            }
+        }
+        for i in 0..self.stale.len() {
+            let fd = self.stale[i];
+            let _ = self.ctl(esys::EPOLL_CTL_DEL, fd, 0);
+            self.installed.remove(&fd);
+        }
+    }
+
+    fn poll(&mut self, timeout: Duration) -> usize {
+        self.sync();
+        self.revents.clear();
+        self.revents.resize(self.entries.len(), 0);
+        if self.entries.is_empty() {
+            std::thread::sleep(timeout);
+            return 0;
+        }
+        let ms: i32 = timeout.as_millis().min(i32::MAX as u128) as i32;
+        self.events_buf
+            .resize(self.entries.len().max(8), esys::EpollEvent { events: 0, data: 0 });
+        let n = unsafe {
+            esys::epoll_wait(
+                self.epfd,
+                self.events_buf.as_mut_ptr(),
+                self.events_buf.len() as std::os::raw::c_int,
+                ms,
+            )
+        };
+        if n <= 0 {
+            return 0; // timeout, or EINTR treated as one
+        }
+        let mut ready = 0;
+        for ev in &self.events_buf[..n as usize] {
+            let ev = *ev; // copy out of the (possibly packed) buffer
+            let Some(&tok) = self.tok_by_fd.get(&(ev.data as Fd)) else { continue };
+            let fatal = ev.events & (esys::EPOLLERR | esys::EPOLLHUP) != 0;
+            let mut bits = 0;
+            if fatal || ev.events & esys::EPOLLIN != 0 {
+                bits |= READ;
+            }
+            if fatal || ev.events & esys::EPOLLOUT != 0 {
+                bits |= WRITE;
+            }
+            if bits != 0 && self.revents[tok] == 0 {
+                ready += 1;
+            }
+            self.revents[tok] |= bits;
+        }
+        ready
+    }
+
+    fn readiness(&self, token: usize) -> u8 {
+        self.revents[token]
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollBackend {
+    fn drop(&mut self) {
+        unsafe {
+            esys::close(self.epfd);
+        }
+    }
+}
+
+/// Minimum sleep of the [`FallbackSet`] degraded poller: the same floor
+/// the reactor's self-tuning idle tick clamps to. Every fd reports
+/// ready every tick on this backend, so sleeping less than the tick
+/// floor (as the pre-PR-10 fallback did with its 1 ms cap) busy-spins
+/// the reactor at high fd counts.
+pub const FALLBACK_MIN_SLEEP: Duration = Duration::from_millis(5);
+
+/// The degraded poller for targets with no kernel readiness facility:
+/// every registered fd reports ready for its full interest after a
+/// bounded sleep. Spurious readiness is safe (the reactor's sockets are
+/// nonblocking), and the sleep honors the requested timeout with a
+/// [`FALLBACK_MIN_SLEEP`] floor so the loop cannot busy-spin.
+///
+/// Compiled on every target so its timing contract stays unit-tested
+/// from unix CI; it is only wired up as the live [`PollSet`] backend on
+/// non-unix targets.
+#[derive(Default)]
+pub struct FallbackSet {
+    interests: Vec<u8>,
+}
+
+impl FallbackSet {
+    pub fn new() -> FallbackSet {
+        FallbackSet::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.interests.clear();
+    }
+
+    pub fn register(&mut self, fd: Fd, interest: u8) -> usize {
+        let _ = fd;
+        self.interests.push(interest);
+        self.interests.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.interests.len()
+    }
+
+    /// Sleep `timeout` (at least [`FALLBACK_MIN_SLEEP`]), then report
+    /// every fd ready for its registered interest.
+    pub fn poll(&mut self, timeout: Duration) -> usize {
+        std::thread::sleep(timeout.max(FALLBACK_MIN_SLEEP));
+        self.interests.len()
+    }
+
+    pub fn readiness(&self, token: usize) -> u8 {
+        self.interests[token]
+    }
+}
+
+enum Backend {
+    #[cfg(unix)]
+    Poll(PollVec),
+    #[cfg(target_os = "linux")]
+    Epoll(EpollBackend),
+    #[cfg(not(unix))]
+    Fallback(FallbackSet),
+}
+
 /// One tick's worth of fds to wait on. `clear` + `register` each tick,
 /// `poll` once, then query `readiness` by the token `register` returned.
-#[derive(Default)]
+/// The kernel backend is chosen at construction ([`PollerKind`]);
+/// [`new`](Self::new) follows `Auto`.
 pub struct PollSet {
-    #[cfg(unix)]
-    fds: Vec<sys::PollFd>,
-    #[cfg(not(unix))]
-    interests: Vec<u8>,
+    backend: Backend,
+}
+
+impl Default for PollSet {
+    fn default() -> Self {
+        PollSet::new()
+    }
 }
 
 impl PollSet {
     pub fn new() -> PollSet {
-        PollSet::default()
+        PollSet::with_poller(PollerKind::Auto)
     }
 
-    /// Drop every registration (keeps the allocation).
-    pub fn clear(&mut self) {
-        #[cfg(unix)]
-        self.fds.clear();
+    /// A poll set on the backend `kind` selects (see
+    /// [`PollerKind::resolve`]; an epoll instance that cannot be
+    /// created degrades to `poll(2)`).
+    pub fn with_poller(kind: PollerKind) -> PollSet {
         #[cfg(not(unix))]
-        self.interests.clear();
+        {
+            let _ = kind;
+            PollSet { backend: Backend::Fallback(FallbackSet::new()) }
+        }
+        #[cfg(unix)]
+        {
+            match kind.resolve() {
+                #[cfg(target_os = "linux")]
+                PollerKind::Epoll => match EpollBackend::new() {
+                    Some(e) => PollSet { backend: Backend::Epoll(e) },
+                    None => PollSet { backend: Backend::Poll(PollVec::default()) },
+                },
+                _ => PollSet { backend: Backend::Poll(PollVec::default()) },
+            }
+        }
+    }
+
+    /// The live backend's name: `"poll"`, `"epoll"` or `"fallback"`
+    /// (feeds the `net.poller` metrics gauge).
+    pub fn kind(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(unix)]
+            Backend::Poll(_) => "poll",
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            #[cfg(not(unix))]
+            Backend::Fallback(_) => "fallback",
+        }
+    }
+
+    /// Drop every registration (keeps allocations and, on epoll, the
+    /// kernel interest set — reconciled lazily at the next `poll`).
+    pub fn clear(&mut self) {
+        match &mut self.backend {
+            #[cfg(unix)]
+            Backend::Poll(b) => b.clear(),
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.clear(),
+            #[cfg(not(unix))]
+            Backend::Fallback(b) => b.clear(),
+        }
     }
 
     /// Register `fd` with an interest mask (`READ | WRITE` bits; an
     /// empty mask still registers the fd for error conditions). Returns
     /// the token to pass to [`readiness`](Self::readiness) after the
-    /// poll.
+    /// poll. Register each fd at most once per tick.
     pub fn register(&mut self, fd: Fd, interest: u8) -> usize {
-        #[cfg(unix)]
-        {
-            let mut events = 0;
-            if interest & READ != 0 {
-                events |= sys::POLLIN;
-            }
-            if interest & WRITE != 0 {
-                events |= sys::POLLOUT;
-            }
-            self.fds.push(sys::PollFd { fd, events, revents: 0 });
-            self.fds.len() - 1
-        }
-        #[cfg(not(unix))]
-        {
-            let _ = fd;
-            self.interests.push(interest);
-            self.interests.len() - 1
+        match &mut self.backend {
+            #[cfg(unix)]
+            Backend::Poll(b) => b.register(fd, interest),
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.register(fd, interest),
+            #[cfg(not(unix))]
+            Backend::Fallback(b) => b.register(fd, interest),
         }
     }
 
     /// Number of registered fds this tick.
     pub fn len(&self) -> usize {
-        #[cfg(unix)]
-        {
-            self.fds.len()
-        }
-        #[cfg(not(unix))]
-        {
-            self.interests.len()
+        match &self.backend {
+            #[cfg(unix)]
+            Backend::Poll(b) => b.len(),
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.len(),
+            #[cfg(not(unix))]
+            Backend::Fallback(b) => b.len(),
         }
     }
 
@@ -156,24 +600,13 @@ impl PollSet {
     /// elapses. Returns the number of ready fds (0 on timeout). EINTR
     /// is treated as a timeout: the caller's loop re-polls anyway.
     pub fn poll(&mut self, timeout: Duration) -> usize {
-        #[cfg(unix)]
-        {
-            let ms: i32 = timeout.as_millis().min(i32::MAX as u128) as i32;
-            if self.fds.is_empty() {
-                std::thread::sleep(timeout);
-                return 0;
-            }
-            let n = unsafe {
-                sys::poll(self.fds.as_mut_ptr(), self.fds.len() as sys::NfdsT, ms)
-            };
-            n.max(0) as usize
-        }
-        #[cfg(not(unix))]
-        {
-            // fallback: a short sleep, then report everything ready for
-            // its interest; nonblocking sockets make that safe
-            std::thread::sleep(timeout.min(Duration::from_millis(1)));
-            self.interests.len()
+        match &mut self.backend {
+            #[cfg(unix)]
+            Backend::Poll(b) => b.poll(timeout),
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.poll(timeout),
+            #[cfg(not(unix))]
+            Backend::Fallback(b) => b.poll(timeout),
         }
     }
 
@@ -181,80 +614,176 @@ impl PollSet {
     /// `READ | WRITE` bits. Error/hangup conditions are folded into
     /// both bits so the owner discovers them on its next `read`/`write`.
     pub fn readiness(&self, token: usize) -> u8 {
-        #[cfg(unix)]
-        {
-            let r = self.fds[token].revents;
-            let fatal = r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0;
-            let mut out = 0;
-            if fatal || r & sys::POLLIN != 0 {
-                out |= READ;
-            }
-            if fatal || r & sys::POLLOUT != 0 {
-                out |= WRITE;
-            }
-            out
-        }
-        #[cfg(not(unix))]
-        {
-            self.interests[token]
+        match &self.backend {
+            #[cfg(unix)]
+            Backend::Poll(b) => b.readiness(token),
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.readiness(token),
+            #[cfg(not(unix))]
+            Backend::Fallback(b) => b.readiness(token),
         }
     }
 }
 
-#[cfg(all(test, unix))]
+#[cfg(test)]
 mod tests {
+    use super::*;
+
+    #[test]
+    fn poller_kind_parses_knob_values() {
+        assert_eq!(PollerKind::parse("auto"), Some(PollerKind::Auto));
+        assert_eq!(PollerKind::parse("poll"), Some(PollerKind::Poll));
+        assert_eq!(PollerKind::parse("epoll"), Some(PollerKind::Epoll));
+        assert_eq!(PollerKind::parse("kqueue"), None);
+        assert_eq!(PollerKind::Poll.resolve(), PollerKind::Poll);
+        assert_ne!(PollerKind::Auto.resolve(), PollerKind::Auto, "auto resolves concretely");
+    }
+
+    #[test]
+    fn fallback_sleeps_at_least_the_tick_floor() {
+        // the busy-spin regression: a sub-floor timeout must still cost
+        // a full FALLBACK_MIN_SLEEP, because every fd will report ready
+        let mut set = FallbackSet::new();
+        for fd in 0..32 {
+            set.register(fd, READ | WRITE);
+        }
+        let t0 = std::time::Instant::now();
+        let ready = set.poll(Duration::from_millis(1));
+        let elapsed = t0.elapsed();
+        assert_eq!(ready, 32, "fallback reports every fd ready");
+        assert!(
+            elapsed >= Duration::from_millis(4),
+            "sub-floor timeout slept only {elapsed:?} (floor is {FALLBACK_MIN_SLEEP:?})"
+        );
+        // and a timeout above the floor is honored in full, not capped
+        // at the old 1 ms ceiling
+        let t0 = std::time::Instant::now();
+        set.poll(Duration::from_millis(25));
+        assert!(t0.elapsed() >= Duration::from_millis(20), "fallback honors long timeouts");
+    }
+
+    #[test]
+    fn fallback_readiness_echoes_interest() {
+        let mut set = FallbackSet::new();
+        let a = set.register(3, READ);
+        let b = set.register(4, WRITE);
+        set.poll(Duration::from_millis(1));
+        assert_eq!(set.readiness(a), READ);
+        assert_eq!(set.readiness(b), WRITE);
+    }
+}
+
+#[cfg(all(test, unix))]
+mod unix_tests {
     use super::*;
     use std::io::Write;
     use std::net::{TcpListener, TcpStream};
 
+    fn backends() -> Vec<PollerKind> {
+        // PollerKind::Epoll degrades to poll off Linux, so this list is
+        // safe (if redundant) everywhere
+        vec![PollerKind::Poll, PollerKind::Epoll]
+    }
+
     #[test]
     fn listener_becomes_readable_on_connect() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let mut set = PollSet::new();
-        set.register(listener_fd(&listener), READ);
-        assert_eq!(set.poll(Duration::from_millis(10)), 0, "no pending connect yet");
+        for kind in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut set = PollSet::with_poller(kind);
+            set.register(listener_fd(&listener), READ);
+            assert_eq!(set.poll(Duration::from_millis(10)), 0, "no pending connect yet");
 
-        let _client = TcpStream::connect(addr).unwrap();
-        set.clear();
-        let tok = set.register(listener_fd(&listener), READ);
-        assert!(set.poll(Duration::from_millis(2000)) >= 1);
-        assert_eq!(set.readiness(tok) & READ, READ);
+            let _client = TcpStream::connect(addr).unwrap();
+            set.clear();
+            let tok = set.register(listener_fd(&listener), READ);
+            assert!(set.poll(Duration::from_millis(2000)) >= 1, "{}", set.kind());
+            assert_eq!(set.readiness(tok) & READ, READ, "{}", set.kind());
+        }
     }
 
     #[test]
     fn stream_readiness_tracks_data_and_writability() {
+        for kind in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let mut client = TcpStream::connect(addr).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+
+            // a fresh socket: writable, nothing to read
+            let mut set = PollSet::with_poller(kind);
+            let tok = set.register(stream_fd(&server), READ | WRITE);
+            assert!(set.poll(Duration::from_millis(2000)) >= 1, "{}", set.kind());
+            assert_eq!(set.readiness(tok) & WRITE, WRITE, "{}", set.kind());
+            assert_eq!(set.readiness(tok) & READ, 0, "{}", set.kind());
+
+            client.write_all(b"ping").unwrap();
+            client.flush().unwrap();
+            set.clear();
+            let tok = set.register(stream_fd(&server), READ);
+            assert!(set.poll(Duration::from_millis(2000)) >= 1, "{}", set.kind());
+            assert_eq!(set.readiness(tok) & READ, READ, "{}", set.kind());
+        }
+    }
+
+    #[test]
+    fn hangup_reads_as_readable() {
+        for kind in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let client = TcpStream::connect(addr).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            drop(client);
+            // peer closed: POLLIN/POLLHUP — either way the READ bit is
+            // set so the owner reads the EOF
+            let mut set = PollSet::with_poller(kind);
+            let tok = set.register(stream_fd(&server), READ);
+            assert!(set.poll(Duration::from_millis(2000)) >= 1, "{}", set.kind());
+            assert_eq!(set.readiness(tok) & READ, READ, "{}", set.kind());
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn auto_and_epoll_select_the_kernel_backend_on_linux() {
+        assert_eq!(PollSet::with_poller(PollerKind::Auto).kind(), "epoll");
+        assert_eq!(PollSet::with_poller(PollerKind::Epoll).kind(), "epoll");
+        assert_eq!(PollSet::with_poller(PollerKind::Poll).kind(), "poll");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_interest_changes_and_deregistration_reconcile() {
+        // exercises the MOD / DEL / re-ADD paths of the persistent
+        // kernel interest set across ticks
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let mut client = TcpStream::connect(addr).unwrap();
         let (server, _) = listener.accept().unwrap();
         server.set_nonblocking(true).unwrap();
+        let mut set = PollSet::with_poller(PollerKind::Epoll);
+        assert_eq!(set.kind(), "epoll");
 
-        // a fresh socket: writable, nothing to read
-        let mut set = PollSet::new();
-        let tok = set.register(stream_fd(&server), READ | WRITE);
+        // tick 1: WRITE interest — writable
+        let tok = set.register(stream_fd(&server), WRITE);
         assert!(set.poll(Duration::from_millis(2000)) >= 1);
-        assert_eq!(set.readiness(tok) & WRITE, WRITE);
-        assert_eq!(set.readiness(tok) & READ, 0);
+        assert_eq!(set.readiness(tok), WRITE);
 
-        client.write_all(b"ping").unwrap();
-        client.flush().unwrap();
+        // tick 2: MOD down to READ-only — quiet socket, nothing ready
         set.clear();
         let tok = set.register(stream_fd(&server), READ);
-        assert!(set.poll(Duration::from_millis(2000)) >= 1);
-        assert_eq!(set.readiness(tok) & READ, READ);
-    }
+        assert_eq!(set.poll(Duration::from_millis(20)), 0);
+        assert_eq!(set.readiness(tok), 0);
 
-    #[test]
-    fn hangup_reads_as_readable() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let client = TcpStream::connect(addr).unwrap();
-        let (server, _) = listener.accept().unwrap();
-        drop(client);
-        // peer closed: POLLIN/POLLHUP — either way the READ bit is set
-        // so the owner reads the EOF
-        let mut set = PollSet::new();
+        // tick 3: deregistered — data arriving must not be reported
+        client.write_all(b"x").unwrap();
+        set.clear();
+        assert_eq!(set.poll(Duration::from_millis(20)), 0);
+
+        // tick 4: re-registered (the DEL → ADD round trip) — the
+        // buffered byte is readable again
+        set.clear();
         let tok = set.register(stream_fd(&server), READ);
         assert!(set.poll(Duration::from_millis(2000)) >= 1);
         assert_eq!(set.readiness(tok) & READ, READ);

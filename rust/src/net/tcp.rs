@@ -3,8 +3,9 @@
 //!
 //! Server side: a single readiness-driven reactor thread
 //! (`tcvd-net-reactor`) owns the listener and every connection —
-//! nonblocking sockets multiplexed over the dependency-free `poll(2)`
-//! wrapper in [`super::reactor`]. Each connection is a small state
+//! nonblocking sockets multiplexed over the dependency-free readiness
+//! wrappers in [`super::reactor`] (`poll(2)`, or the Linux `epoll`
+//! kernel-event backend; `net.poller`). Each connection is a small state
 //! machine (handshake → streaming → draining → closing) built on the
 //! incremental [`FrameBuf`] parser, so partial reads and 1-byte writes
 //! from a peer are business as usual. Decoded BITS frames are written
@@ -30,7 +31,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::DecoderBuilder;
-use crate::coordinator::SessionHandle;
+use crate::coordinator::{poller_code, SessionHandle};
 use crate::defaults;
 use crate::error::{Error, Result, ResultExt};
 
@@ -50,43 +51,90 @@ const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(60);
 /// shard queues accept them).
 const PENDING_FRAMES_MAX: usize = 64;
 
-/// Per-connection outbound buffer: bytes are appended frame-at-a-time
-/// and flushed as far as the socket accepts, tolerating partial writes.
+/// Per-connection outbound buffer: a queue of wire segments flushed as
+/// far as the socket accepts, tolerating partial writes. Small control
+/// frames (ACK, END, errors) coalesce into a shared tail segment so
+/// they cost one `write` together; decoded BITS payloads are *moved*
+/// in as their own segments ([`push_frame_owned`](Self::push_frame_owned))
+/// — the reassembler's output `Vec` becomes the wire buffer directly,
+/// with no intermediate copy.
 #[derive(Default)]
 struct OutBuf {
-    buf: Vec<u8>,
+    segs: std::collections::VecDeque<Vec<u8>>,
+    /// Bytes of the front segment already written to the socket.
     pos: usize,
+    /// Total unwritten bytes across all segments.
+    len: usize,
+    /// Whether the tail segment is a coalescing buffer small frames may
+    /// append to (false when the tail is a moved payload segment).
+    tail_coalesces: bool,
 }
 
 impl OutBuf {
     fn len(&self) -> usize {
-        self.buf.len() - self.pos
+        self.len
     }
 
+    fn coalescing_tail(&mut self) -> &mut Vec<u8> {
+        if !self.tail_coalesces {
+            self.segs.push_back(Vec::new());
+            self.tail_coalesces = true;
+        }
+        self.segs.back_mut().expect("coalescing tail exists")
+    }
+
+    /// Append a frame by copy (control frames: payloads are tiny).
     fn push_frame(&mut self, frame_kind: u8, payload: &[u8]) {
-        self.buf.push(frame_kind);
-        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        self.buf.extend_from_slice(payload);
+        self.len += 5 + payload.len();
+        let tail = self.coalescing_tail();
+        tail.push(frame_kind);
+        tail.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        tail.extend_from_slice(payload);
     }
 
+    /// Append a frame moving `payload` in as its own segment: the
+    /// zero-copy BITS path (only the 5-byte header is materialized).
+    fn push_frame_owned(&mut self, frame_kind: u8, payload: Vec<u8>) {
+        self.len += 5 + payload.len();
+        let tail = self.coalescing_tail();
+        tail.push(frame_kind);
+        tail.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        if !payload.is_empty() {
+            self.segs.push_back(payload);
+            self.tail_coalesces = false;
+        }
+    }
+
+    /// The next contiguous run of unwritten bytes (one segment's worth).
     fn pending(&self) -> &[u8] {
-        &self.buf[self.pos..]
+        match self.segs.front() {
+            Some(s) => &s[self.pos..],
+            None => &[],
+        }
     }
 
     fn consume(&mut self, n: usize) {
+        debug_assert!(n <= self.len);
+        self.len -= n;
         self.pos += n;
-        if self.pos == self.buf.len() {
-            self.buf.clear();
+        while let Some(front) = self.segs.front() {
+            if self.pos < front.len() {
+                break;
+            }
+            self.pos -= front.len();
+            self.segs.pop_front();
+        }
+        if self.segs.is_empty() {
             self.pos = 0;
-        } else if self.pos > 1 << 16 {
-            self.buf.drain(..self.pos);
-            self.pos = 0;
+            self.tail_coalesces = false;
         }
     }
 
     fn clear(&mut self) {
-        self.buf.clear();
+        self.segs.clear();
         self.pos = 0;
+        self.len = 0;
+        self.tail_coalesces = false;
     }
 }
 
@@ -441,7 +489,9 @@ impl Conn {
             };
             match polled {
                 Ok(Ok(chunk)) => {
-                    self.outbuf.push_frame(kind::BITS, &chunk);
+                    // zero-copy: the decoded chunk becomes an outbound
+                    // segment as-is (header-only materialization)
+                    self.outbuf.push_frame_owned(kind::BITS, chunk);
                     ctx.metrics
                         .net
                         .write_buf_hwm
@@ -579,17 +629,47 @@ impl Conn {
     }
 }
 
+/// Re-issue `listen(2)` on the bound listener to widen the accept
+/// backlog to the session cap. std's `TcpListener::bind` hardcodes a
+/// backlog of 128, which a few-thousand-session connect burst
+/// overflows — the dropped SYNs stall ~1 s per retransmit before the
+/// reactor ever sees them. POSIX allows `listen` on an
+/// already-listening socket to update the backlog; the kernel clamps
+/// the value to `net.core.somaxconn`. Errors are ignored: the default
+/// backlog still serves correctly, just with retransmit stalls under
+/// bursts.
+#[cfg(unix)]
+fn widen_listen_backlog(listener: &TcpListener, backlog: usize) {
+    extern "C" {
+        fn listen(fd: i32, backlog: i32) -> i32;
+    }
+    let clamped = backlog.min(i32::MAX as usize) as i32;
+    unsafe {
+        let _ = listen(listener_fd(listener), clamped);
+    }
+}
+
+#[cfg(not(unix))]
+fn widen_listen_backlog(_listener: &TcpListener, _backlog: usize) {}
+
 /// The reactor loop (one thread per server, regardless of connection
 /// count). Exits when the shutdown flag is set — the poll timeout
 /// doubles as the shutdown check interval.
 pub(crate) fn run_reactor(listener: TcpListener, ctx: Arc<ServerCtx>) {
     let _ = listener.set_nonblocking(true);
+    widen_listen_backlog(&listener, ctx.net.max_sessions);
     let idle = ctx.table.idle_timeout();
     let tick = (idle / 4).clamp(Duration::from_millis(5), Duration::from_millis(50));
     let fast = Duration::from_millis(1);
     let mut conns: Vec<Conn> = Vec::new();
     let mut tokens: Vec<usize> = Vec::new();
-    let mut set = PollSet::new();
+    let mut set = PollSet::with_poller(ctx.net.poller);
+    let code = match set.kind() {
+        "epoll" => poller_code::EPOLL,
+        "fallback" => poller_code::FALLBACK,
+        _ => poller_code::POLL,
+    };
+    ctx.metrics.net.poller.store(code, Ordering::Relaxed);
     let mut scratch = vec![0u8; 64 * 1024];
 
     loop {
@@ -604,8 +684,9 @@ pub(crate) fn run_reactor(listener: TcpListener, ctx: Arc<ServerCtx>) {
         }
         ctx.metrics.net.reactor_fds.store(set.len() as u64, Ordering::Relaxed);
         let timeout = if conns.iter().any(Conn::wants_fast_tick) { fast } else { tick };
-        set.poll(timeout);
+        let n_ready = set.poll(timeout);
         ctx.metrics.net.reactor_wakeups.fetch_add(1, Ordering::Relaxed);
+        ctx.metrics.net.reactor_ready_events.fetch_add(n_ready as u64, Ordering::Relaxed);
 
         if set.readiness(ltok) & READ != 0 {
             loop {
@@ -848,5 +929,108 @@ mod tests {
         note_accept_error(&std::io::Error::from(std::io::ErrorKind::ConnectionAborted), &net);
         note_accept_error(&std::io::Error::from(std::io::ErrorKind::Other), &net);
         assert_eq!(net.accept_errors.load(Ordering::Relaxed), 2);
+    }
+
+    /// Reference flat encoding of one wire frame.
+    fn flat_frame(frame_kind: u8, payload: &[u8]) -> Vec<u8> {
+        let mut wire = vec![frame_kind];
+        wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        wire.extend_from_slice(payload);
+        wire
+    }
+
+    /// Drain an [`OutBuf`] through its `pending`/`consume` contract in
+    /// `step`-sized nibbles (1 = worst-case partial writes), returning
+    /// the byte stream a socket would have seen.
+    fn drain_outbuf(buf: &mut OutBuf, step: usize) -> Vec<u8> {
+        let mut seen = Vec::new();
+        while buf.len() > 0 {
+            let chunk = buf.pending();
+            assert!(!chunk.is_empty(), "len says {} but pending is empty", buf.len());
+            let n = chunk.len().min(step);
+            seen.extend_from_slice(&chunk[..n]);
+            buf.consume(n);
+        }
+        assert!(buf.pending().is_empty());
+        seen
+    }
+
+    #[test]
+    fn outbuf_control_frames_coalesce_into_one_segment() {
+        let mut buf = OutBuf::default();
+        buf.push_frame(kind::ACK, b"ack-payload");
+        buf.push_frame(kind::END, &[]);
+        buf.push_frame(kind::REJECT, b"why");
+        // one coalesced segment: the three control frames cost a single
+        // socket write
+        let mut want = flat_frame(kind::ACK, b"ack-payload");
+        want.extend(flat_frame(kind::END, &[]));
+        want.extend(flat_frame(kind::REJECT, b"why"));
+        assert_eq!(buf.len(), want.len());
+        assert_eq!(buf.pending(), &want[..], "all three frames share one contiguous segment");
+        buf.consume(want.len());
+        assert_eq!(buf.len(), 0);
+    }
+
+    #[test]
+    fn outbuf_owned_push_is_wire_identical_to_copied_push() {
+        let payload: Vec<u8> = (0u8..=255).cycle().take(700).collect();
+        let mut copied = OutBuf::default();
+        copied.push_frame(kind::ACK, b"pre");
+        copied.push_frame(kind::BITS, &payload);
+        copied.push_frame(kind::END, &[]);
+        let mut owned = OutBuf::default();
+        owned.push_frame(kind::ACK, b"pre");
+        owned.push_frame_owned(kind::BITS, payload.clone());
+        owned.push_frame(kind::END, &[]);
+        assert_eq!(owned.len(), copied.len());
+        // byte-for-byte identical under every flush granularity
+        for step in [1, 5, 64, 4096] {
+            let mut c = OutBuf::default();
+            c.push_frame(kind::ACK, b"pre");
+            c.push_frame(kind::BITS, &payload);
+            c.push_frame(kind::END, &[]);
+            let mut o = OutBuf::default();
+            o.push_frame(kind::ACK, b"pre");
+            o.push_frame_owned(kind::BITS, payload.clone());
+            o.push_frame(kind::END, &[]);
+            assert_eq!(drain_outbuf(&mut o, step), drain_outbuf(&mut c, step), "step={step}");
+        }
+    }
+
+    #[test]
+    fn outbuf_owned_payload_is_moved_not_copied() {
+        let payload: Vec<u8> = vec![0xAB; 512];
+        let payload_ptr = payload.as_ptr();
+        let mut buf = OutBuf::default();
+        buf.push_frame_owned(kind::BITS, payload);
+        // consume exactly the 5-byte header: the next pending slice must
+        // be the original allocation, not a copy
+        buf.consume(5);
+        assert_eq!(buf.pending().len(), 512);
+        assert!(
+            std::ptr::eq(buf.pending().as_ptr(), payload_ptr),
+            "BITS payload was copied instead of moved"
+        );
+    }
+
+    #[test]
+    fn outbuf_partial_consume_across_segment_boundaries() {
+        let mut buf = OutBuf::default();
+        buf.push_frame(kind::ACK, b"aa");
+        buf.push_frame_owned(kind::BITS, vec![1, 2, 3, 4, 5, 6, 7]);
+        buf.push_frame_owned(kind::BITS, vec![8, 9]);
+        buf.push_frame(kind::END, &[]);
+        let mut want = flat_frame(kind::ACK, b"aa");
+        want.extend(flat_frame(kind::BITS, &[1, 2, 3, 4, 5, 6, 7]));
+        want.extend(flat_frame(kind::BITS, &[8, 9]));
+        want.extend(flat_frame(kind::END, &[]));
+        assert_eq!(drain_outbuf(&mut buf, 3), want, "3-byte nibbles straddle every boundary");
+        // after a full drain the buffer coalesces fresh frames again
+        buf.push_frame(kind::END, &[]);
+        assert_eq!(buf.pending(), &flat_frame(kind::END, &[])[..]);
+        buf.clear();
+        assert_eq!(buf.len(), 0);
+        assert!(buf.pending().is_empty());
     }
 }

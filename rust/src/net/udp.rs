@@ -25,6 +25,7 @@ use crate::error::{Error, Result, ResultExt};
 
 use super::protocol::{udp_status, UdpBlock, UdpReply};
 use super::session_table::FlowTouch;
+use super::udp_batch::{DatagramTx, ReplyBatch, SysTx};
 use super::ServerCtx;
 
 /// Maximum UDP datagram we read or write.
@@ -33,6 +34,12 @@ const MAX_DATAGRAM: usize = 65536;
 /// How long a client waits for a reply datagram.
 const CLIENT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// With replies pending in the batch, the serving loop shortens its
+/// read timeout to this: just long enough to notice a back-to-back
+/// request datagram, so batching adds at most ~1 ms to an isolated
+/// reply while a busy socket still aggregates whole batches.
+const BATCH_DRAIN_TIMEOUT: Duration = Duration::from_millis(1);
+
 /// The flow sweep period for a given idle timeout: often enough that
 /// eviction lag stays well under the timeout, bounded below so tiny
 /// test timeouts don't spin the loop.
@@ -40,35 +47,48 @@ fn sweep_interval(idle_timeout: Duration) -> Duration {
     (idle_timeout / 2).min(Duration::from_millis(250)).max(Duration::from_millis(10))
 }
 
-fn reply(socket: &UdpSocket, ctx: &ServerCtx, peer: std::net::SocketAddr, r: UdpReply) {
-    let wire = r.encode();
-    if socket.send_to(&wire, peer).is_ok() {
-        ctx.metrics.net.bytes_out.fetch_add(wire.len() as u64, Ordering::Relaxed);
-    }
+fn reply<T: DatagramTx>(
+    batch: &mut ReplyBatch<'_, T>,
+    peer: std::net::SocketAddr,
+    r: UdpReply,
+) {
+    // byte accounting happens inside the batch, at actual-send time
+    batch.push(peer, r.encode());
 }
 
 /// UDP serving loop (one per server). The socket read timeout doubles
-/// as the sweep tick and the shutdown poll interval.
+/// as the sweep tick and the shutdown poll interval; while replies sit
+/// in the send batch it shrinks to [`BATCH_DRAIN_TIMEOUT`] so the
+/// batch flushes as soon as the socket has nothing more to drain.
 pub(crate) fn run_udp(socket: UdpSocket, ctx: Arc<ServerCtx>) {
     let sweep = sweep_interval(ctx.table.idle_timeout());
+    let tx = SysTx(&socket);
+    let mut batch = ReplyBatch::new(&tx, ctx.net.udp_batch, &ctx.metrics.net);
     let _ = socket.set_read_timeout(Some(sweep));
+    let mut timeout = sweep;
     let mut buf = vec![0u8; MAX_DATAGRAM];
     let mut last_sweep = Instant::now();
     loop {
         if ctx.shutdown.load(Ordering::SeqCst) {
+            batch.flush();
             return;
+        }
+        let want = if batch.is_empty() { sweep } else { BATCH_DRAIN_TIMEOUT };
+        if want != timeout {
+            let _ = socket.set_read_timeout(Some(want));
+            timeout = want;
         }
         match socket.recv_from(&mut buf) {
             Ok((n, peer)) => {
                 ctx.metrics.net.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
                 // an undecodable header has no flow/seq to echo: drop
                 if let Ok(block) = UdpBlock::decode(&buf[..n]) {
-                    handle_datagram(&socket, &ctx, peer, block);
+                    handle_datagram(&mut batch, &ctx, peer, block);
                 }
             }
-            // timeout: fall through to the sweep; other errors are
-            // transient on a datagram socket
-            Err(_) => {}
+            // timeout / transient error: the socket is drained — flush
+            // pending replies, then fall through to the sweep
+            Err(_) => batch.flush(),
         }
         let now = Instant::now();
         if now.duration_since(last_sweep) >= sweep {
@@ -81,8 +101,8 @@ pub(crate) fn run_udp(socket: UdpSocket, ctx: Arc<ServerCtx>) {
     }
 }
 
-fn handle_datagram(
-    socket: &UdpSocket,
+fn handle_datagram<T: DatagramTx>(
+    batch: &mut ReplyBatch<'_, T>,
     ctx: &Arc<ServerCtx>,
     peer: std::net::SocketAddr,
     block: UdpBlock,
@@ -94,7 +114,7 @@ fn handle_datagram(
             ctx.metrics.net.sessions_shed.fetch_add(1, Ordering::Relaxed);
             let detail = format!("session cap {} reached", ctx.net.max_sessions);
             let r = UdpReply { flow, seq, status: udp_status::SHED, body: detail.into_bytes() };
-            reply(socket, ctx, peer, r);
+            reply(batch, peer, r);
             return;
         }
         FlowTouch::New => {
@@ -108,14 +128,14 @@ fn handle_datagram(
         ctx.metrics.net.blocks_shed.fetch_add(1, Ordering::Relaxed);
         let detail = format!("shard queues at depth {}", ctx.metrics.queue_depth_total());
         let r = UdpReply { flow, seq, status: udp_status::SHED, body: detail.into_bytes() };
-        reply(socket, ctx, peer, r);
+        reply(batch, peer, r);
         return;
     }
     let t0 = Instant::now();
     match ctx.coord.decode_stream_blocking(&block.llr) {
         Ok(bits) => {
             ctx.metrics.record_net_block(t0.elapsed());
-            reply(socket, ctx, peer, UdpReply { flow, seq, status: udp_status::OK, body: bits });
+            reply(batch, peer, UdpReply { flow, seq, status: udp_status::OK, body: bits });
         }
         Err(e) if e.is_retryable() => {
             // a transient pipeline fault (the block's shard panicked
@@ -124,7 +144,7 @@ fn handle_datagram(
             // against the restarted shard
             ctx.metrics.net.blocks_shed.fetch_add(1, Ordering::Relaxed);
             let r = UdpReply { flow, seq, status: udp_status::SHED, body: e.to_string().into_bytes() };
-            reply(socket, ctx, peer, r);
+            reply(batch, peer, r);
         }
         Err(e) => {
             // a block the pipeline rejects (bad length, partial
@@ -139,7 +159,7 @@ fn handle_datagram(
                 status: udp_status::ERR,
                 body: e.to_string().into_bytes(),
             };
-            reply(socket, ctx, peer, r);
+            reply(batch, peer, r);
         }
     }
 }

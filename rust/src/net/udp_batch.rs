@@ -1,0 +1,448 @@
+//! Server-side UDP reply batching: `sendmmsg`-style syscall
+//! aggregation for the datagram serving loop.
+//!
+//! [`ReplyBatch`] accumulates encoded reply datagrams and flushes them
+//! through one batched send syscall ([`DatagramTx::send_batch`])
+//! whenever the batch fills (`net.udp_batch` datagrams) or the serving
+//! loop drains the socket (no further request datagram is immediately
+//! pending), so an isolated reply is never delayed behind a timer.
+//!
+//! The batched syscall is gated at *runtime*, the same way the SIMD
+//! ACS kernel gates AVX2 dispatch: the first `send_batch` that reports
+//! the syscall unavailable latches the batch into per-datagram
+//! [`DatagramTx::send_one`] fallback for the rest of the server's
+//! life, and every datagram sent that way bumps
+//! `net.udp_send_fallbacks`. Successful batches bump
+//! `net.udp_batched_sends` (one per syscall) and
+//! `net.udp_batch_datagrams` (one per datagram), so the observed
+//! aggregation ratio is `udp_batch_datagrams / udp_batched_sends`.
+//!
+//! Replies on UDP are best-effort (the stop-and-wait / windowed client
+//! retransmits on silence), so transient send errors drop the affected
+//! datagrams without counting their bytes — mirroring what the
+//! pre-batching loop did with a failed `send_to`.
+
+use std::net::{SocketAddr, UdpSocket};
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::NetStats;
+
+/// Datagram sink a [`ReplyBatch`] flushes into. The real
+/// implementation is [`SysTx`] (a `UdpSocket` with a Linux `sendmmsg`
+/// fast path); tests substitute deterministic shims to pin the exact
+/// syscall/counter sequence.
+pub trait DatagramTx {
+    /// Send a prefix of `msgs` in one batched syscall and return how
+    /// many datagrams it covered.
+    ///
+    /// `Err` means the batched syscall is *unavailable on this system*
+    /// (e.g. `ENOSYS`) and latches the caller into the
+    /// [`send_one`](DatagramTx::send_one) fallback. A transient send
+    /// failure is not an `Err`: best-effort delivery drops the
+    /// remaining datagrams by returning `Ok(0)`.
+    fn send_batch(&self, msgs: &[(SocketAddr, Vec<u8>)]) -> std::io::Result<usize>;
+
+    /// Send one datagram (the unbatched path).
+    fn send_one(&self, peer: SocketAddr, buf: &[u8]) -> std::io::Result<()>;
+}
+
+/// Accumulates encoded reply datagrams and flushes them in batches of
+/// up to `cap` through a [`DatagramTx`]. `cap <= 1` disables batching
+/// entirely: every push sends immediately and no batching counters
+/// move, so `net.udp_batch = 1` reproduces the pre-batching server
+/// byte-for-byte.
+pub struct ReplyBatch<'a, T: DatagramTx> {
+    tx: &'a T,
+    stats: &'a NetStats,
+    cap: usize,
+    pending: Vec<(SocketAddr, Vec<u8>)>,
+    /// Latched runtime gate: flips false on the first `send_batch`
+    /// that reports the syscall unavailable, never flips back.
+    available: bool,
+}
+
+impl<'a, T: DatagramTx> ReplyBatch<'a, T> {
+    pub fn new(tx: &'a T, cap: usize, stats: &'a NetStats) -> Self {
+        ReplyBatch { tx, stats, cap, pending: Vec::with_capacity(cap.max(1)), available: true }
+    }
+
+    /// Datagrams waiting for the next flush.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Queue one encoded reply; sends immediately when batching is
+    /// disabled (`cap <= 1`) or the batched syscall has latched
+    /// unavailable, and flushes when the batch fills.
+    pub fn push(&mut self, peer: SocketAddr, wire: Vec<u8>) {
+        if self.cap <= 1 || !self.available {
+            self.send_single(peer, &wire);
+            return;
+        }
+        self.pending.push((peer, wire));
+        if self.pending.len() >= self.cap {
+            self.flush();
+        }
+    }
+
+    /// Send everything pending. Called by the serving loop whenever
+    /// the socket has no further datagram to drain (and on shutdown),
+    /// so batching adds at most one socket-drain check of latency.
+    pub fn flush(&mut self) {
+        let mut off = 0;
+        while off < self.pending.len() {
+            match self.tx.send_batch(&self.pending[off..]) {
+                Ok(0) => {
+                    // transient send failure: best-effort drop of the
+                    // remainder, bytes uncounted (matches a failed
+                    // send_to on the unbatched path)
+                    break;
+                }
+                Ok(n) => {
+                    let n = n.min(self.pending.len() - off);
+                    self.stats.udp_batched_sends.fetch_add(1, Ordering::Relaxed);
+                    self.stats.udp_batch_datagrams.fetch_add(n as u64, Ordering::Relaxed);
+                    let bytes: u64 =
+                        self.pending[off..off + n].iter().map(|(_, w)| w.len() as u64).sum();
+                    self.stats.bytes_out.fetch_add(bytes, Ordering::Relaxed);
+                    off += n;
+                }
+                Err(_) => {
+                    // syscall unavailable on this system: latch the
+                    // per-datagram fallback and drain what's left
+                    self.available = false;
+                    let rest: Vec<_> = self.pending.drain(off..).collect();
+                    for (peer, wire) in rest {
+                        self.send_single(peer, &wire);
+                    }
+                    break;
+                }
+            }
+        }
+        self.pending.clear();
+    }
+
+    fn send_single(&self, peer: SocketAddr, wire: &[u8]) {
+        if self.tx.send_one(peer, wire).is_ok() {
+            self.stats.bytes_out.fetch_add(wire.len() as u64, Ordering::Relaxed);
+            // only a *latched* single is a fallback; cap <= 1 is
+            // batching deliberately disabled, not degraded
+            if self.cap > 1 && !self.available {
+                self.stats.udp_send_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// The real transport: replies go out over the server's `UdpSocket`,
+/// batched through raw dependency-free `sendmmsg(2)` bindings on
+/// Linux. Elsewhere `send_batch` reports unavailable on first use and
+/// the batch latches into plain `send_to`.
+pub struct SysTx<'a>(pub &'a UdpSocket);
+
+impl DatagramTx for SysTx<'_> {
+    #[cfg(target_os = "linux")]
+    fn send_batch(&self, msgs: &[(SocketAddr, Vec<u8>)]) -> std::io::Result<usize> {
+        mmsg::send_batch(self.0, msgs)
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    fn send_batch(&self, _msgs: &[(SocketAddr, Vec<u8>)]) -> std::io::Result<usize> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "sendmmsg is only bound on linux",
+        ))
+    }
+
+    fn send_one(&self, peer: SocketAddr, buf: &[u8]) -> std::io::Result<()> {
+        self.0.send_to(buf, peer).map(|_| ())
+    }
+}
+
+/// Raw `sendmmsg(2)` bindings (no libc crate), mirroring the style of
+/// the `poll`/`epoll` bindings in `net::reactor`.
+#[cfg(target_os = "linux")]
+mod mmsg {
+    use std::net::{SocketAddr, UdpSocket};
+    use std::os::raw::{c_int, c_uint, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    const AF_INET: u16 = 2;
+    const AF_INET6: u16 = 10;
+    const ENOSYS: i32 = 38;
+    const EOPNOTSUPP: i32 = 95;
+    const EINTR: i32 = 4;
+
+    /// Widest sockaddr we emit (`sockaddr_in6` is 28 bytes).
+    const SOCKADDR_MAX: usize = 28;
+
+    #[repr(C)]
+    struct IoVec {
+        base: *const u8,
+        len: usize,
+    }
+
+    /// `struct msghdr` (linux UAPI layout; `repr(C)` reproduces the
+    /// pointer-alignment padding after `msg_namelen`).
+    #[repr(C)]
+    struct MsgHdr {
+        msg_name: *mut c_void,
+        msg_namelen: u32,
+        msg_iov: *mut IoVec,
+        msg_iovlen: usize,
+        msg_control: *mut c_void,
+        msg_controllen: usize,
+        msg_flags: c_int,
+    }
+
+    #[repr(C)]
+    struct MmsgHdr {
+        msg_hdr: MsgHdr,
+        msg_len: c_uint,
+    }
+
+    extern "C" {
+        fn sendmmsg(sockfd: c_int, msgvec: *mut MmsgHdr, vlen: c_uint, flags: c_int) -> c_int;
+    }
+
+    /// Serialize `addr` into `buf` with the kernel's `sockaddr_in` /
+    /// `sockaddr_in6` layout; returns the address length.
+    fn encode_sockaddr(addr: &SocketAddr, buf: &mut [u8; SOCKADDR_MAX]) -> u32 {
+        buf.fill(0);
+        match addr {
+            SocketAddr::V4(a) => {
+                buf[..2].copy_from_slice(&AF_INET.to_ne_bytes());
+                buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+                buf[4..8].copy_from_slice(&a.ip().octets());
+                16
+            }
+            SocketAddr::V6(a) => {
+                buf[..2].copy_from_slice(&AF_INET6.to_ne_bytes());
+                buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+                buf[4..8].copy_from_slice(&a.flowinfo().to_be_bytes());
+                buf[8..24].copy_from_slice(&a.ip().octets());
+                buf[24..28].copy_from_slice(&a.scope_id().to_ne_bytes());
+                28
+            }
+        }
+    }
+
+    pub fn send_batch(socket: &UdpSocket, msgs: &[(SocketAddr, Vec<u8>)]) -> std::io::Result<usize> {
+        // every pointer below targets these three flat arrays, which
+        // outlive the syscall
+        let mut addrs = vec![[0u8; SOCKADDR_MAX]; msgs.len()];
+        let mut iovs = Vec::with_capacity(msgs.len());
+        let mut hdrs = Vec::with_capacity(msgs.len());
+        for (i, (peer, wire)) in msgs.iter().enumerate() {
+            let namelen = encode_sockaddr(peer, &mut addrs[i]);
+            iovs.push(IoVec { base: wire.as_ptr(), len: wire.len() });
+            hdrs.push(MmsgHdr {
+                msg_hdr: MsgHdr {
+                    msg_name: addrs[i].as_mut_ptr() as *mut c_void,
+                    msg_namelen: namelen,
+                    msg_iov: std::ptr::null_mut(), // patched below
+                    msg_iovlen: 1,
+                    msg_control: std::ptr::null_mut(),
+                    msg_controllen: 0,
+                    msg_flags: 0,
+                },
+                msg_len: 0,
+            });
+        }
+        for (hdr, iov) in hdrs.iter_mut().zip(iovs.iter_mut()) {
+            hdr.msg_hdr.msg_iov = iov as *mut IoVec;
+        }
+        loop {
+            let n = unsafe {
+                sendmmsg(socket.as_raw_fd(), hdrs.as_mut_ptr(), hdrs.len() as c_uint, 0)
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            return match err.raw_os_error() {
+                Some(EINTR) => continue,
+                // unavailable: latch the per-datagram fallback
+                Some(ENOSYS) | Some(EOPNOTSUPP) => Err(err),
+                // transient: best-effort drop (caller stops the flush)
+                _ => Ok(0),
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::sync::atomic::Ordering;
+
+    fn peer(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    /// What the shim does on the next `send_batch` call.
+    #[derive(Clone, Copy)]
+    enum Step {
+        /// Accept up to this many datagrams.
+        Accept(usize),
+        /// Report the syscall unavailable.
+        Unavailable,
+        /// Report a transient failure (`Ok(0)`).
+        Transient,
+    }
+
+    /// Deterministic [`DatagramTx`]: scripted `send_batch` outcomes,
+    /// records every syscall so tests pin the exact sequence.
+    #[derive(Default)]
+    struct ShimTx {
+        script: RefCell<Vec<Step>>,
+        /// Sizes handed to each `send_batch` call.
+        batch_calls: RefCell<Vec<usize>>,
+        /// Byte lengths sent through `send_one`.
+        singles: RefCell<Vec<usize>>,
+    }
+
+    impl ShimTx {
+        fn scripted(steps: &[Step]) -> ShimTx {
+            let shim = ShimTx::default();
+            *shim.script.borrow_mut() = steps.to_vec();
+            shim
+        }
+    }
+
+    impl DatagramTx for ShimTx {
+        fn send_batch(&self, msgs: &[(SocketAddr, Vec<u8>)]) -> std::io::Result<usize> {
+            self.batch_calls.borrow_mut().push(msgs.len());
+            let step = {
+                let mut s = self.script.borrow_mut();
+                if s.is_empty() { Step::Accept(msgs.len()) } else { s.remove(0) }
+            };
+            match step {
+                Step::Accept(n) => Ok(n.min(msgs.len())),
+                Step::Transient => Ok(0),
+                Step::Unavailable => Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "sendmmsg: ENOSYS",
+                )),
+            }
+        }
+
+        fn send_one(&self, _peer: SocketAddr, buf: &[u8]) -> std::io::Result<()> {
+            self.singles.borrow_mut().push(buf.len());
+            Ok(())
+        }
+    }
+
+    fn counters(stats: &NetStats) -> (u64, u64, u64, u64) {
+        (
+            stats.udp_batched_sends.load(Ordering::Relaxed),
+            stats.udp_batch_datagrams.load(Ordering::Relaxed),
+            stats.udp_send_fallbacks.load(Ordering::Relaxed),
+            stats.bytes_out.load(Ordering::Relaxed),
+        )
+    }
+
+    #[test]
+    fn full_batch_flushes_in_one_syscall() {
+        let tx = ShimTx::default();
+        let stats = NetStats::default();
+        let mut batch = ReplyBatch::new(&tx, 4, &stats);
+        for i in 0..4 {
+            batch.push(peer(9000 + i), vec![0u8; 10 + i as usize]);
+        }
+        // filling the batch flushed it without waiting for a tick
+        assert!(batch.is_empty());
+        assert_eq!(*tx.batch_calls.borrow(), vec![4]);
+        assert!(tx.singles.borrow().is_empty());
+        assert_eq!(counters(&stats), (1, 4, 0, 10 + 11 + 12 + 13));
+    }
+
+    #[test]
+    fn drain_flush_sends_a_partial_batch() {
+        let tx = ShimTx::default();
+        let stats = NetStats::default();
+        let mut batch = ReplyBatch::new(&tx, 8, &stats);
+        batch.push(peer(9000), vec![0u8; 7]);
+        batch.push(peer(9001), vec![0u8; 9]);
+        assert_eq!(batch.len(), 2, "below cap: nothing sent yet");
+        assert_eq!(counters(&stats), (0, 0, 0, 0));
+        batch.flush(); // the serving loop drained the socket
+        assert!(batch.is_empty());
+        assert_eq!(*tx.batch_calls.borrow(), vec![2]);
+        assert_eq!(counters(&stats), (1, 2, 0, 16));
+        batch.flush(); // empty flush is a no-op, not a zero-size syscall
+        assert_eq!(*tx.batch_calls.borrow(), vec![2]);
+    }
+
+    #[test]
+    fn partial_kernel_accept_retries_the_remainder() {
+        let tx = ShimTx::scripted(&[Step::Accept(3), Step::Accept(2)]);
+        let stats = NetStats::default();
+        let mut batch = ReplyBatch::new(&tx, 5, &stats);
+        for i in 0..5 {
+            batch.push(peer(9000 + i), vec![0u8; 4]);
+        }
+        // 5 datagrams over two syscalls (kernel accepted 3, then 2)
+        assert_eq!(*tx.batch_calls.borrow(), vec![5, 2]);
+        assert_eq!(counters(&stats), (2, 5, 0, 20));
+    }
+
+    #[test]
+    fn cap_one_disables_batching_and_counters() {
+        let tx = ShimTx::default();
+        let stats = NetStats::default();
+        let mut batch = ReplyBatch::new(&tx, 1, &stats);
+        batch.push(peer(9000), vec![0u8; 5]);
+        batch.push(peer(9001), vec![0u8; 6]);
+        // straight through send_one, never buffered, no batch syscalls,
+        // and no fallback counters — cap 1 is "disabled", not "degraded"
+        assert!(batch.is_empty());
+        assert!(tx.batch_calls.borrow().is_empty());
+        assert_eq!(*tx.singles.borrow(), vec![5, 6]);
+        assert_eq!(counters(&stats), (0, 0, 0, 11));
+    }
+
+    #[test]
+    fn unavailable_syscall_latches_single_datagram_fallback() {
+        let tx = ShimTx::scripted(&[Step::Unavailable]);
+        let stats = NetStats::default();
+        let mut batch = ReplyBatch::new(&tx, 4, &stats);
+        batch.push(peer(9000), vec![0u8; 3]);
+        batch.push(peer(9001), vec![0u8; 5]);
+        batch.flush();
+        // the probe syscall failed; both datagrams fell back to singles
+        assert_eq!(*tx.batch_calls.borrow(), vec![2]);
+        assert_eq!(*tx.singles.borrow(), vec![3, 5]);
+        assert_eq!(counters(&stats), (0, 0, 2, 8));
+        // latched: later pushes go straight to send_one without
+        // re-probing the syscall
+        batch.push(peer(9002), vec![0u8; 7]);
+        assert!(batch.is_empty());
+        assert_eq!(*tx.batch_calls.borrow(), vec![2], "no second probe");
+        assert_eq!(*tx.singles.borrow(), vec![3, 5, 7]);
+        assert_eq!(counters(&stats), (0, 0, 3, 15));
+    }
+
+    #[test]
+    fn transient_failure_drops_without_latching() {
+        let tx = ShimTx::scripted(&[Step::Transient]);
+        let stats = NetStats::default();
+        let mut batch = ReplyBatch::new(&tx, 4, &stats);
+        batch.push(peer(9000), vec![0u8; 3]);
+        batch.flush();
+        // best-effort drop: nothing counted, nothing resent
+        assert_eq!(*tx.batch_calls.borrow(), vec![1]);
+        assert!(tx.singles.borrow().is_empty());
+        assert_eq!(counters(&stats), (0, 0, 0, 0));
+        // not latched: the next flush probes the batched syscall again
+        batch.push(peer(9001), vec![0u8; 4]);
+        batch.flush();
+        assert_eq!(*tx.batch_calls.borrow(), vec![1, 1]);
+        assert_eq!(counters(&stats), (1, 1, 0, 4));
+    }
+}

@@ -28,8 +28,8 @@ use tcvd::coding::registry;
 use tcvd::net::loadgen::{self, make_block_llrs, LoadgenOptions, Transport};
 use tcvd::net::protocol::{self, flags, kind, reject, Ack, ReadOutcome};
 use tcvd::net::{
-    fetch_metrics, Contract, DatagramSocket, NetConfig, Server, TcpClient, UdpClient,
-    UdpPipelineOptions,
+    fetch_metrics, Contract, DatagramSocket, NetConfig, PollerKind, Server, TcpClient,
+    UdpClient, UdpPipelineOptions,
 };
 use tcvd::util::json::Json;
 
@@ -393,7 +393,15 @@ fn loadgen_soaks_both_transports() {
 
 // ---------------------------------------------------------------------------
 // Fault injection: hand-rolled wire clients and a lossy datagram shim.
+// The reactor-facing half runs once per poller backend (`poll` and
+// `epoll` — the latter degrades to poll off Linux), so the kernel event
+// backend faces the same hostile clients as the portable one.
 // ---------------------------------------------------------------------------
+
+/// A `NetConfig` pinned to one poller backend.
+fn net_with_poller(poller: PollerKind) -> NetConfig {
+    NetConfig { poller, ..NetConfig::default() }
+}
 
 /// Open a raw socket and handshake by hand (`hello_flags` lets tests
 /// offer e.g. [`flags::DATA_CRC`]); returns the stream and the ACK.
@@ -435,11 +443,10 @@ fn drain_bits(s: &mut TcpStream) -> Vec<u8> {
 /// A byte-dribbling client — the whole conversation (HELLO, DATA,
 /// FINISH) written one byte at a time with delays, so every frame
 /// header and payload crosses a read boundary — decodes bit-identically.
-#[test]
-fn byte_dribbling_client_decodes_bit_identically() {
+fn byte_dribbling_client_on(poller: PollerKind) {
     let b = builder("scalar", "flushed", 1);
     let mut oracle = b.clone().shards(1).build().unwrap();
-    let server = start(b.clone(), NetConfig::default());
+    let server = start(b.clone(), net_with_poller(poller));
     let llr = block(&b, 32, 21);
     let want = oracle.decode_stream(&llr).unwrap();
 
@@ -468,20 +475,36 @@ fn byte_dribbling_client_decodes_bit_identically() {
     }
     assert_eq!(drain_bits(&mut s), want);
     let m = server.metrics();
+    assert_eq!(m.net.poller, poller.resolve().name(), "the gauge reports the live backend");
     assert_eq!(m.net.sessions_accepted, 1);
     assert_eq!(m.net.sessions_evicted, 0);
     server.shutdown().unwrap();
+}
+
+#[test]
+fn byte_dribbling_client_decodes_bit_identically() {
+    byte_dribbling_client_on(PollerKind::Poll);
+}
+
+#[test]
+fn byte_dribbling_client_decodes_bit_identically_on_epoll() {
+    byte_dribbling_client_on(PollerKind::Epoll);
 }
 
 /// A slow reader — the whole stream plus FINISH pushed before a single
 /// BITS frame is drained, against a tiny write high-water mark — still
 /// decodes bit-identically; the reactor buffers the backlog (visible in
 /// the `write_buf_hwm` gauge) instead of blocking or dropping.
-#[test]
-fn slow_reader_client_decodes_bit_identically() {
+///
+/// This is also the zero-copy BITS pin: with `write_high_water: 64`
+/// every decoded chunk sits in the segmented outbound buffer (moved
+/// from the reassembler, never copied into a flat staging `Vec`) across
+/// many partial flushes before the client drains it — any segmentation
+/// or ordering bug in that path breaks the bit-for-bit compare below.
+fn slow_reader_client_on(poller: PollerKind) {
     let b = builder("simd", "flushed", 2);
     let mut oracle = b.clone().shards(1).build().unwrap();
-    let net = NetConfig { write_high_water: 64, ..NetConfig::default() };
+    let net = NetConfig { write_high_water: 64, ..net_with_poller(poller) };
     let server = start(b.clone(), net);
     let llr = block(&b, 256, 33);
     let want = oracle.decode_stream(&llr).unwrap();
@@ -492,20 +515,31 @@ fn slow_reader_client_decodes_bit_identically() {
     protocol::write_frame(&mut s, kind::FINISH, &[]).unwrap();
     // never drain BITS until the decode is long since done server-side
     std::thread::sleep(Duration::from_millis(300));
-    assert_eq!(drain_bits(&mut s), want);
+    assert_eq!(drain_bits(&mut s), want, "zero-copy BITS path is bit-identical");
     let m = server.metrics();
+    assert_eq!(m.net.poller, poller.resolve().name());
     assert!(m.net.write_buf_hwm > 0, "outbound buffering was observed: {:?}", m.net);
+    assert!(m.net.reactor_ready_events > 0, "readiness events were counted: {:?}", m.net);
     assert_eq!(m.net.sessions_evicted, 0, "a slow reader is not an idle session");
     server.shutdown().unwrap();
+}
+
+#[test]
+fn slow_reader_client_decodes_bit_identically() {
+    slow_reader_client_on(PollerKind::Poll);
+}
+
+#[test]
+fn slow_reader_client_decodes_bit_identically_on_epoll() {
+    slow_reader_client_on(PollerKind::Epoll);
 }
 
 /// A connection dropped in the middle of a DATA frame (header promised
 /// 100 bytes, 10 arrived) bumps the dirty-disconnect counter exactly
 /// once, and the pipeline stays healthy for the next clean session.
-#[test]
-fn mid_frame_disconnect_evicts_exactly_once() {
+fn mid_frame_disconnect_on(poller: PollerKind) {
     let b = builder("scalar", "tail-biting", 1);
-    let server = start(b.clone(), NetConfig::default());
+    let server = start(b.clone(), net_with_poller(poller));
     let addr = server.tcp_addr().unwrap();
 
     {
@@ -530,9 +564,20 @@ fn mid_frame_disconnect_evicts_exactly_once() {
     let want = b.clone().shards(1).build().unwrap().decode_stream(&llr).unwrap();
     assert_eq!(tcp_decode(addr, &b, &llr), want);
     let m = server.metrics();
+    assert_eq!(m.net.poller, poller.resolve().name());
     assert_eq!(m.net.sessions_accepted, 2);
     assert_eq!(m.net.sessions_evicted, 1);
     server.shutdown().unwrap();
+}
+
+#[test]
+fn mid_frame_disconnect_evicts_exactly_once() {
+    mid_frame_disconnect_on(PollerKind::Poll);
+}
+
+#[test]
+fn mid_frame_disconnect_evicts_exactly_once_on_epoll() {
+    mid_frame_disconnect_on(PollerKind::Epoll);
 }
 
 /// CRC32 negotiation end to end: an offering client decodes
@@ -673,8 +718,7 @@ fn udp_ack_window_survives_loss_reorder_and_duplication() {
 /// The reactor serves every connection from a fixed thread count: 32
 /// concurrent idle sessions add no threads to the process (probed via
 /// `/proc/self/task`; skipped where `/proc` is unavailable).
-#[test]
-fn reactor_thread_count_is_flat_across_connections() {
+fn reactor_thread_count_on(poller: PollerKind) {
     fn thread_count() -> Option<usize> {
         std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
     }
@@ -682,7 +726,7 @@ fn reactor_thread_count_is_flat_across_connections() {
         return; // no /proc on this platform
     }
     let b = builder("scalar", "flushed", 1);
-    let server = start(b.clone(), NetConfig::default());
+    let server = start(b.clone(), net_with_poller(poller));
     let addr = server.tcp_addr().unwrap();
     let before = thread_count().unwrap();
 
@@ -707,6 +751,66 @@ fn reactor_thread_count_is_flat_across_connections() {
         server.metrics().net
     );
     assert!(server.metrics().net.reactor_wakeups > 0);
+    assert_eq!(server.metrics().net.poller, poller.resolve().name());
     drop(clients);
     server.shutdown().unwrap();
+}
+
+#[test]
+fn reactor_thread_count_is_flat_across_connections() {
+    reactor_thread_count_on(PollerKind::Poll);
+}
+
+#[test]
+fn reactor_thread_count_is_flat_across_connections_on_epoll() {
+    reactor_thread_count_on(PollerKind::Epoll);
+}
+
+/// Server-side UDP reply batching is invisible on the wire: the same
+/// pipelined run decodes bit-identically with batching disabled
+/// (`net.udp_batch = 1`) and enabled (`net.udp_batch = 8`), and the
+/// batching counters move only on the batching server — every reply
+/// leaves through either a batched send or the latched single-datagram
+/// fallback, never silently.
+#[test]
+fn udp_reply_batching_is_bit_identical_across_batch_knobs() {
+    let b = builder("scalar", "flushed", 2);
+    let mut oracle = b.clone().shards(1).build().unwrap();
+    let blocks: Vec<Vec<f32>> = (0..8).map(|i| block(&b, 32, 700 + i)).collect();
+    let wants: Vec<Vec<u8>> =
+        blocks.iter().map(|llr| oracle.decode_stream(llr).unwrap()).collect();
+    let opts = UdpPipelineOptions {
+        window: 4,
+        ack_timeout: Duration::from_millis(250),
+        overall_timeout: Duration::from_secs(30),
+    };
+
+    let mut decoded = Vec::new();
+    for udp_batch in [1usize, 8] {
+        let net = NetConfig { udp_batch, ..NetConfig::default() };
+        let server = start(b.clone(), net);
+        let mut u = UdpClient::connect(server.udp_addr().unwrap(), 31_337).unwrap();
+        let run = u.decode_blocks(&blocks, &opts).unwrap();
+        assert_eq!(run.blocks, wants, "udp_batch={udp_batch} diverges from the oracle");
+        let m = server.metrics();
+        let replies = m.net.udp_batch_datagrams + m.net.udp_send_fallbacks;
+        if udp_batch == 1 {
+            assert_eq!(m.net.udp_batched_sends, 0, "batching disabled: {:?}", m.net);
+            assert_eq!(replies, 0, "no batch-path counters at udp_batch=1: {:?}", m.net);
+        } else {
+            assert!(
+                replies >= blocks.len() as u64,
+                "every reply is accounted batched-or-fallback: {:?}",
+                m.net
+            );
+            assert!(
+                m.net.udp_batched_sends > 0 || m.net.udp_send_fallbacks > 0,
+                "the batch path was exercised: {:?}",
+                m.net
+            );
+        }
+        decoded.push(run.blocks);
+        server.shutdown().unwrap();
+    }
+    assert_eq!(decoded[0], decoded[1], "batched and unbatched replies carry identical bits");
 }

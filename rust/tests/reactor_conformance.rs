@@ -1,0 +1,305 @@
+//! Cross-backend conformance suite for `tcvd::net::reactor`: the same
+//! scripted event sequences run against the `poll(2)` and `epoll`
+//! [`PollSet`] backends over loopback socket pairs, asserting the
+//! backends report *identical* readiness outcomes tick by tick —
+//! registration, interest modification, deregistration, partial-write
+//! backpressure, peer hangup folding, EINTR handling and idle-tick
+//! timing.
+//!
+//! Off Linux `PollerKind::Epoll` degrades to the `poll(2)` backend, so
+//! the differential assertions become trivially true there; on Linux
+//! (the CI target) every scenario genuinely exercises both kernels
+//! interfaces.
+
+#![cfg(unix)]
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use tcvd::net::reactor::{stream_fd, Fd, PollSet, PollerKind, READ, WRITE};
+
+/// One poll set per backend under test, in a fixed order.
+fn both() -> Vec<PollSet> {
+    let sets =
+        vec![PollSet::with_poller(PollerKind::Poll), PollSet::with_poller(PollerKind::Epoll)];
+    #[cfg(target_os = "linux")]
+    {
+        assert_eq!(sets[0].kind(), "poll");
+        assert_eq!(sets[1].kind(), "epoll", "conformance must cover the kernel backend");
+    }
+    sets
+}
+
+/// A loopback pair: `.0` is the registered (server) end, nonblocking;
+/// `.1` is the peer driving events.
+fn pair() -> (TcpStream, TcpStream) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = TcpStream::connect(addr).unwrap();
+    let (server, _) = listener.accept().unwrap();
+    server.set_nonblocking(true).unwrap();
+    (server, peer)
+}
+
+/// Run one conformance tick on every backend: identical registrations,
+/// identical timeout; returns each backend's `(ready_count, readiness
+/// per registered fd)`.
+fn tick(sets: &mut [PollSet], regs: &[(Fd, u8)], timeout: Duration) -> Vec<(usize, Vec<u8>)> {
+    sets.iter_mut()
+        .map(|set| {
+            set.clear();
+            let toks: Vec<usize> = regs.iter().map(|&(fd, i)| set.register(fd, i)).collect();
+            let n = set.poll(timeout);
+            (n, toks.iter().map(|&t| set.readiness(t)).collect())
+        })
+        .collect()
+}
+
+/// Every backend must agree; returns the agreed outcome.
+fn conform(
+    sets: &[PollSet],
+    mut outcomes: Vec<(usize, Vec<u8>)>,
+    what: &str,
+) -> (usize, Vec<u8>) {
+    for (set, o) in sets.iter().zip(&outcomes).skip(1) {
+        assert_eq!(
+            *o,
+            outcomes[0],
+            "{what}: backend {:?} diverges from {:?}",
+            set.kind(),
+            sets[0].kind()
+        );
+    }
+    outcomes.remove(0)
+}
+
+#[test]
+fn fresh_pair_readiness_and_data_arrival() {
+    let mut sets = both();
+    let (server, mut peer) = pair();
+    let fd = stream_fd(&server);
+
+    // a fresh connected socket: writable, nothing to read
+    let out = tick(&mut sets, &[(fd, READ | WRITE)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "fresh pair");
+    assert_eq!(n, 1);
+    assert_eq!(bits, vec![WRITE]);
+
+    // peer data arrives: readable and still writable
+    peer.write_all(b"ping").unwrap();
+    let out = tick(&mut sets, &[(fd, READ | WRITE)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "data pending");
+    assert_eq!(n, 1);
+    assert_eq!(bits, vec![READ | WRITE]);
+
+    // draining the data clears READ again
+    let mut server = server;
+    let mut buf = [0u8; 16];
+    assert_eq!(server.read(&mut buf).unwrap(), 4);
+    let out = tick(&mut sets, &[(fd, READ | WRITE)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "drained");
+    assert_eq!(n, 1);
+    assert_eq!(bits, vec![WRITE]);
+}
+
+#[test]
+fn partial_write_backpressure_clears_when_the_peer_drains() {
+    let mut sets = both();
+    let (mut server, mut peer) = pair();
+    let fd = stream_fd(&server);
+
+    // fill the kernel send buffer until a write would block — the
+    // condition a partially-flushed outbound frame leaves the reactor in
+    let chunk = [0x5au8; 64 * 1024];
+    loop {
+        match server.write(&chunk) {
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) => panic!("filling send buffer: {e}"),
+        }
+    }
+    let out = tick(&mut sets, &[(fd, WRITE)], Duration::from_millis(30));
+    let (n, bits) = conform(&sets, out, "send buffer full");
+    assert_eq!((n, bits), (0, vec![0]), "a full send buffer is not writable");
+
+    // the peer drains; writability must come back on every backend at
+    // the same tick (loopback flushes asynchronously, so poll until it
+    // does — the conformance check runs on every intermediate tick too)
+    peer.set_nonblocking(true).unwrap();
+    let mut sink = vec![0u8; 256 * 1024];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        loop {
+            match peer.read(&mut sink) {
+                Ok(0) => panic!("peer saw EOF while draining"),
+                Ok(_) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => panic!("draining: {e}"),
+            }
+        }
+        let out = tick(&mut sets, &[(fd, WRITE)], Duration::from_millis(50));
+        let (n, bits) = conform(&sets, out, "draining");
+        if bits[0] & WRITE != 0 {
+            assert_eq!(n, 1);
+            break;
+        }
+        assert!(Instant::now() < deadline, "socket never became writable after drain");
+    }
+}
+
+#[test]
+fn hangup_folds_into_both_bits_on_both_backends() {
+    let mut sets = both();
+    let (mut server, peer) = pair();
+    let fd = stream_fd(&server);
+    drop(peer);
+
+    // READ interest: the graceful FIN is readable (the owner reads EOF)
+    let out = tick(&mut sets, &[(fd, READ)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "hangup/READ");
+    assert_eq!(n, 1);
+    assert_eq!(bits[0] & READ, READ);
+
+    // WRITE interest: the half-closed socket still accepts writes
+    let out = tick(&mut sets, &[(fd, WRITE)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "hangup/WRITE");
+    assert_eq!(n, 1);
+    assert_eq!(bits[0] & WRITE, WRITE);
+
+    // writing into the fully-closed peer draws an RST; the resulting
+    // error condition is delivered even with an *empty* interest mask
+    // and folds into both readiness bits identically on both backends
+    let _ = server.write(b"x");
+    let out = tick(&mut sets, &[(fd, 0)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "hangup/none after RST");
+    assert_eq!(n, 1);
+    assert_eq!(bits, vec![READ | WRITE]);
+}
+
+#[test]
+fn interest_modification_and_deregistration_track_identically() {
+    let mut sets = both();
+    let (server, mut peer) = pair();
+    let (decoy, _decoy_peer) = pair();
+    let (fd, dfd) = (stream_fd(&server), stream_fd(&decoy));
+
+    // tick 1: WRITE interest — writable (epoll: kernel-set ADD)
+    let out = tick(&mut sets, &[(fd, WRITE), (dfd, READ)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "tick1 add");
+    assert_eq!((n, bits), (1, vec![WRITE, 0]));
+
+    // tick 2: interest modified down to READ on a quiet socket — no
+    // readiness at all (epoll: kernel-set MOD)
+    let out = tick(&mut sets, &[(fd, READ), (dfd, READ)], Duration::from_millis(30));
+    let (n, bits) = conform(&sets, out, "tick2 modify");
+    assert_eq!((n, bits), (0, vec![0, 0]));
+
+    // tick 3: deregistered while data arrives — a backend must not
+    // report readiness for an fd absent from this tick's registrations
+    // (epoll: kernel-set DEL; the decoy keeps the set non-empty)
+    peer.write_all(b"x").unwrap();
+    let out = tick(&mut sets, &[(dfd, READ)], Duration::from_millis(30));
+    let (n, bits) = conform(&sets, out, "tick3 deregister");
+    assert_eq!((n, bits), (0, vec![0]));
+
+    // tick 4: re-registered — the buffered byte surfaces (epoll: re-ADD)
+    let out = tick(&mut sets, &[(fd, READ), (dfd, READ)], Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "tick4 re-add");
+    assert_eq!(n, 1);
+    assert_eq!(bits, vec![READ, 0]);
+}
+
+#[test]
+fn readiness_is_per_fd_not_per_set() {
+    let mut sets = both();
+    let pairs: Vec<(TcpStream, TcpStream)> = (0..3).map(|_| pair()).collect();
+    let regs: Vec<(Fd, u8)> = pairs.iter().map(|(s, _)| (stream_fd(s), READ)).collect();
+
+    // quiet: nothing readable anywhere
+    let out = tick(&mut sets, &regs, Duration::from_millis(30));
+    let (n, bits) = conform(&sets, out, "all quiet");
+    assert_eq!((n, bits), (0, vec![0, 0, 0]));
+
+    // exactly one peer speaks: exactly that fd reports, on every backend
+    let mut peer1 = &pairs[1].1;
+    peer1.write_all(b"only me").unwrap();
+    let out = tick(&mut sets, &regs, Duration::from_millis(2000));
+    let (n, bits) = conform(&sets, out, "one speaker");
+    assert_eq!(n, 1);
+    assert_eq!(bits, vec![0, READ, 0]);
+}
+
+#[test]
+fn idle_ticks_honor_the_timeout_on_every_backend() {
+    let (server, _peer) = pair();
+    let fd = stream_fd(&server);
+    for kind in [PollerKind::Poll, PollerKind::Epoll] {
+        let mut set = PollSet::with_poller(kind);
+
+        // a quiet registered fd: the poll blocks for the full timeout
+        set.register(fd, READ);
+        let t0 = Instant::now();
+        let n = set.poll(Duration::from_millis(60));
+        let elapsed = t0.elapsed();
+        assert_eq!(n, 0, "{}", set.kind());
+        assert!(
+            elapsed >= Duration::from_millis(50),
+            "{}: idle tick returned after {elapsed:?}, expected ~60ms",
+            set.kind()
+        );
+
+        // an empty set still sleeps the tick instead of spinning
+        set.clear();
+        let t0 = Instant::now();
+        assert_eq!(set.poll(Duration::from_millis(60)), 0);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(50),
+            "{}: empty-set tick did not sleep",
+            set.kind()
+        );
+    }
+}
+
+/// EINTR delivery: `poll(2)` and `epoll_wait(2)` are never restarted
+/// after a signal (signal(7)), so an interrupted tick must surface as
+/// "0 ready" — a timeout — on both backends, not an error or a panic.
+#[cfg(target_os = "linux")]
+#[test]
+fn eintr_is_reported_as_a_timeout_on_both_backends() {
+    mod sig {
+        use std::os::raw::c_int;
+        pub const SIGUSR1: c_int = 10;
+        extern "C" {
+            pub fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+            pub fn pthread_self() -> u64;
+            pub fn pthread_kill(thread: u64, sig: c_int) -> c_int;
+        }
+        pub extern "C" fn noop(_sig: c_int) {}
+    }
+    unsafe {
+        sig::signal(sig::SIGUSR1, sig::noop);
+    }
+    let (server, _peer) = pair();
+    let fd = stream_fd(&server);
+    for kind in [PollerKind::Poll, PollerKind::Epoll] {
+        let mut set = PollSet::with_poller(kind);
+        let tok = set.register(fd, READ);
+        let me = unsafe { sig::pthread_self() };
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            assert_eq!(unsafe { sig::pthread_kill(me, sig::SIGUSR1) }, 0);
+        });
+        let t0 = Instant::now();
+        let n = set.poll(Duration::from_millis(5000));
+        let elapsed = t0.elapsed();
+        killer.join().unwrap();
+        assert_eq!(n, 0, "{}: EINTR must read as a timeout", set.kind());
+        assert_eq!(set.readiness(tok), 0, "{}", set.kind());
+        assert!(
+            elapsed < Duration::from_millis(4000),
+            "{}: the signal did not interrupt the wait ({elapsed:?})",
+            set.kind()
+        );
+    }
+}

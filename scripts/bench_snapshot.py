@@ -27,7 +27,8 @@ aggregates the CPU-backend rows into one trajectory document,
                 "degraded_mbps": ...,
                 "radix2_vs_radix1": ...,
                 "tail_biting_vs_flushed_info": ...,
-                "net_sessions_256_vs_1": ...}
+                "net_sessions_256_vs_1": ...,
+                "net_sessions_4096_vs_256": ...}
   }
 
 `summary.radix2_vs_radix1` compares the simd backend's per-rho shard
@@ -51,13 +52,18 @@ numbers meant for reading (docs/PERFORMANCE.md) come from a default or
 The `net` rows come from real loopback sockets: the script builds the
 `tcvd` and `loadgen` binaries, starts `tcvd serve --listen 127.0.0.1:0`
 on the simd backend, parses the announced address, and runs the
-bit-verifying loadgen soak at each session count (1 to 256 concurrent
-sessions on the readiness-driven reactor). Read the rows as a scaling
-curve — aggregate Mb/s should grow with sessions until the shards
-saturate while p99 stays bounded. `summary.net_sessions_256_vs_1` is
-the 256-session / 1-session aggregate-throughput ratio; its committed
-floor of 1.0 (bench_floors.json) is the "high session counts must not
-collapse the reactor" tripwire.
+bit-verifying loadgen soak at each session count (1 to 4096 concurrent
+sessions on the readiness-driven reactor; on Linux the auto-selected
+epoll backend carries the top of the curve). Read the rows as a
+scaling curve — aggregate Mb/s should grow with sessions until the
+shards saturate while p99 stays bounded. `summary.net_sessions_256_vs_1`
+is the 256-session / 1-session aggregate-throughput ratio; its
+committed floor of 1.0 (bench_floors.json) is the "high session counts
+must not collapse the reactor" tripwire. `summary.net_sessions_4096_vs_256`
+is the 4096-session / 256-session ratio; its committed floor of 0.9 is
+the epoll-scale tripwire — a 16x jump in polled fds may flatten the
+curve but must not collapse it (an O(fds)-per-tick regression, e.g. the
+kernel backend silently degrading to poll(2), shows up here first).
 
 Usage:
   python3 scripts/bench_snapshot.py [--smoke | --full] [--out PATH]
@@ -109,11 +115,15 @@ def run_benches(mode):
                      f"(rc={proc.returncode})")
 
 
-NET_SESSIONS = [1, 8, 32, 256]
+NET_SESSIONS = [1, 8, 32, 256, 4096]
 # Must match the loadgen binary's pipeline defaults (simd backend on the
 # 64+32/32 CPU tile) so the HELLO handshake and the oracle line up.
+# --max-sessions lifts the admission cap above the largest sweep point
+# (the default cap of 1024 would load-shed most of the 4096-session
+# row into retry churn).
 NET_SERVE_FLAGS = ["--backend", "simd", "--payload", "64",
-                   "--head", "32", "--tail", "32"]
+                   "--head", "32", "--tail", "32",
+                   "--max-sessions", str(max(NET_SESSIONS))]
 
 
 def net_sweep(mode):
@@ -271,13 +281,21 @@ def main():
             doc["summary"]["tail_biting_vs_flushed_info"] = (
                 by_mode["tail-biting"] / by_mode["flushed"])
     if "net" in doc:
-        # reactor scaling tripwire: 256 concurrent sessions must not be
-        # slower in aggregate than a single session
+        # reactor scaling tripwires. Both ratios are pinned to explicit
+        # session counts (not min/max of the sweep) so extending
+        # NET_SESSIONS never silently changes what a committed floor
+        # measures: 256-vs-1 is the "high session counts must not
+        # collapse the reactor" check, 4096-vs-256 is the epoll-scale
+        # check (the kernel backend must hold aggregate throughput
+        # through a 16x jump in polled fds).
         by_sessions = {r["sessions"]: r["aggregate_mbps"]
                        for r in doc["net"]["rows"]}
-        lo, hi = by_sessions.get(1), by_sessions.get(max(NET_SESSIONS))
-        if lo and hi:
-            doc.setdefault("summary", {})["net_sessions_256_vs_1"] = hi / lo
+        lo, mid, hi = (by_sessions.get(1), by_sessions.get(256),
+                       by_sessions.get(4096))
+        if lo and mid:
+            doc.setdefault("summary", {})["net_sessions_256_vs_1"] = mid / lo
+        if mid and hi:
+            doc.setdefault("summary", {})["net_sessions_4096_vs_256"] = hi / mid
 
     with open(args.out, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -299,6 +317,9 @@ def main():
         if "net_sessions_256_vs_1" in s:
             print(f"bench_snapshot: net 256-session vs 1-session aggregate "
                   f"{s['net_sessions_256_vs_1']:.2f}x")
+        if "net_sessions_4096_vs_256" in s:
+            print(f"bench_snapshot: net 4096-session vs 256-session aggregate "
+                  f"{s['net_sessions_4096_vs_256']:.2f}x")
         if args.min_simd_ratio is not None and s["simd_vs_scalar"] < args.min_simd_ratio:
             sys.exit(f"bench_snapshot: simd/scalar ratio "
                      f"{s['simd_vs_scalar']:.2f} below floor {args.min_simd_ratio}")
